@@ -1,0 +1,122 @@
+//! Contention microbenchmark: where TM beats locks and where it doesn't.
+//!
+//! The paper's premise (§1-2): sparse graphs => low conflict probability
+//! => non-blocking TM wins; dense contention => everything serializes.
+//! This example sweeps a synthetic hotspot workload from fully-contended
+//! (1 shared counter) to fully-sparse (1024 padded counters) under every
+//! policy, live, and prints per-transaction costs — the crossover chart.
+//!
+//! ```sh
+//! cargo run --release --example contention_sweep
+//! ```
+
+use std::sync::Arc;
+
+use dyadhytm::htm::HtmConfig;
+use dyadhytm::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use dyadhytm::mem::{Addr, TxHeap};
+use dyadhytm::tm::access::{TxAccess, TxResult};
+use dyadhytm::util::rng::Rng;
+use dyadhytm::util::zipf::Zipf;
+
+const THREADS: usize = 4;
+const TXNS_PER_THREAD: u64 = 20_000;
+
+fn run_once(
+    spec: PolicySpec,
+    counters: &[Addr],
+    sys: &TmSystem,
+    seed: u64,
+    zipf: Option<&Zipf>,
+) -> (f64, u64) {
+    let t0 = std::time::Instant::now();
+    let mut fallbacks = 0;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for tid in 0..THREADS {
+            let counters = &counters;
+            handles.push(s.spawn(move || {
+                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
+                let mut rng = Rng::new(seed ^ tid as u64);
+                for _ in 0..TXNS_PER_THREAD {
+                    let idx = match zipf {
+                        Some(z) => z.sample(&mut rng),
+                        None => rng.below(counters.len() as u64) as usize,
+                    };
+                    let c = counters[idx];
+                    ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<()> {
+                        let v = t.read(c)?;
+                        t.write(c, v + 1)
+                    });
+                }
+                ex.stats
+            }));
+        }
+        for h in handles {
+            let st = h.join().unwrap();
+            fallbacks += st.sw_commits + st.lock_commits;
+        }
+    });
+    let ns_per_txn =
+        t0.elapsed().as_nanos() as f64 / (THREADS as u64 * TXNS_PER_THREAD) as f64;
+    (ns_per_txn, fallbacks)
+}
+
+fn main() {
+    println!("### Contention sweep: {THREADS} threads x {TXNS_PER_THREAD} increments, ns/txn (live)\n");
+    print!("| counters |");
+    let policies = [
+        PolicySpec::CoarseLock,
+        PolicySpec::StmNorec,
+        PolicySpec::HtmSpin { retries: 8 },
+        PolicySpec::DyAd { n: 43 },
+    ];
+    for p in &policies {
+        print!(" {} |", p.name());
+    }
+    println!("\n|---|---|---|---|---|");
+
+    for n_counters in [1usize, 4, 16, 64, 256, 1024] {
+        let heap = Arc::new(TxHeap::new(1 << 16));
+        // Line-padded counters: contention is purely a function of count.
+        let counters: Vec<Addr> = (0..n_counters).map(|_| heap.alloc_lines(1)).collect();
+        let sys = TmSystem::new(Arc::clone(&heap), HtmConfig::broadwell());
+        print!("| {n_counters} |");
+        let mut expected = 0u64;
+        for p in &policies {
+            let (ns, _) = run_once(*p, &counters, &sys, 42, None);
+            print!(" {ns:.0} |");
+            expected += THREADS as u64 * TXNS_PER_THREAD;
+        }
+        println!();
+        // Correctness: total increments across all policies' runs.
+        let total: u64 = counters.iter().map(|&c| heap.load(c)).sum();
+        assert_eq!(total, expected, "lost updates at {n_counters} counters");
+    }
+    println!("\n(1 counter = the computation kernel's result list; 1024 = sparse graph heads.)");
+
+    // Zipf-skewed sweep: 256 counters, exponent 0 (uniform) to 1.5
+    // (hub-dominated) — the real-world-graph access pattern the paper's
+    // sparsity argument is about.
+    println!("\n### Zipf skew sweep: 256 padded counters, ns/txn (live)\n");
+    print!("| s |");
+    for p in &policies {
+        print!(" {} |", p.name());
+    }
+    println!("\n|---|---|---|---|---|");
+    for s_exp in [0.0f64, 0.5, 0.9, 1.2, 1.5] {
+        let heap = Arc::new(TxHeap::new(1 << 16));
+        let counters: Vec<Addr> = (0..256).map(|_| heap.alloc_lines(1)).collect();
+        let sys = TmSystem::new(Arc::clone(&heap), HtmConfig::broadwell());
+        let z = Zipf::new(256, s_exp);
+        print!("| {s_exp} |");
+        for p in &policies {
+            let (ns, _) = run_once(*p, &counters, &sys, 43, Some(&z));
+            print!(" {ns:.0} |");
+        }
+        println!();
+        let total: u64 = counters.iter().map(|&c| heap.load(c)).sum();
+        assert_eq!(total, policies.len() as u64 * THREADS as u64 * TXNS_PER_THREAD);
+    }
+    println!("\n(skew raises conflict rates smoothly: the TM-vs-lock gap narrows as hubs heat up.)");
+}

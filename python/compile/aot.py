@@ -1,0 +1,65 @@
+"""AOT: lower the Layer-2 entry points to HLO *text* artifacts.
+
+HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits protos with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out ../artifacts
+Writes <out>/rmat.hlo.txt, <out>/classify.hlo.txt and a manifest with the
+static shapes the Rust runtime needs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ENTRY_POINTS = {
+    "rmat": (model.edge_batch, model.edge_batch_specs),
+    "classify": (model.classify, model.classify_specs),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"batch": model.BATCH, "levels": model.LEVELS, "artifacts": {}}
+    for name, (fn, specs) in ENTRY_POINTS.items():
+        lowered = jax.jit(fn).lower(*specs())
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+These are deliberately written in the most obvious vectorized style, with
+no tiling and no pallas — pytest asserts the kernels match them exactly
+(integer outputs, so equality, not allclose).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .rmat import RMAT_A, RMAT_B, RMAT_C
+
+
+def rmat_edges_ref(u, scale):
+    """u: [B, L] f32 uniforms; scale: [1] f32. Returns (src, dst) u32 [B]."""
+    levels = u.shape[1]
+    ab = RMAT_A + RMAT_B
+    abc = RMAT_A + RMAT_B + RMAT_C
+    src_bits = (u >= ab).astype(jnp.uint32)
+    dst_bits = jnp.logical_or(
+        jnp.logical_and(u >= RMAT_A, u < ab), u >= abc
+    ).astype(jnp.uint32)
+    lvl = jnp.arange(levels, dtype=jnp.float32)
+    live = (lvl < scale[0]).astype(jnp.uint32)  # [L]
+
+    # Left-to-right fold over the live (prefix) levels.
+    def fold(bits):
+        acc = jnp.zeros((u.shape[0],), jnp.uint32)
+        for level in range(levels):
+            acc = acc * (1 + live[level]) + live[level] * bits[:, level]
+        return acc
+
+    return fold(src_bits), fold(dst_bits)
+
+
+def classify_weights_ref(w, cutoff, block):
+    """w: [B] u32, cutoff: [1] u32. Returns (tile_max [B//block], mask [B])."""
+    tiles = w.reshape(-1, block)
+    tile_max = jnp.max(tiles, axis=1).astype(jnp.uint32)
+    mask = (w == cutoff[0]).astype(jnp.uint32)
+    return tile_max, mask

@@ -1,0 +1,112 @@
+"""Layer-1 Pallas kernel: R-MAT quadrant-descent edge generation.
+
+SSCA-2's graph generator draws each edge by recursively descending a
+2^scale x 2^scale adjacency matrix split into four quadrants with
+probabilities (a, b, c, d); at each of `scale` levels one uniform random
+number picks a quadrant, contributing one bit to the source vertex id and
+one bit to the destination vertex id.
+
+The paper's generator does this per-edge, sequentially, inside the
+generation kernel's critical section producer loop.  Here the descent is
+reformulated for TPU idiom (DESIGN.md §Hardware-Adaptation): the per-edge
+loop becomes a `fori_loop` over levels that operates on a whole [BLOCK]
+tile resident in VMEM, with the batch dimension tiled by BlockSpec so the
+HBM->VMEM schedule is one streaming pass.  There is no matmul — this is
+VPU (vector) work, not MXU work.
+
+Shapes are static except the *effective* scale: the kernel is compiled for
+LEVELS = 24 bit-planes and masks out levels >= scale at runtime, so one
+AOT artifact serves every graph scale <= 24 (the paper sweeps 23-27; we
+sweep 13-20 laptop-scale).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated against kernels/ref.py by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Compile-time defaults (one artifact; see aot.py).
+LEVELS = 24  # max supported graph scale
+BLOCK = 2048  # batch tile resident in VMEM
+
+# SSCA-2 v2 R-MAT parameters.
+RMAT_A = 0.55
+RMAT_B = 0.10
+RMAT_C = 0.10
+RMAT_D = 0.25
+
+
+def _rmat_kernel(u_ref, scale_ref, src_ref, dst_ref, *, levels: int):
+    """Descend `levels` bit-planes for a [BLOCK] tile of edges.
+
+    u_ref:     [BLOCK, LEVELS] f32 uniforms in [0, 1)
+    scale_ref: [1] f32 — effective scale (levels >= scale are masked out)
+    src_ref:   [BLOCK] u32 output source vertex ids
+    dst_ref:   [BLOCK] u32 output destination vertex ids
+    """
+    scale = scale_ref[0]
+    ab = RMAT_A + RMAT_B
+    abc = RMAT_A + RMAT_B + RMAT_C
+
+    def body(level, carry):
+        src, dst = carry
+        u = u_ref[:, level]
+        # Quadrant decode: a->(0,0) b->(0,1) c->(1,0) d->(1,1).
+        src_bit = (u >= ab).astype(jnp.uint32)
+        dst_bit = jnp.logical_or(
+            jnp.logical_and(u >= RMAT_A, u < ab), u >= abc
+        ).astype(jnp.uint32)
+        # Levels beyond the effective scale contribute nothing: the vertex
+        # ids stay < 2^scale.
+        live = (level.astype(jnp.float32) < scale).astype(jnp.uint32)
+        src = src * (1 + live) + live * src_bit
+        dst = dst * (1 + live) + live * dst_bit
+        return src, dst
+
+    zeros = jnp.zeros((u_ref.shape[0],), dtype=jnp.uint32)
+    src, dst = jax.lax.fori_loop(0, levels, body, (zeros, zeros))
+    src_ref[...] = src
+    dst_ref[...] = dst
+
+
+@functools.partial(jax.jit, static_argnames=("block", "levels"))
+def rmat_edges(
+    u: jax.Array,
+    scale: jax.Array,
+    *,
+    block: int = BLOCK,
+    levels: int = LEVELS,
+):
+    """Generate a batch of R-MAT edge endpoints from uniform randoms.
+
+    u:     [B, levels] f32 uniforms, B % block == 0
+    scale: [1] f32 effective scale (vertex ids < 2^scale)
+    returns (src, dst): each [B] u32
+    """
+    b = u.shape[0]
+    if b % block != 0:
+        raise ValueError(f"batch {b} not a multiple of block {block}")
+    grid = (b // block,)
+    return pl.pallas_call(
+        functools.partial(_rmat_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, levels), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+        ],
+        interpret=True,
+    )(u, scale)

@@ -1,0 +1,70 @@
+"""Layer-1 Pallas kernel: SSCA-2 computation-kernel compute half.
+
+SSCA-2 kernel 2 ("classify large sets") scans every edge of the generated
+multigraph, finds the maximum edge weight, and collects the edges that
+carry it.  The *collection* step is the paper's contended critical section
+(shared list append) and lives in Rust (graph/computation.rs); the *scan*
+is embarrassingly data-parallel compute and is what we lift to Pallas:
+
+  pass 1: block max-reduction over the weight array  -> per-block maxima
+  pass 2: masked compare against the global cutoff   -> membership mask
+
+Both passes are served by one kernel: it emits the tile max AND the tile
+mask for a given cutoff, so the Rust driver runs it once with cutoff=0
+(collect maxima, reduce across tiles) and once with cutoff=global max
+(collect masks).  One artifact, two uses.
+
+interpret=True (CPU PJRT; see rmat.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 2048
+
+
+def _classify_kernel(w_ref, cutoff_ref, max_ref, mask_ref):
+    """w_ref: [BLOCK] u32, cutoff_ref: [1] u32.
+
+    max_ref:  [1] u32 — max weight within this tile
+    mask_ref: [BLOCK] u32 — 1 where w == cutoff else 0
+    """
+    w = w_ref[...]
+    max_ref[0] = jnp.max(w)
+    mask_ref[...] = (w == cutoff_ref[0]).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def classify_weights(w: jax.Array, cutoff: jax.Array, *, block: int = BLOCK):
+    """Tile max-reduce + cutoff mask over an edge-weight array.
+
+    w:      [B] u32 edge weights, B % block == 0
+    cutoff: [1] u32
+    returns (tile_max [B//block] u32, mask [B] u32)
+    """
+    b = w.shape[0]
+    if b % block != 0:
+        raise ValueError(f"batch {b} not a multiple of block {block}")
+    grid = (b // block,)
+    return pl.pallas_call(
+        _classify_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b // block,), jnp.uint32),
+            jax.ShapeDtypeStruct((b,), jnp.uint32),
+        ],
+        interpret=True,
+    )(w, cutoff)

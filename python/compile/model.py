@@ -1,0 +1,61 @@
+"""Layer-2 JAX model: the SSCA-2 compute graph, calling the Pallas kernels.
+
+Two entry points, each lowered to its own AOT artifact by aot.py:
+
+  edge_batch(key, scale, maxw)  — threefry PRNG -> uniforms -> rmat kernel
+                                  -> (src, dst, weight) edge tuples.
+                                  SSCA-2's `genScalData`: weights are
+                                  uniform integers in [1, maxw].
+  classify(w, cutoff)           — weights kernel: (tile_max, mask).
+
+The Rust coordinator (rust/src/runtime/) executes these artifacts on the
+PJRT CPU client from the request path; Python never runs at serve time.
+Batch size B and LEVELS are static (one executable per artifact); graph
+scale and max weight are runtime scalars, so a single pair of artifacts
+serves every experiment in DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.rmat import BLOCK, LEVELS, rmat_edges
+from .kernels.weights import classify_weights
+
+# One runtime call produces this many edges. 64 Ki tuples x (24+1)
+# uniforms x 4 B ~= 6.5 MiB of intermediate — small enough for the CPU
+# plugin, big enough to amortize a PJRT execute round-trip.
+BATCH = 65536
+
+
+def edge_batch(key: jax.Array, scale: jax.Array, maxw: jax.Array):
+    """key: u32[2] threefry key; scale: f32[1]; maxw: f32[1].
+
+    Returns (src u32[B], dst u32[B], weight u32[B]); vertex ids < 2^scale,
+    weights uniform in [1, maxw].
+    """
+    u = jax.random.uniform(key, (BATCH, LEVELS + 1), dtype=jnp.float32)
+    src, dst = rmat_edges(u[:, :LEVELS], scale, block=BLOCK, levels=LEVELS)
+    w = 1 + jnp.floor(u[:, LEVELS] * maxw).astype(jnp.uint32)
+    return src, dst, w
+
+
+def classify(w: jax.Array, cutoff: jax.Array):
+    """w: u32[B], cutoff: u32[1] -> (tile_max u32[B/BLOCK], mask u32[B])."""
+    return classify_weights(w, cutoff, block=BLOCK)
+
+
+def edge_batch_specs():
+    return (
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+
+
+def classify_specs():
+    return (
+        jax.ShapeDtypeStruct((BATCH,), jnp.uint32),
+        jax.ShapeDtypeStruct((1,), jnp.uint32),
+    )

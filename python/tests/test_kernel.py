@@ -1,0 +1,145 @@
+"""Pallas kernels vs pure-jnp oracle — the core correctness signal.
+
+Integer outputs -> exact equality, not allclose.  Hypothesis sweeps the
+shape/scale space; a few pinned cases guard known edges (scale 0, scale ==
+LEVELS, single tile).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rmat import LEVELS, RMAT_A, RMAT_B, RMAT_C, RMAT_D, rmat_edges
+from compile.kernels.weights import classify_weights
+
+
+def uniforms(seed, b, levels):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, (b, levels), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------- rmat
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    log_b=st.integers(0, 4),
+    block_pow=st.integers(0, 3),
+    scale=st.integers(1, LEVELS),
+)
+def test_rmat_matches_ref(seed, log_b, block_pow, scale):
+    block = 64 * (2**block_pow)
+    b = block * (2**log_b)
+    u = uniforms(seed, b, LEVELS)
+    s = jnp.array([float(scale)], dtype=jnp.float32)
+    src, dst = rmat_edges(u, s, block=block, levels=LEVELS)
+    src_r, dst_r = ref.rmat_edges_ref(u, s)
+    np.testing.assert_array_equal(np.asarray(src), np.asarray(src_r))
+    np.testing.assert_array_equal(np.asarray(dst), np.asarray(dst_r))
+
+
+@pytest.mark.parametrize("scale", [1, 2, 8, LEVELS])
+def test_rmat_ids_bounded(scale):
+    u = uniforms(7, 4096, LEVELS)
+    s = jnp.array([float(scale)], dtype=jnp.float32)
+    src, dst = rmat_edges(u, s, block=1024, levels=LEVELS)
+    assert int(jnp.max(src)) < 2**scale
+    assert int(jnp.max(dst)) < 2**scale
+
+
+def test_rmat_scale_zero_gives_self_loops_at_zero():
+    u = uniforms(3, 256, LEVELS)
+    s = jnp.array([0.0], dtype=jnp.float32)
+    src, dst = rmat_edges(u, s, block=256, levels=LEVELS)
+    assert int(jnp.max(src)) == 0 and int(jnp.max(dst)) == 0
+
+
+def test_rmat_quadrant_distribution():
+    """Top-level quadrant frequencies approximate (a, b, c, d)."""
+    b, scale = 1 << 16, 16
+    u = uniforms(11, b, LEVELS)
+    s = jnp.array([float(scale)], dtype=jnp.float32)
+    src, dst = rmat_edges(u, s, block=2048, levels=LEVELS)
+    top = 1 << (scale - 1)
+    src_hi = np.asarray(src) >= top
+    dst_hi = np.asarray(dst) >= top
+    freq = {
+        "a": np.mean(~src_hi & ~dst_hi),
+        "b": np.mean(~src_hi & dst_hi),
+        "c": np.mean(src_hi & ~dst_hi),
+        "d": np.mean(src_hi & dst_hi),
+    }
+    for k, expect in zip("abcd", (RMAT_A, RMAT_B, RMAT_C, RMAT_D)):
+        assert abs(freq[k] - expect) < 0.01, (k, freq[k], expect)
+
+
+def test_rmat_deterministic():
+    u = uniforms(5, 2048, LEVELS)
+    s = jnp.array([12.0], dtype=jnp.float32)
+    a = rmat_edges(u, s, block=512, levels=LEVELS)
+    b = rmat_edges(u, s, block=512, levels=LEVELS)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_rmat_block_tiling_invariant():
+    """Tiling must not change results: block=64 vs block=b."""
+    u = uniforms(9, 1024, LEVELS)
+    s = jnp.array([10.0], dtype=jnp.float32)
+    a = rmat_edges(u, s, block=64, levels=LEVELS)
+    b = rmat_edges(u, s, block=1024, levels=LEVELS)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_rmat_rejects_ragged_batch():
+    u = uniforms(1, 96, LEVELS)
+    s = jnp.array([8.0], dtype=jnp.float32)
+    with pytest.raises(ValueError):
+        rmat_edges(u, s, block=64, levels=LEVELS)
+
+
+# ------------------------------------------------------------ classify
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    log_b=st.integers(0, 4),
+    block_pow=st.integers(0, 3),
+    maxw=st.integers(1, 1 << 20),
+)
+def test_classify_matches_ref(seed, log_b, block_pow, maxw):
+    block = 64 * (2**block_pow)
+    b = block * (2**log_b)
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.randint(key, (b,), 1, maxw + 1, dtype=jnp.uint32)
+    cutoff = jnp.array([int(jnp.max(w))], dtype=jnp.uint32)
+    tm, mask = classify_weights(w, cutoff, block=block)
+    tm_r, mask_r = ref.classify_weights_ref(w, cutoff, block)
+    np.testing.assert_array_equal(np.asarray(tm), np.asarray(tm_r))
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(mask_r))
+
+
+def test_classify_two_pass_finds_global_max():
+    """The runtime's two-pass protocol: max via pass 1, mask via pass 2."""
+    key = jax.random.PRNGKey(42)
+    w = jax.random.randint(key, (8192,), 1, 1000, dtype=jnp.uint32)
+    tm, _ = classify_weights(w, jnp.array([0], dtype=jnp.uint32), block=1024)
+    gmax = int(jnp.max(tm))
+    assert gmax == int(jnp.max(w))
+    _, mask = classify_weights(w, jnp.array([gmax], dtype=jnp.uint32), block=1024)
+    np.testing.assert_array_equal(
+        np.asarray(mask), (np.asarray(w) == gmax).astype(np.uint32)
+    )
+
+
+def test_classify_mask_counts():
+    w = jnp.full((2048,), 7, dtype=jnp.uint32)
+    tm, mask = classify_weights(w, jnp.array([7], dtype=jnp.uint32), block=512)
+    assert int(mask.sum()) == 2048
+    assert np.all(np.asarray(tm) == 7)

@@ -1,0 +1,65 @@
+"""Layer-2 model shape/semantics tests + AOT lowering smoke tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.aot import ENTRY_POINTS, to_hlo_text
+
+
+def test_edge_batch_shapes_and_ranges():
+    key = jnp.array([1, 2], dtype=jnp.uint32)
+    scale = jnp.array([14.0], dtype=jnp.float32)
+    maxw = jnp.array([float(1 << 14)], dtype=jnp.float32)
+    src, dst, w = model.edge_batch(key, scale, maxw)
+    assert src.shape == (model.BATCH,) and src.dtype == jnp.uint32
+    assert dst.shape == (model.BATCH,) and dst.dtype == jnp.uint32
+    assert w.shape == (model.BATCH,) and w.dtype == jnp.uint32
+    assert int(src.max()) < 1 << 14
+    assert int(dst.max()) < 1 << 14
+    assert int(w.min()) >= 1 and int(w.max()) <= 1 << 14
+
+
+def test_edge_batch_keyed_determinism():
+    key = jnp.array([7, 9], dtype=jnp.uint32)
+    scale = jnp.array([10.0], dtype=jnp.float32)
+    maxw = jnp.array([8.0], dtype=jnp.float32)
+    a = model.edge_batch(key, scale, maxw)
+    b = model.edge_batch(key, scale, maxw)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    c = model.edge_batch(jnp.array([7, 10], dtype=jnp.uint32), scale, maxw)
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(c[0]))
+
+
+def test_edge_batch_weight_distribution():
+    key = jnp.array([3, 4], dtype=jnp.uint32)
+    scale = jnp.array([12.0], dtype=jnp.float32)
+    maxw = jnp.array([4.0], dtype=jnp.float32)
+    _, _, w = model.edge_batch(key, scale, maxw)
+    counts = np.bincount(np.asarray(w), minlength=5)[1:5]
+    assert counts.min() > 0.8 * model.BATCH / 4  # roughly uniform over 1..4
+
+
+def test_classify_roundtrip():
+    key = jnp.array([5, 6], dtype=jnp.uint32)
+    scale = jnp.array([12.0], dtype=jnp.float32)
+    maxw = jnp.array([255.0], dtype=jnp.float32)
+    _, _, w = model.edge_batch(key, scale, maxw)
+    tm, _ = model.classify(w, jnp.array([0], dtype=jnp.uint32))
+    gmax = int(tm.max())
+    _, mask = model.classify(w, jnp.array([gmax], dtype=jnp.uint32))
+    assert gmax == int(w.max())
+    assert int(mask.sum()) == int((np.asarray(w) == gmax).sum())
+
+
+@pytest.mark.parametrize("name", list(ENTRY_POINTS))
+def test_aot_lowering_emits_hlo_text(name):
+    fn, specs = ENTRY_POINTS[name]
+    text = to_hlo_text(jax.jit(fn).lower(*specs()))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # No Mosaic custom-calls may survive: CPU PJRT cannot run them.
+    assert "mosaic" not in text.lower()

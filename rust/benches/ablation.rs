@@ -1,0 +1,151 @@
+//! Bench: the ablations DESIGN.md §5 calls out (A1–A3) plus the batch /
+//! task-size sensitivity study.
+//!
+//! * A1 — DyAd's capacity-flag short-circuit ON (DyAd) vs OFF (Fx with
+//!   the same quota): isolates the paper's actual mechanism.
+//! * A2 — NOrec vs TL2 as the HyTM fallback STM.
+//! * A3 — RND quota ranges (the paper's 1-20 / 20-50 / 50-100 DSE).
+//! * A4 — task size (batch) sweep: when do capacity aborts start to
+//!   dominate, and how does each policy cope?
+//! * A5 — DyAdHyTM (per-transaction fallback) vs PhTM (phase-global
+//!   switching), the paper's taxonomy class 2.
+//! * A6 — SSCA-2 kernel 3 (multi-source BFS): policy sensitivity of a
+//!   claim-heavy graph-traversal kernel.
+//!
+//! ```sh
+//! cargo bench --bench ablation
+//! ```
+
+use dyadhytm::coordinator::figures::{sim_cell, Kernel};
+use dyadhytm::hytm::PolicySpec;
+use dyadhytm::sim::workload::TxnDesc;
+use dyadhytm::sim::{CostModel, SimWorkload, Simulator};
+
+const SEED: u64 = 7;
+const SCALE: u32 = 16;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+
+    // -- A1: the capacity short-circuit ---------------------------------
+    println!("### A1 — DyAd's flag adaptation on/off (same quota n=43, both kernels)\n");
+    println!("| threads | Fx (flag OFF) s | DyAd (flag ON) s | saved |");
+    println!("|---|---|---|---|");
+    for t in [4usize, 14, 28] {
+        let fx = sim_cell(PolicySpec::Fx { n: 43 }, t, SCALE, Kernel::Both, 1, SEED).0;
+        let dy = sim_cell(PolicySpec::DyAd { n: 43 }, t, SCALE, Kernel::Both, 1, SEED).0;
+        println!("| {t} | {fx:.3} | {dy:.3} | {:.1}% |", (fx / dy - 1.0) * 100.0);
+    }
+
+    // -- A2: fallback STM flavour ----------------------------------------
+    println!("\n### A2 — HyTM fallback STM: NOrec vs TL2 (live, scale 10, 4 threads)\n");
+    println!("| fallback | generation | computation |");
+    println!("|---|---|---|");
+    {
+        use dyadhytm::graph::{computation, generation, rmat, Graph, Ssca2Config};
+        use dyadhytm::htm::HtmConfig;
+        use dyadhytm::hytm::TmSystem;
+        use std::sync::Arc;
+        for (name, spec) in [
+            ("norec", PolicySpec::DyAd { n: 43 }),
+            ("tl2", PolicySpec::DyAdTl2 { n: 43 }),
+        ] {
+            let cfg = Ssca2Config::new(10);
+            let g = Graph::alloc(cfg);
+            let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::tiny());
+            let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+            let (gen_t, _) = generation::run(&sys, &g, &tuples, spec, 4, SEED);
+            let comp = computation::run(&sys, &g, spec, 4, SEED);
+            println!("| {name} | {gen_t:?} | {:?} |", comp.elapsed);
+        }
+    }
+
+    // -- A3: RND ranges ----------------------------------------------------
+    println!("\n### A3 — RNDHyTM quota ranges (sim, 28 threads, both kernels)\n");
+    println!("| range | seconds | retries/thread |");
+    println!("|---|---|---|");
+    for (lo, hi) in [(1u32, 20u32), (20, 50), (50, 100)] {
+        let (s, stats) = sim_cell(PolicySpec::Rnd { lo, hi }, 28, SCALE, Kernel::Both, 1, SEED);
+        println!("| {lo}-{hi} | {s:.3} | {:.0} |", stats.hw_retries_per_thread());
+    }
+
+    // -- A4: task-size sweep -------------------------------------------------
+    println!("\n### A4 — task size (batch) sweep, generation kernel, 14 threads (sim)\n");
+    println!("| batch | policy | seconds | capacity aborts | stm fallbacks |");
+    println!("|---|---|---|---|---|");
+    let cost = CostModel::for_scale(SCALE);
+    for batch in [1usize, 8, 32] {
+        for spec in [PolicySpec::Fx { n: 43 }, PolicySpec::DyAd { n: 43 }] {
+            let mut w = SimWorkload::new(SCALE);
+            w.batch = batch;
+            let sim = Simulator::new(cost.clone());
+            let streams: Vec<Box<dyn Iterator<Item = TxnDesc>>> = (0..14)
+                .map(|tid| Box::new(w.generation_stream(&cost, 14, tid)) as _)
+                .collect();
+            let out = sim.run(spec, 14, streams, SEED);
+            let t = out.stats.total();
+            println!(
+                "| {batch} | {} | {:.3} | {} | {} |",
+                spec.name(),
+                out.seconds,
+                t.aborts_of(dyadhytm::tm::AbortCause::Capacity),
+                t.sw_commits
+            );
+        }
+    }
+    // -- A5: per-txn fallback (DyAd) vs phase-global (PhTM) ----------------
+    println!("\n### A5 — DyAdHyTM vs PhTM (sim, both kernels)\n");
+    println!("| threads | DyAd s | PhTM s | PhTM penalty |");
+    println!("|---|---|---|---|");
+    for t in [4usize, 14, 28] {
+        let dy = sim_cell(PolicySpec::DyAd { n: 43 }, t, SCALE, Kernel::Both, 1, SEED).0;
+        let ph = sim_cell(
+            PolicySpec::PhTm { retries: 8, sw_quantum: 64 },
+            t,
+            SCALE,
+            Kernel::Both,
+            1,
+            SEED,
+        )
+        .0;
+        println!("| {t} | {dy:.3} | {ph:.3} | {:+.1}% |", (ph / dy - 1.0) * 100.0);
+    }
+
+    // -- A6: kernel 3 policy sensitivity (live) ----------------------------
+    println!("\n### A6 — SSCA-2 kernel 3 (multi-source BFS, live, scale 10, 4 threads)\n");
+    println!("| policy | time | marked | hw commits | sw commits |");
+    println!("|---|---|---|---|---|");
+    {
+        use dyadhytm::graph::{computation, generation, rmat, subgraph, Graph, Ssca2Config};
+        use dyadhytm::htm::HtmConfig;
+        use dyadhytm::hytm::TmSystem;
+        use std::sync::Arc;
+        for spec in [
+            PolicySpec::CoarseLock,
+            PolicySpec::StmNorec,
+            PolicySpec::HtmSpin { retries: 8 },
+            PolicySpec::DyAd { n: 43 },
+            PolicySpec::PhTm { retries: 8, sw_quantum: 64 },
+        ] {
+            let cfg = Ssca2Config::new(10);
+            let g = Graph::alloc(cfg);
+            let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+            let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+            generation::build_serial(&sys, &g, &tuples);
+            let _ = computation::run(&sys, &g, spec, 4, SEED);
+            let roots = subgraph::roots_from_results(&g);
+            let r = subgraph::run(&sys, &g, &roots, 3, spec, 4, SEED);
+            subgraph::verify_subgraph(&g, &roots, 3, &r).unwrap();
+            let t = r.stats.total();
+            println!(
+                "| {} | {:?} | {} | {} | {} |",
+                spec.name(),
+                r.elapsed,
+                r.total_marked,
+                t.hw_commits,
+                t.sw_commits
+            );
+        }
+    }
+    eprintln!("[ablation: {:?}]", t0.elapsed());
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate Figure 2 (a–f) and the in-text T0 triple.
+//!
+//! For every Figure-2 policy × thread count × kernel × scale, run the
+//! simulated 28-HT Broadwell and print the paper-shaped series, then the
+//! headline speedup summary. (criterion is not in the offline registry;
+//! this is a `harness = false` driver — wall time of the *simulation*
+//! is incidental, the virtual seconds are the measurement.)
+//!
+//! ```sh
+//! cargo bench --bench fig2_scaling
+//! ```
+
+use dyadhytm::coordinator::figures;
+
+fn main() {
+    let seed = 7;
+    let t0 = std::time::Instant::now();
+    for id in ["t0", "2a", "2b", "2c", "2d", "2e", "2f"] {
+        let fig = figures::fig_by_name(id).expect("figure id");
+        println!("{}", figures::render_figure(&fig, seed));
+    }
+    println!("{}", figures::render_headline(seed));
+    eprintln!("[fig2_scaling: regenerated in {:?}]", t0.elapsed());
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerate Figure 3 (a–c) — the four HyTM variants
+//! (RND / Fx / StAd / DyAd) on both kernels at the large scale.
+//!
+//! ```sh
+//! cargo bench --bench fig3_variants
+//! ```
+
+use dyadhytm::coordinator::figures;
+
+fn main() {
+    let seed = 7;
+    let t0 = std::time::Instant::now();
+    for id in ["3a", "3b", "3c"] {
+        let fig = figures::fig_by_name(id).expect("figure id");
+        println!("{}", figures::render_figure(&fig, seed));
+    }
+    // The paper's §4 percentages at 28 threads.
+    use dyadhytm::coordinator::figures::{sim_cell, Kernel};
+    use dyadhytm::hytm::PolicySpec;
+    let secs = |p, k| sim_cell(p, 28, 16, k, 1, seed).0;
+    let dyad_b = secs(PolicySpec::DyAd { n: 43 }, Kernel::Both);
+    let dyad_c = secs(PolicySpec::DyAd { n: 43 }, Kernel::Computation);
+    println!("### Paper §4 deltas at 28 threads (paper -> ours)\n");
+    println!("| vs | kernel | paper | ours |\n|---|---|---|---|");
+    for (name, p) in [
+        ("StAd", PolicySpec::StAd { n: 6 }),
+        ("Fx", PolicySpec::Fx { n: 43 }),
+        ("RND", PolicySpec::Rnd { lo: 1, hi: 50 }),
+    ] {
+        let both = (secs(p, Kernel::Both) / dyad_b - 1.0) * 100.0;
+        let comp = (secs(p, Kernel::Computation) / dyad_c - 1.0) * 100.0;
+        let paper = match name {
+            "StAd" => ("1.4%", "4.2%"),
+            "Fx" => ("3.81%", "21.8%"),
+            _ => ("24.8%", "155.1%"),
+        };
+        println!("| DyAd vs {name} | both | {} | {both:.1}% |", paper.0);
+        println!("| DyAd vs {name} | computation | {} | {comp:.1}% |", paper.1);
+    }
+    eprintln!("[fig3_variants: regenerated in {:?}]", t0.elapsed());
+}

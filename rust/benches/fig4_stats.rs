@@ -1,0 +1,59 @@
+//! Bench: regenerate Figure 4 (a–c) — per-thread HTM transactions,
+//! retries, and STM fallbacks for the four HyTM variants.
+//!
+//! ```sh
+//! cargo bench --bench fig4_stats
+//! ```
+
+use dyadhytm::coordinator::figures::{sim_cell, Kernel};
+use dyadhytm::hytm::PolicySpec;
+
+fn main() {
+    let seed = 7;
+    let scale = 16;
+    let t0 = std::time::Instant::now();
+    let variants = [
+        ("rnd-hytm", PolicySpec::Rnd { lo: 1, hi: 50 }),
+        ("fx-hytm", PolicySpec::Fx { n: 43 }),
+        ("stad-hytm", PolicySpec::StAd { n: 6 }),
+        ("dyad-hytm", PolicySpec::DyAd { n: 43 }),
+    ];
+
+    for (fig, title, metric) in [
+        ("4a", "HTM transactions per thread", 0usize),
+        ("4b", "HTM retries per thread", 1),
+        ("4c", "STM transactions per thread", 2),
+    ] {
+        println!("### Figure {fig} — {title} (simulated, scale {scale}, both kernels)\n");
+        print!("| policy \\ threads |");
+        let threads = [4usize, 8, 12, 14, 16, 20, 24, 28];
+        for t in threads {
+            print!(" {t} |");
+        }
+        println!("\n|---|---|---|---|---|---|---|---|---|");
+        for (name, p) in variants {
+            print!("| {name} |");
+            for t in threads {
+                let (_, stats) = sim_cell(p, t, scale, Kernel::Both, 1, seed);
+                let v = match metric {
+                    0 => stats.hw_attempts_per_thread(),
+                    1 => stats.hw_retries_per_thread(),
+                    _ => stats.sw_commits_per_thread(),
+                };
+                print!(" {v:.0} |");
+            }
+            println!();
+        }
+        println!();
+    }
+
+    // The paper's scale-27 anchor: total retries at 28 threads
+    // (161.4M / 171M / 6.95M / 6.78M for RND/Fx/StAd/DyAd).
+    println!("### Total retries at 28 threads (paper scale 27: 161.4M / 171M / 6.95M / 6.78M)\n");
+    println!("| policy | total retries (scale {scale}) |\n|---|---|");
+    for (name, p) in variants {
+        let (_, stats) = sim_cell(p, 28, scale, Kernel::Both, 1, seed);
+        println!("| {name} | {} |", stats.total().hw_retries);
+    }
+    eprintln!("[fig4_stats: regenerated in {:?}]", t0.elapsed());
+}

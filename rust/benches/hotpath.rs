@@ -1,0 +1,117 @@
+//! Bench: live hot-path microbenchmarks (the §Perf measurement tool).
+//!
+//! Per-transaction wall costs of every engine on this machine, single
+//! thread (the only configuration a 1-core box can measure honestly),
+//! plus the policy-bookkeeping overheads the paper argues about:
+//! RND's RNG draw vs DyAd's flag check vs Fx's nothing.
+//!
+//! ```sh
+//! cargo bench --bench hotpath
+//! ```
+
+use std::sync::Arc;
+
+use dyadhytm::htm::{HtmConfig, HtmEngine, HtmScratch};
+use dyadhytm::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use dyadhytm::mem::TxHeap;
+use dyadhytm::stm::{NorecEngine, Tl2Engine};
+use dyadhytm::tm::access::{TxAccess, TxResult};
+use dyadhytm::util::rng::Rng;
+use dyadhytm::util::timer::bench_ns;
+
+const ITERS: usize = 30_000;
+const WARMUP: usize = 3_000;
+
+fn body(base: usize) -> impl FnMut(&mut dyn TxAccess) -> TxResult<()> {
+    // The generation kernel's 2-read/6-write shape.
+    move |t: &mut dyn TxAccess| {
+        let a = t.read(base)?;
+        let b = t.read(base + 8)?;
+        t.write(base + 16, a)?;
+        t.write(base + 17, b)?;
+        t.write(base + 18, 1)?;
+        t.write(base + 19, 2)?;
+        t.write(base, a + 1)?;
+        t.write(base + 8, b + 1)?;
+        Ok(())
+    }
+}
+
+fn main() {
+    let heap = Arc::new(TxHeap::new(1 << 14));
+    let base = heap.alloc_lines(4);
+
+    println!("### Hot path: ns per 2r/6w transaction, single thread (live)\n");
+    println!("| engine | median ns | p95 ns |");
+    println!("|---|---|---|");
+
+    // Raw engines.
+    let htm = HtmEngine::new(Arc::clone(&heap), HtmConfig::broadwell());
+    let mut rng = Rng::new(1);
+    let mut b = body(base);
+    let mut scratch = HtmScratch::new(htm.config());
+    let s = bench_ns(WARMUP, ITERS, || {
+        htm.attempt_with(&mut scratch, 0, &mut rng, None, &mut b)
+            .unwrap();
+    });
+    println!("| software HTM attempt | {} | {} |", s.median, s.p95);
+
+    let norec = NorecEngine::new(Arc::clone(&heap));
+    let mut b = body(base);
+    let s = bench_ns(WARMUP, ITERS, || {
+        norec.attempt(&mut b).unwrap();
+    });
+    println!("| NOrec STM attempt | {} | {} |", s.median, s.p95);
+
+    let tl2 = Tl2Engine::new(Arc::clone(&heap));
+    let mut b = body(base);
+    let s = bench_ns(WARMUP, ITERS, || {
+        tl2.attempt(0, &mut b).unwrap();
+    });
+    println!("| TL2 STM attempt | {} | {} |", s.median, s.p95);
+
+    // Full policy executors (uncontended): measures executor overhead.
+    println!("\n### Full policy executors, uncontended (live)\n");
+    println!("| policy | median ns | p95 ns | vs fx |");
+    println!("|---|---|---|---|");
+    // Measure the fx baseline first (the "vs fx" column's denominator).
+    let fx_median = {
+        let sys = TmSystem::new(Arc::clone(&heap), HtmConfig::broadwell());
+        let mut ex = ThreadExecutor::new(&sys, PolicySpec::Fx { n: 43 }, 0, 9);
+        let mut b = body(base);
+        bench_ns(WARMUP, ITERS, || {
+            ex.execute(&mut b);
+        })
+        .median
+        .max(1)
+    };
+    for spec in [
+        PolicySpec::CoarseLock,
+        PolicySpec::StmNorec,
+        PolicySpec::StmTl2,
+        PolicySpec::HtmSpin { retries: 8 },
+        PolicySpec::Hle,
+        PolicySpec::Fx { n: 43 },
+        PolicySpec::Rnd { lo: 1, hi: 50 },
+        PolicySpec::StAd { n: 6 },
+        PolicySpec::DyAd { n: 43 },
+    ] {
+        let sys = TmSystem::new(Arc::clone(&heap), HtmConfig::broadwell());
+        let mut ex = ThreadExecutor::new(&sys, spec, 0, 9);
+        let mut b = body(base);
+        let s = bench_ns(WARMUP, ITERS, || {
+            ex.execute(&mut b);
+        });
+        println!(
+            "| {} | {} | {} | {:+.1}% |",
+            spec.name(),
+            s.median,
+            s.p95,
+            (s.median as f64 / fx_median as f64 - 1.0) * 100.0
+        );
+    }
+    println!(
+        "\n(\"low overhead\" claim: dyad-hytm vs fx-hytm should be within a few percent —\n\
+         the only extra work is reading the abort cause.)"
+    );
+}

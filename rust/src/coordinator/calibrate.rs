@@ -1,0 +1,150 @@
+//! Live cost calibration: measure this machine's per-primitive costs
+//! and report them next to the simulator's Broadwell defaults
+//! (EXPERIMENTS.md §Calibration).
+//!
+//! Single-threaded microbenchmarks over the real engines — the honest
+//! part of the cost model that *can* be measured on a 1-core box. The
+//! simulator's defaults stay fixed (deterministic figures); this
+//! command exists to let a user on different hardware re-derive them.
+
+use std::sync::Arc;
+
+use crate::htm::{HtmConfig, HtmEngine};
+use crate::hytm::{LockFlavor, RawLock};
+use crate::mem::TxHeap;
+use crate::stm::NorecEngine;
+use crate::tm::access::{TxAccess, TxResult};
+use crate::util::rng::Rng;
+use crate::util::timer::bench_ns;
+
+/// Measured per-primitive costs, nanoseconds.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub hw_txn_rw8_ns: f64,
+    pub sw_txn_rw8_ns: f64,
+    pub lock_txn_rw8_ns: f64,
+    pub rng_draw_ns: f64,
+    pub edge_gen_ns: f64,
+    pub clock_ghz_assumed: f64,
+}
+
+/// A standard 2-read/6-write transaction body (the generation kernel's
+/// shape) against `base`.
+fn txn_body(base: usize) -> impl FnMut(&mut dyn TxAccess) -> TxResult<()> {
+    move |t: &mut dyn TxAccess| {
+        let a = t.read(base)?;
+        let b = t.read(base + 8)?;
+        t.write(base + 16, a + 1)?;
+        t.write(base + 17, b + 1)?;
+        t.write(base + 18, 1)?;
+        t.write(base + 19, 2)?;
+        t.write(base, a + 1)?;
+        t.write(base + 8, b + 1)?;
+        Ok(())
+    }
+}
+
+pub fn run_calibration() -> Calibration {
+    const ITERS: usize = 20_000;
+    let heap = Arc::new(TxHeap::new(1 << 12));
+    let base = heap.alloc_lines(4);
+
+    let htm = HtmEngine::new(Arc::clone(&heap), HtmConfig::broadwell());
+    let mut rng = Rng::new(1);
+    let mut body = txn_body(base);
+    let hw = bench_ns(2_000, ITERS, || {
+        htm.attempt(0, &mut rng, None, &mut body).unwrap();
+    });
+
+    let norec = NorecEngine::new(Arc::clone(&heap));
+    let mut body = txn_body(base);
+    let sw = bench_ns(2_000, ITERS, || {
+        norec.attempt(&mut body).unwrap();
+    });
+
+    let lock = RawLock::new();
+    let mut body = txn_body(base);
+    let lk = bench_ns(2_000, ITERS, || {
+        lock.acquire(LockFlavor::Spin);
+        let mut acc = crate::tm::access::DirectAccess { heap: &heap };
+        body(&mut acc).unwrap();
+        lock.release();
+    });
+
+    let mut r = Rng::new(2);
+    let rng_b = bench_ns(2_000, ITERS, || {
+        std::hint::black_box(r.range(1, 50));
+    });
+
+    let mut r2 = Rng::new(3);
+    let edge = bench_ns(2_000, ITERS, || {
+        std::hint::black_box(crate::graph::rmat::rmat_edge(&mut r2, 16, 1 << 16));
+    });
+
+    Calibration {
+        hw_txn_rw8_ns: hw.median as f64,
+        sw_txn_rw8_ns: sw.median as f64,
+        lock_txn_rw8_ns: lk.median as f64,
+        rng_draw_ns: rng_b.median as f64,
+        edge_gen_ns: edge.median as f64,
+        clock_ghz_assumed: 2.4,
+    }
+}
+
+impl Calibration {
+    pub fn to_markdown(&self) -> String {
+        let cyc = |ns: f64| ns * self.clock_ghz_assumed;
+        format!(
+            "### Live calibration (this machine, single thread)\n\n\
+             | primitive | measured ns | ~cycles @2.4GHz | simulator default |\n\
+             |---|---|---|---|\n\
+             | HW txn (2r/6w) | {:.0} | {:.0} | {} |\n\
+             | NOrec txn (2r/6w) | {:.0} | {:.0} | {} |\n\
+             | lock txn (2r/6w) | {:.0} | {:.0} | {} |\n\
+             | RNG draw | {:.1} | {:.1} | 35 |\n\
+             | R-MAT edge gen | {:.0} | {:.0} | 420 |\n\n\
+             Key ratio (the one the figures depend on): STM/HTM per-txn = {:.2} \
+             (simulator default {:.2}).\n",
+            self.hw_txn_rw8_ns,
+            cyc(self.hw_txn_rw8_ns),
+            {
+                let c = crate::sim::CostModel::broadwell();
+                c.hw_txn_cycles(2, 6)
+            },
+            self.sw_txn_rw8_ns,
+            cyc(self.sw_txn_rw8_ns),
+            {
+                let c = crate::sim::CostModel::broadwell();
+                c.sw_txn_cycles(2, 6)
+            },
+            self.lock_txn_rw8_ns,
+            cyc(self.lock_txn_rw8_ns),
+            {
+                let c = crate::sim::CostModel::broadwell();
+                c.locked_txn_cycles(2, 6)
+            },
+            self.rng_draw_ns,
+            cyc(self.rng_draw_ns),
+            self.edge_gen_ns,
+            cyc(self.edge_gen_ns),
+            self.sw_txn_rw8_ns / self.hw_txn_rw8_ns,
+            {
+                let c = crate::sim::CostModel::broadwell();
+                c.sw_txn_cycles(2, 6) as f64 / c.hw_txn_cycles(2, 6) as f64
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[ignore = "timing-sensitive; run explicitly via `dyadhytm calibrate`"]
+    fn calibration_produces_sane_ratios() {
+        let c = run_calibration();
+        assert!(c.sw_txn_rw8_ns > c.hw_txn_rw8_ns * 0.8);
+        assert!(c.rng_draw_ns < c.hw_txn_rw8_ns);
+    }
+}

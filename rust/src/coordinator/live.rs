@@ -1,0 +1,216 @@
+//! Live (real threads, real speculation) experiment runner.
+//!
+//! One `RunConfig` = one SSCA-2 experiment: generate tuples (artifact
+//! path or native), build the graph with the generation kernel, extract
+//! the heavy band with the computation kernel, verify both, report
+//! wall-clock times and the stats plane.
+//!
+//! On this 1-core machine live wall-clock does not show parallel
+//! speedup (the simulator handles scaling figures); live runs are the
+//! ground truth for correctness and for single-thread overhead ratios
+//! (EXPERIMENTS.md §Calibration).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::graph::{computation, generation, rmat, verify, EdgeTuple, Graph, Ssca2Config};
+use crate::htm::HtmConfig;
+use crate::hytm::{PolicySpec, TmSystem};
+use crate::runtime::ArtifactRuntime;
+use crate::stats::StatsTable;
+
+/// One live experiment's configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub scale: u32,
+    pub edge_factor: u32,
+    pub batch: usize,
+    pub threads: usize,
+    pub policy: PolicySpec,
+    pub seed: u64,
+    pub htm: HtmConfig,
+    /// Generate tuples via the AOT Pallas artifact (request-path PJRT)
+    /// instead of the native generator.
+    pub use_artifacts: bool,
+    /// Verify graph + results after the run (O(m) extra).
+    pub verify: bool,
+}
+
+impl RunConfig {
+    pub fn new(scale: u32, policy: PolicySpec, threads: usize) -> Self {
+        Self {
+            scale,
+            edge_factor: 8,
+            batch: 1,
+            threads,
+            policy,
+            seed: 0x55CA_2017,
+            htm: HtmConfig::broadwell(),
+            use_artifacts: false,
+            verify: true,
+        }
+    }
+
+    fn ssca2(&self) -> Ssca2Config {
+        let mut c = Ssca2Config::new(self.scale).with_seed(self.seed);
+        c.edge_factor = self.edge_factor;
+        c.batch = self.batch;
+        c
+    }
+}
+
+/// Outcome of a live run.
+#[derive(Clone, Debug)]
+pub struct LiveReport {
+    pub cfg_label: String,
+    pub tuples: usize,
+    pub tuple_source: &'static str,
+    pub tuple_gen: Duration,
+    pub generation: Duration,
+    pub computation: Duration,
+    pub gen_stats: StatsTable,
+    pub comp_stats: StatsTable,
+    pub max_weight: u32,
+    pub selected: usize,
+    pub verified: bool,
+}
+
+impl LiveReport {
+    pub fn total(&self) -> Duration {
+        self.generation + self.computation
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let g = self.gen_stats.total();
+        let c = self.comp_stats.total();
+        format!(
+            "## {}\n\
+             tuples: {} ({}, {:?})\n\
+             generation kernel: {:?}\n\
+             computation kernel: {:?} (max weight {}, selected {})\n\
+             total: {:?}  verified: {}\n\n\
+             | kernel | hw_commits | hw_retries | capacity | conflict | sw_commits | lock |\n\
+             |---|---|---|---|---|---|---|\n\
+             | generation | {} | {} | {} | {} | {} | {} |\n\
+             | computation | {} | {} | {} | {} | {} | {} |\n",
+            self.cfg_label,
+            self.tuples,
+            self.tuple_source,
+            self.tuple_gen,
+            self.generation,
+            self.computation,
+            self.max_weight,
+            self.selected,
+            self.total(),
+            self.verified,
+            g.hw_commits,
+            g.hw_retries,
+            g.aborts_of(crate::tm::AbortCause::Capacity),
+            g.aborts_of(crate::tm::AbortCause::Conflict),
+            g.sw_commits,
+            g.lock_commits,
+            c.hw_commits,
+            c.hw_retries,
+            c.aborts_of(crate::tm::AbortCause::Capacity),
+            c.aborts_of(crate::tm::AbortCause::Conflict),
+            c.sw_commits,
+            c.lock_commits,
+        )
+    }
+}
+
+/// Produce the tuple list: artifact path if requested and present,
+/// native otherwise. Returns (tuples, source label, elapsed).
+pub fn make_tuples(cfg: &RunConfig) -> Result<(Vec<EdgeTuple>, &'static str, Duration)> {
+    let t0 = std::time::Instant::now();
+    if cfg.use_artifacts {
+        let dir = ArtifactRuntime::default_dir();
+        if !ArtifactRuntime::available(&dir) {
+            anyhow::bail!(
+                "artifacts not found in {} — run `make artifacts`",
+                dir.display()
+            );
+        }
+        let rt = ArtifactRuntime::load(Path::new(&dir)).context("loading artifacts")?;
+        let tuples = rt.generate_tuples(cfg.seed, cfg.scale, cfg.edge_factor)?;
+        Ok((tuples, "pallas-artifact", t0.elapsed()))
+    } else {
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        Ok((tuples, "native", t0.elapsed()))
+    }
+}
+
+/// Run one live experiment end to end.
+pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
+    let (tuples, tuple_source, tuple_gen) = make_tuples(cfg)?;
+
+    let g = Graph::alloc(cfg.ssca2());
+    let sys = TmSystem::new(Arc::clone(&g.heap), cfg.htm.clone());
+
+    let (generation, gen_stats) =
+        generation::run(&sys, &g, &tuples, cfg.policy, cfg.threads, cfg.seed);
+
+    let comp = computation::run(&sys, &g, cfg.policy, cfg.threads, cfg.seed ^ 0xBEEF);
+
+    let verified = if cfg.verify {
+        verify::check_graph(&g, &tuples)
+            .and_then(|_| verify::check_results(&g, &tuples))
+            .map_err(|e| anyhow::anyhow!(e))
+            .context("post-run verification")?;
+        true
+    } else {
+        false
+    };
+
+    Ok(LiveReport {
+        cfg_label: format!(
+            "{} scale={} threads={} batch={}",
+            cfg.policy.name(),
+            cfg.scale,
+            cfg.threads,
+            cfg.batch
+        ),
+        tuples: tuples.len(),
+        tuple_source,
+        tuple_gen,
+        generation,
+        computation: comp.elapsed,
+        gen_stats,
+        comp_stats: comp.stats,
+        max_weight: comp.max_weight,
+        selected: comp.selected,
+        verified,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_run_end_to_end_native() {
+        let cfg = RunConfig::new(7, PolicySpec::DyAd { n: 43 }, 3);
+        let r = run_live(&cfg).unwrap();
+        assert!(r.verified);
+        assert_eq!(r.tuples, 8 << 7);
+        assert!(r.selected > 0);
+        assert_eq!(
+            r.gen_stats.total().total_commits(),
+            r.tuples as u64
+        );
+        let md = r.to_markdown();
+        assert!(md.contains("generation kernel"));
+    }
+
+    #[test]
+    fn live_run_every_fig2_policy_verifies() {
+        for spec in PolicySpec::fig2_set() {
+            let cfg = RunConfig::new(6, spec, 2);
+            let r = run_live(&cfg).unwrap_or_else(|e| panic!("{}: {e}", spec.name()));
+            assert!(r.verified, "{}", spec.name());
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment coordination (DESIGN.md S15): everything between the CLI
+//! and the engines — run configuration, the live two-kernel experiment,
+//! the simulated figure sweeps, StAd tuning, and cost calibration.
+
+pub mod calibrate;
+pub mod figures;
+pub mod live;
+pub mod tune;
+
+pub use figures::{fig_by_name, FigureSpec};
+pub use live::{run_live, LiveReport, RunConfig};

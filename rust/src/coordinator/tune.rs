@@ -1,0 +1,89 @@
+//! StAdHyTM's offline design-space exploration (paper §3.5).
+//!
+//! The paper tunes the retry quota by running the application repeatedly
+//! over random-number *ranges* (1–20, 20–50, 50–100, …) and picking a
+//! fixed value from the best range — overhead it pointedly notes is
+//! "unreported". We implement the DSE against the simulator (or live
+//! runs, via the policy_explorer example) and report both the chosen
+//! quota and what the exploration cost.
+
+use crate::hytm::PolicySpec;
+use crate::sim::workload::TxnDesc;
+use crate::sim::{CostModel, SimWorkload, Simulator};
+
+/// Result of one DSE probe.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbeResult {
+    pub n: u32,
+    pub seconds: f64,
+}
+
+/// Explore fixed retry quotas for StAdHyTM over the generation kernel
+/// at (scale, threads); returns probes plus the winner.
+pub fn tune_stad(
+    scale: u32,
+    threads: usize,
+    candidates: &[u32],
+    seed: u64,
+) -> (Vec<ProbeResult>, u32) {
+    let cost = CostModel::for_scale(scale);
+    let w = SimWorkload::new(scale);
+    let sim = Simulator::new(cost.clone());
+
+    let mut probes = Vec::with_capacity(candidates.len());
+    for &n in candidates {
+        let streams: Vec<Box<dyn Iterator<Item = TxnDesc>>> = (0..threads)
+            .map(|tid| Box::new(w.generation_stream(&cost, threads, tid)) as _)
+            .collect();
+        let out = sim.run(PolicySpec::StAd { n }, threads, streams, seed);
+        probes.push(ProbeResult {
+            n,
+            seconds: out.seconds,
+        });
+    }
+    let best = probes
+        .iter()
+        .min_by(|a, b| a.seconds.total_cmp(&b.seconds))
+        .expect("at least one candidate")
+        .n;
+    (probes, best)
+}
+
+/// The paper's candidate ranges, as representative fixed quotas.
+pub fn default_candidates() -> Vec<u32> {
+    vec![1, 2, 4, 6, 8, 12, 16, 24, 32, 43, 64, 96]
+}
+
+pub fn render_tuning(scale: u32, threads: usize, seed: u64) -> String {
+    let (probes, best) = tune_stad(scale, threads, &default_candidates(), seed);
+    let mut out = format!(
+        "### StAdHyTM DSE (scale {scale}, {threads} threads) — the offline cost DyAdHyTM avoids\n\n| retries | virtual seconds |\n|---|---|\n"
+    );
+    for p in &probes {
+        let marker = if p.n == best { " **<- tuned**" } else { "" };
+        out.push_str(&format!("| {} | {:.3}{} |\n", p.n, p.seconds, marker));
+    }
+    out.push_str(&format!(
+        "\nDSE cost: {} full application runs. Chosen StAd quota: {best}.\n",
+        probes.len()
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tuning_picks_a_candidate() {
+        let (probes, best) = tune_stad(10, 4, &[1, 8, 64], 3);
+        assert_eq!(probes.len(), 3);
+        assert!([1, 8, 64].contains(&best));
+    }
+
+    #[test]
+    fn render_marks_winner() {
+        let md = render_tuning(9, 2, 1);
+        assert!(md.contains("<- tuned"));
+    }
+}

@@ -1,0 +1,259 @@
+//! The SSCA-2 computation kernel: heavy-edge extraction.
+//!
+//! Two phases over the built multigraph:
+//!
+//! 1. **max probe** — each thread scans its share of the edge-cell
+//!    region, and for *every* edge runs the critical section
+//!    `read gmax; if w > gmax write gmax`. This is the paper's
+//!    "dynamic conflict scenario where threads compete to update a
+//!    critical section": early in the scan writes are common and
+//!    conflict; quickly the probe becomes read-only — a coarse lock
+//!    still serializes every probe while TM lets them run concurrently
+//!    (Fig 2(c/f)'s 8x). The runtime path accelerates the *scan* side
+//!    with the AOT `classify` artifact.
+//! 2. **collect** — each thread re-scans its share and appends every
+//!    edge in the top weight band (`weight > cutoff`, band = 1/2^shift)
+//!    to the shared result list, buffered in flushes of
+//!    [`COLLECT_FLUSH`] so the shared counter doesn't serialize the
+//!    whole phase.
+
+use std::time::{Duration, Instant};
+
+use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use crate::stats::StatsTable;
+use crate::tm::access::{TxAccess, TxResult};
+
+use super::layout::Graph;
+
+/// Outcome of the computation kernel.
+#[derive(Clone, Debug)]
+pub struct ComputationResult {
+    pub max_weight: u32,
+    pub cutoff: u32,
+    pub selected: usize,
+    pub elapsed: Duration,
+    pub stats: StatsTable,
+}
+
+/// Per-thread share of the cell region: `[lo_cell, hi_cell)`.
+fn shard(total_cells: usize, threads: usize, tid: usize) -> (usize, usize) {
+    let per = total_cells.div_ceil(threads);
+    let lo = tid * per;
+    (lo.min(total_cells), ((tid + 1) * per).min(total_cells))
+}
+
+/// How many band hits the collect phase buffers before one append
+/// transaction (mirrored by the simulator's `COLLECT_FLUSH`).
+pub const COLLECT_FLUSH: usize = 8;
+
+/// Phase 1 worker: the per-edge transactional max probe.
+fn scan_and_merge_max(g: &Graph, ex: &mut ThreadExecutor<'_>, lo: usize, hi: usize) {
+    for i in lo..hi {
+        let w = g.heap.load(g.cell(i) + Graph::CELL_WEIGHT);
+        // The critical section, once per scanned edge.
+        ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<()> {
+            let cur = t.read(g.gmax)?;
+            if w > cur {
+                t.write(g.gmax, w)?;
+            }
+            Ok(())
+        });
+    }
+}
+
+/// Phase 2 worker: append every top-band edge to the shared list.
+/// Appends are batched `batch` edges per transaction (the same task-size
+/// knob as the generation kernel).
+fn collect_band(
+    g: &Graph,
+    ex: &mut ThreadExecutor<'_>,
+    lo: usize,
+    hi: usize,
+    cutoff: u64,
+) -> u64 {
+    let batch = g.cfg.batch.max(COLLECT_FLUSH);
+    let mut pending: Vec<u64> = Vec::with_capacity(batch);
+    let mut appended = 0u64;
+
+    let flush = |pending: &mut Vec<u64>, ex: &mut ThreadExecutor<'_>| {
+        if pending.is_empty() {
+            return;
+        }
+        ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<()> {
+            let count = t.read(g.result_count)?;
+            for (k, &cell) in pending.iter().enumerate() {
+                t.write(g.results_base + count as usize + k, cell)?;
+            }
+            t.write(g.result_count, count + pending.len() as u64)?;
+            Ok(())
+        });
+        pending.clear();
+    };
+
+    for i in lo..hi {
+        let cell = g.cell(i);
+        let w = g.heap.load(cell + Graph::CELL_WEIGHT);
+        // Unallocated cells have weight 0 and never pass the cutoff.
+        if w > cutoff {
+            pending.push(cell as u64);
+            appended += 1;
+            if pending.len() == batch {
+                flush(&mut pending, ex);
+            }
+        }
+    }
+    flush(&mut pending, ex);
+    appended
+}
+
+/// Run the computation kernel with `threads` workers under `spec`.
+pub fn run(
+    sys: &TmSystem,
+    g: &Graph,
+    spec: PolicySpec,
+    threads: usize,
+    seed: u64,
+) -> ComputationResult {
+    assert!(threads >= 1);
+    let total_cells = g.cells_allocated();
+    let t0 = Instant::now();
+    let mut table = StatsTable::new();
+
+    // Phase 1: global max.
+    let mut phase1_stats = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for tid in 0..threads {
+            let (lo, hi) = shard(total_cells, threads, tid);
+            handles.push(s.spawn(move || {
+                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
+                let t = Instant::now();
+                scan_and_merge_max(g, &mut ex, lo, hi);
+                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+                ex.stats
+            }));
+        }
+        for h in handles {
+            phase1_stats.push(h.join().unwrap());
+        }
+    });
+
+    let max_weight = g.heap.load(g.gmax) as u32;
+    let cutoff = g.weight_cutoff() as u64;
+
+    // Phase 2: collect the band.
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for tid in 0..threads {
+            let (lo, hi) = shard(total_cells, threads, tid);
+            handles.push(s.spawn(move || {
+                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed ^ 0xC0);
+                let t = Instant::now();
+                collect_band(g, &mut ex, lo, hi, cutoff);
+                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+                ex.stats
+            }));
+        }
+        for (tid, h) in handles.into_iter().enumerate() {
+            let mut s = h.join().unwrap();
+            // Fold the phase-1 merge transaction into the thread's row
+            // (times add: the phases are sequential).
+            let p1 = &phase1_stats[tid];
+            let t2 = s.time_ns;
+            s.merge(p1);
+            s.time_ns = t2 + p1.time_ns;
+            table.push(tid, s);
+        }
+    });
+
+    let selected = g.heap.load(g.result_count) as usize;
+    ComputationResult {
+        max_weight,
+        cutoff: cutoff as u32,
+        selected,
+        elapsed: t0.elapsed(),
+        stats: table,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layout::Ssca2Config;
+    use crate::graph::verify;
+    use crate::graph::{generation, rmat};
+    use crate::htm::HtmConfig;
+    use std::sync::Arc;
+
+    fn built(scale: u32) -> (TmSystem, Graph, Vec<rmat::EdgeTuple>) {
+        let cfg = Ssca2Config::new(scale);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        generation::build_serial(&sys, &g, &tuples);
+        (sys, g, tuples)
+    }
+
+    #[test]
+    fn finds_true_max_and_full_band() {
+        let (sys, g, tuples) = built(7);
+        let r = run(&sys, &g, PolicySpec::DyAd { n: 43 }, 4, 9);
+        let true_max = tuples.iter().map(|e| e.weight).max().unwrap();
+        assert_eq!(r.max_weight, true_max);
+        verify::check_results(&g, &tuples).unwrap();
+    }
+
+    #[test]
+    fn every_policy_collects_identical_band() {
+        let mut counts = Vec::new();
+        for spec in [
+            PolicySpec::CoarseLock,
+            PolicySpec::StmNorec,
+            PolicySpec::HtmALock { retries: 8 },
+            PolicySpec::Rnd { lo: 1, hi: 50 },
+            PolicySpec::DyAd { n: 43 },
+        ] {
+            let (sys, g, tuples) = built(6);
+            let r = run(&sys, &g, spec, 4, 11);
+            verify::check_results(&g, &tuples)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name()));
+            counts.push(r.selected);
+        }
+        assert!(counts.windows(2).all(|w| w[0] == w[1]), "{counts:?}");
+    }
+
+    #[test]
+    fn band_selectivity_is_about_an_eighth() {
+        let (sys, g, tuples) = built(8);
+        let r = run(&sys, &g, PolicySpec::CoarseLock, 2, 1);
+        let frac = r.selected as f64 / tuples.len() as f64;
+        assert!(
+            (0.09..0.16).contains(&frac),
+            "top-1/8 band selected {frac}"
+        );
+    }
+
+    #[test]
+    fn batched_collect_matches_unbatched() {
+        let cfg = Ssca2Config::new(6).with_batch(8);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        generation::build_serial(&sys, &g, &tuples);
+        let r = run(&sys, &g, PolicySpec::DyAd { n: 43 }, 3, 2);
+        verify::check_results(&g, &tuples).unwrap();
+        assert!(r.selected > 0);
+    }
+
+    #[test]
+    fn shards_partition_exactly() {
+        for (cells, threads) in [(100, 3), (7, 8), (0, 2), (64, 1)] {
+            let mut covered = 0;
+            for tid in 0..threads {
+                let (lo, hi) = shard(cells, threads, tid);
+                covered += hi - lo;
+            }
+            assert_eq!(covered, cells);
+        }
+    }
+}

@@ -1,0 +1,218 @@
+//! The SSCA-2 generation kernel: concurrent multigraph construction.
+//!
+//! Each thread owns a slice of the tuple list. Edge cells are reserved
+//! in thread-private chunks from the shared pool (a non-transactional
+//! fetch-add, as the reference OpenMP implementation reserves array
+//! slots), so the *transaction* is exactly the paper's critical section:
+//!
+//! ```text
+//! old          = head[src]
+//! cell.dst     = dst            (thread-private cell, no conflicts)
+//! cell.weight  = w
+//! cell.next    = old
+//! cell.id      = edge id
+//! head[src]    = cell           (the contended word: power-law hubs)
+//! degree[src] += 1
+//! ```
+//!
+//! ~3–5 cache lines touched: small enough for any HTM — except when the
+//! `batch` knob raises the task size, which is how the capacity-abort
+//! experiments (and DyAdHyTM's reason to exist) are driven.
+
+use std::time::{Duration, Instant};
+
+use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use crate::stats::{StatsTable, TxStats};
+use crate::tm::access::{TxAccess, TxResult};
+
+use super::layout::{Graph, POOL_CHUNK_CELLS};
+use super::rmat::EdgeTuple;
+
+/// Insert `tuples[lo..hi]` as one thread's share; returns this thread's
+/// stats. `executor` carries the policy.
+pub fn insert_slice(
+    g: &Graph,
+    ex: &mut ThreadExecutor<'_>,
+    tuples: &[EdgeTuple],
+) -> u64 {
+    let batch = g.cfg.batch.max(1);
+    let mut pool_next = 0usize;
+    let mut pool_left = 0usize;
+    let mut inserted = 0u64;
+    let mut consumed = 0usize;
+
+    for chunk in tuples.chunks(batch) {
+        // Reserve cells for the whole batch, refilling the private pool
+        // from the shared cursor as needed (non-transactional). Never
+        // reserve more than this thread's remaining share — the pool is
+        // sized to exactly m cells.
+        if pool_left < chunk.len() {
+            debug_assert_eq!(pool_left, 0, "refill sizes are batch-aligned");
+            let remaining = tuples.len() - consumed;
+            // Batch-aligned refill so no cell is ever stranded: the pool
+            // is sized to exactly m cells.
+            let aligned = (POOL_CHUNK_CELLS / batch).max(1) * batch;
+            let take = aligned.min(remaining).max(chunk.len());
+            pool_next = g.reserve_cells(take);
+            pool_left = take;
+        }
+        let first_cell = pool_next;
+        pool_next += chunk.len();
+        pool_left -= chunk.len();
+
+        // The critical section: insert `chunk.len()` edges atomically.
+        ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<()> {
+            for (k, e) in chunk.iter().enumerate() {
+                let cell = g.cell(first_cell + k);
+                let head = g.head(e.src);
+                let old = t.read(head)?;
+                t.write(cell + Graph::CELL_DST, e.dst as u64)?;
+                t.write(cell + Graph::CELL_WEIGHT, e.weight as u64)?;
+                t.write(cell + Graph::CELL_NEXT, old)?;
+                t.write(cell + Graph::CELL_ID, (first_cell + k) as u64 + 1)?;
+                t.write(head, cell as u64)?;
+                let deg = t.read(g.degree(e.src))?;
+                t.write(g.degree(e.src), deg + 1)?;
+            }
+            Ok(())
+        });
+        inserted += chunk.len() as u64;
+        consumed += chunk.len();
+    }
+    inserted
+}
+
+/// Run the generation kernel with `threads` workers under `spec`.
+/// Returns (wall time, per-thread stats).
+pub fn run(
+    sys: &TmSystem,
+    g: &Graph,
+    tuples: &[EdgeTuple],
+    spec: PolicySpec,
+    threads: usize,
+    seed: u64,
+) -> (Duration, StatsTable) {
+    assert!(threads >= 1);
+    let t0 = Instant::now();
+    let mut table = StatsTable::new();
+    let shard = tuples.len().div_ceil(threads);
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for tid in 0..threads {
+            let lo = tid * shard;
+            let hi = ((tid + 1) * shard).min(tuples.len());
+            let slice = &tuples[lo..hi.max(lo)];
+            handles.push(s.spawn(move || {
+                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
+                let t = Instant::now();
+                insert_slice(g, &mut ex, slice);
+                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+                ex.stats
+            }));
+        }
+        for (tid, h) in handles.into_iter().enumerate() {
+            table.push(tid, h.join().unwrap());
+        }
+    });
+
+    (t0.elapsed(), table)
+}
+
+/// Convenience: single-threaded, direct (lock) insertion — used for
+/// setup in computation-kernel-only experiments and tests.
+pub fn build_serial(sys: &TmSystem, g: &Graph, tuples: &[EdgeTuple]) -> TxStats {
+    let mut ex = ThreadExecutor::new(sys, PolicySpec::CoarseLock, 0, 1);
+    insert_slice(g, &mut ex, tuples);
+    ex.stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::rmat;
+    use crate::graph::verify;
+    use crate::htm::HtmConfig;
+    use crate::graph::layout::Ssca2Config;
+
+    fn setup(scale: u32) -> (TmSystem, Graph, Vec<EdgeTuple>) {
+        let cfg = Ssca2Config::new(scale);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(std::sync::Arc::clone(&g.heap), HtmConfig::broadwell());
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        (sys, g, tuples)
+    }
+
+    #[test]
+    fn serial_build_is_complete_and_consistent() {
+        let (sys, g, tuples) = setup(6);
+        build_serial(&sys, &g, &tuples);
+        verify::check_graph(&g, &tuples).unwrap();
+    }
+
+    #[test]
+    fn concurrent_build_every_policy_matches_input() {
+        for spec in [
+            PolicySpec::CoarseLock,
+            PolicySpec::StmNorec,
+            PolicySpec::HtmSpin { retries: 8 },
+            PolicySpec::DyAd { n: 43 },
+        ] {
+            let (sys, g, tuples) = setup(7);
+            let (_, table) = run(&sys, &g, &tuples, spec, 4, 99);
+            verify::check_graph(&g, &tuples)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name()));
+            assert_eq!(
+                table.total().total_commits(),
+                tuples.len() as u64,
+                "{}",
+                spec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn batched_build_matches_input() {
+        let cfg = Ssca2Config::new(7).with_batch(16);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(std::sync::Arc::clone(&g.heap), HtmConfig::broadwell());
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        let (_, table) = run(&sys, &g, &tuples, PolicySpec::DyAd { n: 43 }, 4, 5);
+        verify::check_graph(&g, &tuples).unwrap();
+        // Batch of 16: 1/16th as many transactions.
+        assert_eq!(
+            table.total().total_commits(),
+            (tuples.len() as u64).div_ceil(16)
+        );
+    }
+
+    #[test]
+    fn large_batches_trigger_capacity_fallbacks_on_tiny_htm() {
+        let cfg = Ssca2Config::new(7).with_batch(32);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(std::sync::Arc::clone(&g.heap), HtmConfig::tiny());
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        let (_, table) = run(&sys, &g, &tuples, PolicySpec::DyAd { n: 43 }, 2, 5);
+        let t = table.total();
+        assert!(
+            t.aborts_of(crate::tm::AbortCause::Capacity) > 0,
+            "batch=32 on tiny HTM must capacity-abort"
+        );
+        assert!(t.sw_commits > 0, "capacity aborts must drive STM fallbacks");
+        verify::check_graph(&g, &tuples).unwrap();
+    }
+
+    #[test]
+    fn hub_vertices_attract_conflicts() {
+        // Under real concurrency the generation kernel's conflicts come
+        // from power-law hubs; just assert some HW aborts happen at high
+        // thread counts with the pure-HTM policy on a small graph.
+        let (sys, g, tuples) = setup(5);
+        let (_, table) = run(&sys, &g, &tuples, PolicySpec::HtmSpin { retries: 8 }, 8, 3);
+        verify::check_graph(&g, &tuples).unwrap();
+        // Not asserting > 0 strictly (timing-dependent), but the stats
+        // plumbing must be live:
+        assert_eq!(table.rows.len(), 8);
+        assert_eq!(table.total().total_commits(), tuples.len() as u64);
+    }
+}

@@ -1,0 +1,277 @@
+//! Heap layout of the SSCA-2 multigraph (DESIGN.md S9's substrate).
+//!
+//! Everything transactional lives in the [`TxHeap`]:
+//!
+//! ```text
+//! head[v]    n words   address of v's newest edge cell (0 = none)
+//! degree[v]  n words   v's out-degree
+//! cells      m*4 words edge cells: {dst, weight, next, edge_id}
+//! results    m words   computation-kernel output: cell addresses
+//! counters   1 line each (padded): pool cursor, result count, gmax
+//! ```
+//!
+//! Edge cells are 4 words, so two cells share a 64-byte line — real
+//! false sharing, as a real allocator would produce. Heads and degrees
+//! of 8 consecutive vertices share a line, which is exactly where the
+//! power-law hubs make the generation kernel conflict.
+
+use std::sync::Arc;
+
+use crate::mem::{Addr, TxHeap, WORDS_PER_LINE};
+
+/// Words per edge cell: {dst, weight, next, edge_id}.
+pub const CELL_WORDS: usize = 4;
+
+/// How many cells a thread reserves from the shared pool at once (the
+/// non-transactional refill; see generation kernel).
+pub const POOL_CHUNK_CELLS: usize = 64;
+
+/// SSCA-2 workload configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Ssca2Config {
+    /// Graph scale: n = 2^scale vertices.
+    pub scale: u32,
+    /// Edges per vertex (SSCA-2 default 8): m = n * edge_factor.
+    pub edge_factor: u32,
+    /// Tuple-list RNG seed.
+    pub seed: u64,
+    /// Edge inserts per generation transaction (task-size knob; 1 =
+    /// paper's per-edge critical section, larger values drive the HTM
+    /// into capacity aborts).
+    pub batch: usize,
+    /// Computation kernel selects weights > maxw - (maxw >> shift):
+    /// shift=3 keeps the top 1/8 weight band ("extracts edges by
+    /// weight", paper §4).
+    pub selectivity_shift: u32,
+}
+
+impl Ssca2Config {
+    pub fn new(scale: u32) -> Self {
+        Self {
+            scale,
+            edge_factor: 8,
+            seed: 0x55CA_2017,
+            batch: 1,
+            selectivity_shift: 3,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        assert!(batch >= 1);
+        self.batch = batch;
+        self
+    }
+
+    pub fn vertices(&self) -> usize {
+        1usize << self.scale
+    }
+
+    pub fn edges(&self) -> usize {
+        self.vertices() * self.edge_factor as usize
+    }
+
+    pub fn max_weight(&self) -> u32 {
+        1u32 << self.scale
+    }
+
+    /// Heap words needed for this configuration (plus slack).
+    pub fn heap_words(&self) -> usize {
+        let n = self.vertices();
+        let m = self.edges();
+        // head + degree + cells + results + kernel-3 marks + counters
+        // + slack.
+        n + n + m * CELL_WORDS + m + n + 16 * WORDS_PER_LINE
+    }
+}
+
+/// The laid-out multigraph: base addresses of every region.
+pub struct Graph {
+    pub heap: Arc<TxHeap>,
+    pub cfg: Ssca2Config,
+    pub head_base: Addr,
+    pub degree_base: Addr,
+    pub cells_base: Addr,
+    pub cells_end: Addr,
+    pub results_base: Addr,
+    /// Shared (non-transactional) cell-pool cursor, in cells.
+    pub pool_cursor: Addr,
+    /// Shared result-list length (transactional).
+    pub result_count: Addr,
+    /// Shared maximum weight found (transactional).
+    pub gmax: Addr,
+}
+
+impl Graph {
+    /// Allocate all regions on a fresh heap.
+    pub fn alloc(cfg: Ssca2Config) -> Graph {
+        let heap = Arc::new(TxHeap::new(cfg.heap_words()));
+        Self::alloc_on(heap, cfg)
+    }
+
+    /// Allocate all regions on the given heap.
+    pub fn alloc_on(heap: Arc<TxHeap>, cfg: Ssca2Config) -> Graph {
+        let n = cfg.vertices();
+        let m = cfg.edges();
+        let head_base = heap.alloc_lines(n.div_ceil(WORDS_PER_LINE));
+        let degree_base = heap.alloc_lines(n.div_ceil(WORDS_PER_LINE));
+        let cells_base =
+            heap.alloc_lines((m * CELL_WORDS).div_ceil(WORDS_PER_LINE));
+        let cells_end = cells_base + m * CELL_WORDS;
+        let results_base = heap.alloc_lines(m.div_ceil(WORDS_PER_LINE));
+        // Each counter on its own line: no false sharing between them.
+        let pool_cursor = heap.alloc_lines(1);
+        let result_count = heap.alloc_lines(1);
+        let gmax = heap.alloc_lines(1);
+        Graph {
+            heap,
+            cfg,
+            head_base,
+            degree_base,
+            cells_base,
+            cells_end,
+            results_base,
+            pool_cursor,
+            result_count,
+            gmax,
+        }
+    }
+
+    // -- address helpers ------------------------------------------------
+
+    #[inline]
+    pub fn head(&self, v: u32) -> Addr {
+        self.head_base + v as usize
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> Addr {
+        self.degree_base + v as usize
+    }
+
+    /// Address of cell index `i`.
+    #[inline]
+    pub fn cell(&self, i: usize) -> Addr {
+        self.cells_base + i * CELL_WORDS
+    }
+
+    pub const CELL_DST: usize = 0;
+    pub const CELL_WEIGHT: usize = 1;
+    pub const CELL_NEXT: usize = 2;
+    pub const CELL_ID: usize = 3;
+
+    /// Number of cells handed out so far (non-transactional read).
+    pub fn cells_allocated(&self) -> usize {
+        self.heap.load(self.pool_cursor) as usize
+    }
+
+    /// Non-transactional chunk reservation from the shared pool.
+    /// Returns the first cell index of a `POOL_CHUNK_CELLS`-cell run.
+    pub fn reserve_cells(&self, count: usize) -> usize {
+        let first = self.heap.fetch_add(self.pool_cursor, count as u64) as usize;
+        assert!(
+            self.cell(first + count) <= self.cells_end,
+            "edge-cell pool exhausted"
+        );
+        first
+    }
+
+    /// The computation kernel's weight cutoff: strictly-greater-than
+    /// this selects the top `1/2^shift` weight band.
+    pub fn weight_cutoff(&self) -> u32 {
+        let maxw = self.cfg.max_weight();
+        maxw - (maxw >> self.cfg.selectivity_shift)
+    }
+
+    // -- non-transactional readers (verification / computation scan) ----
+
+    /// Walk v's adjacency list, yielding (dst, weight, edge_id).
+    pub fn adjacency(&self, v: u32) -> Vec<(u32, u32, u64)> {
+        let mut out = Vec::new();
+        let mut cur = self.heap.load(self.head(v)) as usize;
+        while cur != 0 {
+            out.push((
+                self.heap.load(cur + Self::CELL_DST) as u32,
+                self.heap.load(cur + Self::CELL_WEIGHT) as u32,
+                self.heap.load(cur + Self::CELL_ID),
+            ));
+            cur = self.heap.load(cur + Self::CELL_NEXT) as usize;
+        }
+        out
+    }
+
+    pub fn degree_of(&self, v: u32) -> u64 {
+        self.heap.load(self.degree(v))
+    }
+
+    /// Slice of result-list entries (cell addresses).
+    pub fn results(&self) -> Vec<u64> {
+        let count = self.heap.load(self.result_count) as usize;
+        (0..count)
+            .map(|i| self.heap.load(self.results_base + i))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_are_disjoint_and_ordered() {
+        let g = Graph::alloc(Ssca2Config::new(8));
+        let n = g.cfg.vertices();
+        assert!(g.head_base + n <= g.degree_base);
+        assert!(g.degree_base + n <= g.cells_base);
+        assert!(g.cells_end <= g.results_base);
+        assert!(g.results_base + g.cfg.edges() <= g.pool_cursor);
+        assert_ne!(
+            TxHeap::line_of(g.pool_cursor),
+            TxHeap::line_of(g.result_count),
+            "counters must not share a line"
+        );
+    }
+
+    #[test]
+    fn reserve_cells_is_exclusive() {
+        let g = Graph::alloc(Ssca2Config::new(8));
+        let a = g.reserve_cells(POOL_CHUNK_CELLS);
+        let b = g.reserve_cells(POOL_CHUNK_CELLS);
+        assert_eq!(b, a + POOL_CHUNK_CELLS);
+        assert_eq!(g.cells_allocated(), 2 * POOL_CHUNK_CELLS);
+    }
+
+    #[test]
+    #[should_panic(expected = "pool exhausted")]
+    fn pool_exhaustion_panics() {
+        let g = Graph::alloc(Ssca2Config::new(4));
+        let m = g.cfg.edges();
+        g.reserve_cells(m + 1);
+    }
+
+    #[test]
+    fn weight_cutoff_keeps_top_band() {
+        let g = Graph::alloc(Ssca2Config::new(8));
+        // maxw = 256, shift 3 -> cutoff 224: selects 225..=256.
+        assert_eq!(g.weight_cutoff(), 224);
+    }
+
+    #[test]
+    fn cell_addresses_stride_by_cell_words() {
+        let g = Graph::alloc(Ssca2Config::new(6));
+        assert_eq!(g.cell(1) - g.cell(0), CELL_WORDS);
+        assert_eq!(g.cell(0), g.cells_base);
+    }
+
+    #[test]
+    fn heap_words_covers_layout() {
+        // Alloc must not panic for a range of scales.
+        for scale in [4, 8, 12] {
+            let _ = Graph::alloc(Ssca2Config::new(scale));
+        }
+    }
+}

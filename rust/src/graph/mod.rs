@@ -1,0 +1,33 @@
+//! The SSCA-2 graph workload (DESIGN.md S8–S10).
+//!
+//! Scalable Synthetic Compact Applications 2 (Bader et al., 2006): a
+//! weighted, directed multigraph generated from R-MAT tuples. The paper
+//! uses two of its kernels:
+//!
+//! * **generation kernel** ([`generation`]) — build the multigraph from
+//!   the tuple list. Each edge insert is a critical section updating
+//!   the source vertex's adjacency head, its degree, and the edge cell —
+//!   a small transaction whose conflicts concentrate on power-law hub
+//!   vertices ("symmetric concurrency" in the paper's words).
+//! * **computation kernel** ([`computation`]) — extract the heavy edges:
+//!   find the maximum weight, then collect every edge in the top weight
+//!   band into a shared result list. The list append is a tiny,
+//!   all-threads-hit-one-counter critical section — the paper's
+//!   "dynamic conflict scenario where threads compete".
+//!
+//! The tuple list itself comes from either the AOT Pallas artifact
+//! (runtime path, `crate::runtime`) or the native generator
+//! ([`rmat`]) — both implement the same R-MAT descent and are
+//! cross-validated in tests.
+
+pub mod computation;
+pub mod generation;
+pub mod layout;
+pub mod rmat;
+pub mod subgraph;
+pub mod verify;
+
+pub use computation::ComputationResult;
+pub use subgraph::SubgraphResult;
+pub use layout::{Graph, Ssca2Config, CELL_WORDS};
+pub use rmat::EdgeTuple;

@@ -1,0 +1,163 @@
+//! Native R-MAT tuple generator (DESIGN.md S8).
+//!
+//! The same quadrant descent as the Pallas kernel
+//! (`python/compile/kernels/rmat.py`), in Rust: at each of `scale`
+//! levels one uniform draw picks the quadrant (a, b, c, d) = (0.55,
+//! 0.10, 0.10, 0.25), contributing one source bit and one destination
+//! bit. Weights are uniform in `[1, 2^scale]` (SSCA-2's MaxIntWeight).
+//!
+//! Used when artifacts are not built, as the oracle the artifact path is
+//! cross-validated against, and by the trace capturer. Deterministic per
+//! (seed, scale, edge_factor).
+
+use crate::util::rng::Rng;
+
+/// SSCA-2 v2 R-MAT parameters (match kernels/rmat.py).
+pub const RMAT_A: f64 = 0.55;
+pub const RMAT_B: f64 = 0.10;
+pub const RMAT_C: f64 = 0.10;
+pub const RMAT_D: f64 = 0.25;
+
+/// One weighted directed edge tuple.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EdgeTuple {
+    pub src: u32,
+    pub dst: u32,
+    pub weight: u32,
+}
+
+/// Draw one R-MAT edge.
+pub fn rmat_edge(rng: &mut Rng, scale: u32, max_weight: u32) -> EdgeTuple {
+    let ab = RMAT_A + RMAT_B;
+    let abc = RMAT_A + RMAT_B + RMAT_C;
+    let mut src = 0u32;
+    let mut dst = 0u32;
+    for _ in 0..scale {
+        let u = rng.next_f64();
+        let src_bit = (u >= ab) as u32;
+        let dst_bit = ((u >= RMAT_A && u < ab) || u >= abc) as u32;
+        src = (src << 1) | src_bit;
+        dst = (dst << 1) | dst_bit;
+    }
+    let weight = 1 + rng.below(max_weight as u64) as u32;
+    EdgeTuple { src, dst, weight }
+}
+
+/// Generate the full tuple list for `scale` / `edge_factor`.
+pub fn generate(seed: u64, scale: u32, edge_factor: u32) -> Vec<EdgeTuple> {
+    let n_edges = (1usize << scale) * edge_factor as usize;
+    let max_weight = 1u32 << scale;
+    let mut rng = Rng::new(seed);
+    (0..n_edges)
+        .map(|_| rmat_edge(&mut rng, scale, max_weight))
+        .collect()
+}
+
+/// Generate only the `i`-th chunk of `chunk` edges — used by per-thread
+/// trace capture and streaming workloads. Chunks are independent
+/// streams: chunk i is seeded by (seed, i), so any subset can be
+/// produced without generating the rest.
+pub fn generate_chunk(
+    seed: u64,
+    chunk_index: u64,
+    chunk: usize,
+    scale: u32,
+    edge_factor: u32,
+) -> Vec<EdgeTuple> {
+    let n_edges = (1usize << scale) * edge_factor as usize;
+    let start = chunk_index as usize * chunk;
+    let len = chunk.min(n_edges.saturating_sub(start));
+    let max_weight = 1u32 << scale;
+    let mut rng = Rng::new(seed ^ chunk_index.wrapping_mul(0xD6E8_FEB8_6659_FD93));
+    (0..len)
+        .map(|_| rmat_edge(&mut rng, scale, max_weight))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_bounded_by_scale() {
+        let edges = generate(1, 10, 8);
+        assert_eq!(edges.len(), 8 << 10);
+        for e in &edges {
+            assert!(e.src < 1 << 10);
+            assert!(e.dst < 1 << 10);
+            assert!(e.weight >= 1 && e.weight <= 1 << 10);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(generate(7, 8, 8), generate(7, 8, 8));
+        assert_ne!(generate(7, 8, 8), generate(8, 8, 8));
+    }
+
+    #[test]
+    fn quadrant_distribution_matches_parameters() {
+        let scale = 14;
+        let edges = generate(3, scale, 8);
+        let top = 1u32 << (scale - 1);
+        let (mut a, mut b, mut c, mut d) = (0f64, 0f64, 0f64, 0f64);
+        for e in &edges {
+            match (e.src >= top, e.dst >= top) {
+                (false, false) => a += 1.0,
+                (false, true) => b += 1.0,
+                (true, false) => c += 1.0,
+                (true, true) => d += 1.0,
+            }
+        }
+        let n = edges.len() as f64;
+        assert!((a / n - RMAT_A).abs() < 0.01, "a={}", a / n);
+        assert!((b / n - RMAT_B).abs() < 0.01, "b={}", b / n);
+        assert!((c / n - RMAT_C).abs() < 0.01, "c={}", c / n);
+        assert!((d / n - RMAT_D).abs() < 0.01, "d={}", d / n);
+    }
+
+    #[test]
+    fn power_law_skew_exists() {
+        // R-MAT with a=0.55 concentrates degree on low vertex ids:
+        // the busiest vertex should dominate the mean degree.
+        let scale = 12;
+        let edges = generate(11, scale, 8);
+        let mut deg = vec![0u32; 1 << scale];
+        for e in &edges {
+            deg[e.src as usize] += 1;
+        }
+        let max = *deg.iter().max().unwrap();
+        let mean = edges.len() as f64 / (1 << scale) as f64;
+        assert!(
+            (max as f64) > 10.0 * mean,
+            "no skew: max {max} vs mean {mean}"
+        );
+    }
+
+    #[test]
+    fn chunked_generation_covers_all_edges() {
+        let scale = 8;
+        let n_edges = 8 << scale;
+        let chunk = 100;
+        let mut total = 0;
+        let mut i = 0;
+        loop {
+            let c = generate_chunk(5, i, chunk, scale, 8);
+            total += c.len();
+            if c.len() < chunk {
+                break;
+            }
+            i += 1;
+        }
+        assert_eq!(total, n_edges);
+    }
+
+    #[test]
+    fn chunks_are_independent_streams() {
+        let a = generate_chunk(5, 3, 100, 12, 8);
+        let b = generate_chunk(5, 3, 100, 12, 8);
+        assert_eq!(a, b);
+        let c = generate_chunk(5, 4, 100, 12, 8);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,301 @@
+//! SSCA-2 kernel 3: subgraph extraction around the heavy edges.
+//!
+//! The benchmark's third kernel grows subgraphs outward from the
+//! kernel-2 edge set. We implement it as a **multi-source
+//! level-synchronous parallel BFS**: the frontier starts at the heavy
+//! edges' endpoints and expands `depth` levels; claiming a vertex
+//! (`read mark; if unmarked, write level`) is the critical section.
+//! Power-law hubs appear in many adjacency lists, so early levels are
+//! conflict-dense — the same dynamics Kang & Bader's TM-MSF paper (the
+//! paper's reference [21]) reports for graph TM workloads.
+//!
+//! Level-synchronous multi-source BFS visits a *deterministic vertex
+//! set* (the distance-≤depth ball of the root set) regardless of thread
+//! interleaving — which is what [`verify_subgraph`] checks against a
+//! serial oracle, making this kernel a strong end-to-end serializability
+//! probe for every policy.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use crate::mem::{Addr, WORDS_PER_LINE};
+use crate::stats::StatsTable;
+use crate::tm::access::{TxAccess, TxResult};
+
+use super::layout::Graph;
+
+/// Kernel-3 outcome.
+#[derive(Clone, Debug)]
+pub struct SubgraphResult {
+    /// Vertices claimed per BFS level (level 0 = the roots).
+    pub level_sizes: Vec<usize>,
+    pub total_marked: usize,
+    pub elapsed: Duration,
+    pub stats: StatsTable,
+    /// Base of the mark region (for verification).
+    pub marks_base: Addr,
+}
+
+/// Root set: the destination endpoints of the kernel-2 result edges.
+pub fn roots_from_results(g: &Graph) -> Vec<u32> {
+    let mut roots: Vec<u32> = g
+        .results()
+        .iter()
+        .map(|&cell| g.heap.load(cell as usize + Graph::CELL_DST) as u32)
+        .collect();
+    roots.sort_unstable();
+    roots.dedup();
+    roots
+}
+
+/// Run kernel 3 from `roots`, expanding `depth` levels under `spec`.
+pub fn run(
+    sys: &TmSystem,
+    g: &Graph,
+    roots: &[u32],
+    depth: usize,
+    spec: PolicySpec,
+    threads: usize,
+    seed: u64,
+) -> SubgraphResult {
+    assert!(threads >= 1);
+    let n = g.cfg.vertices();
+    // Mark region: one word per vertex, level+1 when claimed.
+    let marks_base = g.heap.alloc_lines(n.div_ceil(WORDS_PER_LINE));
+    let t0 = Instant::now();
+    let mut table = StatsTable::new();
+    for tid in 0..threads {
+        table.push(tid, crate::stats::TxStats::new());
+    }
+
+    // Level 0: claim the roots (serial claim is fine — roots are few —
+    // but run it through the TM path anyway for uniformity).
+    let mut frontier: Vec<u32> = Vec::new();
+    {
+        let mut ex = ThreadExecutor::new(sys, spec, 0, seed);
+        for &r in roots {
+            let claimed = ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<bool> {
+                let m = t.read(marks_base + r as usize)?;
+                if m == 0 {
+                    t.write(marks_base + r as usize, 1)?;
+                    Ok(true)
+                } else {
+                    Ok(false)
+                }
+            });
+            if claimed {
+                frontier.push(r);
+            }
+        }
+        table.rows[0].stats.merge(&ex.stats);
+    }
+
+    let mut level_sizes = vec![frontier.len()];
+
+    for level in 1..=depth {
+        if frontier.is_empty() {
+            break;
+        }
+        let next = Mutex::new(Vec::<u32>::new());
+        let shard = frontier.len().div_ceil(threads);
+        let mark_val = (level + 1) as u64;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for tid in 0..threads {
+                let lo = (tid * shard).min(frontier.len());
+                let hi = ((tid + 1) * shard).min(frontier.len());
+                let slice = &frontier[lo..hi];
+                let next = &next;
+                handles.push(s.spawn(move || {
+                    let mut ex =
+                        ThreadExecutor::new(sys, spec, tid as u32, seed ^ level as u64);
+                    let t = Instant::now();
+                    let mut local_next = Vec::new();
+                    for &v in slice {
+                        // Non-transactional adjacency walk (the graph is
+                        // frozen after kernel 1); claiming is the
+                        // critical section.
+                        for (dst, _, _) in g.adjacency(v) {
+                            let addr = marks_base + dst as usize;
+                            let claimed =
+                                ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<bool> {
+                                    let m = t.read(addr)?;
+                                    if m == 0 {
+                                        t.write(addr, mark_val)?;
+                                        Ok(true)
+                                    } else {
+                                        Ok(false)
+                                    }
+                                });
+                            if claimed {
+                                local_next.push(dst);
+                            }
+                        }
+                    }
+                    ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+                    next.lock().unwrap().extend_from_slice(&local_next);
+                    ex.stats
+                }));
+            }
+            for (tid, h) in handles.into_iter().enumerate() {
+                let s2 = h.join().unwrap();
+                let keep = table.rows[tid].stats.time_ns + s2.time_ns;
+                table.rows[tid].stats.merge(&s2);
+                table.rows[tid].stats.time_ns = keep;
+            }
+        });
+        frontier = next.into_inner().unwrap();
+        level_sizes.push(frontier.len());
+    }
+
+    let total_marked = level_sizes.iter().sum();
+    SubgraphResult {
+        level_sizes,
+        total_marked,
+        elapsed: t0.elapsed(),
+        stats: table,
+        marks_base,
+    }
+}
+
+/// Serial BFS oracle: the exact distance-≤depth ball and each vertex's
+/// BFS level, compared against the parallel marks.
+pub fn verify_subgraph(
+    g: &Graph,
+    roots: &[u32],
+    depth: usize,
+    result: &SubgraphResult,
+) -> Result<(), String> {
+    let n = g.cfg.vertices();
+    let mut dist = vec![u64::MAX; n];
+    let mut frontier: Vec<u32> = Vec::new();
+    for &r in roots {
+        if dist[r as usize] == u64::MAX {
+            dist[r as usize] = 0;
+            frontier.push(r);
+        }
+    }
+    for level in 1..=depth as u64 {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for (dst, _, _) in g.adjacency(v) {
+                if dist[dst as usize] == u64::MAX {
+                    dist[dst as usize] = level;
+                    next.push(dst);
+                }
+            }
+        }
+        frontier = next;
+    }
+
+    let mut expected_total = 0usize;
+    for v in 0..n {
+        let mark = g.heap.load(result.marks_base + v);
+        match (dist[v], mark) {
+            (u64::MAX, 0) => {}
+            (u64::MAX, m) => return Err(format!("vertex {v}: marked {m} but unreachable")),
+            (d, 0) => return Err(format!("vertex {v}: reachable at {d} but unmarked")),
+            (d, m) => {
+                expected_total += 1;
+                if m != d + 1 {
+                    return Err(format!(
+                        "vertex {v}: BFS level {d} but marked {}",
+                        m - 1
+                    ));
+                }
+            }
+        }
+    }
+    if expected_total != result.total_marked {
+        return Err(format!(
+            "marked {} vertices, oracle says {expected_total}",
+            result.total_marked
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layout::Ssca2Config;
+    use crate::graph::{computation, generation, rmat};
+    use crate::htm::HtmConfig;
+    use std::sync::Arc;
+
+    fn built(scale: u32) -> (TmSystem, Graph) {
+        let cfg = Ssca2Config::new(scale);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        generation::build_serial(&sys, &g, &tuples);
+        let _ = computation::run(&sys, &g, PolicySpec::CoarseLock, 2, 5);
+        (sys, g)
+    }
+
+    #[test]
+    fn bfs_ball_matches_serial_oracle() {
+        let (sys, g) = built(8);
+        let roots = roots_from_results(&g);
+        assert!(!roots.is_empty());
+        let r = run(&sys, &g, &roots, 3, PolicySpec::DyAd { n: 43 }, 4, 7);
+        verify_subgraph(&g, &roots, 3, &r).unwrap();
+        assert!(r.total_marked >= roots.len());
+    }
+
+    #[test]
+    fn every_policy_visits_identical_set() {
+        let mut totals = Vec::new();
+        for spec in [
+            PolicySpec::CoarseLock,
+            PolicySpec::StmNorec,
+            PolicySpec::HtmSpin { retries: 6 },
+            PolicySpec::DyAd { n: 43 },
+            PolicySpec::PhTm {
+                retries: 4,
+                sw_quantum: 32,
+            },
+        ] {
+            let (sys, g) = built(7);
+            let roots = roots_from_results(&g);
+            let r = run(&sys, &g, &roots, 2, spec, 4, 11);
+            verify_subgraph(&g, &roots, 2, &r)
+                .unwrap_or_else(|e| panic!("{}: {e}", spec.name()));
+            totals.push(r.total_marked);
+        }
+        assert!(
+            totals.windows(2).all(|w| w[0] == w[1]),
+            "visited set must be schedule-independent: {totals:?}"
+        );
+    }
+
+    #[test]
+    fn depth_zero_marks_only_roots() {
+        let (sys, g) = built(6);
+        let roots = roots_from_results(&g);
+        let r = run(&sys, &g, &roots, 0, PolicySpec::CoarseLock, 2, 3);
+        assert_eq!(r.total_marked, roots.len());
+        verify_subgraph(&g, &roots, 0, &r).unwrap();
+    }
+
+    #[test]
+    fn deeper_balls_are_supersets() {
+        let (sys, g) = built(7);
+        let roots = roots_from_results(&g);
+        let r1 = run(&sys, &g, &roots, 1, PolicySpec::DyAd { n: 43 }, 3, 9);
+        // Fresh graph for the deeper run (marks are write-once).
+        let (sys2, g2) = built(7);
+        let r2 = run(&sys2, &g2, &roots, 3, PolicySpec::DyAd { n: 43 }, 3, 9);
+        assert!(r2.total_marked >= r1.total_marked);
+    }
+
+    #[test]
+    fn claim_txns_race_on_hubs_without_losing_vertices() {
+        // High thread count on a small graph: the hub claims all race.
+        let (sys, g) = built(6);
+        let roots = roots_from_results(&g);
+        let r = run(&sys, &g, &roots, 4, PolicySpec::DyAd { n: 43 }, 8, 13);
+        verify_subgraph(&g, &roots, 4, &r).unwrap();
+    }
+}

@@ -1,0 +1,152 @@
+//! Post-run invariant verification: the workload-level correctness
+//! oracle every policy must satisfy (no lost updates, no phantom edges,
+//! complete extraction).
+
+use std::collections::HashMap;
+
+use super::layout::Graph;
+use super::rmat::EdgeTuple;
+
+/// Check the built multigraph against the input tuple list:
+/// * every vertex's stored degree equals its adjacency-list length;
+/// * the multiset of (src, dst, weight) edges equals the input multiset;
+/// * total edge count matches.
+pub fn check_graph(g: &Graph, tuples: &[EdgeTuple]) -> Result<(), String> {
+    let n = g.cfg.vertices() as u32;
+
+    let mut expect: HashMap<(u32, u32, u32), i64> = HashMap::new();
+    for e in tuples {
+        *expect.entry((e.src, e.dst, e.weight)).or_default() += 1;
+    }
+
+    let mut total = 0u64;
+    for v in 0..n {
+        let adj = g.adjacency(v);
+        let deg = g.degree_of(v);
+        if deg != adj.len() as u64 {
+            return Err(format!(
+                "vertex {v}: degree word says {deg}, list has {}",
+                adj.len()
+            ));
+        }
+        total += deg;
+        for (dst, w, id) in adj {
+            if id == 0 {
+                return Err(format!("vertex {v}: cell with unset edge id"));
+            }
+            let k = (v, dst, w);
+            match expect.get_mut(&k) {
+                Some(c) if *c > 0 => *c -= 1,
+                _ => return Err(format!("phantom edge {k:?}")),
+            }
+        }
+    }
+
+    if total != tuples.len() as u64 {
+        return Err(format!(
+            "edge count {total} != input {}",
+            tuples.len()
+        ));
+    }
+    if let Some((k, _)) = expect.iter().find(|&(_, &c)| c != 0) {
+        return Err(format!("missing edge {k:?}"));
+    }
+    Ok(())
+}
+
+/// Check the computation kernel's output:
+/// * `gmax` is the true maximum weight;
+/// * the result list contains exactly the edges with weight > cutoff
+///   (as a multiset of weights), each exactly once.
+pub fn check_results(g: &Graph, tuples: &[EdgeTuple]) -> Result<(), String> {
+    let true_max = tuples.iter().map(|e| e.weight).max().unwrap_or(0);
+    let gmax = g.heap.load(g.gmax) as u32;
+    if gmax != true_max {
+        return Err(format!("gmax {gmax} != true max {true_max}"));
+    }
+
+    let cutoff = g.weight_cutoff();
+    let expect_count = tuples.iter().filter(|e| e.weight > cutoff).count();
+    let results = g.results();
+    if results.len() != expect_count {
+        return Err(format!(
+            "selected {} edges, expected {expect_count}",
+            results.len()
+        ));
+    }
+
+    // Each entry must be a distinct allocated cell with weight > cutoff.
+    let mut seen = std::collections::HashSet::new();
+    let mut weights: HashMap<u32, i64> = HashMap::new();
+    for &cell in &results {
+        let cell = cell as usize;
+        if cell < g.cells_base || cell >= g.cells_end {
+            return Err(format!("result entry {cell} outside cell region"));
+        }
+        if !seen.insert(cell) {
+            return Err(format!("cell {cell} collected twice"));
+        }
+        let w = g.heap.load(cell + Graph::CELL_WEIGHT) as u32;
+        if w <= cutoff {
+            return Err(format!("collected weight {w} <= cutoff {cutoff}"));
+        }
+        *weights.entry(w).or_default() += 1;
+    }
+    for e in tuples.iter().filter(|e| e.weight > cutoff) {
+        match weights.get_mut(&e.weight) {
+            Some(c) if *c > 0 => *c -= 1,
+            _ => return Err(format!("band weight {} missing", e.weight)),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layout::Ssca2Config;
+    use crate::graph::{generation, rmat};
+    use crate::htm::HtmConfig;
+    use crate::hytm::TmSystem;
+    use std::sync::Arc;
+
+    #[test]
+    fn detects_missing_edge() {
+        let cfg = Ssca2Config::new(5);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+        let tuples = rmat::generate(1, 5, 8);
+        // Build all but one edge.
+        generation::build_serial(&sys, &g, &tuples[..tuples.len() - 1]);
+        assert!(check_graph(&g, &tuples).is_err());
+    }
+
+    #[test]
+    fn detects_degree_corruption() {
+        let cfg = Ssca2Config::new(5);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+        let tuples = rmat::generate(2, 5, 8);
+        generation::build_serial(&sys, &g, &tuples);
+        // Corrupt a degree word (simulates a lost update).
+        let v = tuples[0].src;
+        g.heap.store(g.degree(v), g.degree_of(v) + 1);
+        let err = check_graph(&g, &tuples).unwrap_err();
+        assert!(err.contains("degree"), "{err}");
+    }
+
+    #[test]
+    fn detects_phantom_results() {
+        let cfg = Ssca2Config::new(5);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+        let tuples = rmat::generate(3, 5, 8);
+        generation::build_serial(&sys, &g, &tuples);
+        // Correct gmax but a bogus result entry.
+        let true_max = tuples.iter().map(|e| e.weight).max().unwrap();
+        g.heap.store(g.gmax, true_max as u64);
+        g.heap.store(g.results_base, g.cell(0) as u64);
+        g.heap.store(g.result_count, 1);
+        assert!(check_results(&g, &tuples).is_err());
+    }
+}

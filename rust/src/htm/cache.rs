@@ -1,0 +1,188 @@
+//! The HTM capacity model: where `_XABORT_CAPACITY` comes from.
+//!
+//! Intel RTM keeps the transactional write set in the L1 data cache
+//! (32 KiB, 8-way, 64 B lines on Broadwell => 64 sets) and tracks the
+//! read set approximately in L2. A transaction aborts with CAPACITY when
+//! a written line would evict another written line from its set (ways
+//! exceeded), or when the read footprint exceeds the read-set bound.
+
+use crate::mem::Line;
+
+/// Static capacity parameters of the modeled HTM.
+#[derive(Clone, Debug)]
+pub struct HtmConfig {
+    /// L1d sets available for the write set (power of two).
+    pub wr_sets: usize,
+    /// L1d associativity: written lines allowed per set.
+    pub wr_ways: usize,
+    /// Max distinct lines in the read set (L2-ish bound).
+    pub rd_capacity: usize,
+    /// Per-transaction probability of an asynchronous abort (context
+    /// switch / interrupt). 0 for deterministic runs.
+    pub interrupt_prob: f64,
+}
+
+impl HtmConfig {
+    /// The paper's machine: Broadwell Xeon, HTM in L1/L2.
+    /// 32 KiB / 64 B / 8-way = 64 sets x 8 ways; read set bounded by a
+    /// 256 KiB L2 slice (4096 lines).
+    pub fn broadwell() -> Self {
+        Self {
+            wr_sets: 64,
+            wr_ways: 8,
+            rd_capacity: 4096,
+            interrupt_prob: 0.0,
+        }
+    }
+
+    /// A deliberately tiny HTM for tests and capacity-pressure
+    /// experiments at laptop scale (DESIGN.md §2: we size the modeled
+    /// cache so the capacity-abort mechanism fires at our graph scales).
+    pub fn tiny() -> Self {
+        Self {
+            wr_sets: 8,
+            wr_ways: 2,
+            rd_capacity: 64,
+            interrupt_prob: 0.0,
+        }
+    }
+
+    pub fn with_interrupts(mut self, p: f64) -> Self {
+        self.interrupt_prob = p;
+        self
+    }
+
+    /// Max write-set size in lines (all sets full).
+    pub fn wr_capacity(&self) -> usize {
+        self.wr_sets * self.wr_ways
+    }
+}
+
+impl Default for HtmConfig {
+    fn default() -> Self {
+        Self::broadwell()
+    }
+}
+
+/// Incremental footprint tracker for one transaction attempt.
+///
+/// Write lines are mapped to sets by their line id (as the physical
+/// cache indexes by address bits); per-set occupancy is counted and
+/// compared against associativity.
+#[derive(Clone, Debug)]
+pub struct CacheFootprint {
+    set_occupancy: Vec<u8>,
+    rd_lines: usize,
+    wr_lines: usize,
+}
+
+impl CacheFootprint {
+    pub fn new(cfg: &HtmConfig) -> Self {
+        Self {
+            set_occupancy: vec![0; cfg.wr_sets],
+            rd_lines: 0,
+            wr_lines: 0,
+        }
+    }
+
+    /// Record a (new, distinct) read line. Returns false on capacity
+    /// overflow.
+    #[inline]
+    pub fn note_read(&mut self, cfg: &HtmConfig) -> bool {
+        self.rd_lines += 1;
+        self.rd_lines <= cfg.rd_capacity
+    }
+
+    /// Record a (new, distinct) written line. Returns false on a
+    /// set-associativity eviction (capacity abort).
+    #[inline]
+    pub fn note_write(&mut self, cfg: &HtmConfig, line: Line) -> bool {
+        let set = line.set_index(cfg.wr_sets);
+        self.set_occupancy[set] += 1;
+        self.wr_lines += 1;
+        self.set_occupancy[set] as usize <= cfg.wr_ways
+    }
+
+    pub fn reset(&mut self) {
+        self.set_occupancy.fill(0);
+        self.rd_lines = 0;
+        self.wr_lines = 0;
+    }
+
+    pub fn rd_lines(&self) -> usize {
+        self.rd_lines
+    }
+
+    pub fn wr_lines(&self) -> usize {
+        self.wr_lines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadwell_matches_l1d_geometry() {
+        let c = HtmConfig::broadwell();
+        assert_eq!(c.wr_capacity(), 512); // 32 KiB / 64 B
+    }
+
+    #[test]
+    fn write_capacity_trips_on_set_conflict_not_total() {
+        let cfg = HtmConfig {
+            wr_sets: 4,
+            wr_ways: 2,
+            rd_capacity: 100,
+            interrupt_prob: 0.0,
+        };
+        let mut fp = CacheFootprint::new(&cfg);
+        // Lines 0,4,8 all map to set 0 under 4 sets.
+        assert!(fp.note_write(&cfg, Line(0)));
+        assert!(fp.note_write(&cfg, Line(4)));
+        assert!(!fp.note_write(&cfg, Line(8)), "3rd way in set 0 must trip");
+        // Meanwhile total (3) is far below wr_capacity (8).
+    }
+
+    #[test]
+    fn spread_writes_fill_to_capacity() {
+        let cfg = HtmConfig {
+            wr_sets: 4,
+            wr_ways: 2,
+            rd_capacity: 100,
+            interrupt_prob: 0.0,
+        };
+        let mut fp = CacheFootprint::new(&cfg);
+        for i in 0..8 {
+            assert!(fp.note_write(&cfg, Line(i)), "line {i}");
+        }
+        assert!(!fp.note_write(&cfg, Line(8)));
+    }
+
+    #[test]
+    fn read_capacity_trips_at_bound() {
+        let cfg = HtmConfig {
+            wr_sets: 4,
+            wr_ways: 2,
+            rd_capacity: 3,
+            interrupt_prob: 0.0,
+        };
+        let mut fp = CacheFootprint::new(&cfg);
+        assert!(fp.note_read(&cfg));
+        assert!(fp.note_read(&cfg));
+        assert!(fp.note_read(&cfg));
+        assert!(!fp.note_read(&cfg));
+    }
+
+    #[test]
+    fn reset_clears_occupancy() {
+        let cfg = HtmConfig::tiny();
+        let mut fp = CacheFootprint::new(&cfg);
+        for i in 0..4 {
+            fp.note_write(&cfg, Line(i));
+        }
+        fp.reset();
+        assert_eq!(fp.wr_lines(), 0);
+        assert!(fp.note_write(&cfg, Line(0)));
+    }
+}

@@ -1,0 +1,552 @@
+//! The speculative execution engine behind `HW_BEGIN / HW_COMMIT`.
+
+use std::sync::Arc;
+
+use crate::tm::Subscription;
+use crate::mem::{Addr, Line, TxHeap};
+use crate::tm::access::{Abort, TxAccess, TxResult};
+use crate::tm::{AbortCause, GlobalClock, LockTable, OrecValue};
+use crate::util::rng::Rng;
+
+use super::cache::{CacheFootprint, HtmConfig};
+
+/// Reusable per-thread speculation buffers: allocated once, cleared per
+/// attempt. The hot path is allocation-free with these (EXPERIMENTS.md
+/// §Perf iteration 1: 5 mallocs per attempt -> 0).
+pub struct HtmScratch {
+    reads: Vec<(Line, u64)>,
+    writes: Vec<(Addr, u64)>,
+    footprint: CacheFootprint,
+    wlines: Vec<Line>,
+    held: Vec<(Line, u64)>,
+}
+
+impl HtmScratch {
+    pub fn new(cfg: &HtmConfig) -> Self {
+        Self {
+            reads: Vec::with_capacity(64),
+            writes: Vec::with_capacity(64),
+            footprint: CacheFootprint::new(cfg),
+            wlines: Vec::with_capacity(16),
+            held: Vec::with_capacity(16),
+        }
+    }
+
+    fn clear(&mut self) {
+        self.reads.clear();
+        self.writes.clear();
+        self.footprint.reset();
+        self.wlines.clear();
+        self.held.clear();
+    }
+}
+
+/// Shared state of the software HTM: one per address space.
+pub struct HtmEngine {
+    pub heap: Arc<TxHeap>,
+    table: LockTable,
+    clock: GlobalClock,
+    cfg: HtmConfig,
+    /// Hardware commits currently in write-back. Real RTM commits
+    /// atomically; our write-back is a window, so non-speculative
+    /// fallback paths (lock holders, gbllock STMs) must wait for it to
+    /// drain before touching memory — see [`Self::quiesce_commits`].
+    commits_in_flight: std::sync::atomic::AtomicU64,
+}
+
+impl HtmEngine {
+    pub fn new(heap: Arc<TxHeap>, cfg: HtmConfig) -> Self {
+        Self {
+            heap,
+            table: LockTable::new(crate::tm::orec::DEFAULT_LOCK_TABLE_BITS),
+            clock: GlobalClock::new(),
+            cfg,
+            commits_in_flight: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &HtmConfig {
+        &self.cfg
+    }
+
+    /// Wait until no hardware transaction is mid-write-back.
+    ///
+    /// Protocol: a committing transaction increments `commits_in_flight`
+    /// *before* its final lock-subscription check and decrements after
+    /// write-back. A fallback path acquires its lock (which flips the
+    /// subscribed word), then calls this. Any committer that checked
+    /// before the flip is drained here; any that checks after aborts.
+    /// Hardware transactions never wait on the fence, so there is no
+    /// circular wait.
+    pub fn quiesce_commits(&self) {
+        use std::sync::atomic::Ordering;
+        while self.commits_in_flight.load(Ordering::SeqCst) > 0 {
+            std::hint::spin_loop();
+        }
+    }
+
+    /// One hardware transaction attempt (`HW_BEGIN` .. `HW_COMMIT`).
+    ///
+    /// * `owner`  — thread id (lock-word identity).
+    /// * `rng`    — drives the interrupt fault model only.
+    /// * `gbllock`— if present, the HyTM subscription: abort `Explicit`
+    ///   when an STM holds the lock at begin, `Conflict` when the lock
+    ///   word changes mid-flight (on real RTM the transactional read of
+    ///   the lock word makes any STM increment a data conflict; the
+    ///   monotone entry count extends that to completed STM episodes —
+    ///   see [`GblLock`]).
+    ///
+    /// Returns the body's value on commit, or the RTM-style abort cause.
+    pub fn attempt<R>(
+        &self,
+        owner: u32,
+        rng: &mut Rng,
+        gbllock: Option<&dyn Subscription>,
+        body: &mut dyn FnMut(&mut dyn TxAccess) -> TxResult<R>,
+    ) -> Result<R, AbortCause> {
+        // Convenience path: fresh scratch (tests, one-off callers). The
+        // executors hold a reusable scratch and call `attempt_with`.
+        let mut scratch = HtmScratch::new(&self.cfg);
+        self.attempt_with(&mut scratch, owner, rng, gbllock, body)
+    }
+
+    /// `attempt` with caller-provided (reused) speculation buffers —
+    /// the allocation-free hot path.
+    pub fn attempt_with<R>(
+        &self,
+        scratch: &mut HtmScratch,
+        owner: u32,
+        rng: &mut Rng,
+        gbllock: Option<&dyn Subscription>,
+        body: &mut dyn FnMut(&mut dyn TxAccess) -> TxResult<R>,
+    ) -> Result<R, AbortCause> {
+        scratch.clear();
+        // HW_BEGIN: subscribe to the global lock.
+        let gbl_sample = match gbllock {
+            Some(gl) => {
+                let s = gl.sample();
+                if gl.is_held() {
+                    return Err(AbortCause::Explicit);
+                }
+                s
+            }
+            None => 0,
+        };
+
+        // Fault model: decide up front whether an async event will kill
+        // this attempt, and after how many accesses.
+        let interrupt_at = if self.cfg.interrupt_prob > 0.0
+            && rng.next_f64() < self.cfg.interrupt_prob
+        {
+            usize::MAX - 1 // placeholder replaced below
+        } else {
+            usize::MAX
+        };
+        let interrupt_at = if interrupt_at == usize::MAX {
+            usize::MAX
+        } else {
+            rng.below(16) as usize + 1
+        };
+
+        let mut txn = HwTxn {
+            engine: self,
+            scratch,
+            owner,
+            rv: self.clock.now(),
+            ops: 0,
+            interrupt_at,
+            gbllock,
+            gbl_sample,
+        };
+
+        let value = match body(&mut txn) {
+            Ok(v) => v,
+            Err(Abort(cause)) => return Err(cause),
+        };
+
+        // HW_COMMIT.
+        txn.commit()?;
+        Ok(value)
+    }
+}
+
+/// Per-attempt speculative state (buffers borrowed from the scratch).
+struct HwTxn<'e> {
+    engine: &'e HtmEngine,
+    scratch: &'e mut HtmScratch,
+    owner: u32,
+    /// Read version: global clock at begin (TL2 rule).
+    rv: u64,
+    ops: usize,
+    interrupt_at: usize,
+    gbllock: Option<&'e dyn Subscription>,
+    gbl_sample: u64,
+}
+
+impl HwTxn<'_> {
+    #[inline]
+    fn tick_op(&mut self) -> TxResult<()> {
+        self.ops += 1;
+        if self.ops >= self.interrupt_at {
+            return Err(Abort(AbortCause::Interrupt));
+        }
+        // The lock word is in the transactional read set: any STM
+        // entry/exit since begin is a data conflict (opacity against
+        // STM write-backs).
+        if let Some(gl) = self.gbllock {
+            if !gl.unchanged_since(self.gbl_sample) {
+                return Err(Abort(AbortCause::Conflict));
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate-and-read the orec for `line`; returns its version.
+    #[inline]
+    fn readable_version(&self, line: Line) -> TxResult<u64> {
+        match self.engine.table.read(line) {
+            OrecValue::Locked { .. } => Err(Abort(AbortCause::Conflict)),
+            OrecValue::Version(v) if v > self.rv => Err(Abort(AbortCause::Conflict)),
+            OrecValue::Version(v) => Ok(v),
+        }
+    }
+
+    fn commit(self) -> Result<(), AbortCause> {
+        // Read-only fast path: nothing to publish; reads were validated
+        // at access time against rv, so the snapshot is consistent.
+        if self.scratch.writes.is_empty() {
+            return Ok(());
+        }
+
+        // Distinct write lines, sorted for canonical acquisition order
+        // (prevents deadlock between concurrent committers).
+        let (engine, owner, rv) = (self.engine, self.owner, self.rv);
+        let scratch = self.scratch;
+        scratch.wlines.clear();
+        for &(a, _) in &scratch.writes {
+            scratch.wlines.push(TxHeap::line_of(a));
+        }
+        scratch.wlines.sort_unstable();
+        scratch.wlines.dedup();
+
+        // Acquire write locks.
+        scratch.held.clear();
+        let abort_held = |held: &[(Line, u64)]| {
+            for &(l, ov) in held {
+                engine.table.unlock_restore(l, owner, ov);
+            }
+        };
+        for &line in &scratch.wlines {
+            let v = match engine.table.read(line) {
+                OrecValue::Version(v) if v <= rv => v,
+                // Locked by someone else, or a version beyond our
+                // snapshot: data conflict.
+                _ => {
+                    abort_held(&scratch.held);
+                    return Err(AbortCause::Conflict);
+                }
+            };
+            if engine.table.try_lock(line, v, owner) {
+                scratch.held.push((line, v));
+            } else {
+                abort_held(&scratch.held);
+                return Err(AbortCause::Conflict);
+            }
+        }
+
+        // Enter the commit fence, THEN re-check the subscription: either
+        // a fallback path sees our in-flight commit and waits, or we see
+        // its lock word and abort (see `quiesce_commits`).
+        use std::sync::atomic::Ordering;
+        engine.commits_in_flight.fetch_add(1, Ordering::SeqCst);
+        let exit_fence = || {
+            engine.commits_in_flight.fetch_sub(1, Ordering::SeqCst);
+        };
+
+        // Lock subscription must still hold at commit: any STM episode
+        // since begin is a data conflict on real RTM.
+        if let Some(gl) = self.gbllock {
+            if !gl.unchanged_since(self.gbl_sample) {
+                abort_held(&scratch.held);
+                exit_fence();
+                return Err(AbortCause::Conflict);
+            }
+        }
+
+        // Validation below also runs inside the fence; every early
+        // return must pair `abort_held` with `exit_fence`.
+
+        // New write version.
+        let wv = engine.clock.tick();
+
+        // Validate the read set: every line read must still carry the
+        // version we saw (or be locked by us).
+        for &(line, seen) in &scratch.reads {
+            match engine.table.read(line) {
+                OrecValue::Version(v) if v == seen => {}
+                OrecValue::Locked { owner: o } if o == owner => {
+                    // We locked it for writing; confirm the pre-lock
+                    // version we recorded when acquiring.
+                    let pre = scratch
+                        .held
+                        .iter()
+                        .find(|&&(l, _)| l == line)
+                        .map(|&(_, v)| v)
+                        .expect("locked-by-self line missing from held set");
+                    if pre != seen {
+                        abort_held(&scratch.held);
+                        exit_fence();
+                        return Err(AbortCause::Conflict);
+                    }
+                }
+                _ => {
+                    abort_held(&scratch.held);
+                    exit_fence();
+                    return Err(AbortCause::Conflict);
+                }
+            }
+        }
+
+        // Write back and release with the new version.
+        for &(addr, val) in &scratch.writes {
+            engine.heap.store_release(addr, val);
+        }
+        for &(line, _) in &scratch.held {
+            engine.table.unlock(line, owner, wv);
+        }
+        exit_fence();
+        Ok(())
+    }
+}
+
+impl TxAccess for HwTxn<'_> {
+    fn read(&mut self, addr: Addr) -> TxResult<u64> {
+        self.tick_op()?;
+        // Read-own-write.
+        if let Some(&(_, v)) = self
+            .scratch
+            .writes
+            .iter()
+            .rev()
+            .find(|&&(a, _)| a == addr)
+        {
+            return Ok(v);
+        }
+        let line = TxHeap::line_of(addr);
+        // Canonical TL2 read: load the value, then validate the orec
+        // once. Word loads are atomic (no tearing), and any writer that
+        // could have produced a stale value is still locked — or has
+        // already bumped the version past rv — at the post-check.
+        let val = self.engine.heap.load_acquire(addr);
+        let v1 = self.readable_version(line)?;
+        if !self.scratch.reads.iter().any(|&(l, _)| l == line) {
+            self.scratch.reads.push((line, v1));
+            if !self.scratch.footprint.note_read(&self.engine.cfg) {
+                return Err(Abort(AbortCause::Capacity));
+            }
+        }
+        Ok(val)
+    }
+
+    fn write(&mut self, addr: Addr, val: u64) -> TxResult<()> {
+        self.tick_op()?;
+        let line = TxHeap::line_of(addr);
+        let is_new_line = !self
+            .scratch
+            .writes
+            .iter()
+            .any(|&(a, _)| TxHeap::line_of(a) == line);
+        self.scratch.writes.push((addr, val));
+        if is_new_line && !self.scratch.footprint.note_write(&self.engine.cfg, line) {
+            return Err(Abort(AbortCause::Capacity));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hytm::GblLock;
+    use std::sync::Arc;
+
+    fn engine(cfg: HtmConfig) -> HtmEngine {
+        HtmEngine::new(Arc::new(TxHeap::new(1 << 16)), cfg)
+    }
+
+    #[test]
+    fn read_write_commit_publishes() {
+        let e = engine(HtmConfig::broadwell());
+        let a = e.heap.alloc(1);
+        let mut rng = Rng::new(1);
+        let r = e.attempt(0, &mut rng, None, &mut |t: &mut dyn TxAccess| {
+            t.write(a, 123)?;
+            t.read(a)
+        });
+        assert_eq!(r.unwrap(), 123);
+        assert_eq!(e.heap.load(a), 123);
+    }
+
+    #[test]
+    fn read_only_txn_commits_without_clock_tick() {
+        let e = engine(HtmConfig::broadwell());
+        let a = e.heap.alloc(1);
+        e.heap.store(a, 9);
+        let before = e.clock.now();
+        let mut rng = Rng::new(1);
+        let r = e.attempt(0, &mut rng, None, &mut |t: &mut dyn TxAccess| t.read(a));
+        assert_eq!(r.unwrap(), 9);
+        assert_eq!(e.clock.now(), before);
+    }
+
+    #[test]
+    fn capacity_abort_on_wide_write_set() {
+        let e = engine(HtmConfig::tiny()); // 8 sets x 2 ways = 16 lines max
+        let base = e.heap.alloc(8 * 64); // 64 lines
+        let mut rng = Rng::new(1);
+        let r = e.attempt(0, &mut rng, None, &mut |t: &mut dyn TxAccess| {
+            for i in 0..32 {
+                t.write(base + i * 8, i as u64)?; // one line each
+            }
+            Ok(())
+        });
+        assert_eq!(r.unwrap_err(), AbortCause::Capacity);
+    }
+
+    #[test]
+    fn capacity_abort_on_wide_read_set() {
+        let cfg = HtmConfig {
+            rd_capacity: 8,
+            ..HtmConfig::tiny()
+        };
+        let e = engine(cfg);
+        let base = e.heap.alloc(8 * 64);
+        let mut rng = Rng::new(1);
+        let r = e.attempt(0, &mut rng, None, &mut |t: &mut dyn TxAccess| {
+            for i in 0..16 {
+                t.read(base + i * 8)?;
+            }
+            Ok(())
+        });
+        assert_eq!(r.unwrap_err(), AbortCause::Capacity);
+    }
+
+    #[test]
+    fn explicit_abort_when_gbllock_held() {
+        let e = engine(HtmConfig::broadwell());
+        let gl = GblLock::new();
+        gl.enter_sw();
+        let a = e.heap.alloc(1);
+        let mut rng = Rng::new(1);
+        let r = e.attempt(0, &mut rng, Some(&gl), &mut |t: &mut dyn TxAccess| {
+            t.write(a, 1)
+        });
+        assert_eq!(r.unwrap_err(), AbortCause::Explicit);
+        gl.exit_sw();
+        let r = e.attempt(0, &mut rng, Some(&gl), &mut |t: &mut dyn TxAccess| {
+            t.write(a, 1)
+        });
+        assert!(r.is_ok());
+    }
+
+    #[test]
+    fn aborted_body_leaves_heap_untouched() {
+        let e = engine(HtmConfig::broadwell());
+        let a = e.heap.alloc(1);
+        e.heap.store(a, 7);
+        let mut rng = Rng::new(1);
+        let r = e.attempt(0, &mut rng, None, &mut |t: &mut dyn TxAccess| {
+            t.write(a, 99)?;
+            Err::<(), _>(Abort(AbortCause::Explicit))
+        });
+        assert_eq!(r.unwrap_err(), AbortCause::Explicit);
+        assert_eq!(e.heap.load(a), 7, "buffered write must not leak");
+    }
+
+    #[test]
+    fn interrupt_fault_model_fires() {
+        let cfg = HtmConfig::broadwell().with_interrupts(1.0);
+        let e = engine(cfg);
+        let a = e.heap.alloc(1);
+        let mut rng = Rng::new(3);
+        let mut interrupted = false;
+        for _ in 0..10 {
+            let r = e.attempt(0, &mut rng, None, &mut |t: &mut dyn TxAccess| {
+                for _ in 0..32 {
+                    t.read(a)?;
+                }
+                Ok(())
+            });
+            if r == Err(AbortCause::Interrupt) {
+                interrupted = true;
+            }
+        }
+        assert!(interrupted);
+    }
+
+    #[test]
+    fn concurrent_increments_never_lose_updates() {
+        let e = Arc::new(engine(HtmConfig::broadwell()));
+        let a = e.heap.alloc(1);
+        const THREADS: u32 = 4;
+        const PER: u64 = 2000;
+        let mut handles = Vec::new();
+        for tid in 0..THREADS {
+            let e = Arc::clone(&e);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(tid as u64 + 100);
+                let mut commits = 0u64;
+                while commits < PER {
+                    let r = e.attempt(tid, &mut rng, None, &mut |t: &mut dyn TxAccess| {
+                        let v = t.read(a)?;
+                        t.write(a, v + 1)
+                    });
+                    if r.is_ok() {
+                        commits += 1;
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(e.heap.load(a), THREADS as u64 * PER);
+    }
+
+    #[test]
+    fn conflicting_writers_one_aborts() {
+        // Deterministic 2-phase interleaving via a barrier is hard with
+        // closures; instead: many concurrent multi-line txns and assert
+        // serializability of the final state (sum preserved).
+        let e = Arc::new(engine(HtmConfig::broadwell()));
+        let a = e.heap.alloc(1);
+        let b = e.heap.alloc(1);
+        e.heap.store(a, 1000);
+        e.heap.store(b, 0);
+        let mut handles = Vec::new();
+        for tid in 0..4u32 {
+            let e = Arc::clone(&e);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(tid as u64);
+                let mut moved = 0u64;
+                while moved < 250 {
+                    // Move one unit a -> b, transactionally.
+                    let r = e.attempt(tid, &mut rng, None, &mut |t: &mut dyn TxAccess| {
+                        let va = t.read(a)?;
+                        let vb = t.read(b)?;
+                        t.write(a, va - 1)?;
+                        t.write(b, vb + 1)
+                    });
+                    if r.is_ok() {
+                        moved += 1;
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(e.heap.load(a), 0);
+        assert_eq!(e.heap.load(b), 1000);
+    }
+}

@@ -1,0 +1,20 @@
+//! Software best-effort HTM (DESIGN.md S2): the substitution for Intel
+//! TSX/RTM, which this machine does not have.
+//!
+//! The *conflicts* are real — concurrent threads genuinely speculate
+//! against a shared versioned-lock table at cache-line granularity and
+//! genuinely abort each other. The *capacity* dimension is modeled: a
+//! set-associative footprint bound mirroring RTM's "write set must fit
+//! in L1d, read set (roughly) in L2". Abort causes are reported with
+//! RTM's taxonomy ([`crate::tm::AbortCause`]) including the
+//! may-succeed-on-retry hint — the signal DyAdHyTM's adaptation feeds on.
+//!
+//! Protocol: lazy versioned-lock speculation (TL2-style) — buffered
+//! writes, per-read validation against a global version clock (opacity),
+//! commit-time lock acquisition, write-back, versioned release.
+
+pub mod cache;
+pub mod engine;
+
+pub use cache::{CacheFootprint, HtmConfig};
+pub use engine::{HtmEngine, HtmScratch};

@@ -1,0 +1,155 @@
+//! The counting global lock coupling HTM and STM (paper §3.6, DESIGN S5).
+//!
+//! The paper's `gbllock` is a counter: every STM transaction atomically
+//! increments it on entry (`atomic add(gblloc,1)`) and decrements on
+//! exit; several STM transactions may hold it simultaneously (their
+//! mutual conflicts are the STM's problem). Hardware transactions read
+//! it *transactionally* at begin — so on real RTM any STM increment is a
+//! data conflict that aborts the hardware transaction.
+//!
+//! Our software HTM cannot get that conflict for free, so the lock word
+//! carries a second field: the *total entry count* in the high 32 bits,
+//! which never decreases. A hardware transaction samples the whole word
+//! at begin and validates it unchanged at commit (and on every read —
+//! giving the speculation opacity against STM write-backs). This is
+//! exactly the published Hybrid-NOrec subscription, realized on the
+//! paper's counting-lock semantics:
+//!
+//!   low 32 bits  = STMs in flight  (inc on enter, dec on exit)
+//!   high 32 bits = total STM entries ever (inc on enter, monotone)
+
+use std::sync::atomic::Ordering;
+
+use crate::mem::layout::PaddedAtomicU64;
+
+const ENTER: u64 = (1 << 32) | 1;
+
+/// The counting global lock + publication counter.
+pub struct GblLock(PaddedAtomicU64);
+
+impl GblLock {
+    pub fn new() -> Self {
+        Self(PaddedAtomicU64::new(0))
+    }
+
+    /// STM entry: `atomic add(gblloc, 1)` of the paper, plus the
+    /// monotone entry count.
+    #[inline]
+    pub fn enter_sw(&self) {
+        self.0.fetch_add(ENTER, Ordering::AcqRel);
+    }
+
+    /// STM exit: `atomic sub(gblloc, 1)`.
+    #[inline]
+    pub fn exit_sw(&self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Is any STM transaction in flight?
+    #[inline]
+    pub fn is_held(&self) -> bool {
+        self.0.load(Ordering::Acquire) & 0xFFFF_FFFF != 0
+    }
+
+    /// In-flight STM count (diagnostics).
+    #[inline]
+    pub fn holders(&self) -> u32 {
+        (self.0.load(Ordering::Acquire) & 0xFFFF_FFFF) as u32
+    }
+
+    /// Sample the full word for hardware-transaction subscription.
+    #[inline]
+    pub fn sample(&self) -> u64 {
+        self.0.load(Ordering::Acquire)
+    }
+
+    /// True iff no STM entered or exited since `sample` — i.e. the
+    /// hardware transaction's read of the lock word is still valid.
+    #[inline]
+    pub fn unchanged_since(&self, sample: u64) -> bool {
+        self.0.load(Ordering::Acquire) == sample
+    }
+}
+
+impl Default for GblLock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl crate::tm::Subscription for GblLock {
+    #[inline]
+    fn sample(&self) -> u64 {
+        GblLock::sample(self)
+    }
+
+    #[inline]
+    fn unchanged_since(&self, sample: u64) -> bool {
+        GblLock::unchanged_since(self, sample)
+    }
+
+    #[inline]
+    fn is_held(&self) -> bool {
+        GblLock::is_held(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counting_semantics() {
+        let gl = GblLock::new();
+        assert!(!gl.is_held());
+        gl.enter_sw();
+        gl.enter_sw();
+        assert!(gl.is_held());
+        assert_eq!(gl.holders(), 2);
+        gl.exit_sw();
+        assert!(gl.is_held());
+        gl.exit_sw();
+        assert!(!gl.is_held());
+    }
+
+    #[test]
+    fn entry_count_is_monotone_through_enter_exit() {
+        let gl = GblLock::new();
+        let s0 = gl.sample();
+        gl.enter_sw();
+        gl.exit_sw();
+        assert!(!gl.is_held());
+        assert!(
+            !gl.unchanged_since(s0),
+            "a completed STM episode must still invalidate HW subscriptions"
+        );
+    }
+
+    #[test]
+    fn unchanged_when_nothing_happened() {
+        let gl = GblLock::new();
+        let s = gl.sample();
+        assert!(gl.unchanged_since(s));
+    }
+
+    #[test]
+    fn concurrent_enter_exit_balances() {
+        let gl = Arc::new(GblLock::new());
+        let mut hs = Vec::new();
+        for _ in 0..8 {
+            let gl = Arc::clone(&gl);
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..10_000 {
+                    gl.enter_sw();
+                    gl.exit_sw();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert!(!gl.is_held());
+        assert_eq!(gl.holders(), 0);
+    }
+}

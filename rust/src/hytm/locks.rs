@@ -1,0 +1,159 @@
+//! Non-speculative locks: the coarse-grain baseline and the fallback
+//! locks of the HTM+lock schemes (paper §3.7).
+//!
+//! The paper distinguishes two HTM fallback flavours:
+//! * **atomic lock** — the waiter retries the atomic acquisition itself
+//!   in a loop (test-and-set: every probe is an atomic RMW);
+//! * **spinlock** — the waiter spins on a plain load until the lock
+//!   looks free, then attempts the atomic acquisition (test-and-test-
+//!   and-set), which is cheaper under contention on real cache-coherent
+//!   hardware.
+//!
+//! Both are the same `RawLock` word: bit 0 = held, bits 63..1 = a
+//! monotone acquisition count so hardware transactions can subscribe to
+//! the word ([`crate::tm::Subscription`]) and detect even a complete
+//! acquire/release episode inside their window.
+
+use std::hint;
+use std::sync::atomic::Ordering;
+
+use crate::mem::layout::PaddedAtomicU64;
+use crate::tm::Subscription;
+
+/// Acquisition flavour (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LockFlavor {
+    /// Test-and-set loop: atomic RMW per probe.
+    Atomic,
+    /// Test-and-test-and-set: spin on loads, RMW only when free.
+    Spin,
+}
+
+/// Word layout: bit 0 = held; bits 63..1 = acquisition counter.
+pub struct RawLock(PaddedAtomicU64);
+
+impl RawLock {
+    pub fn new() -> Self {
+        Self(PaddedAtomicU64::new(0))
+    }
+
+    /// Try to acquire once. Returns true on success.
+    #[inline]
+    pub fn try_acquire(&self) -> bool {
+        let cur = self.0.load(Ordering::Relaxed);
+        if cur & 1 == 1 {
+            return false;
+        }
+        // Acquire: set held bit, bump the episode counter.
+        self.0
+            .compare_exchange(cur, cur + 3, Ordering::AcqRel, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Blocking acquire with the given flavour.
+    pub fn acquire(&self, flavor: LockFlavor) {
+        match flavor {
+            LockFlavor::Atomic => loop {
+                // Test-and-set: probe with an RMW every time.
+                let cur = self.0.fetch_or(1, Ordering::AcqRel);
+                if cur & 1 == 0 {
+                    // We took it; account the episode.
+                    self.0.fetch_add(2, Ordering::AcqRel);
+                    return;
+                }
+                hint::spin_loop();
+            },
+            LockFlavor::Spin => loop {
+                // Spin on plain loads until it looks free.
+                while self.0.load(Ordering::Relaxed) & 1 == 1 {
+                    hint::spin_loop();
+                }
+                if self.try_acquire() {
+                    return;
+                }
+            },
+        }
+    }
+
+    #[inline]
+    pub fn release(&self) {
+        self.0.fetch_and(!1, Ordering::Release);
+    }
+}
+
+impl Default for RawLock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Subscription for RawLock {
+    #[inline]
+    fn sample(&self) -> u64 {
+        self.0.load(Ordering::Acquire)
+    }
+
+    #[inline]
+    fn unchanged_since(&self, sample: u64) -> bool {
+        self.0.load(Ordering::Acquire) == sample
+    }
+
+    #[inline]
+    fn is_held(&self) -> bool {
+        self.0.load(Ordering::Acquire) & 1 == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn acquire_release_cycle() {
+        let l = RawLock::new();
+        assert!(!l.is_held());
+        l.acquire(LockFlavor::Spin);
+        assert!(l.is_held());
+        assert!(!l.try_acquire());
+        l.release();
+        assert!(!l.is_held());
+    }
+
+    #[test]
+    fn episode_counter_detects_complete_cycles() {
+        let l = RawLock::new();
+        let s = l.sample();
+        l.acquire(LockFlavor::Atomic);
+        l.release();
+        assert!(!l.is_held());
+        assert!(!l.unchanged_since(s), "acquire/release must move the word");
+    }
+
+    #[test]
+    fn mutual_exclusion_under_contention() {
+        for flavor in [LockFlavor::Atomic, LockFlavor::Spin] {
+            let l = Arc::new(RawLock::new());
+            let counter = Arc::new(std::sync::atomic::AtomicU64::new(0));
+            let mut hs = Vec::new();
+            for _ in 0..4 {
+                let l = Arc::clone(&l);
+                let c = Arc::clone(&counter);
+                hs.push(std::thread::spawn(move || {
+                    for _ in 0..5000 {
+                        l.acquire(flavor);
+                        // Non-atomic RMW through the atomic: safe only
+                        // under mutual exclusion.
+                        let v = c.load(Ordering::Relaxed);
+                        c.store(v + 1, Ordering::Relaxed);
+                        l.release();
+                    }
+                }));
+            }
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(counter.load(Ordering::Relaxed), 20_000, "{flavor:?}");
+        }
+    }
+}

@@ -1,0 +1,20 @@
+//! The synchronization-policy layer (DESIGN.md S5–S7): everything the
+//! paper benchmarks, behind one executor interface.
+//!
+//! * [`gbllock`] — the counting global lock coupling HTM and STM (§3.6)
+//! * [`locks`]   — coarse-grain / atomic / spin locks (§3.7 baselines)
+//! * [`policies`]— the Figure-1 retry state machines (RND/Fx/StAd/DyAd)
+//! * [`system`]  — [`TmSystem`] + [`ThreadExecutor`]: drives a
+//!   transaction body through whichever policy a run is configured for
+
+pub mod gbllock;
+pub mod locks;
+pub mod phtm;
+pub mod policies;
+pub mod system;
+
+pub use gbllock::GblLock;
+pub use phtm::{Phase, PhaseWord};
+pub use locks::{LockFlavor, RawLock};
+pub use policies::{Decision, DyAdPolicy, FxPolicy, RetryPolicy, RndPolicy, StAdPolicy};
+pub use system::{PolicySpec, ThreadExecutor, TmSystem};

@@ -1,0 +1,349 @@
+//! The paper's contribution: the retry/fallback policies of Figure 1.
+//!
+//! Each policy is a pure state machine consuming RTM-style abort causes
+//! and emitting retry/fallback decisions. Both the live executor
+//! ([`super::system::TmSystem`]) and the discrete-event simulator
+//! (`crate::sim`) drive these same machines, so the paper's contribution
+//! is implemented once and measured in both worlds.
+
+use crate::tm::AbortCause;
+use crate::util::rng::Rng;
+
+/// What to do after a hardware abort.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Retry the transaction in hardware.
+    RetryHw,
+    /// Take the global lock and execute in software.
+    FallbackSw,
+}
+
+/// A Figure-1 retry policy. `begin_txn` is called once per logical
+/// transaction (not per attempt); `on_abort` after every failed hardware
+/// attempt.
+pub trait RetryPolicy: Send {
+    fn begin_txn(&mut self, rng: &mut Rng);
+    fn on_abort(&mut self, cause: AbortCause, rng: &mut Rng) -> Decision;
+    fn name(&self) -> &'static str;
+
+    /// Per-transaction bookkeeping cost in "policy overhead units" —
+    /// consumed by the simulator's cost model: RNG draws are expensive
+    /// (the paper calls RNDHyTM's RNG overhead "quite significant"),
+    /// flag checks are nearly free.
+    fn begin_cost_rng_draws(&self) -> u32 {
+        0
+    }
+}
+
+/// RNDHyTM (§3.3): a fresh *random* retry quota per transaction.
+/// The paper's experiments draw from 1–50.
+#[derive(Clone, Debug)]
+pub struct RndPolicy {
+    pub lo: u32,
+    pub hi: u32,
+    tries: i64,
+}
+
+impl RndPolicy {
+    pub fn new(lo: u32, hi: u32) -> Self {
+        assert!(lo >= 1 && lo <= hi);
+        Self { lo, hi, tries: 0 }
+    }
+}
+
+impl RetryPolicy for RndPolicy {
+    fn begin_txn(&mut self, rng: &mut Rng) {
+        // The RNG draw itself is the overhead the paper charges RND with.
+        self.tries = rng.range(self.lo as u64, self.hi as u64) as i64;
+    }
+
+    fn on_abort(&mut self, _cause: AbortCause, _rng: &mut Rng) -> Decision {
+        if self.tries > 0 {
+            self.tries -= 1;
+            Decision::RetryHw
+        } else {
+            Decision::FallbackSw
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "RNDHyTM"
+    }
+
+    fn begin_cost_rng_draws(&self) -> u32 {
+        1
+    }
+}
+
+/// FxHyTM (§3.4): a fixed, *untuned* retry quota ("a fixed random
+/// number such as 43, 23 or 76 without any design space exploration").
+#[derive(Clone, Debug)]
+pub struct FxPolicy {
+    pub n: u32,
+    tries: i64,
+}
+
+impl FxPolicy {
+    /// The paper's example untuned constant.
+    pub const DEFAULT_N: u32 = 43;
+
+    pub fn new(n: u32) -> Self {
+        Self { n, tries: 0 }
+    }
+}
+
+impl RetryPolicy for FxPolicy {
+    fn begin_txn(&mut self, _rng: &mut Rng) {
+        self.tries = self.n as i64;
+    }
+
+    fn on_abort(&mut self, _cause: AbortCause, _rng: &mut Rng) -> Decision {
+        if self.tries > 0 {
+            self.tries -= 1;
+            Decision::RetryHw
+        } else {
+            Decision::FallbackSw
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "FxHyTM"
+    }
+}
+
+/// StAdHyTM (§3.5): same machine as FxHyTM, but `n` comes from an
+/// *offline* design-space exploration (our `policy_explorer` example /
+/// `dyadhytm tune`). The paper charges this policy with the unreported
+/// profiling cost of that DSE.
+#[derive(Clone, Debug)]
+pub struct StAdPolicy {
+    pub tuned_n: u32,
+    tries: i64,
+}
+
+impl StAdPolicy {
+    /// Default produced by our DSE at scale 16 / 28 threads
+    /// (EXPERIMENTS.md §Tuning).
+    pub const DEFAULT_TUNED_N: u32 = 6;
+
+    pub fn new(tuned_n: u32) -> Self {
+        Self { tuned_n, tries: 0 }
+    }
+}
+
+impl RetryPolicy for StAdPolicy {
+    fn begin_txn(&mut self, _rng: &mut Rng) {
+        self.tries = self.tuned_n as i64;
+    }
+
+    fn on_abort(&mut self, _cause: AbortCause, _rng: &mut Rng) -> Decision {
+        if self.tries > 0 {
+            self.tries -= 1;
+            Decision::RetryHw
+        } else {
+            Decision::FallbackSw
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "StAdHyTM"
+    }
+}
+
+/// DyAdHyTM (§3.6, Figure 1b): the dynamically adaptive policy.
+///
+/// Starts with a fixed quota like FxHyTM, but consumes the abort-cause
+/// flags at runtime: a CAPACITY abort zeroes the quota (hardware can
+/// never fit this transaction), grants one last hardware attempt (the
+/// pseudocode's `tries = 0; retry in HW`), and then falls back. The
+/// only overhead over FxHyTM is reading the abort status — no RNG, no
+/// offline profiling.
+#[derive(Clone, Debug)]
+pub struct DyAdPolicy {
+    pub n: u32,
+    tries: i64,
+    /// Set when a capacity abort zeroed the quota: the next abort (of
+    /// any cause) goes straight to software.
+    exhausted_by_capacity: bool,
+}
+
+impl DyAdPolicy {
+    /// NUM_RETRIES is "set to a fixed random" like FxHyTM — the paper's
+    /// point is that the capacity short-circuit makes its exact value
+    /// barely matter. We use the same untuned constant as FxHyTM.
+    pub const DEFAULT_N: u32 = FxPolicy::DEFAULT_N;
+
+    pub fn new(n: u32) -> Self {
+        Self {
+            n,
+            tries: 0,
+            exhausted_by_capacity: false,
+        }
+    }
+}
+
+impl RetryPolicy for DyAdPolicy {
+    fn begin_txn(&mut self, _rng: &mut Rng) {
+        self.tries = self.n as i64;
+        self.exhausted_by_capacity = false;
+    }
+
+    fn on_abort(&mut self, cause: AbortCause, _rng: &mut Rng) -> Decision {
+        if self.exhausted_by_capacity {
+            // The one post-capacity hardware attempt failed too.
+            return Decision::FallbackSw;
+        }
+        match cause {
+            AbortCause::Capacity => {
+                // Figure 1b: `if (capacity limit reached) tries = 0` —
+                // one last hardware try, then software.
+                self.tries = 0;
+                self.exhausted_by_capacity = true;
+                Decision::RetryHw
+            }
+            _ => {
+                if self.tries > 0 {
+                    self.tries -= 1;
+                    Decision::RetryHw
+                } else {
+                    Decision::FallbackSw
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "DyAdHyTM"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(p: &mut dyn RetryPolicy, cause: AbortCause) -> u32 {
+        // Count RetryHw decisions until fallback.
+        let mut rng = Rng::new(1);
+        let mut retries = 0;
+        loop {
+            match p.on_abort(cause, &mut rng) {
+                Decision::RetryHw => retries += 1,
+                Decision::FallbackSw => return retries,
+            }
+        }
+    }
+
+    #[test]
+    fn fx_retries_exactly_n() {
+        let mut p = FxPolicy::new(5);
+        let mut rng = Rng::new(0);
+        p.begin_txn(&mut rng);
+        assert_eq!(drain(&mut p, AbortCause::Conflict), 5);
+    }
+
+    #[test]
+    fn fx_quota_resets_each_txn() {
+        let mut p = FxPolicy::new(3);
+        let mut rng = Rng::new(0);
+        p.begin_txn(&mut rng);
+        assert_eq!(drain(&mut p, AbortCause::Conflict), 3);
+        p.begin_txn(&mut rng);
+        assert_eq!(drain(&mut p, AbortCause::Conflict), 3);
+    }
+
+    #[test]
+    fn rnd_draws_within_range_and_varies() {
+        let mut p = RndPolicy::new(1, 50);
+        let mut rng = Rng::new(7);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..40 {
+            p.begin_txn(&mut rng);
+            let r = drain(&mut p, AbortCause::Conflict);
+            assert!((1..=50).contains(&r), "quota {r} outside 1-50");
+            seen.insert(r);
+        }
+        assert!(seen.len() > 5, "quotas should vary: {seen:?}");
+        assert_eq!(p.begin_cost_rng_draws(), 1, "RND pays an RNG draw");
+    }
+
+    #[test]
+    fn stad_is_fx_with_tuned_constant() {
+        let mut p = StAdPolicy::new(StAdPolicy::DEFAULT_TUNED_N);
+        let mut rng = Rng::new(0);
+        p.begin_txn(&mut rng);
+        assert_eq!(
+            drain(&mut p, AbortCause::Conflict),
+            StAdPolicy::DEFAULT_TUNED_N
+        );
+    }
+
+    #[test]
+    fn dyad_conflicts_behave_like_fx() {
+        let mut p = DyAdPolicy::new(4);
+        let mut rng = Rng::new(0);
+        p.begin_txn(&mut rng);
+        assert_eq!(drain(&mut p, AbortCause::Conflict), 4);
+    }
+
+    #[test]
+    fn dyad_capacity_short_circuits_to_one_last_try() {
+        let mut p = DyAdPolicy::new(40);
+        let mut rng = Rng::new(0);
+        p.begin_txn(&mut rng);
+        // Capacity: one more hardware attempt granted...
+        assert_eq!(p.on_abort(AbortCause::Capacity, &mut rng), Decision::RetryHw);
+        // ...and any further abort goes to software immediately.
+        assert_eq!(
+            p.on_abort(AbortCause::Conflict, &mut rng),
+            Decision::FallbackSw
+        );
+    }
+
+    #[test]
+    fn dyad_capacity_after_conflicts_still_short_circuits() {
+        let mut p = DyAdPolicy::new(40);
+        let mut rng = Rng::new(0);
+        p.begin_txn(&mut rng);
+        for _ in 0..10 {
+            assert_eq!(
+                p.on_abort(AbortCause::Conflict, &mut rng),
+                Decision::RetryHw
+            );
+        }
+        assert_eq!(p.on_abort(AbortCause::Capacity, &mut rng), Decision::RetryHw);
+        assert_eq!(
+            p.on_abort(AbortCause::Capacity, &mut rng),
+            Decision::FallbackSw
+        );
+    }
+
+    #[test]
+    fn dyad_resets_capacity_state_per_txn() {
+        let mut p = DyAdPolicy::new(2);
+        let mut rng = Rng::new(0);
+        p.begin_txn(&mut rng);
+        p.on_abort(AbortCause::Capacity, &mut rng);
+        assert_eq!(
+            p.on_abort(AbortCause::Conflict, &mut rng),
+            Decision::FallbackSw
+        );
+        // New transaction: full quota again.
+        p.begin_txn(&mut rng);
+        assert_eq!(drain(&mut p, AbortCause::Conflict), 2);
+    }
+
+    #[test]
+    fn dyad_saves_retries_vs_fx_under_capacity() {
+        // The paper's Fig 4(b) mechanism: under capacity aborts DyAd
+        // burns ~1 retry where Fx burns its whole quota.
+        let mut rng = Rng::new(0);
+        let mut fx = FxPolicy::new(43);
+        fx.begin_txn(&mut rng);
+        let fx_retries = drain(&mut fx, AbortCause::Capacity);
+        let mut dy = DyAdPolicy::new(43);
+        dy.begin_txn(&mut rng);
+        let dy_retries = drain(&mut dy, AbortCause::Capacity);
+        assert_eq!(fx_retries, 43);
+        assert_eq!(dy_retries, 1);
+    }
+}

@@ -1,0 +1,34 @@
+//! # DyAdHyTM — dynamically adaptive hybrid transactional memory on big-data graphs
+//!
+//! A full reproduction of *"DyAdHyTM: A Low Overhead Dynamically Adaptive
+//! Hybrid Transactional Memory on Big Data Graphs"* (Qayum, Badawy, Cook;
+//! CS.DC 2017) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the synchronization coordinator: a software
+//!   best-effort HTM with an Intel-RTM-faithful capacity/abort model
+//!   ([`htm`]), NOrec and TL2 STMs ([`stm`]), the counting global lock and
+//!   the paper's four HyTM retry policies ([`hytm`]), the SSCA-2 graph
+//!   workload ([`graph`]), a discrete-event SMP simulator that regenerates
+//!   the paper's 28-thread scaling figures on any machine ([`sim`]), and
+//!   the experiment coordinator ([`coordinator`]).
+//! * **Layer 2 (python/compile, build-time)** — the SSCA-2 compute graph in
+//!   JAX, AOT-lowered to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels, build-time)** — Pallas kernels for
+//!   R-MAT edge generation and edge-weight classification, executed from
+//!   Rust via the PJRT CPU client ([`runtime`]). Python never runs on the
+//!   request path.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod coordinator;
+pub mod graph;
+pub mod htm;
+pub mod hytm;
+pub mod mem;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod stm;
+pub mod tm;
+pub mod util;

@@ -1,0 +1,322 @@
+//! `dyadhytm` — CLI for the DyAdHyTM reproduction.
+//!
+//! Subcommands (no external arg-parsing crates in the offline registry;
+//! parsing is hand-rolled):
+//!
+//! ```text
+//! dyadhytm run    [--policy P] [--scale S] [--threads T] [--batch B]
+//!                 [--seed N] [--artifacts] [--tiny-htm] [--no-verify]
+//!                 one live SSCA-2 experiment (real threads, verified)
+//! dyadhytm sim    --fig <t0|2a..2f|3a..3c|4a..4c|all> [--seed N]
+//!                 regenerate a paper figure on the simulated 28-HT node
+//! dyadhytm sim    --policy P --scale S --threads T [--kernel g|c|b]
+//!                 one simulated cell
+//! dyadhytm headline        paper's headline speedup table
+//! dyadhytm tune   [--scale S] [--threads T]   StAdHyTM offline DSE
+//! dyadhytm calibrate       measure live per-primitive costs
+//! dyadhytm check-artifacts smoke-test the PJRT artifact path
+//! dyadhytm pipeline [--policy P] [--scale S] [--workers W] [--artifacts]
+//!                          streaming generation pipeline (L1/L2 producer,
+//!                          L3 transactional consumers, bounded queue)
+//! dyadhytm k3     [--policy P] [--scale S] [--threads T] [--depth D]
+//!                          SSCA-2 kernel 3: multi-source BFS extraction
+//! dyadhytm policies        list policy names
+//! ```
+
+use std::process::ExitCode;
+
+use dyadhytm::coordinator::figures::{self, Kernel};
+use dyadhytm::coordinator::{calibrate, live, tune};
+use dyadhytm::htm::HtmConfig;
+use dyadhytm::hytm::PolicySpec;
+use dyadhytm::runtime::ArtifactRuntime;
+
+/// Minimal flag parser: `--key value` and boolean `--flag`.
+struct Args {
+    rest: Vec<String>,
+}
+
+impl Args {
+    fn new(args: Vec<String>) -> Self {
+        Self { rest: args }
+    }
+
+    fn flag(&mut self, name: &str) -> bool {
+        if let Some(i) = self.rest.iter().position(|a| a == name) {
+            self.rest.remove(i);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn opt(&mut self, name: &str) -> Option<String> {
+        let i = self.rest.iter().position(|a| a == name)?;
+        if i + 1 >= self.rest.len() {
+            eprintln!("missing value for {name}");
+            std::process::exit(2);
+        }
+        let v = self.rest.remove(i + 1);
+        self.rest.remove(i);
+        Some(v)
+    }
+
+    fn opt_parse<T: std::str::FromStr>(&mut self, name: &str, default: T) -> T {
+        match self.opt(name) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("bad value for {name}: {v}");
+                std::process::exit(2);
+            }),
+            None => default,
+        }
+    }
+
+    fn finish(self) {
+        if !self.rest.is_empty() {
+            eprintln!("unrecognized arguments: {:?}", self.rest);
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_policy(s: &str) -> PolicySpec {
+    PolicySpec::parse(s).unwrap_or_else(|| {
+        eprintln!("unknown policy '{s}'; see `dyadhytm policies`");
+        std::process::exit(2);
+    })
+}
+
+fn cmd_run(mut a: Args) -> anyhow::Result<()> {
+    let policy = parse_policy(&a.opt("--policy").unwrap_or_else(|| "dyad".into()));
+    let mut cfg = live::RunConfig::new(
+        a.opt_parse("--scale", 12u32),
+        policy,
+        a.opt_parse("--threads", 4usize),
+    );
+    cfg.batch = a.opt_parse("--batch", 1usize);
+    cfg.seed = a.opt_parse("--seed", 0x55CA_2017u64);
+    cfg.use_artifacts = a.flag("--artifacts");
+    if a.flag("--tiny-htm") {
+        cfg.htm = HtmConfig::tiny();
+    }
+    if a.flag("--no-verify") {
+        cfg.verify = false;
+    }
+    a.finish();
+    let report = live::run_live(&cfg)?;
+    println!("{}", report.to_markdown());
+    println!(
+        "per-thread stats (generation kernel):\n{}",
+        report.gen_stats.to_markdown()
+    );
+    println!(
+        "per-thread stats (computation kernel):\n{}",
+        report.comp_stats.to_markdown()
+    );
+    Ok(())
+}
+
+fn cmd_sim(mut a: Args) -> anyhow::Result<()> {
+    let seed = a.opt_parse("--seed", 7u64);
+    if let Some(fig) = a.opt("--fig") {
+        a.finish();
+        let ids: Vec<&str> = if fig == "all" {
+            figures::all_figures()
+        } else {
+            vec![fig.as_str()]
+        };
+        for id in ids {
+            let spec = figures::fig_by_name(id)
+                .ok_or_else(|| anyhow::anyhow!("unknown figure '{id}'"))?;
+            println!("{}", figures::render_figure(&spec, seed));
+        }
+        return Ok(());
+    }
+    // Single cell.
+    let policy = parse_policy(&a.opt("--policy").unwrap_or_else(|| "dyad".into()));
+    let scale = a.opt_parse("--scale", 16u32);
+    let threads = a.opt_parse("--threads", 14usize);
+    let batch = a.opt_parse("--batch", 1usize);
+    let kernel = match a.opt("--kernel").as_deref() {
+        Some("g") | Some("gen") | Some("generation") => Kernel::Generation,
+        Some("c") | Some("comp") | Some("computation") => Kernel::Computation,
+        _ => Kernel::Both,
+    };
+    a.finish();
+    let (secs, stats) = figures::sim_cell(policy, threads, scale, kernel, batch, seed);
+    println!(
+        "policy={} scale={scale} threads={threads} kernel={kernel:?}",
+        policy.name()
+    );
+    println!("{}", stats.to_markdown());
+    println!("total virtual time: {secs:.3} s");
+    Ok(())
+}
+
+fn cmd_check_artifacts() -> anyhow::Result<()> {
+    let dir = ArtifactRuntime::default_dir();
+    anyhow::ensure!(
+        ArtifactRuntime::available(&dir),
+        "artifacts missing in {} — run `make artifacts`",
+        dir.display()
+    );
+    let rt = ArtifactRuntime::load(&dir)?;
+    println!(
+        "manifest: batch={} levels={}",
+        rt.manifest.batch, rt.manifest.levels
+    );
+    let tuples = rt.edge_batch((1, 2), 14, 1 << 14)?;
+    println!(
+        "edge_batch OK: {} tuples, first = {:?}",
+        tuples.len(),
+        tuples[0]
+    );
+    anyhow::ensure!(tuples.iter().all(|t| t.src < (1 << 14) && t.dst < (1 << 14)));
+    let weights: Vec<u32> = tuples.iter().map(|t| t.weight).collect();
+    let gmax = rt.max_weight(&weights)?;
+    let (_, mask) = rt.classify(&weights, gmax)?;
+    let hits = mask.iter().sum::<u32>();
+    let expect = weights.iter().filter(|&&w| w == gmax).count() as u32;
+    anyhow::ensure!(hits == expect, "mask hits {hits} != expected {expect}");
+    println!("classify OK: gmax={gmax}, {hits} max-weight edges");
+    println!("artifact path healthy");
+    Ok(())
+}
+
+fn cmd_pipeline(mut a: Args) -> anyhow::Result<()> {
+    use dyadhytm::graph::{Graph, Ssca2Config};
+    use dyadhytm::hytm::TmSystem;
+    use dyadhytm::runtime::{pipeline, TupleSource};
+    use std::sync::Arc;
+
+    let policy = parse_policy(&a.opt("--policy").unwrap_or_else(|| "dyad".into()));
+    let scale = a.opt_parse("--scale", 13u32);
+    let workers = a.opt_parse("--workers", 4usize);
+    let use_artifacts = a.flag("--artifacts");
+    let seed = a.opt_parse("--seed", 0x55CA_2017u64);
+    a.finish();
+
+    let mut cfg = pipeline::PipelineConfig::new(scale, policy, workers);
+    cfg.seed = seed;
+    let source = if use_artifacts {
+        let dir = ArtifactRuntime::default_dir();
+        anyhow::ensure!(
+            ArtifactRuntime::available(&dir),
+            "artifacts missing — run `make artifacts`"
+        );
+        TupleSource::Artifacts(ArtifactRuntime::load(&dir)?)
+    } else {
+        TupleSource::Native { seed }
+    };
+
+    let gcfg = Ssca2Config::new(scale).with_seed(seed);
+    let g = Graph::alloc(gcfg);
+    let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+    let report = pipeline::run(&sys, &g, source, &cfg)?;
+    println!(
+        "pipeline: {} edges in {:?} ({:.0} edges/s), producer blocked {:?}",
+        report.edges, report.elapsed, report.edges_per_sec, report.producer_blocked
+    );
+    println!("{}", report.stats.to_markdown());
+    Ok(())
+}
+
+fn cmd_k3(mut a: Args) -> anyhow::Result<()> {
+    use dyadhytm::graph::{computation, generation, rmat, subgraph, Graph, Ssca2Config};
+    use dyadhytm::hytm::TmSystem;
+    use std::sync::Arc;
+
+    let policy = parse_policy(&a.opt("--policy").unwrap_or_else(|| "dyad".into()));
+    let scale = a.opt_parse("--scale", 12u32);
+    let threads = a.opt_parse("--threads", 4usize);
+    let depth = a.opt_parse("--depth", 3usize);
+    let seed = a.opt_parse("--seed", 0x55CA_2017u64);
+    a.finish();
+
+    let cfg = Ssca2Config::new(scale).with_seed(seed);
+    let g = Graph::alloc(cfg);
+    let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+    let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+    generation::build_serial(&sys, &g, &tuples);
+    let _ = computation::run(&sys, &g, policy, threads, seed);
+    let roots = subgraph::roots_from_results(&g);
+    let r = subgraph::run(&sys, &g, &roots, depth, policy, threads, seed);
+    subgraph::verify_subgraph(&g, &roots, depth, &r)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "kernel 3: {} roots, depth {depth} -> {} vertices in {:?} (levels: {:?})",
+        roots.len(),
+        r.total_marked,
+        r.elapsed,
+        r.level_sizes
+    );
+    println!("{}", r.stats.to_markdown());
+    println!("verified OK");
+    Ok(())
+}
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: dyadhytm <run|sim|headline|tune|calibrate|check-artifacts|pipeline|k3|policies> [flags]\n\
+         see README for flags"
+    );
+    ExitCode::from(2)
+}
+
+fn main() -> ExitCode {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        return usage();
+    }
+    let cmd = argv.remove(0);
+    let a = Args::new(argv);
+    let result = match cmd.as_str() {
+        "run" => cmd_run(a),
+        "sim" => cmd_sim(a),
+        "headline" => {
+            let mut a = a;
+            let seed = a.opt_parse("--seed", 7u64);
+            a.finish();
+            println!("{}", figures::render_headline(seed));
+            Ok(())
+        }
+        "tune" => {
+            let mut a = a;
+            let scale = a.opt_parse("--scale", 16u32);
+            let threads = a.opt_parse("--threads", 28usize);
+            let seed = a.opt_parse("--seed", 7u64);
+            a.finish();
+            println!("{}", tune::render_tuning(scale, threads, seed));
+            Ok(())
+        }
+        "calibrate" => {
+            a.finish();
+            println!("{}", calibrate::run_calibration().to_markdown());
+            Ok(())
+        }
+        "check-artifacts" => {
+            a.finish();
+            cmd_check_artifacts()
+        }
+        "pipeline" => cmd_pipeline(a),
+        "k3" => cmd_k3(a),
+        "policies" => {
+            a.finish();
+            for s in [
+                "lock", "stm", "stm-tl2", "htm-alock[=R]", "htm-spin[=R]", "hle",
+                "rnd[=LO-HI]", "fx[=N]", "stad[=N]", "dyad[=N]", "dyad-tl2[=N]",
+            ] {
+                println!("{s}");
+            }
+            Ok(())
+        }
+        _ => return usage(),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! The word-addressable shared heap.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::layout::Line;
+
+/// A heap address: an index into the word array. Word 0 is reserved as a
+/// null sentinel (valid allocations start at address 8 — one full line —
+/// so `0` can mean "no cell" in linked structures).
+pub type Addr = usize;
+
+/// Words per 64-byte cache line.
+pub const WORDS_PER_LINE: usize = 8;
+
+/// Word-addressable shared heap with a bump allocator.
+///
+/// Plain (non-transactional) accessors use `Relaxed` atomics: they are
+/// for single-threaded setup and post-run verification. All concurrent
+/// access goes through the policy executors, which layer speculation or
+/// locking on top.
+pub struct TxHeap {
+    words: Box<[AtomicU64]>,
+    next: AtomicUsize,
+}
+
+impl TxHeap {
+    /// Allocate a heap of `words` u64 cells (rounded up to a whole line).
+    pub fn new(words: usize) -> Self {
+        let words = words.next_multiple_of(WORDS_PER_LINE).max(WORDS_PER_LINE);
+        let mut v = Vec::with_capacity(words);
+        v.resize_with(words, || AtomicU64::new(0));
+        Self {
+            words: v.into_boxed_slice(),
+            // Line 0 reserved: address 0 is the null sentinel.
+            next: AtomicUsize::new(WORDS_PER_LINE),
+        }
+    }
+
+    /// Total capacity in words.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Words allocated so far (including the reserved first line).
+    #[inline]
+    pub fn allocated(&self) -> usize {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    /// The cache line containing `addr`.
+    #[inline]
+    pub fn line_of(addr: Addr) -> Line {
+        Line((addr / WORDS_PER_LINE) as u64)
+    }
+
+    /// Bump-allocate `n` words; returns the base address.
+    /// Panics on exhaustion — capacity is sized by the workload up front.
+    pub fn alloc(&self, n: usize) -> Addr {
+        let base = self.next.fetch_add(n, Ordering::Relaxed);
+        assert!(
+            base + n <= self.words.len(),
+            "TxHeap exhausted: {} + {} > {}",
+            base,
+            n,
+            self.words.len()
+        );
+        base
+    }
+
+    /// Line-aligned allocation (for structures whose conflict footprint
+    /// must not false-share with neighbours).
+    pub fn alloc_lines(&self, lines: usize) -> Addr {
+        loop {
+            let cur = self.next.load(Ordering::Relaxed);
+            let base = cur.next_multiple_of(WORDS_PER_LINE);
+            let end = base + lines * WORDS_PER_LINE;
+            assert!(end <= self.words.len(), "TxHeap exhausted (aligned)");
+            if self
+                .next
+                .compare_exchange(cur, end, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return base;
+            }
+        }
+    }
+
+    /// Non-transactional read (setup/verification only).
+    #[inline]
+    pub fn load(&self, addr: Addr) -> u64 {
+        self.words[addr].load(Ordering::Relaxed)
+    }
+
+    /// Non-transactional write (setup/verification only).
+    #[inline]
+    pub fn store(&self, addr: Addr, val: u64) {
+        self.words[addr].store(val, Ordering::Relaxed);
+    }
+
+    /// Acquire-ordered read — used by speculation engines that pair it
+    /// with version validation.
+    #[inline]
+    pub fn load_acquire(&self, addr: Addr) -> u64 {
+        self.words[addr].load(Ordering::Acquire)
+    }
+
+    /// Release-ordered write — used by commit write-back.
+    #[inline]
+    pub fn store_release(&self, addr: Addr, val: u64) {
+        self.words[addr].store(val, Ordering::Release);
+    }
+
+    /// Atomic fetch-add on a heap word (used by non-speculative paths,
+    /// e.g. per-thread pool refills).
+    #[inline]
+    pub fn fetch_add(&self, addr: Addr, delta: u64) -> u64 {
+        self.words[addr].fetch_add(delta, Ordering::AcqRel)
+    }
+}
+
+impl std::fmt::Debug for TxHeap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TxHeap")
+            .field("capacity", &self.capacity())
+            .field("allocated", &self.allocated())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::qcheck;
+    use std::sync::Arc;
+
+    #[test]
+    fn rounds_capacity_to_lines() {
+        let h = TxHeap::new(1);
+        assert_eq!(h.capacity(), WORDS_PER_LINE);
+    }
+
+    #[test]
+    fn alloc_reserves_null_line() {
+        let h = TxHeap::new(64);
+        let a = h.alloc(4);
+        assert!(a >= WORDS_PER_LINE, "address 0 must stay null");
+    }
+
+    #[test]
+    fn alloc_monotonic_disjoint() {
+        let h = TxHeap::new(1024);
+        let a = h.alloc(10);
+        let b = h.alloc(10);
+        assert!(b >= a + 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "TxHeap exhausted")]
+    fn alloc_panics_on_exhaustion() {
+        let h = TxHeap::new(16);
+        h.alloc(1000);
+    }
+
+    #[test]
+    fn aligned_alloc_is_line_aligned() {
+        let h = TxHeap::new(1024);
+        h.alloc(3); // misalign the cursor
+        let a = h.alloc_lines(2);
+        assert_eq!(a % WORDS_PER_LINE, 0);
+    }
+
+    #[test]
+    fn line_mapping() {
+        assert_eq!(TxHeap::line_of(0), Line(0));
+        assert_eq!(TxHeap::line_of(7), Line(0));
+        assert_eq!(TxHeap::line_of(8), Line(1));
+        assert_eq!(TxHeap::line_of(17), Line(2));
+    }
+
+    #[test]
+    fn load_store_roundtrip() {
+        let h = TxHeap::new(64);
+        let a = h.alloc(2);
+        h.store(a, 0xDEAD_BEEF);
+        h.store(a + 1, 42);
+        assert_eq!(h.load(a), 0xDEAD_BEEF);
+        assert_eq!(h.load(a + 1), 42);
+    }
+
+    #[test]
+    fn concurrent_alloc_yields_disjoint_regions() {
+        let h = Arc::new(TxHeap::new(64 * 1024));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                (0..100).map(|_| h.alloc(16)).collect::<Vec<_>>()
+            }));
+        }
+        let mut all: Vec<Addr> = handles
+            .into_iter()
+            .flat_map(|j| j.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        for pair in all.windows(2) {
+            assert!(pair[1] - pair[0] >= 16, "overlapping allocations");
+        }
+    }
+
+    #[test]
+    fn prop_line_of_consistent_with_division() {
+        qcheck(
+            "line_of == addr/8",
+            500,
+            |r| r.below(1 << 40) as usize,
+            |&a| TxHeap::line_of(a).0 == (a / WORDS_PER_LINE) as u64,
+        );
+    }
+}

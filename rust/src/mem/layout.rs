@@ -1,0 +1,59 @@
+//! Cache-line identity and padded atomics.
+
+/// A cache-line id within the [`super::TxHeap`] (line = addr / 8).
+/// This is the granularity at which the software HTM tracks read/write
+/// sets and detects conflicts — mirroring Intel TSX, whose transactional
+/// buffers live in the L1 data cache at 64-byte granularity.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Line(pub u64);
+
+impl std::fmt::Debug for Line {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}", self.0)
+    }
+}
+
+impl Line {
+    /// The L1 set this line maps to under a `sets`-set cache (power of 2).
+    #[inline]
+    pub fn set_index(self, sets: usize) -> usize {
+        (self.0 as usize) & (sets - 1)
+    }
+}
+
+/// A cache-line padded atomic u64, to keep the global lock and the
+/// sequence lock off each other's lines.
+#[repr(align(64))]
+pub struct PaddedAtomicU64(pub std::sync::atomic::AtomicU64);
+
+impl PaddedAtomicU64 {
+    pub const fn new(v: u64) -> Self {
+        Self(std::sync::atomic::AtomicU64::new(v))
+    }
+}
+
+impl std::ops::Deref for PaddedAtomicU64 {
+    type Target = std::sync::atomic::AtomicU64;
+    fn deref(&self) -> &Self::Target {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_index_masks_low_bits() {
+        assert_eq!(Line(0).set_index(64), 0);
+        assert_eq!(Line(63).set_index(64), 63);
+        assert_eq!(Line(64).set_index(64), 0);
+        assert_eq!(Line(65).set_index(64), 1);
+    }
+
+    #[test]
+    fn padded_is_64_aligned() {
+        assert_eq!(std::mem::align_of::<PaddedAtomicU64>(), 64);
+        assert_eq!(std::mem::size_of::<PaddedAtomicU64>(), 64);
+    }
+}

@@ -1,0 +1,15 @@
+//! Shared transactional memory substrate (DESIGN.md S1).
+//!
+//! All transactional state — the SSCA-2 graph, its allocator cursors,
+//! result lists — lives in a single word-addressable [`TxHeap`], so that
+//! every synchronization policy (coarse lock, STM, software HTM, the
+//! HyTMs) sees the *same* memory and conflicts through the *same*
+//! addresses. Cache-line mapping (8 words = 64 B per line) gives the
+//! software HTM its conflict/capacity granularity, mirroring Intel TSX
+//! tracking read/write sets in L1 at line granularity.
+
+pub mod heap;
+pub mod layout;
+
+pub use heap::{Addr, TxHeap, WORDS_PER_LINE};
+pub use layout::Line;

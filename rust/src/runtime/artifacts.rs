@@ -1,0 +1,194 @@
+//! Loading and executing the `rmat` / `classify` HLO artifacts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::EdgeTuple;
+use crate::util::json;
+
+/// Static shapes the artifacts were lowered with (from manifest.json).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    /// Edges per `edge_batch` execution (u32[batch] outputs).
+    pub batch: usize,
+    /// R-MAT bit-planes compiled into the kernel (max graph scale).
+    pub levels: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let batch = json::scrape_u64(text, "batch")
+            .ok_or_else(|| anyhow!("manifest missing 'batch'"))? as usize;
+        let levels = json::scrape_u64(text, "levels")
+            .ok_or_else(|| anyhow!("manifest missing 'levels'"))? as usize;
+        Ok(Self { batch, levels })
+    }
+}
+
+/// The compiled artifacts, ready to execute on the PJRT CPU client.
+pub struct ArtifactRuntime {
+    #[allow(dead_code)] // owns the device state the executables run on
+    client: xla::PjRtClient,
+    rmat: xla::PjRtLoadedExecutable,
+    classify: xla::PjRtLoadedExecutable,
+    pub manifest: Manifest,
+}
+
+impl ArtifactRuntime {
+    /// Default artifact directory: `$REPO/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DYADHYTM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Are artifacts present (cheap check before paying PJRT startup)?
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").exists()
+            && dir.join("rmat.hlo.txt").exists()
+            && dir.join("classify.hlo.txt").exists()
+    }
+
+    /// Load + compile both artifacts.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let manifest = Manifest::parse(&manifest_text)?;
+
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let load = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            // HLO TEXT is the interchange format: jax >= 0.5 emits
+            // 64-bit-id protos this XLA rejects; the text parser
+            // reassigns ids (see aot.py and /opt/xla-example/README.md).
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+        let rmat = load("rmat")?;
+        let classify = load("classify")?;
+        Ok(Self {
+            client,
+            rmat,
+            classify,
+            manifest,
+        })
+    }
+
+    /// Execute one `edge_batch`: threefry key + scale + max weight →
+    /// `manifest.batch` edge tuples.
+    pub fn edge_batch(&self, key: (u32, u32), scale: u32, maxw: u32) -> Result<Vec<EdgeTuple>> {
+        if scale as usize > self.manifest.levels {
+            bail!(
+                "scale {scale} exceeds compiled LEVELS {}",
+                self.manifest.levels
+            );
+        }
+        let key_lit = xla::Literal::vec1(&[key.0, key.1]);
+        let scale_lit = xla::Literal::vec1(&[scale as f32]);
+        let maxw_lit = xla::Literal::vec1(&[maxw as f32]);
+        let result = self
+            .rmat
+            .execute::<xla::Literal>(&[key_lit, scale_lit, maxw_lit])?[0][0]
+            .to_literal_sync()?;
+        let (src, dst, w) = result.to_tuple3()?;
+        let src = src.to_vec::<u32>()?;
+        let dst = dst.to_vec::<u32>()?;
+        let w = w.to_vec::<u32>()?;
+        if src.len() != self.manifest.batch {
+            bail!("batch mismatch: got {}, manifest {}", src.len(), self.manifest.batch);
+        }
+        Ok(src
+            .into_iter()
+            .zip(dst)
+            .zip(w)
+            .map(|((src, dst), weight)| EdgeTuple { src, dst, weight })
+            .collect())
+    }
+
+    /// Execute `classify`: weights (padded to batch) + cutoff →
+    /// (tile maxima, membership mask).
+    pub fn classify(&self, weights: &[u32], cutoff: u32) -> Result<(Vec<u32>, Vec<u32>)> {
+        let b = self.manifest.batch;
+        if weights.len() != b {
+            bail!("classify expects exactly {b} weights, got {}", weights.len());
+        }
+        let w_lit = xla::Literal::vec1(weights);
+        let c_lit = xla::Literal::vec1(&[cutoff]);
+        let result = self
+            .classify
+            .execute::<xla::Literal>(&[w_lit, c_lit])?[0][0]
+            .to_literal_sync()?;
+        let (tile_max, mask) = result.to_tuple2()?;
+        Ok((tile_max.to_vec::<u32>()?, mask.to_vec::<u32>()?))
+    }
+
+    /// Produce a full SSCA-2 tuple list by repeated `edge_batch` calls
+    /// (trailing surplus of the last batch is dropped).
+    pub fn generate_tuples(
+        &self,
+        seed: u64,
+        scale: u32,
+        edge_factor: u32,
+    ) -> Result<Vec<EdgeTuple>> {
+        let m = (1usize << scale) * edge_factor as usize;
+        let mut out = Vec::with_capacity(m);
+        let maxw = 1u32 << scale;
+        let mut batch_idx = 0u32;
+        while out.len() < m {
+            let key = (seed as u32 ^ batch_idx, (seed >> 32) as u32 ^ 0x9E37);
+            let tuples = self.edge_batch(key, scale, maxw)?;
+            let take = tuples.len().min(m - out.len());
+            out.extend_from_slice(&tuples[..take]);
+            batch_idx += 1;
+        }
+        Ok(out)
+    }
+
+    /// Global max weight over an arbitrary-length weight slice, chunked
+    /// through the classify artifact (pass 1 of the computation kernel's
+    /// runtime path). Short tails are padded with zeros.
+    pub fn max_weight(&self, weights: &[u32]) -> Result<u32> {
+        let b = self.manifest.batch;
+        let mut gmax = 0u32;
+        for chunk in weights.chunks(b) {
+            let padded;
+            let full = if chunk.len() == b {
+                chunk
+            } else {
+                padded = {
+                    let mut v = chunk.to_vec();
+                    v.resize(b, 0);
+                    v
+                };
+                &padded
+            };
+            let (tile_max, _) = self.classify(full, 0)?;
+            gmax = gmax.max(tile_max.into_iter().max().unwrap_or(0));
+        }
+        Ok(gmax)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(r#"{"batch": 65536, "levels": 24}"#).unwrap();
+        assert_eq!(m.batch, 65536);
+        assert_eq!(m.levels, 24);
+        assert!(Manifest::parse("{}").is_err());
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_integration.rs and
+    // skip gracefully when artifacts are absent; unit scope here stays
+    // PJRT-free so `cargo test --lib` works before `make artifacts`.
+}

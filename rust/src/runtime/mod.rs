@@ -1,0 +1,13 @@
+//! PJRT artifact runtime (DESIGN.md S13): load the AOT-compiled Layer-2
+//! computations and execute them from the Rust request path.
+//!
+//! `make artifacts` runs `python -m compile.aot` ONCE at build time; the
+//! HLO-text files it drops in `artifacts/` are compiled here with the
+//! PJRT CPU client and executed with concrete inputs. Python never runs
+//! at serve time — the binary is self-contained after artifacts exist.
+
+pub mod artifacts;
+pub mod pipeline;
+
+pub use artifacts::{ArtifactRuntime, Manifest};
+pub use pipeline::{PipelineConfig, PipelineReport, TupleSource};

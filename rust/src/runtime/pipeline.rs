@@ -1,0 +1,259 @@
+//! Streaming generation pipeline: overlap edge-tuple *production*
+//! (Layer 1/2 compute on the PJRT client, or the native generator) with
+//! edge *insertion* (Layer 3 transactions).
+//!
+//! The batch-at-a-time `generate_tuples` + `generation::run` flow
+//! materializes the whole tuple list first; at the paper's scales that
+//! is gigabytes. This pipeline streams instead: one producer thread
+//! owns the tuple source and feeds a bounded channel (backpressure);
+//! `workers` insert concurrently under the configured policy. This is
+//! the deployment-shaped path a downstream user would actually run.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::graph::rmat::EdgeTuple;
+use crate::graph::{generation, Graph};
+use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use crate::stats::StatsTable;
+
+use super::artifacts::ArtifactRuntime;
+
+/// Where tuples come from.
+pub enum TupleSource {
+    /// The AOT Pallas artifact, executed on the PJRT CPU client.
+    Artifacts(ArtifactRuntime),
+    /// The native generator (chunked, deterministic).
+    Native { seed: u64 },
+}
+
+/// Pipeline configuration.
+pub struct PipelineConfig {
+    pub scale: u32,
+    pub edge_factor: u32,
+    pub policy: PolicySpec,
+    pub workers: usize,
+    /// Bounded-channel depth, in batches (backpressure window).
+    pub queue_depth: usize,
+    /// Tuples per batch for the native source (artifact batches are
+    /// fixed by the compiled manifest).
+    pub native_batch: usize,
+    pub seed: u64,
+}
+
+impl PipelineConfig {
+    pub fn new(scale: u32, policy: PolicySpec, workers: usize) -> Self {
+        Self {
+            scale,
+            edge_factor: 8,
+            policy,
+            workers,
+            queue_depth: 4,
+            native_batch: 8192,
+            seed: 0x55CA_2017,
+        }
+    }
+
+    pub fn total_edges(&self) -> usize {
+        (1usize << self.scale) * self.edge_factor as usize
+    }
+}
+
+/// Pipeline outcome.
+#[derive(Debug)]
+pub struct PipelineReport {
+    pub edges: usize,
+    pub elapsed: Duration,
+    /// Time the producer spent blocked on the full queue (backpressure).
+    pub producer_blocked: Duration,
+    pub edges_per_sec: f64,
+    pub stats: StatsTable,
+}
+
+fn produce(
+    source: &mut TupleSource,
+    cfg: &PipelineConfig,
+    tx: SyncSender<Vec<EdgeTuple>>,
+) -> Result<Duration> {
+    let total = cfg.total_edges();
+    let mut sent = 0usize;
+    let mut blocked = Duration::ZERO;
+    let mut batch_idx = 0u64;
+    while sent < total {
+        let mut batch = match source {
+            TupleSource::Artifacts(rt) => {
+                let key = (
+                    cfg.seed as u32 ^ batch_idx as u32,
+                    (cfg.seed >> 32) as u32 ^ 0x9E37,
+                );
+                rt.edge_batch(key, cfg.scale, 1 << cfg.scale)?
+            }
+            TupleSource::Native { seed } => crate::graph::rmat::generate_chunk(
+                *seed,
+                batch_idx,
+                cfg.native_batch,
+                cfg.scale,
+                cfg.edge_factor,
+            ),
+        };
+        batch.truncate(total - sent);
+        sent += batch.len();
+        batch_idx += 1;
+        let t0 = Instant::now();
+        if tx.send(batch).is_err() {
+            anyhow::bail!("workers hung up");
+        }
+        blocked += t0.elapsed();
+    }
+    Ok(blocked)
+}
+
+fn consume(
+    g: &Graph,
+    rx: &std::sync::Mutex<Receiver<Vec<EdgeTuple>>>,
+    ex: &mut ThreadExecutor<'_>,
+) -> u64 {
+    let mut inserted = 0;
+    loop {
+        // One worker holds the lock only long enough to take a batch.
+        let batch = match rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => break, // producer done and queue drained
+        };
+        inserted += generation::insert_slice(g, ex, &batch);
+    }
+    inserted
+}
+
+/// Run the streaming pipeline; the graph must be freshly allocated and
+/// sized for `cfg.scale`. Returns the report; the built graph is left
+/// in `g` for the downstream kernels.
+pub fn run(
+    sys: &TmSystem,
+    g: &Graph,
+    mut source: TupleSource,
+    cfg: &PipelineConfig,
+) -> Result<PipelineReport> {
+    assert_eq!(g.cfg.scale, cfg.scale, "graph sized for a different scale");
+    let (tx, rx) = sync_channel::<Vec<EdgeTuple>>(cfg.queue_depth);
+    let rx = std::sync::Mutex::new(rx);
+    let t0 = Instant::now();
+    let mut table = StatsTable::new();
+    let mut producer_blocked = Duration::ZERO;
+
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for tid in 0..cfg.workers {
+            let rx = &rx;
+            let mut ex = ThreadExecutor::new(sys, cfg.policy, tid as u32, cfg.seed);
+            handles.push(s.spawn(move || {
+                let t = Instant::now();
+                let inserted = consume(g, rx, &mut ex);
+                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+                (inserted, ex.stats)
+            }));
+        }
+        // The PJRT client is thread-pinned (!Send): the caller thread IS
+        // the producer; workers overlap with it through the channel.
+        producer_blocked = produce(&mut source, cfg, tx)?;
+        // The sender is dropped; workers drain the queue and exit.
+        let mut total = 0;
+        for (tid, h) in handles.into_iter().enumerate() {
+            let (inserted, stats) = h.join().expect("worker panicked");
+            total += inserted;
+            table.push(tid, stats);
+        }
+        anyhow::ensure!(
+            total == cfg.total_edges() as u64,
+            "inserted {total} != expected {}",
+            cfg.total_edges()
+        );
+        Ok(())
+    })?;
+
+    let elapsed = t0.elapsed();
+    Ok(PipelineReport {
+        edges: cfg.total_edges(),
+        elapsed,
+        producer_blocked,
+        edges_per_sec: cfg.total_edges() as f64 / elapsed.as_secs_f64(),
+        stats: table,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{rmat, verify, Ssca2Config};
+    use crate::htm::HtmConfig;
+    use std::sync::Arc;
+
+    fn setup(scale: u32) -> (TmSystem, Graph) {
+        let cfg = Ssca2Config::new(scale);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+        (sys, g)
+    }
+
+    #[test]
+    fn native_pipeline_builds_verified_graph() {
+        let (sys, g) = setup(9);
+        let mut cfg = PipelineConfig::new(9, PolicySpec::DyAd { n: 43 }, 3);
+        cfg.native_batch = 512;
+        let seed = cfg.seed;
+        let report = run(&sys, &g, TupleSource::Native { seed }, &cfg).unwrap();
+        assert_eq!(report.edges, 8 << 9);
+        assert_eq!(report.stats.rows.len(), 3);
+        // The streamed tuple multiset equals the chunked generator's
+        // output: rebuild it and verify.
+        let mut tuples = Vec::new();
+        let mut i = 0;
+        while tuples.len() < report.edges {
+            tuples.extend(rmat::generate_chunk(seed, i, 512, 9, 8));
+            i += 1;
+        }
+        tuples.truncate(report.edges);
+        verify::check_graph(&g, &tuples).unwrap();
+    }
+
+    #[test]
+    fn backpressure_bounds_memory() {
+        // queue_depth 1 with slow consumers: the producer must block
+        // rather than buffer unboundedly — asserted indirectly: it
+        // cannot finish before workers consume (blocked time > 0 is
+        // scheduling-dependent, so just assert completion + accounting).
+        let (sys, g) = setup(8);
+        let mut cfg = PipelineConfig::new(8, PolicySpec::StmNorec, 2);
+        cfg.queue_depth = 1;
+        cfg.native_batch = 64;
+        let seed = cfg.seed;
+        let report = run(&sys, &g, TupleSource::Native { seed }, &cfg).unwrap();
+        assert_eq!(report.edges, 8 << 8);
+        assert!(report.edges_per_sec > 0.0);
+    }
+
+    #[test]
+    fn single_worker_pipeline_matches_batch_build() {
+        let (sys, g) = setup(8);
+        let cfg = PipelineConfig::new(8, PolicySpec::CoarseLock, 1);
+        let seed = cfg.seed;
+        run(&sys, &g, TupleSource::Native { seed }, &cfg).unwrap();
+        let total_deg: u64 = (0..(1u32 << 8)).map(|v| g.degree_of(v)).sum();
+        assert_eq!(total_deg, (8 << 8) as u64);
+    }
+
+    #[test]
+    fn worker_seed_rng_determinism_is_not_required_but_counts_are() {
+        let mut totals = Vec::new();
+        for _ in 0..2 {
+            let (sys, g) = setup(7);
+            let cfg = PipelineConfig::new(7, PolicySpec::HtmSpin { retries: 6 }, 4);
+            let seed = cfg.seed;
+            let r = run(&sys, &g, TupleSource::Native { seed }, &cfg).unwrap();
+            totals.push(r.stats.total().total_commits());
+        }
+        assert_eq!(totals[0], totals[1], "commit counts are workload-determined");
+    }
+}

@@ -1,0 +1,631 @@
+//! The discrete-event conflict engine.
+//!
+//! Single-threaded, deterministic, chronological: a binary heap of
+//! (virtual time, thread) events. Each simulated thread walks its
+//! transaction stream; a transaction's attempt occupies a window
+//! `[start, commit)` and commits iff no tracked line it touches was
+//! committed-to inside the window, no subscribed lock word moved, and
+//! its footprint clears the capacity model. Policy decisions come from
+//! the *same* [`RetryPolicy`] state machines the live executor drives.
+//!
+//! Documented approximations (DESIGN.md §6.4):
+//! * conflicts are detected at commit-check time against commits with
+//!   earlier timestamps (committer-wins ordering);
+//! * NOrec's serial write-back is modeled by serializing STM commit
+//!   times through `seq_free_at`;
+//! * lock-path and STM writes recorded with their completion timestamps
+//!   invalidate overlapping speculators exactly as the live
+//!   subscription + commit fence do.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::hytm::policies::{Decision, DyAdPolicy, FxPolicy, RetryPolicy, RndPolicy, StAdPolicy};
+use crate::hytm::PolicySpec;
+use crate::stats::{StatsTable, TxStats};
+use crate::tm::AbortCause;
+use crate::util::rng::Rng;
+
+use super::cost::CostModel;
+use super::workload::TxnDesc;
+
+/// Result of one simulated (policy, threads, workload) run.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// Makespan in cycles (max thread completion time).
+    pub cycles: u64,
+    /// Makespan in virtual seconds.
+    pub seconds: f64,
+    pub stats: StatsTable,
+}
+
+/// How a thread executes its transactions (derived from PolicySpec).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Mode {
+    Lock,
+    Stm,
+    /// HTM with `retries` then the fallback lock.
+    HtmLock { retries: u32 },
+    /// HyTM: policy-driven retries then gbllock STM.
+    Hybrid,
+    /// PhTM: phase-global HW/SW switching (ablation A5).
+    Phased { sw_quantum: u32 },
+}
+
+/// Per-thread simulation state.
+struct ThreadSim {
+    stream: Box<dyn Iterator<Item = TxnDesc>>,
+    policy: Option<Box<dyn RetryPolicy>>,
+    rng: Rng,
+    stats: TxStats,
+    clock: u64,
+    cur: Option<TxnDesc>,
+    /// Persistent capacity verdict for the current transaction.
+    cur_capacity: bool,
+    state: TState,
+    done: bool,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum TState {
+    /// Pull the next transaction at the event time.
+    Ready,
+    /// A hardware attempt commits/aborts at the event time;
+    /// `start` is the attempt's begin time.
+    HwCheck { start: u64 },
+    /// A software (STM) attempt finishes at the event time.
+    SwCheck { start: u64 },
+}
+
+/// Shared lock word state: free time + last-change time (the
+/// subscription signal).
+#[derive(Clone, Copy, Debug, Default)]
+struct LockSim {
+    free_at: u64,
+    acquired_at: u64,
+    last_change: u64,
+    held: bool,
+}
+
+impl LockSim {
+    /// Serialize: acquire at max(now, free_at), hold for `dur`.
+    fn acquire(&mut self, now: u64, dur: u64) -> (u64, u64) {
+        let acq = now.max(self.free_at);
+        let rel = acq + dur;
+        self.acquired_at = acq;
+        self.free_at = rel;
+        self.last_change = rel;
+        self.held = true; // released lazily: held_at() compares times
+        (acq, rel)
+    }
+
+    /// Was the lock held at time `t` (by the most recent episode)?
+    fn held_at(&self, t: u64) -> bool {
+        self.acquired_at <= t && t < self.free_at
+    }
+
+    /// Did the word change inside `(s, c]`?
+    fn changed_in(&self, s: u64, c: u64) -> bool {
+        (self.acquired_at > s && self.acquired_at <= c)
+            || (self.last_change > s && self.last_change <= c)
+    }
+}
+
+/// The simulator: cost model + capacity threshold.
+pub struct Simulator {
+    pub cost: CostModel,
+    /// Deterministic capacity bound: distinct written lines above this
+    /// abort (mirrors HtmConfig::broadwell()'s 512-line L1d write set
+    /// with set-conflict slack).
+    pub wr_line_capacity: u16,
+}
+
+impl Simulator {
+    pub fn new(cost: CostModel) -> Self {
+        Self {
+            cost,
+            wr_line_capacity: 448,
+        }
+    }
+
+    /// Run `threads` streams under `spec`. Deterministic per seed.
+    pub fn run(
+        &self,
+        spec: PolicySpec,
+        threads: usize,
+        streams: Vec<Box<dyn Iterator<Item = TxnDesc>>>,
+        seed: u64,
+    ) -> SimOutcome {
+        assert_eq!(streams.len(), threads);
+        let derate = self.cost.derate(threads);
+        let scale = |cycles: u64| -> u64 { (cycles as f64 * derate) as u64 };
+
+        let mode = match spec {
+            PolicySpec::CoarseLock => Mode::Lock,
+            PolicySpec::StmNorec | PolicySpec::StmTl2 => Mode::Stm,
+            PolicySpec::HtmALock { retries } | PolicySpec::HtmSpin { retries } => {
+                Mode::HtmLock { retries }
+            }
+            PolicySpec::Hle => Mode::HtmLock { retries: 0 },
+            PolicySpec::PhTm { sw_quantum, .. } => Mode::Phased { sw_quantum },
+            _ => Mode::Hybrid,
+        };
+        // Test-and-set fallback (HTMALock) pays an extra RMW storm per
+        // acquisition vs the test-and-test-and-set spinlock.
+        let lock_extra: u64 = match spec {
+            PolicySpec::HtmALock { .. } => 45,
+            _ => 0,
+        };
+
+        let mut threads_sim: Vec<ThreadSim> = streams
+            .into_iter()
+            .enumerate()
+            .map(|(tid, stream)| ThreadSim {
+                stream,
+                policy: make_policy(&spec),
+                rng: Rng::new(seed ^ (tid as u64).wrapping_mul(0xA24B_AED4_963E_E407)),
+                stats: TxStats::new(),
+                clock: 0,
+                cur: None,
+                cur_capacity: false,
+                state: TState::Ready,
+                done: false,
+            })
+            .collect();
+
+        // Global state.
+        let mut last_write: HashMap<u64, u64> = HashMap::new();
+        let mut coarse = LockSim::default(); // CoarseLock / HTM fallback lock
+        let mut gbl = LockSim::default(); // gbllock episodes (interval view)
+        let mut gbl_count: u32 = 0; // STMs in flight
+        let mut seq_free_at: u64 = 0; // NOrec serial write-back
+        // PhTM phase-global state (Mode::Phased only).
+        let mut ph = LockSim::default(); // subscription view of the phase word
+        let mut ph_sw: bool = false;
+        let mut ph_sw_left: i64 = 0;
+        let mut ph_inflight: u32 = 0;
+        // RNDHyTM's per-transaction rand() goes through libc's internal
+        // lock: draws from all threads serialize (the paper: "overhead
+        // due to random number generation which is quite significant").
+        let mut rng_free_at: u64 = 0;
+
+        let mut queue: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        for tid in 0..threads {
+            queue.push(Reverse((0, tid)));
+        }
+
+        // Conflict check helper: any line touched (written OR read)
+        // committed-to inside (s, c]?
+        let lines_conflict =
+            |last_write: &HashMap<u64, u64>, desc: &TxnDesc, s: u64, c: u64| -> bool {
+                let hit = |l: &u64| matches!(last_write.get(l), Some(&t) if t > s && t <= c);
+                desc.wlines().iter().any(hit) || desc.rlines().iter().any(hit)
+            };
+
+        while let Some(Reverse((now, tid))) = queue.pop() {
+            let th = &mut threads_sim[tid];
+            if th.done {
+                continue;
+            }
+            match th.state {
+                // ---------------------------------------------- Ready
+                TState::Ready => {
+                    let Some(desc) = th.stream.next() else {
+                        th.done = true;
+                        th.clock = now;
+                        continue;
+                    };
+                    // Capacity verdict is persistent for this txn:
+                    // deterministic footprint bound + the large-graph
+                    // fault model, scaled by the transaction's own
+                    // footprint (every extra line is another chance to
+                    // trip a TLB/page-walk fatality on a graph that
+                    // dwarfs the caches).
+                    let p_eff = self.cost.capacity_prob
+                        * (desc.footprint_lines.max(1) as f64 / 4.0);
+                    th.cur_capacity = desc.footprint_lines > self.wr_line_capacity
+                        || (p_eff > 0.0 && th.rng.next_f64() < p_eff);
+                    let start = now + scale(desc.work);
+                    th.cur = Some(desc);
+                    if let Some(p) = th.policy.as_mut() {
+                        p.begin_txn(&mut th.rng);
+                    }
+                    match mode {
+                        Mode::Lock => {
+                            // Coarse lock: serialize and complete.
+                            let d = scale(self.cost.locked_txn_cycles(
+                                desc.n_reads as u64,
+                                desc.n_writes as u64,
+                            ));
+                            let (_, rel) = coarse.acquire(start, d);
+                            for &l in desc.wlines() {
+                                last_write.insert(l, rel);
+                            }
+                            th.stats.lock_commits += 1;
+                            th.state = TState::Ready;
+                            queue.push(Reverse((rel, tid)));
+                        }
+                        Mode::Stm => {
+                            let d = scale(self.cost.sw_txn_cycles(
+                                desc.n_reads as u64,
+                                desc.n_writes as u64,
+                            ));
+                            th.state = TState::SwCheck { start };
+                            queue.push(Reverse((start + d, tid)));
+                        }
+                        Mode::Phased { .. } if ph_sw => {
+                            // SW phase: run on the STM directly.
+                            ph_inflight += 1;
+                            let d = scale(self.cost.sw_txn_cycles(
+                                desc.n_reads as u64,
+                                desc.n_writes as u64,
+                            ));
+                            th.state = TState::SwCheck { start };
+                            queue.push(Reverse((start + d, tid)));
+                        }
+                        Mode::HtmLock { .. } | Mode::Hybrid | Mode::Phased { .. } => {
+                            // Policy-level RNG cost (RNDHyTM's draw):
+                            // serialized through libc rand()'s lock.
+                            let draws = th
+                                .policy
+                                .as_ref()
+                                .map(|p| p.begin_cost_rng_draws() as u64)
+                                .unwrap_or(0);
+                            let start = if draws > 0 {
+                                let s2 = start.max(rng_free_at);
+                                let done = s2 + scale(draws * self.cost.rng_draw);
+                                rng_free_at = done;
+                                done
+                            } else {
+                                start
+                            };
+                            let d = scale(self.cost.hw_txn_cycles(
+                                desc.n_reads as u64,
+                                desc.n_writes as u64,
+                            ));
+                            th.stats.hw_attempts += 1;
+                            th.state = TState::HwCheck { start };
+                            queue.push(Reverse((start + d, tid)));
+                        }
+                    }
+                }
+
+                // -------------------------------------------- HwCheck
+                TState::HwCheck { start } => {
+                    let desc = th.cur.expect("HwCheck without txn");
+                    let lock: &LockSim = match mode {
+                        Mode::HtmLock { .. } => &coarse,
+                        Mode::Phased { .. } => &ph,
+                        _ => &gbl,
+                    };
+                    // Abort cause resolution, in RTM's priority order.
+                    let cause = if th.cur_capacity {
+                        Some(AbortCause::Capacity)
+                    } else if lock.held_at(start) {
+                        Some(AbortCause::Explicit)
+                    } else if lock.changed_in(start, now) {
+                        Some(AbortCause::Conflict)
+                    } else if lines_conflict(&last_write, &desc, start, now) {
+                        Some(AbortCause::Conflict)
+                    } else {
+                        None
+                    };
+
+                    match cause {
+                        None => {
+                            // HW_COMMIT: publish.
+                            for &l in desc.wlines() {
+                                last_write.insert(l, now);
+                            }
+                            th.stats.hw_commits += 1;
+                            th.cur = None;
+                            th.state = TState::Ready;
+                            queue.push(Reverse((now, tid)));
+                        }
+                        Some(cause) => {
+                            th.stats.note_hw_abort(cause);
+                            let decision = th
+                                .policy
+                                .as_mut()
+                                .map(|p| p.on_abort(cause, &mut th.rng))
+                                .unwrap_or(Decision::FallbackSw);
+                            // HtmLock/Phased modes: capacity is
+                            // terminal regardless of remaining quota
+                            // (matches the live executors).
+                            let decision = match (mode, cause) {
+                                (Mode::HtmLock { .. }, AbortCause::Capacity)
+                                | (Mode::Phased { .. }, AbortCause::Capacity) => {
+                                    Decision::FallbackSw
+                                }
+                                _ => decision,
+                            };
+                            let retry_at = now + scale(self.cost.hw_abort);
+                            match decision {
+                                Decision::RetryHw => {
+                                    th.stats.hw_retries += 1;
+                                    th.stats.hw_attempts += 1;
+                                    let d = scale(self.cost.hw_txn_cycles(
+                                        desc.n_reads as u64,
+                                        desc.n_writes as u64,
+                                    ));
+                                    th.state = TState::HwCheck { start: retry_at };
+                                    queue.push(Reverse((retry_at + d, tid)));
+                                }
+                                Decision::FallbackSw => match mode {
+                                    Mode::Phased { sw_quantum } => {
+                                        // Flip the whole system to SW.
+                                        if !ph_sw {
+                                            ph_sw = true;
+                                            ph_sw_left = sw_quantum as i64;
+                                            ph.acquired_at = retry_at;
+                                            ph.last_change = retry_at;
+                                            ph.free_at = u64::MAX;
+                                        }
+                                        ph_inflight += 1;
+                                        let d = scale(self.cost.sw_txn_cycles(
+                                            desc.n_reads as u64,
+                                            desc.n_writes as u64,
+                                        ));
+                                        th.state = TState::SwCheck { start: retry_at };
+                                        queue.push(Reverse((retry_at + d, tid)));
+                                    }
+                                    Mode::HtmLock { .. } => {
+                                        // Take the fallback lock,
+                                        // execute directly.
+                                        let d = scale(self.cost.locked_txn_cycles(
+                                            desc.n_reads as u64,
+                                            desc.n_writes as u64,
+                                        ) + lock_extra);
+                                        let (_, rel) = coarse.acquire(retry_at, d);
+                                        for &l in desc.wlines() {
+                                            last_write.insert(l, rel);
+                                        }
+                                        th.stats.lock_commits += 1;
+                                        th.cur = None;
+                                        th.state = TState::Ready;
+                                        queue.push(Reverse((rel, tid)));
+                                    }
+                                    _ => {
+                                        // gbllock enter + STM attempt.
+                                        if gbl_count == 0 {
+                                            gbl.acquired_at = retry_at;
+                                        }
+                                        gbl_count += 1;
+                                        gbl.last_change = retry_at;
+                                        gbl.free_at = u64::MAX; // held until count drains
+                                        let d = scale(self.cost.sw_txn_cycles(
+                                            desc.n_reads as u64,
+                                            desc.n_writes as u64,
+                                        ));
+                                        th.state = TState::SwCheck { start: retry_at };
+                                        queue.push(Reverse((retry_at + d, tid)));
+                                    }
+                                },
+                            }
+                        }
+                    }
+                }
+
+                // -------------------------------------------- SwCheck
+                TState::SwCheck { start } => {
+                    let desc = th.cur.expect("SwCheck without txn");
+                    if lines_conflict(&last_write, &desc, start, now) {
+                        // Validation failure: revalidate + retry in SW.
+                        th.stats.sw_aborts += 1;
+                        let revalidate =
+                            scale(self.cost.sw_validate_per_read * desc.n_reads as u64);
+                        let d = scale(self.cost.sw_txn_cycles(
+                            desc.n_reads as u64,
+                            desc.n_writes as u64,
+                        ));
+                        let s2 = now + revalidate;
+                        th.state = TState::SwCheck { start: s2 };
+                        queue.push(Reverse((s2 + d, tid)));
+                    } else {
+                        // NOrec write-back is serial: writer commits
+                        // serialize through the sequence lock;
+                        // read-only commits are free.
+                        let commit = if desc.n_wlines > 0 {
+                            let c = now.max(seq_free_at + 1);
+                            seq_free_at = c + scale(self.cost.sw_commit);
+                            c
+                        } else {
+                            now
+                        };
+                        for &l in desc.wlines() {
+                            last_write.insert(l, commit);
+                        }
+                        th.stats.sw_commits += 1;
+                        match mode {
+                            Mode::Hybrid => {
+                                gbl_count -= 1;
+                                gbl.last_change = commit;
+                                if gbl_count == 0 {
+                                    gbl.free_at = commit;
+                                }
+                            }
+                            Mode::Phased { .. } => {
+                                ph_sw_left -= 1;
+                                ph_inflight -= 1;
+                                if ph_sw && ph_sw_left <= 0 && ph_inflight == 0 {
+                                    // Flip back to HW.
+                                    ph_sw = false;
+                                    ph.free_at = commit;
+                                    ph.last_change = commit;
+                                }
+                            }
+                            _ => {}
+                        }
+                        th.cur = None;
+                        th.state = TState::Ready;
+                        queue.push(Reverse((commit, tid)));
+                    }
+                }
+            }
+        }
+
+        let mut table = StatsTable::new();
+        let mut makespan = 0u64;
+        for (tid, th) in threads_sim.into_iter().enumerate() {
+            makespan = makespan.max(th.clock);
+            let mut s = th.stats;
+            s.time_ns = (self.cost.to_seconds(th.clock) * 1e9) as u64;
+            table.push(tid, s);
+        }
+        SimOutcome {
+            cycles: makespan,
+            seconds: self.cost.to_seconds(makespan),
+            stats: table,
+        }
+    }
+}
+
+/// Policy factory: HyTMs use their Figure-1 machines; HTM+lock modes use
+/// a fixed quota (the live executor's behaviour); lock/STM need none.
+fn make_policy(spec: &PolicySpec) -> Option<Box<dyn RetryPolicy>> {
+    match *spec {
+        PolicySpec::Rnd { lo, hi } => Some(Box::new(RndPolicy::new(lo, hi))),
+        PolicySpec::Fx { n } => Some(Box::new(FxPolicy::new(n))),
+        PolicySpec::StAd { n } => Some(Box::new(StAdPolicy::new(n))),
+        PolicySpec::DyAd { n } | PolicySpec::DyAdTl2 { n } => {
+            Some(Box::new(DyAdPolicy::new(n)))
+        }
+        PolicySpec::HtmALock { retries } | PolicySpec::HtmSpin { retries } => {
+            Some(Box::new(FxPolicy::new(retries)))
+        }
+        PolicySpec::Hle => Some(Box::new(FxPolicy::new(0))),
+        PolicySpec::PhTm { retries, .. } => Some(Box::new(FxPolicy::new(retries))),
+        PolicySpec::CoarseLock | PolicySpec::StmNorec | PolicySpec::StmTl2 => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload::SimWorkload;
+
+    fn run_gen(spec: PolicySpec, threads: usize, scale: u32) -> SimOutcome {
+        let cost = CostModel::broadwell();
+        let w = SimWorkload::new(scale);
+        let sim = Simulator::new(cost.clone());
+        let streams: Vec<Box<dyn Iterator<Item = TxnDesc>>> = (0..threads)
+            .map(|tid| {
+                Box::new(w.generation_stream(&cost, threads, tid))
+                    as Box<dyn Iterator<Item = TxnDesc>>
+            })
+            .collect();
+        sim.run(spec, threads, streams, 7)
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = run_gen(PolicySpec::DyAd { n: 43 }, 4, 10);
+        let b = run_gen(PolicySpec::DyAd { n: 43 }, 4, 10);
+        assert_eq!(a.cycles, b.cycles);
+        assert_eq!(
+            a.stats.total().hw_commits,
+            b.stats.total().hw_commits
+        );
+    }
+
+    #[test]
+    fn all_transactions_commit_somewhere() {
+        for spec in [
+            PolicySpec::CoarseLock,
+            PolicySpec::StmNorec,
+            PolicySpec::HtmSpin { retries: 8 },
+            PolicySpec::Hle,
+            PolicySpec::DyAd { n: 43 },
+            PolicySpec::Rnd { lo: 1, hi: 50 },
+        ] {
+            let out = run_gen(spec, 4, 10);
+            let m = SimWorkload::new(10).edges();
+            assert_eq!(
+                out.stats.total().total_commits(),
+                m,
+                "{}",
+                spec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn parallelism_speeds_up_tm_policies() {
+        let t1 = run_gen(PolicySpec::DyAd { n: 43 }, 1, 12).seconds;
+        let t8 = run_gen(PolicySpec::DyAd { n: 43 }, 8, 12).seconds;
+        assert!(
+            t8 < t1 / 4.0,
+            "8 threads should be >4x faster: {t1} vs {t8}"
+        );
+    }
+
+    #[test]
+    fn lock_scales_worse_than_dyad() {
+        let lock = run_gen(PolicySpec::CoarseLock, 14, 12).seconds;
+        let dyad = run_gen(PolicySpec::DyAd { n: 43 }, 14, 12).seconds;
+        assert!(dyad < lock, "DyAd {dyad} must beat lock {lock} at 14 thr");
+    }
+
+    #[test]
+    fn hyperthread_derating_bends_the_curve() {
+        let t14 = run_gen(PolicySpec::DyAd { n: 43 }, 14, 12).seconds;
+        let t28 = run_gen(PolicySpec::DyAd { n: 43 }, 28, 12).seconds;
+        // Speedup from 14 -> 28 threads must be well below 2x.
+        assert!(t28 > t14 * 0.55, "14thr {t14}, 28thr {t28}");
+    }
+
+    #[test]
+    fn stm_slower_than_htm_at_low_threads() {
+        let stm = run_gen(PolicySpec::StmNorec, 4, 12).seconds;
+        let dyad = run_gen(PolicySpec::DyAd { n: 43 }, 4, 12).seconds;
+        assert!(dyad < stm);
+    }
+
+    #[test]
+    fn capacity_fault_model_drives_fallbacks() {
+        let cost = CostModel {
+            capacity_prob: 0.05,
+            ..CostModel::broadwell()
+        };
+        let w = SimWorkload::new(10);
+        let sim = Simulator::new(cost.clone());
+        let streams: Vec<Box<dyn Iterator<Item = TxnDesc>>> = (0..4)
+            .map(|tid| {
+                Box::new(w.generation_stream(&cost, 4, tid))
+                    as Box<dyn Iterator<Item = TxnDesc>>
+            })
+            .collect();
+        let out = sim.run(PolicySpec::DyAd { n: 43 }, 4, streams, 3);
+        let t = out.stats.total();
+        assert!(t.aborts_of(AbortCause::Capacity) > 0);
+        assert!(t.sw_commits > 0);
+        // DyAd: one retry per capacity abort, so retries stay close to
+        // the capacity-abort count (conflicts add a few).
+        assert!(t.hw_retries < 3 * t.aborts_of(AbortCause::Capacity) + 100);
+    }
+
+    #[test]
+    fn fx_burns_far_more_retries_than_dyad_under_capacity() {
+        let cost = CostModel {
+            capacity_prob: 0.02,
+            ..CostModel::broadwell()
+        };
+        let run = |spec| {
+            let w = SimWorkload::new(11);
+            let sim = Simulator::new(cost.clone());
+            let streams: Vec<Box<dyn Iterator<Item = TxnDesc>>> = (0..8)
+                .map(|tid| {
+                    Box::new(w.generation_stream(&cost, 8, tid))
+                        as Box<dyn Iterator<Item = TxnDesc>>
+                })
+                .collect();
+            sim.run(spec, 8, streams, 3).stats.total().hw_retries
+        };
+        let fx = run(PolicySpec::Fx { n: 43 });
+        let dyad = run(PolicySpec::DyAd { n: 43 });
+        assert!(
+            fx > 5 * dyad,
+            "Fig 4b shape: Fx retries {fx} vs DyAd {dyad}"
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! Discrete-event simulator of the paper's testbed (DESIGN.md S11/S12).
+//!
+//! The paper's scaling results come from a 14-core / 28-hyperthread
+//! Broadwell Xeon. This build machine has one core, so wall-clock
+//! thread sweeps cannot show parallel speedup. Following the system
+//! substitution rule, `sim` models that machine in *virtual time*:
+//!
+//! * per-thread virtual clocks advanced by a calibrated cycle cost
+//!   model ([`cost`]);
+//! * the *same* SSCA-2 workload (same R-MAT tuples, same heap layout,
+//!   same cache-line addresses) expressed as transaction descriptors
+//!   ([`workload`]);
+//! * the *same* Figure-1 policy state machines
+//!   ([`crate::hytm::policies`]) deciding retry/fallback;
+//! * an event-driven conflict engine ([`engine`]): a transaction
+//!   windows `[start, commit)`; it aborts if any line it touched was
+//!   committed to inside its window, if a subscribed lock moved, or if
+//!   its footprint trips the capacity model;
+//! * hyperthread derating beyond 14 threads (shared execution ports →
+//!   per-thread IPC drops; [`cost::CostModel::derate`]).
+//!
+//! Virtual seconds out of this engine reproduce the *shape* of the
+//! paper's Figures 2–4: who wins, by roughly what factor, where the
+//! 14-thread knee falls. They are not (and cannot be) the authors'
+//! absolute seconds.
+
+pub mod cost;
+pub mod engine;
+pub mod trace;
+pub mod workload;
+
+pub use cost::CostModel;
+pub use engine::{SimOutcome, Simulator};
+pub use trace::{Trace, TraceRecorder};
+pub use workload::{SimWorkload, TxnDesc};

@@ -1,0 +1,448 @@
+//! Transaction-descriptor streams: the SSCA-2 kernels expressed as what
+//! the conflict engine needs — cache-line footprints and work cycles —
+//! using the *same* heap-layout arithmetic as the live workload
+//! (`crate::graph::layout`), so hub hotness and counter contention are
+//! identical in both worlds.
+
+use crate::graph::rmat::{rmat_edge, EdgeTuple};
+use crate::mem::WORDS_PER_LINE;
+use crate::util::rng::Rng;
+
+use super::cost::CostModel;
+
+/// Max distinct shared write lines a descriptor carries (generation
+/// batches beyond this are truncated — footprint-accurate up to 8 hub
+/// lines, which covers every configuration the figures use).
+pub const MAX_WLINES: usize = 8;
+
+/// One critical section, as the engine sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct TxnDesc {
+    /// Non-critical cycles before this transaction (tuple generation /
+    /// cell scanning), pre-derating.
+    pub work: u64,
+    /// Distinct *shared* cache lines read-modify-written (hub heads,
+    /// degrees, counters). Thread-private cell lines are excluded from
+    /// conflict tracking but counted in the access totals below.
+    pub wlines: [u64; MAX_WLINES],
+    pub n_wlines: u8,
+    /// Distinct shared lines read but not written (the computation
+    /// kernel's read-mostly gmax probe). Conflict-checked, never
+    /// recorded.
+    pub rlines: [u64; 2],
+    pub n_rlines: u8,
+    /// Word reads/writes inside the transaction (cost accounting).
+    pub n_reads: u32,
+    pub n_writes: u32,
+    /// Total distinct lines written incl. private cells (capacity).
+    pub footprint_lines: u16,
+}
+
+impl TxnDesc {
+    pub fn wlines(&self) -> &[u64] {
+        &self.wlines[..self.n_wlines as usize]
+    }
+
+    pub fn rlines(&self) -> &[u64] {
+        &self.rlines[..self.n_rlines as usize]
+    }
+
+    fn empty(work: u64) -> TxnDesc {
+        TxnDesc {
+            work,
+            wlines: [0; MAX_WLINES],
+            n_wlines: 0,
+            rlines: [0; 2],
+            n_rlines: 0,
+            n_reads: 0,
+            n_writes: 0,
+            footprint_lines: 0,
+        }
+    }
+
+    fn push_wline(&mut self, line: u64) {
+        let ws = &mut self.wlines[..self.n_wlines as usize];
+        if ws.contains(&line) {
+            return;
+        }
+        if (self.n_wlines as usize) < MAX_WLINES {
+            self.wlines[self.n_wlines as usize] = line;
+            self.n_wlines += 1;
+        }
+    }
+}
+
+/// Virtual heap layout in line units — mirrors `graph::layout::Graph`
+/// region order without allocating a heap.
+#[derive(Clone, Copy, Debug)]
+struct VLayout {
+    head_line0: u64,
+    degree_line0: u64,
+    cells_line0: u64,
+    result_count_line: u64,
+    gmax_line: u64,
+}
+
+impl VLayout {
+    fn new(scale: u32, edge_factor: u32) -> Self {
+        let n = 1u64 << scale;
+        let m = n * edge_factor as u64;
+        let head_lines = n.div_ceil(WORDS_PER_LINE as u64);
+        let cell_lines = (m * 4).div_ceil(WORDS_PER_LINE as u64);
+        let result_lines = m.div_ceil(WORDS_PER_LINE as u64);
+        let head_line0 = 1;
+        let degree_line0 = head_line0 + head_lines;
+        let cells_line0 = degree_line0 + head_lines;
+        let results_line0 = cells_line0 + cell_lines;
+        Self {
+            head_line0,
+            degree_line0,
+            cells_line0,
+            result_count_line: results_line0 + result_lines,
+            gmax_line: results_line0 + result_lines + 2,
+        }
+    }
+
+    #[inline]
+    fn head_line(&self, v: u32) -> u64 {
+        self.head_line0 + v as u64 / WORDS_PER_LINE as u64
+    }
+
+    #[inline]
+    fn degree_line(&self, v: u32) -> u64 {
+        self.degree_line0 + v as u64 / WORDS_PER_LINE as u64
+    }
+
+    #[inline]
+    fn cell_line(&self, cell_index: u64) -> u64 {
+        self.cells_line0 + cell_index * 4 / WORDS_PER_LINE as u64
+    }
+}
+
+/// SSCA-2 workload parameters for the simulator.
+#[derive(Clone, Copy, Debug)]
+pub struct SimWorkload {
+    pub scale: u32,
+    pub edge_factor: u32,
+    pub batch: usize,
+    pub seed: u64,
+    pub selectivity_shift: u32,
+}
+
+impl SimWorkload {
+    pub fn new(scale: u32) -> Self {
+        Self {
+            scale,
+            edge_factor: 8,
+            batch: 1,
+            seed: 0x55CA_2017,
+            selectivity_shift: 3,
+        }
+    }
+
+    pub fn edges(&self) -> u64 {
+        (1u64 << self.scale) * self.edge_factor as u64
+    }
+
+    /// This thread's tuple count under block partitioning.
+    fn share(&self, threads: usize, tid: usize) -> u64 {
+        let m = self.edges();
+        let per = m.div_ceil(threads as u64);
+        let lo = (tid as u64 * per).min(m);
+        let hi = ((tid as u64 + 1) * per).min(m);
+        hi - lo
+    }
+
+    /// Generation-kernel stream for one thread.
+    pub fn generation_stream(
+        &self,
+        cost: &CostModel,
+        threads: usize,
+        tid: usize,
+    ) -> GenStream {
+        let layout = VLayout::new(self.scale, self.edge_factor);
+        let m = self.edges();
+        let per = m.div_ceil(threads as u64);
+        GenStream {
+            layout,
+            rng: Rng::new(self.seed ^ (tid as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)),
+            scale: self.scale,
+            max_weight: 1u32 << self.scale,
+            batch: self.batch.max(1),
+            remaining: self.share(threads, tid),
+            next_cell: tid as u64 * per, // disjoint per-thread cell ranges
+            edge_work: cost.edge_gen_work,
+        }
+    }
+
+    /// Computation-kernel phase-1 stream: the per-edge transactional
+    /// max probe — SSCA-2's "extract edges by weight" critical section.
+    /// Every scanned edge checks the shared maximum (`read gmax; if w >
+    /// gmax write gmax`): read-only in the overwhelmingly common case,
+    /// which is exactly why TM crushes the coarse lock here (the lock
+    /// serializes every probe; paper Fig 2(c/f)).
+    pub fn max_stream(
+        &self,
+        cost: &CostModel,
+        threads: usize,
+        tid: usize,
+    ) -> MaxStream {
+        let layout = VLayout::new(self.scale, self.edge_factor);
+        MaxStream {
+            gmax_line: layout.gmax_line,
+            rng: Rng::new(self.seed ^ 0xA5 ^ (tid as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9)),
+            remaining_cells: self.share(threads, tid),
+            running_max: 0.0,
+            scan_work: cost.scan_work,
+        }
+    }
+
+    /// Computation-kernel phase-2 stream: top-band appends.
+    pub fn collect_stream(
+        &self,
+        cost: &CostModel,
+        threads: usize,
+        tid: usize,
+    ) -> CollectStream {
+        let layout = VLayout::new(self.scale, self.edge_factor);
+        CollectStream {
+            layout,
+            rng: Rng::new(self.seed ^ 0xC0 ^ (tid as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            remaining_cells: self.share(threads, tid),
+            // Band = top 1/2^shift of the weight range.
+            hit_prob: 1.0 / (1u64 << self.selectivity_shift) as f64,
+            // Appends are buffered locally and flushed in groups (the
+            // live kernel's flush batch): without this every append
+            // would serialize on the result counter and phase 2 would
+            // drown phase 1's read-mostly win.
+            batch: self.batch.max(COLLECT_FLUSH),
+            scan_work: cost.scan_work,
+        }
+    }
+}
+
+/// Flush granularity of the collect phase's shared-list appends.
+pub const COLLECT_FLUSH: usize = 8;
+
+/// Iterator of the computation kernel's per-edge max probes.
+pub struct MaxStream {
+    gmax_line: u64,
+    rng: Rng,
+    remaining_cells: u64,
+    /// Thread-local running max as a quantile in [0,1): the probe
+    /// writes gmax only when this cell beats everything the thread has
+    /// seen — a slight overestimate of global-max updates (harmonic,
+    /// ~ln(share) writes per thread), conservative for contention.
+    running_max: f64,
+    scan_work: u64,
+}
+
+impl Iterator for MaxStream {
+    type Item = TxnDesc;
+
+    fn next(&mut self) -> Option<TxnDesc> {
+        if self.remaining_cells == 0 {
+            return None;
+        }
+        self.remaining_cells -= 1;
+        let w = self.rng.next_f64();
+        let mut d = TxnDesc::empty(self.scan_work);
+        d.n_reads = 1;
+        d.footprint_lines = 1;
+        if w > self.running_max {
+            self.running_max = w;
+            d.n_writes = 1;
+            d.push_wline(self.gmax_line);
+        } else {
+            d.rlines[0] = self.gmax_line;
+            d.n_rlines = 1;
+        }
+        Some(d)
+    }
+}
+
+/// Iterator of generation-kernel insert transactions.
+pub struct GenStream {
+    layout: VLayout,
+    rng: Rng,
+    scale: u32,
+    max_weight: u32,
+    batch: usize,
+    remaining: u64,
+    next_cell: u64,
+    edge_work: u64,
+}
+
+impl Iterator for GenStream {
+    type Item = TxnDesc;
+
+    fn next(&mut self) -> Option<TxnDesc> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let k = (self.batch as u64).min(self.remaining) as usize;
+        self.remaining -= k as u64;
+
+        let mut d = TxnDesc::empty(self.edge_work * k as u64);
+        d.n_reads = 2 * k as u32; // head + degree per edge
+        d.n_writes = 6 * k as u32; // 4 cell words + head + degree
+
+        let mut cell_lines = 0u16;
+        let mut last_cell_line = u64::MAX;
+        for _ in 0..k {
+            let e: EdgeTuple = rmat_edge(&mut self.rng, self.scale, self.max_weight);
+            d.push_wline(self.layout.head_line(e.src));
+            d.push_wline(self.layout.degree_line(e.src));
+            let cl = self.layout.cell_line(self.next_cell);
+            if cl != last_cell_line {
+                cell_lines += 1;
+                last_cell_line = cl;
+            }
+            self.next_cell += 1;
+        }
+        d.footprint_lines = d.n_wlines as u16 + cell_lines;
+        Some(d)
+    }
+}
+
+/// Iterator of computation-kernel append transactions.
+pub struct CollectStream {
+    layout: VLayout,
+    rng: Rng,
+    remaining_cells: u64,
+    hit_prob: f64,
+    batch: usize,
+    scan_work: u64,
+}
+
+impl Iterator for CollectStream {
+    type Item = TxnDesc;
+
+    fn next(&mut self) -> Option<TxnDesc> {
+        let mut scanned = 0u64;
+        let mut hits = 0usize;
+        while self.remaining_cells > 0 && hits < self.batch {
+            self.remaining_cells -= 1;
+            scanned += 1;
+            if self.rng.next_f64() < self.hit_prob {
+                hits += 1;
+            }
+        }
+        if hits == 0 {
+            // Tail of the scan with no hit: pure work, no transaction —
+            // fold it into nothing (the engine only advances clocks on
+            // transactions; a zero-txn tail is negligible by
+            // construction since hit_prob * share >> 1).
+            return None;
+        }
+        let mut d = TxnDesc::empty(scanned * self.scan_work);
+        d.n_reads = 1;
+        d.n_writes = 1 + hits as u32;
+        d.footprint_lines = 2;
+        d.push_wline(self.layout.result_count_line);
+        Some(d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> CostModel {
+        CostModel::broadwell()
+    }
+
+    #[test]
+    fn generation_stream_covers_all_edges() {
+        let w = SimWorkload::new(10);
+        let total: u64 = (0..4)
+            .map(|tid| {
+                w.generation_stream(&cost(), 4, tid)
+                    .map(|d| (d.n_reads / 2) as u64)
+                    .sum::<u64>()
+            })
+            .sum();
+        assert_eq!(total, w.edges());
+    }
+
+    #[test]
+    fn generation_descriptors_have_hub_lines() {
+        let w = SimWorkload::new(10);
+        let descs: Vec<TxnDesc> = w.generation_stream(&cost(), 1, 0).collect();
+        // Every insert touches exactly 2 shared lines (head + degree)
+        // at batch=1.
+        for d in &descs {
+            assert_eq!(d.n_wlines, 2);
+            assert!(d.work == cost().edge_gen_work);
+            assert!(d.footprint_lines >= 3);
+        }
+        // Power-law: some head line must appear far more often than the
+        // mean.
+        let mut counts = std::collections::HashMap::new();
+        for d in &descs {
+            *counts.entry(d.wlines[0]).or_insert(0u64) += 1;
+        }
+        let max = *counts.values().max().unwrap();
+        let mean = descs.len() as f64 / counts.len() as f64;
+        assert!(max as f64 > 4.0 * mean, "no hub concentration");
+    }
+
+    #[test]
+    fn batched_generation_aggregates_footprint() {
+        let mut w = SimWorkload::new(10);
+        w.batch = 16;
+        let d = w.generation_stream(&cost(), 1, 0).next().unwrap();
+        assert_eq!(d.n_reads, 32);
+        assert_eq!(d.n_writes, 96);
+        assert!(d.footprint_lines > 8, "16 edges span many cell lines");
+    }
+
+    #[test]
+    fn max_stream_is_read_mostly() {
+        let w = SimWorkload::new(10);
+        let descs: Vec<TxnDesc> = w.max_stream(&cost(), 4, 2).collect();
+        // One probe per cell in the thread's share.
+        assert_eq!(descs.len() as u64, w.edges() / 4);
+        let writes = descs.iter().filter(|d| d.n_wlines > 0).count();
+        let reads = descs.iter().filter(|d| d.n_rlines > 0).count();
+        assert_eq!(writes + reads, descs.len());
+        // Harmonic number of writes: ~ln(2048) ~= 7.6; allow slack.
+        assert!(writes >= 3 && writes <= 40, "writes {writes}");
+        // Every probe touches the same gmax line.
+        for d in &descs {
+            let l = if d.n_wlines > 0 { d.wlines[0] } else { d.rlines[0] };
+            assert_eq!(l, descs.last().map(|x| if x.n_wlines>0 {x.wlines[0]} else {x.rlines[0]}).unwrap());
+        }
+    }
+
+    #[test]
+    fn collect_stream_hits_about_an_eighth() {
+        let w = SimWorkload::new(12);
+        let txns: Vec<TxnDesc> = w.collect_stream(&cost(), 1, 0).collect();
+        let appends: u32 = txns.iter().map(|d| d.n_writes - 1).sum();
+        let frac = appends as f64 / w.edges() as f64;
+        assert!((0.10..0.15).contains(&frac), "selectivity {frac}");
+        // All appends hit the same counter line.
+        let line = txns[0].wlines[0];
+        assert!(txns.iter().all(|d| d.wlines[0] == line));
+    }
+
+    #[test]
+    fn streams_are_deterministic() {
+        let w = SimWorkload::new(9);
+        let a: Vec<u64> = w.generation_stream(&cost(), 2, 1).map(|d| d.wlines[0]).collect();
+        let b: Vec<u64> = w.generation_stream(&cost(), 2, 1).map(|d| d.wlines[0]).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn vlayout_regions_disjoint() {
+        let l = VLayout::new(12, 8);
+        assert!(l.head_line0 < l.degree_line0);
+        assert!(l.degree_line0 < l.cells_line0);
+        assert!(l.cells_line0 < l.result_count_line);
+        assert_ne!(l.result_count_line, l.gmax_line);
+        // Head line of last vertex stays inside the head region.
+        assert!(l.head_line((1 << 12) - 1) < l.degree_line0);
+    }
+}

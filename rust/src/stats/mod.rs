@@ -1,0 +1,97 @@
+//! The statistics plane (DESIGN.md S14): per-thread commit/abort/retry
+//! counters feeding Figures 4(a–c) and the hardware-insight discussion
+//! in the paper's §4.
+
+mod table;
+
+pub use table::{StatsTable, ThreadStats};
+
+use crate::tm::AbortCause;
+
+/// Counters for one thread under one policy. Plain u64 fields — each
+/// thread owns its own instance, aggregation happens after join.
+#[derive(Clone, Debug, Default)]
+pub struct TxStats {
+    /// Transactions that committed in hardware (`HW_COMMIT`).
+    pub hw_commits: u64,
+    /// Hardware transaction attempts that started (Fig 4a counts HTM
+    /// transactions = attempts).
+    pub hw_attempts: u64,
+    /// Hardware retries: re-attempts after an abort (Fig 4b).
+    pub hw_retries: u64,
+    /// Hardware aborts by cause.
+    pub hw_aborts: [u64; AbortCause::COUNT],
+    /// Transactions that fell back to and committed in software (Fig 4c
+    /// counts STM transactions).
+    pub sw_commits: u64,
+    /// Software validation aborts (internal STM retries).
+    pub sw_aborts: u64,
+    /// Transactions executed under a non-speculative lock fallback
+    /// (HTMALock / HTMSpin / HLE second attempt).
+    pub lock_commits: u64,
+    /// Wall-clock or virtual nanoseconds attributed to this thread.
+    pub time_ns: u64,
+}
+
+impl TxStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn note_hw_abort(&mut self, cause: AbortCause) {
+        self.hw_aborts[cause.index()] += 1;
+    }
+
+    pub fn hw_aborts_total(&self) -> u64 {
+        self.hw_aborts.iter().sum()
+    }
+
+    pub fn aborts_of(&self, cause: AbortCause) -> u64 {
+        self.hw_aborts[cause.index()]
+    }
+
+    /// Total critical-section executions that completed, on any path.
+    pub fn total_commits(&self) -> u64 {
+        self.hw_commits + self.sw_commits + self.lock_commits
+    }
+
+    pub fn merge(&mut self, other: &TxStats) {
+        self.hw_commits += other.hw_commits;
+        self.hw_attempts += other.hw_attempts;
+        self.hw_retries += other.hw_retries;
+        for i in 0..AbortCause::COUNT {
+            self.hw_aborts[i] += other.hw_aborts[i];
+        }
+        self.sw_commits += other.sw_commits;
+        self.sw_aborts += other.sw_aborts;
+        self.lock_commits += other.lock_commits;
+        self.time_ns = self.time_ns.max(other.time_ns);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_sums_counters_and_maxes_time() {
+        let mut a = TxStats::new();
+        a.hw_commits = 10;
+        a.time_ns = 100;
+        a.note_hw_abort(AbortCause::Capacity);
+        let mut b = TxStats::new();
+        b.hw_commits = 5;
+        b.sw_commits = 3;
+        b.time_ns = 250;
+        b.note_hw_abort(AbortCause::Capacity);
+        b.note_hw_abort(AbortCause::Conflict);
+        a.merge(&b);
+        assert_eq!(a.hw_commits, 15);
+        assert_eq!(a.sw_commits, 3);
+        assert_eq!(a.aborts_of(AbortCause::Capacity), 2);
+        assert_eq!(a.aborts_of(AbortCause::Conflict), 1);
+        assert_eq!(a.time_ns, 250, "parallel time = max, not sum");
+        assert_eq!(a.total_commits(), 18);
+    }
+}

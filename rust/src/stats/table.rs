@@ -1,0 +1,170 @@
+//! Aggregation and rendering of per-thread stats into the paper's
+//! reporting shapes (per-thread series for Fig 4, totals for the text).
+
+use super::TxStats;
+use crate::tm::AbortCause;
+
+/// One thread's stats, labeled.
+#[derive(Clone, Debug)]
+pub struct ThreadStats {
+    pub thread: usize,
+    pub stats: TxStats,
+}
+
+/// A collection of per-thread stats for one (policy, workload) run.
+#[derive(Clone, Debug, Default)]
+pub struct StatsTable {
+    pub rows: Vec<ThreadStats>,
+}
+
+impl StatsTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, thread: usize, stats: TxStats) {
+        self.rows.push(ThreadStats { thread, stats });
+    }
+
+    /// Fold all threads into one TxStats (commit counts summed,
+    /// time = max across threads).
+    pub fn total(&self) -> TxStats {
+        let mut t = TxStats::new();
+        for r in &self.rows {
+            t.merge(&r.stats);
+        }
+        t
+    }
+
+    /// Fig 4(a): mean HTM transactions (attempts) per thread.
+    pub fn hw_attempts_per_thread(&self) -> f64 {
+        self.mean(|s| s.hw_attempts)
+    }
+
+    /// Fig 4(b): mean HTM retries per thread.
+    pub fn hw_retries_per_thread(&self) -> f64 {
+        self.mean(|s| s.hw_retries)
+    }
+
+    /// Fig 4(c): mean STM transactions per thread.
+    pub fn sw_commits_per_thread(&self) -> f64 {
+        self.mean(|s| s.sw_commits)
+    }
+
+    fn mean(&self, f: impl Fn(&TxStats) -> u64) -> f64 {
+        if self.rows.is_empty() {
+            return 0.0;
+        }
+        self.rows.iter().map(|r| f(&r.stats)).sum::<u64>() as f64 / self.rows.len() as f64
+    }
+
+    /// Markdown rendering for reports and EXPERIMENTS.md.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "| thread | hw_attempts | hw_commits | hw_retries | conflict | capacity | explicit | sw_commits | sw_aborts | lock |\n",
+        );
+        out.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
+        for r in &self.rows {
+            let s = &r.stats;
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                r.thread,
+                s.hw_attempts,
+                s.hw_commits,
+                s.hw_retries,
+                s.aborts_of(AbortCause::Conflict),
+                s.aborts_of(AbortCause::Capacity),
+                s.aborts_of(AbortCause::Explicit),
+                s.sw_commits,
+                s.sw_aborts,
+                s.lock_commits,
+            ));
+        }
+        let t = self.total();
+        out.push_str(&format!(
+            "| **total** | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+            t.hw_attempts,
+            t.hw_commits,
+            t.hw_retries,
+            t.aborts_of(AbortCause::Conflict),
+            t.aborts_of(AbortCause::Capacity),
+            t.aborts_of(AbortCause::Explicit),
+            t.sw_commits,
+            t.sw_aborts,
+            t.lock_commits,
+        ));
+        out
+    }
+
+    /// CSV rendering (one row per thread) for plotting.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "thread,hw_attempts,hw_commits,hw_retries,conflict,capacity,explicit,interrupt,sw_commits,sw_aborts,lock_commits,time_ns\n",
+        );
+        for r in &self.rows {
+            let s = &r.stats;
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{},{},{}\n",
+                r.thread,
+                s.hw_attempts,
+                s.hw_commits,
+                s.hw_retries,
+                s.aborts_of(AbortCause::Conflict),
+                s.aborts_of(AbortCause::Capacity),
+                s.aborts_of(AbortCause::Explicit),
+                s.aborts_of(AbortCause::Interrupt),
+                s.sw_commits,
+                s.sw_aborts,
+                s.lock_commits,
+                s.time_ns,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StatsTable {
+        let mut t = StatsTable::new();
+        for i in 0..4 {
+            let mut s = TxStats::new();
+            s.hw_attempts = 100 * (i as u64 + 1);
+            s.hw_commits = 90;
+            s.hw_retries = 10 * (i as u64);
+            s.sw_commits = i as u64;
+            s.time_ns = 1000 + i as u64;
+            t.push(i, s);
+        }
+        t
+    }
+
+    #[test]
+    fn per_thread_means() {
+        let t = sample();
+        assert!((t.hw_attempts_per_thread() - 250.0).abs() < 1e-9);
+        assert!((t.hw_retries_per_thread() - 15.0).abs() < 1e-9);
+        assert!((t.sw_commits_per_thread() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn total_time_is_max() {
+        let t = sample();
+        assert_eq!(t.total().time_ns, 1003);
+        assert_eq!(t.total().hw_commits, 360);
+    }
+
+    #[test]
+    fn renders_markdown_and_csv() {
+        let t = sample();
+        let md = t.to_markdown();
+        assert!(md.contains("| 0 | 100 | 90 |"));
+        assert!(md.contains("**total**"));
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("thread,"));
+    }
+}

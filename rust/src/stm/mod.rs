@@ -1,0 +1,19 @@
+//! Software transactional memory (DESIGN.md S3/S4).
+//!
+//! Two designs, mirroring the paper's landscape discussion (§5):
+//!
+//! * [`norec`] — NOrec (Dalessandro et al., PPoPP'10): one global
+//!   sequence lock, value-based validation, no ownership records. The
+//!   lowest-overhead published STM and the closest open analogue to the
+//!   "low overhead GCC STM" the paper uses as its fallback; also what
+//!   Hybrid NOrec couples to RTM. **This is the HyTM fallback STM.**
+//! * [`tl2`] — TL2 (Dice/Shalev/Shavit, DISC'06): per-line versioned
+//!   locks + global version clock. Better writer scalability, higher
+//!   per-access overhead. Used standalone and as the A2 ablation
+//!   fallback.
+
+pub mod norec;
+pub mod tl2;
+
+pub use norec::NorecEngine;
+pub use tl2::Tl2Engine;

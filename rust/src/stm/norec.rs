@@ -1,0 +1,320 @@
+//! NOrec: global-sequence-lock STM with value-based validation.
+//!
+//! One word of global metadata (`seq`): even = quiescent, odd = a writer
+//! is writing back. Readers log (addr, value) pairs; whenever the
+//! sequence number moves they re-read every logged address and abort on
+//! any change (value-based validation — no ownership records, hence the
+//! name and the low fixed overhead). Writers serialize their write-back
+//! through the sequence lock.
+//!
+//! This is the HyTM fallback STM: its `attempt` is always called with
+//! the caller already holding [`crate::hytm::GblLock`] (counting
+//! semantics, so multiple NOrec transactions do run concurrently — their
+//! mutual conflicts are resolved right here).
+
+use std::hint;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use crate::mem::layout::PaddedAtomicU64;
+use crate::mem::{Addr, TxHeap};
+use crate::tm::access::{Abort, TxAccess, TxResult};
+use crate::tm::AbortCause;
+
+/// Shared NOrec state.
+pub struct NorecEngine {
+    pub heap: Arc<TxHeap>,
+    seq: PaddedAtomicU64,
+}
+
+impl NorecEngine {
+    pub fn new(heap: Arc<TxHeap>) -> Self {
+        Self {
+            heap,
+            seq: PaddedAtomicU64::new(0),
+        }
+    }
+
+    /// Current sequence number (diagnostics / HTM coupling tests).
+    pub fn seq(&self) -> u64 {
+        self.seq.load(Ordering::Acquire)
+    }
+
+    /// Spin until the sequence number is even (no writer in write-back),
+    /// return it.
+    #[inline]
+    fn wait_quiescent(&self) -> u64 {
+        loop {
+            let s = self.seq.load(Ordering::Acquire);
+            if s & 1 == 0 {
+                return s;
+            }
+            hint::spin_loop();
+        }
+    }
+
+    /// One software transaction attempt (`SW_BEGIN` .. `SW_COMMIT`).
+    /// Returns `Err(SwConflict)` on validation failure — the caller
+    /// (policy executor) retries, counting `SW_ABORT`s.
+    pub fn attempt<R>(
+        &self,
+        body: &mut dyn FnMut(&mut dyn TxAccess) -> TxResult<R>,
+    ) -> Result<R, AbortCause> {
+        let mut txn = NorecTxn {
+            engine: self,
+            rv: self.wait_quiescent(),
+            reads: Vec::with_capacity(32),
+            writes: Vec::with_capacity(32),
+        };
+
+        let value = match body(&mut txn) {
+            Ok(v) => v,
+            Err(Abort(cause)) => return Err(cause),
+        };
+
+        txn.commit()?;
+        Ok(value)
+    }
+}
+
+struct NorecTxn<'e> {
+    engine: &'e NorecEngine,
+    /// Sequence number this transaction's reads are consistent with.
+    rv: u64,
+    /// Value log for validation.
+    reads: Vec<(Addr, u64)>,
+    /// Redo log, program order.
+    writes: Vec<(Addr, u64)>,
+}
+
+impl NorecTxn<'_> {
+    /// Re-read every logged address; abort if any value changed.
+    /// On success, returns the new (even) sequence number.
+    fn validate(&self) -> TxResult<u64> {
+        loop {
+            let s = self.engine.wait_quiescent();
+            let mut ok = true;
+            for &(addr, val) in &self.reads {
+                if self.engine.heap.load_acquire(addr) != val {
+                    ok = false;
+                    break;
+                }
+            }
+            if !ok {
+                return Err(Abort(AbortCause::SwConflict));
+            }
+            // Validation is only meaningful if no writer slipped in
+            // while we re-read; otherwise loop.
+            if self.engine.seq.load(Ordering::Acquire) == s {
+                return Ok(s);
+            }
+        }
+    }
+
+    fn commit(mut self) -> Result<(), AbortCause> {
+        if self.writes.is_empty() {
+            return Ok(()); // read-only: already consistent at rv
+        }
+        // Acquire the sequence lock at a validated snapshot.
+        loop {
+            match self.engine.seq.compare_exchange_weak(
+                self.rv,
+                self.rv + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(_) => {
+                    // Someone committed since rv: revalidate, adopt the
+                    // new snapshot, try again.
+                    match self.validate() {
+                        Ok(s) => self.rv = s,
+                        Err(Abort(c)) => return Err(c),
+                    }
+                }
+            }
+        }
+        // Write back in program order, then release.
+        for &(addr, val) in &self.writes {
+            self.engine.heap.store_release(addr, val);
+        }
+        self.engine.seq.store(self.rv + 2, Ordering::Release);
+        Ok(())
+    }
+}
+
+impl TxAccess for NorecTxn<'_> {
+    fn read(&mut self, addr: Addr) -> TxResult<u64> {
+        // Read-own-write.
+        if let Some(&(_, v)) = self.writes.iter().rev().find(|&&(a, _)| a == addr) {
+            return Ok(v);
+        }
+        // NOrec read protocol: read, then if the world moved, revalidate
+        // and re-read until stable.
+        loop {
+            let val = self.engine.heap.load_acquire(addr);
+            let s = self.engine.seq.load(Ordering::Acquire);
+            if s == self.rv {
+                self.reads.push((addr, val));
+                return Ok(val);
+            }
+            self.rv = self.validate()?;
+        }
+    }
+
+    fn write(&mut self, addr: Addr, val: u64) -> TxResult<()> {
+        self.writes.push((addr, val));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> NorecEngine {
+        NorecEngine::new(Arc::new(TxHeap::new(1 << 16)))
+    }
+
+    #[test]
+    fn commit_publishes_and_bumps_seq() {
+        let e = engine();
+        let a = e.heap.alloc(1);
+        let s0 = e.seq();
+        let r = e.attempt(&mut |t: &mut dyn TxAccess| {
+            t.write(a, 11)?;
+            t.read(a)
+        });
+        assert_eq!(r.unwrap(), 11);
+        assert_eq!(e.heap.load(a), 11);
+        assert_eq!(e.seq(), s0 + 2);
+        assert_eq!(e.seq() & 1, 0);
+    }
+
+    #[test]
+    fn read_only_does_not_bump_seq() {
+        let e = engine();
+        let a = e.heap.alloc(1);
+        let s0 = e.seq();
+        e.attempt(&mut |t: &mut dyn TxAccess| t.read(a)).unwrap();
+        assert_eq!(e.seq(), s0);
+    }
+
+    #[test]
+    fn body_abort_propagates_and_discards_writes() {
+        let e = engine();
+        let a = e.heap.alloc(1);
+        e.heap.store(a, 5);
+        let r = e.attempt(&mut |t: &mut dyn TxAccess| {
+            t.write(a, 99)?;
+            Err::<(), _>(Abort(AbortCause::Explicit))
+        });
+        assert_eq!(r.unwrap_err(), AbortCause::Explicit);
+        assert_eq!(e.heap.load(a), 5);
+    }
+
+    #[test]
+    fn concurrent_counter_increments_exact() {
+        let e = Arc::new(engine());
+        let a = e.heap.alloc(1);
+        const THREADS: usize = 4;
+        const PER: u64 = 3000;
+        let mut hs = Vec::new();
+        for _ in 0..THREADS {
+            let e = Arc::clone(&e);
+            hs.push(std::thread::spawn(move || {
+                let mut commits = 0;
+                let mut aborts = 0u64;
+                while commits < PER {
+                    match e.attempt(&mut |t: &mut dyn TxAccess| {
+                        let v = t.read(a)?;
+                        t.write(a, v + 1)
+                    }) {
+                        Ok(_) => commits += 1,
+                        Err(_) => aborts += 1,
+                    }
+                }
+                aborts
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(e.heap.load(a), (THREADS as u64) * PER);
+    }
+
+    #[test]
+    fn concurrent_transfers_conserve_sum() {
+        let e = Arc::new(engine());
+        let accounts: Vec<Addr> = (0..8).map(|_| e.heap.alloc_lines(1)).collect();
+        for &acc in &accounts {
+            e.heap.store(acc, 1000);
+        }
+        let mut hs = Vec::new();
+        for tid in 0..4u64 {
+            let e = Arc::clone(&e);
+            let accounts = accounts.clone();
+            hs.push(std::thread::spawn(move || {
+                let mut rng = crate::util::rng::Rng::new(tid);
+                let mut done = 0;
+                while done < 2000 {
+                    let from = accounts[rng.below(8) as usize];
+                    let to = accounts[rng.below(8) as usize];
+                    if from == to {
+                        continue;
+                    }
+                    let r = e.attempt(&mut |t: &mut dyn TxAccess| {
+                        let f = t.read(from)?;
+                        if f == 0 {
+                            return Ok(false);
+                        }
+                        let g = t.read(to)?;
+                        t.write(from, f - 1)?;
+                        t.write(to, g + 1)?;
+                        Ok(true)
+                    });
+                    if r == Ok(true) {
+                        done += 1;
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let total: u64 = accounts.iter().map(|&a| e.heap.load(a)).sum();
+        assert_eq!(total, 8000, "value-based validation must not lose money");
+    }
+
+    #[test]
+    fn snapshot_isolation_within_txn() {
+        // A transaction that reads the same address twice must see the
+        // same value even while writers churn (opacity smoke test).
+        let e = Arc::new(engine());
+        let a = e.heap.alloc(1);
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writer = {
+            let e = Arc::clone(&e);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let _ = e.attempt(&mut |t: &mut dyn TxAccess| t.write(a, i));
+                    i += 1;
+                }
+            })
+        };
+        for _ in 0..2000 {
+            let r = e.attempt(&mut |t: &mut dyn TxAccess| {
+                let x = t.read(a)?;
+                let y = t.read(a)?;
+                Ok((x, y))
+            });
+            if let Ok((x, y)) = r {
+                assert_eq!(x, y, "torn snapshot");
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+    }
+}

@@ -1,0 +1,97 @@
+//! The transactional access interface.
+//!
+//! Workload code (the SSCA-2 kernels) is written once against
+//! [`TxAccess`]; each policy executor supplies its own implementation —
+//! speculative (software HTM), logged (NOrec/TL2 STM), or direct
+//! (coarse lock). A body returns `Err(Abort)` when the underlying
+//! speculation failed mid-flight and the executor must retry.
+
+use super::cause::AbortCause;
+use crate::mem::Addr;
+
+/// Marker error: the enclosing transaction attempt must abort.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Abort(pub AbortCause);
+
+pub type TxResult<T> = Result<T, Abort>;
+
+/// What a transaction body may do to shared memory.
+pub trait TxAccess {
+    /// Transactionally read the word at `addr`.
+    fn read(&mut self, addr: Addr) -> TxResult<u64>;
+    /// Transactionally write `val` to `addr`.
+    fn write(&mut self, addr: Addr, val: u64) -> TxResult<()>;
+
+    /// Read-modify-write helper.
+    fn update(&mut self, addr: Addr, f: impl FnOnce(u64) -> u64) -> TxResult<u64>
+    where
+        Self: Sized,
+    {
+        let v = f(self.read(addr)?);
+        self.write(addr, v)?;
+        Ok(v)
+    }
+}
+
+/// A transaction body: runs against any access implementation, returns a
+/// value on success. `FnMut` because the executor re-runs it on retry.
+pub trait TxBody<R>: FnMut(&mut dyn TxAccess) -> TxResult<R> {}
+impl<R, F: FnMut(&mut dyn TxAccess) -> TxResult<R>> TxBody<R> for F {}
+
+/// Direct (non-speculative) access: used under the coarse lock, by the
+/// HLE/HTM lock fallback paths, and for single-threaded trace capture.
+pub struct DirectAccess<'h> {
+    pub heap: &'h crate::mem::TxHeap,
+}
+
+impl TxAccess for DirectAccess<'_> {
+    #[inline]
+    fn read(&mut self, addr: Addr) -> TxResult<u64> {
+        Ok(self.heap.load_acquire(addr))
+    }
+
+    #[inline]
+    fn write(&mut self, addr: Addr, val: u64) -> TxResult<()> {
+        self.heap.store_release(addr, val);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::TxHeap;
+
+    #[test]
+    fn direct_access_reads_writes_heap() {
+        let heap = TxHeap::new(64);
+        let a = heap.alloc(1);
+        let mut acc = DirectAccess { heap: &heap };
+        acc.write(a, 99).unwrap();
+        assert_eq!(acc.read(a).unwrap(), 99);
+        assert_eq!(heap.load(a), 99);
+    }
+
+    #[test]
+    fn update_applies_function() {
+        let heap = TxHeap::new(64);
+        let a = heap.alloc(1);
+        heap.store(a, 10);
+        let mut acc = DirectAccess { heap: &heap };
+        let v = acc.update(a, |x| x * 3).unwrap();
+        assert_eq!(v, 30);
+        assert_eq!(heap.load(a), 30);
+    }
+
+    #[test]
+    fn body_trait_object_compatible() {
+        let heap = TxHeap::new(64);
+        let a = heap.alloc(1);
+        let body = |acc: &mut dyn TxAccess| -> TxResult<u64> {
+            acc.write(a, 5)?;
+            acc.read(a)
+        };
+        let mut acc = DirectAccess { heap: &heap };
+        assert_eq!(body(&mut acc).unwrap(), 5);
+    }
+}

@@ -1,0 +1,94 @@
+//! Abort causes, mirroring Intel RTM's `_xabort` status bits.
+//!
+//! The whole point of DyAdHyTM (paper §3.6) is that the HTM *tells you
+//! why* it aborted: `_XABORT_CAPACITY` means the transaction can never
+//! succeed in hardware, so retrying is wasted work — fall back to STM
+//! immediately. Our software HTM reports the same taxonomy so the policy
+//! layer consumes exactly the bits `_xbegin()` would deliver.
+
+/// Why a (hardware) transaction aborted.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AbortCause {
+    /// Data conflict with a concurrent transaction (`_XABORT_CONFLICT`).
+    /// The RTM "may succeed on retry" hint is set for this cause.
+    Conflict,
+    /// Read/write set exceeded the transactional buffers
+    /// (`_XABORT_CAPACITY`): L1d write-set or L2 read-set bound, or a
+    /// set-associativity eviction. Retrying in hardware cannot succeed.
+    Capacity,
+    /// The transaction explicitly aborted itself (`_XABORT_EXPLICIT`).
+    /// In every HyTM here the only explicit abort is the gbllock
+    /// subscription: an STM transaction holds the global lock.
+    Explicit,
+    /// Asynchronous event — interrupt, context switch, page fault
+    /// (status bits all zero on real RTM). Rare; injected
+    /// probabilistically by the fault model and by the DES simulator.
+    Interrupt,
+    /// Software transaction aborted on validation failure (STM-side
+    /// cause; never produced by the HTM path).
+    SwConflict,
+}
+
+impl AbortCause {
+    /// Intel's "retry may succeed" hint (`_XABORT_RETRY`): set for
+    /// conflicts and transient events, clear for capacity/explicit.
+    #[inline]
+    pub fn may_succeed_on_retry(self) -> bool {
+        matches!(self, AbortCause::Conflict | AbortCause::Interrupt)
+    }
+
+    /// Stable index for per-cause counters.
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            AbortCause::Conflict => 0,
+            AbortCause::Capacity => 1,
+            AbortCause::Explicit => 2,
+            AbortCause::Interrupt => 3,
+            AbortCause::SwConflict => 4,
+        }
+    }
+
+    pub const COUNT: usize = 5;
+
+    pub const ALL: [AbortCause; 5] = [
+        AbortCause::Conflict,
+        AbortCause::Capacity,
+        AbortCause::Explicit,
+        AbortCause::Interrupt,
+        AbortCause::SwConflict,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AbortCause::Conflict => "conflict",
+            AbortCause::Capacity => "capacity",
+            AbortCause::Explicit => "explicit",
+            AbortCause::Interrupt => "interrupt",
+            AbortCause::SwConflict => "sw-conflict",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retry_hint_matches_rtm_semantics() {
+        assert!(AbortCause::Conflict.may_succeed_on_retry());
+        assert!(AbortCause::Interrupt.may_succeed_on_retry());
+        assert!(!AbortCause::Capacity.may_succeed_on_retry());
+        assert!(!AbortCause::Explicit.may_succeed_on_retry());
+    }
+
+    #[test]
+    fn indices_are_dense_and_unique() {
+        let mut seen = [false; AbortCause::COUNT];
+        for c in AbortCause::ALL {
+            assert!(!seen[c.index()]);
+            seen[c.index()] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -1,0 +1,14 @@
+//! Transactional-memory core: the access interface every synchronization
+//! policy implements, Intel-RTM-style abort causes, and the shared
+//! versioned-lock machinery (global version clock + per-line lock table)
+//! used by both the software HTM and the TL2 STM.
+
+pub mod access;
+pub mod cause;
+pub mod orec;
+pub mod subscribe;
+
+pub use access::{TxAccess, TxBody, TxResult};
+pub use cause::AbortCause;
+pub use orec::{GlobalClock, LockTable, OrecValue};
+pub use subscribe::Subscription;

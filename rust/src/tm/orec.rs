@@ -1,0 +1,258 @@
+//! Ownership records: a global version clock plus a table of per-line
+//! versioned write-locks (TL2-style). Shared by the software HTM
+//! (`htm/`) and the TL2 STM (`stm/tl2.rs`); NOrec deliberately does not
+//! use it (that is its design point).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::mem::Line;
+
+/// Global version clock. Even/odd is irrelevant here — versions are
+/// plain integers; lock words distinguish locked/unlocked by their LSB.
+pub struct GlobalClock(AtomicU64);
+
+impl GlobalClock {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    /// Current timestamp — a transaction's read version.
+    #[inline]
+    pub fn now(&self) -> u64 {
+        self.0.load(Ordering::Acquire)
+    }
+
+    /// Advance and return the new (unique) write version.
+    #[inline]
+    pub fn tick(&self) -> u64 {
+        self.0.fetch_add(1, Ordering::AcqRel) + 1
+    }
+}
+
+impl Default for GlobalClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Decoded state of one ownership record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OrecValue {
+    /// Unlocked; last committed write carried this version.
+    Version(u64),
+    /// Write-locked by transaction/thread `owner`.
+    Locked { owner: u32 },
+}
+
+impl OrecValue {
+    #[inline]
+    fn decode(raw: u64) -> Self {
+        if raw & 1 == 1 {
+            OrecValue::Locked {
+                owner: (raw >> 1) as u32,
+            }
+        } else {
+            OrecValue::Version(raw >> 1)
+        }
+    }
+
+    #[inline]
+    fn encode(self) -> u64 {
+        match self {
+            OrecValue::Version(v) => v << 1,
+            OrecValue::Locked { owner } => ((owner as u64) << 1) | 1,
+        }
+    }
+}
+
+/// Striped per-line versioned-lock table.
+///
+/// `size` is a power of two; lines hash into it with a Fibonacci mix so
+/// that the regular stride patterns of the heap allocator don't alias
+/// into the same stripe. Striping can manufacture false conflicts
+/// (two distinct lines sharing an orec) exactly as physical caches
+/// manufacture false sharing; the table is sized so this is rare.
+pub struct LockTable {
+    orecs: Box<[AtomicU64]>,
+    mask: u64,
+}
+
+pub const DEFAULT_LOCK_TABLE_BITS: u32 = 18; // 256 Ki orecs = 2 MiB
+
+impl LockTable {
+    pub fn new(bits: u32) -> Self {
+        let size = 1usize << bits;
+        let mut v = Vec::with_capacity(size);
+        v.resize_with(size, || AtomicU64::new(0));
+        Self {
+            orecs: v.into_boxed_slice(),
+            mask: (size as u64) - 1,
+        }
+    }
+
+    #[inline]
+    fn slot(&self, line: Line) -> &AtomicU64 {
+        let h = line.0.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+        &self.orecs[(h & self.mask) as usize]
+    }
+
+    /// Read the orec for `line`.
+    #[inline]
+    pub fn read(&self, line: Line) -> OrecValue {
+        OrecValue::decode(self.slot(line).load(Ordering::Acquire))
+    }
+
+    /// Try to acquire the write lock for `line`, expecting it unlocked at
+    /// `expect_version`. Returns false if the orec changed (locked by
+    /// someone, or version moved).
+    #[inline]
+    pub fn try_lock(&self, line: Line, expect_version: u64, owner: u32) -> bool {
+        self.slot(line)
+            .compare_exchange(
+                OrecValue::Version(expect_version).encode(),
+                OrecValue::Locked { owner }.encode(),
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            )
+            .is_ok()
+    }
+
+    /// Release a lock held by `owner`, stamping `new_version`.
+    /// Panics if the orec is not locked by `owner` (protocol bug).
+    #[inline]
+    pub fn unlock(&self, line: Line, owner: u32, new_version: u64) {
+        let prev = self.slot(line).swap(
+            OrecValue::Version(new_version).encode(),
+            Ordering::AcqRel,
+        );
+        debug_assert_eq!(
+            OrecValue::decode(prev),
+            OrecValue::Locked { owner },
+            "orec released by non-owner"
+        );
+        let _ = prev;
+    }
+
+    /// Release a lock *without* bumping the version (abort path: memory
+    /// was never written, so readers need not be invalidated).
+    #[inline]
+    pub fn unlock_restore(&self, line: Line, owner: u32, old_version: u64) {
+        let prev = self
+            .slot(line)
+            .swap(OrecValue::Version(old_version).encode(), Ordering::AcqRel);
+        debug_assert_eq!(OrecValue::decode(prev), OrecValue::Locked { owner });
+        let _ = prev;
+    }
+
+    /// Two lines share a stripe (useful for tests and the false-conflict
+    /// diagnostics).
+    pub fn aliases(&self, a: Line, b: Line) -> bool {
+        std::ptr::eq(self.slot(a), self.slot(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::qcheck;
+
+    #[test]
+    fn clock_monotonic() {
+        let c = GlobalClock::new();
+        let a = c.now();
+        let b = c.tick();
+        let d = c.tick();
+        assert!(a < b && b < d);
+        assert_eq!(c.now(), d);
+    }
+
+    #[test]
+    fn orec_encode_decode_roundtrip() {
+        qcheck(
+            "orec roundtrip",
+            500,
+            |r| {
+                if r.next_u64() & 1 == 0 {
+                    OrecValue::Version(r.below(1 << 62))
+                } else {
+                    OrecValue::Locked {
+                        owner: r.next_u32(),
+                    }
+                }
+            },
+            |&v| OrecValue::decode(v.encode()) == v,
+        );
+    }
+
+    #[test]
+    fn lock_unlock_cycle() {
+        let t = LockTable::new(8);
+        let line = Line(42);
+        assert_eq!(t.read(line), OrecValue::Version(0));
+        assert!(t.try_lock(line, 0, 7));
+        assert_eq!(t.read(line), OrecValue::Locked { owner: 7 });
+        // Second lock attempt fails while held.
+        assert!(!t.try_lock(line, 0, 8));
+        t.unlock(line, 7, 5);
+        assert_eq!(t.read(line), OrecValue::Version(5));
+    }
+
+    #[test]
+    fn try_lock_fails_on_stale_version() {
+        let t = LockTable::new(8);
+        let line = Line(1);
+        assert!(t.try_lock(line, 0, 1));
+        t.unlock(line, 1, 10);
+        assert!(!t.try_lock(line, 0, 2), "stale expected version");
+        assert!(t.try_lock(line, 10, 2));
+        t.unlock_restore(line, 2, 10);
+        assert_eq!(t.read(line), OrecValue::Version(10));
+    }
+
+    #[test]
+    fn distinct_lines_mostly_distinct_slots() {
+        let t = LockTable::new(DEFAULT_LOCK_TABLE_BITS);
+        let mut collisions = 0;
+        for i in 0..1000u64 {
+            if t.aliases(Line(i), Line(i + 1)) {
+                collisions += 1;
+            }
+        }
+        assert!(collisions < 10, "{collisions} adjacent-line collisions");
+    }
+
+    #[test]
+    fn concurrent_lockers_mutually_exclude() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::Arc;
+        let t = Arc::new(LockTable::new(4));
+        let line = Line(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for owner in 0..4u32 {
+            let t = Arc::clone(&t);
+            let counter = Arc::clone(&counter);
+            handles.push(std::thread::spawn(move || {
+                let mut acquired = 0;
+                for _ in 0..1000 {
+                    let v = match t.read(line) {
+                        OrecValue::Version(v) => v,
+                        OrecValue::Locked { .. } => continue,
+                    };
+                    if t.try_lock(line, v, owner) {
+                        // Critical section: non-atomic RMW through an
+                        // atomic cell must never be racy under mutual
+                        // exclusion.
+                        let x = counter.load(Ordering::Relaxed);
+                        counter.store(x + 1, Ordering::Relaxed);
+                        t.unlock(line, owner, v + 1);
+                        acquired += 1;
+                    }
+                }
+                acquired
+            }));
+        }
+        let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(counter.load(Ordering::Relaxed), total);
+    }
+}

@@ -1,0 +1,21 @@
+//! Lock subscription: how a hardware transaction couples to a software
+//! lock (the HyTM gbllock, or the fallback lock of an HTM+lock scheme).
+//!
+//! On real RTM the hardware transaction *reads the lock word inside the
+//! transaction*; any writer to that word then causes a data conflict.
+//! Our software HTM reproduces that with an explicit sample/validate
+//! protocol. Implementors expose a monotone component in the sampled
+//! word so that even a lock episode that begins *and ends* within the
+//! hardware transaction's window is detected (see
+//! [`crate::hytm::GblLock`] for why that matters).
+
+/// A lock word a hardware transaction can subscribe to.
+pub trait Subscription: Sync {
+    /// Snapshot of the lock word (taken at `HW_BEGIN`).
+    fn sample(&self) -> u64;
+    /// True iff the word has not changed since `sample` — no acquire or
+    /// release happened.
+    fn unchanged_since(&self, sample: u64) -> bool;
+    /// Is the lock currently held? (`HW_BEGIN` aborts Explicit if so.)
+    fn is_held(&self) -> bool;
+}

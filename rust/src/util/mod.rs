@@ -1,0 +1,10 @@
+//! Dependency-free utilities: deterministic RNG, a mini property-testing
+//! harness, JSON scraping for the artifact manifest, and simple stats
+//! helpers. The offline crate registry has no `rand`/`proptest`/`serde`,
+//! so these are hand-rolled (DESIGN.md S16/S17).
+
+pub mod json;
+pub mod qcheck;
+pub mod rng;
+pub mod timer;
+pub mod zipf;

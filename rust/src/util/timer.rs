@@ -1,0 +1,74 @@
+//! Wall-clock timing helpers for the bench harness (no criterion in the
+//! offline registry; benches are plain `harness = false` binaries).
+
+use std::time::{Duration, Instant};
+
+/// Time a closure, returning (result, elapsed).
+pub fn time<R>(f: impl FnOnce() -> R) -> (R, Duration) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed())
+}
+
+/// Run `f` `iters` times, returning per-iteration stats in nanoseconds.
+pub fn bench_ns(warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as u64);
+    }
+    BenchStats::from_samples(samples)
+}
+
+/// Simple order statistics over nanosecond samples.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub samples: Vec<u64>,
+    pub mean: f64,
+    pub median: u64,
+    pub p95: u64,
+    pub min: u64,
+    pub max: u64,
+}
+
+impl BenchStats {
+    pub fn from_samples(mut samples: Vec<u64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let mean = samples.iter().sum::<u64>() as f64 / n as f64;
+        Self {
+            median: samples[n / 2],
+            p95: samples[(n * 95 / 100).min(n - 1)],
+            min: samples[0],
+            max: samples[n - 1],
+            mean,
+            samples,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_order() {
+        let s = BenchStats::from_samples(vec![5, 1, 9, 3, 7]);
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 9);
+        assert_eq!(s.median, 5);
+        assert!((s.mean - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_returns_result() {
+        let (r, d) = time(|| 2 + 2);
+        assert_eq!(r, 4);
+        assert!(d.as_nanos() > 0);
+    }
+}

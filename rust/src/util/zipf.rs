@@ -1,0 +1,101 @@
+//! Zipf-distributed sampling — the access skew of real-world graphs
+//! (the paper's §1 premise: big-data graphs are sparse but their hubs
+//! are hot). Used by the contention microbenchmarks to sweep smoothly
+//! between uniform (sparse, TM-friendly) and hub-dominated access.
+//!
+//! Rejection-free inverse-CDF sampler over `n` ranks with exponent `s`,
+//! using a precomputed cumulative table (n is small in our benches).
+
+use super::rng::Rng;
+
+/// Zipf sampler over ranks `0..n` with exponent `s` (s = 0 → uniform).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for k in 1..=n {
+            acc += 1.0 / (k as f64).powf(s);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    /// Draw a rank in `0..n` (rank 0 is the hottest).
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.next_f64();
+        // Binary search the CDF.
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).expect("finite"))
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+
+    /// Probability mass of rank 0 (diagnostics).
+    pub fn p0(&self) -> f64 {
+        self.cdf[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::qcheck::qcheck;
+
+    #[test]
+    fn uniform_when_s_zero() {
+        let z = Zipf::new(16, 0.0);
+        let mut rng = Rng::new(5);
+        let mut counts = [0u32; 16];
+        for _ in 0..64_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for c in counts {
+            assert!((3_200..4_800).contains(&c), "bucket {c}");
+        }
+    }
+
+    #[test]
+    fn skewed_when_s_one() {
+        let z = Zipf::new(64, 1.0);
+        let mut rng = Rng::new(7);
+        let mut counts = vec![0u32; 64];
+        for _ in 0..64_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Rank 0 carries ~1/H_64 ~= 21% of the mass; last rank ~0.3%.
+        assert!(counts[0] > 8 * counts[63].max(1), "{counts:?}");
+        assert!((z.p0() - 0.21).abs() < 0.03);
+    }
+
+    #[test]
+    fn prop_samples_in_range() {
+        qcheck(
+            "zipf in range",
+            300,
+            |r| {
+                let n = 1 + r.below(100) as usize;
+                let s = r.next_f64() * 2.0;
+                (n, s, r.next_u64())
+            },
+            |&(n, s, seed)| {
+                let z = Zipf::new(n, s);
+                let mut rng = Rng::new(seed);
+                (0..50).all(|_| z.sample(&mut rng) < n)
+            },
+        );
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration: the stats plane's accounting identities — the numbers
+//! Figure 4 is made of must be internally consistent under every policy
+//! and contention level.
+
+use std::sync::Arc;
+
+use dyadhytm::graph::{computation, generation, rmat, Graph, Ssca2Config};
+use dyadhytm::htm::HtmConfig;
+use dyadhytm::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use dyadhytm::mem::TxHeap;
+use dyadhytm::stats::TxStats;
+use dyadhytm::tm::access::{TxAccess, TxResult};
+
+/// hw_attempts = hw_commits + hw_aborts (every attempt ends one way).
+fn check_attempt_identity(s: &TxStats, label: &str) {
+    assert_eq!(
+        s.hw_attempts,
+        s.hw_commits + s.hw_aborts_total(),
+        "{label}: attempts {} != commits {} + aborts {}",
+        s.hw_attempts,
+        s.hw_commits,
+        s.hw_aborts_total()
+    );
+}
+
+/// retries = attempts - transactions-that-entered-hw; since every
+/// logical txn enters hw exactly once before retrying:
+/// attempts = first-attempts + retries, and first-attempts >= commits.
+fn check_retry_identity(s: &TxStats, label: &str) {
+    assert!(
+        s.hw_attempts >= s.hw_retries,
+        "{label}: retries {} exceed attempts {}",
+        s.hw_retries,
+        s.hw_attempts
+    );
+    let first_attempts = s.hw_attempts - s.hw_retries;
+    assert!(
+        first_attempts >= s.hw_commits,
+        "{label}: first attempts {first_attempts} < hw commits {}",
+        s.hw_commits
+    );
+}
+
+fn hybrid_policies() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec::Rnd { lo: 1, hi: 50 },
+        PolicySpec::Fx { n: 43 },
+        PolicySpec::StAd { n: 6 },
+        PolicySpec::DyAd { n: 43 },
+        PolicySpec::HtmSpin { retries: 6 },
+        PolicySpec::Hle,
+        PolicySpec::PhTm {
+            retries: 6,
+            sw_quantum: 32,
+        },
+    ]
+}
+
+#[test]
+fn live_counter_contention_accounting() {
+    for spec in hybrid_policies() {
+        let heap = Arc::new(TxHeap::new(1 << 12));
+        let a = heap.alloc(1);
+        let sys = Arc::new(TmSystem::new(heap, HtmConfig::broadwell()));
+        let stats: Vec<TxStats> = std::thread::scope(|s| {
+            (0..4u32)
+                .map(|tid| {
+                    let sys = Arc::clone(&sys);
+                    s.spawn(move || {
+                        let mut ex = ThreadExecutor::new(&sys, spec, tid, 3);
+                        for _ in 0..2000 {
+                            ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<()> {
+                                let v = t.read(a)?;
+                                t.write(a, v + 1)
+                            });
+                        }
+                        ex.stats
+                    })
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .collect()
+        });
+        let mut total = TxStats::new();
+        for st in &stats {
+            check_attempt_identity(st, spec.name());
+            check_retry_identity(st, spec.name());
+            total.merge(st);
+        }
+        // Every logical transaction committed on exactly one path.
+        assert_eq!(total.total_commits(), 8000, "{}", spec.name());
+        assert_eq!(sys.heap.load(a), 8000, "{}", spec.name());
+    }
+}
+
+#[test]
+fn ssca2_pipeline_accounting() {
+    for spec in [
+        PolicySpec::DyAd { n: 43 },
+        PolicySpec::Fx { n: 8 },
+        PolicySpec::HtmSpin { retries: 4 },
+    ] {
+        let cfg = Ssca2Config::new(8);
+        let g = Graph::alloc(cfg);
+        let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::tiny());
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        let (_, table) = generation::run(&sys, &g, &tuples, spec, 4, 5);
+        for row in &table.rows {
+            check_attempt_identity(&row.stats, spec.name());
+            check_retry_identity(&row.stats, spec.name());
+        }
+        let comp = computation::run(&sys, &g, spec, 4, 9);
+        for row in &comp.stats.rows {
+            check_attempt_identity(&row.stats, spec.name());
+        }
+    }
+}
+
+#[test]
+fn sim_accounting_matches_live_identities() {
+    use dyadhytm::coordinator::figures::{sim_cell, Kernel};
+    for spec in hybrid_policies() {
+        let (_, table) = sim_cell(spec, 8, 10, Kernel::Both, 1, 7);
+        for row in &table.rows {
+            check_attempt_identity(&row.stats, spec.name());
+            check_retry_identity(&row.stats, spec.name());
+        }
+    }
+}
+
+#[test]
+fn capacity_aborts_never_exceed_attempts_and_cause_split_is_complete() {
+    use dyadhytm::tm::AbortCause;
+    let cfg = Ssca2Config::new(7).with_batch(32);
+    let g = Graph::alloc(cfg);
+    let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::tiny());
+    let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+    let (_, table) = generation::run(&sys, &g, &tuples, PolicySpec::DyAd { n: 43 }, 2, 3);
+    let t = table.total();
+    let by_cause: u64 = AbortCause::ALL.iter().map(|&c| t.aborts_of(c)).sum();
+    assert_eq!(by_cause, t.hw_aborts_total(), "cause histogram covers all");
+    assert!(t.aborts_of(AbortCause::Capacity) > 0);
+}

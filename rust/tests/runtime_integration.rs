@@ -1,0 +1,132 @@
+//! Integration: the AOT artifact path (Layer 1/2 via PJRT) against the
+//! native Rust implementations. Skips (with a loud message) when
+//! artifacts have not been built — run `make artifacts` first.
+
+use std::sync::Arc;
+
+use dyadhytm::graph::{generation, rmat, verify, Graph, Ssca2Config};
+use dyadhytm::htm::HtmConfig;
+use dyadhytm::hytm::{PolicySpec, TmSystem};
+use dyadhytm::runtime::ArtifactRuntime;
+
+fn runtime() -> Option<ArtifactRuntime> {
+    let dir = ArtifactRuntime::default_dir();
+    if !ArtifactRuntime::available(&dir) {
+        eprintln!("SKIP: artifacts missing in {} (run `make artifacts`)", dir.display());
+        return None;
+    }
+    Some(ArtifactRuntime::load(&dir).expect("artifacts load"))
+}
+
+#[test]
+fn edge_batch_shapes_and_bounds() {
+    let Some(rt) = runtime() else { return };
+    for scale in [4u32, 10, 16, 20] {
+        let tuples = rt.edge_batch((3, 5), scale, 1 << scale.min(16)).unwrap();
+        assert_eq!(tuples.len(), rt.manifest.batch);
+        for t in &tuples {
+            assert!(t.src < 1 << scale, "src {} at scale {scale}", t.src);
+            assert!(t.dst < 1 << scale);
+            assert!(t.weight >= 1 && t.weight <= 1 << scale.min(16));
+        }
+    }
+}
+
+#[test]
+fn edge_batch_is_deterministic_per_key() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.edge_batch((1, 2), 12, 256).unwrap();
+    let b = rt.edge_batch((1, 2), 12, 256).unwrap();
+    assert_eq!(a, b);
+    let c = rt.edge_batch((1, 3), 12, 256).unwrap();
+    assert_ne!(a, c);
+}
+
+#[test]
+fn artifact_rmat_distribution_matches_native() {
+    // Same R-MAT parameters on both paths: the top-level quadrant
+    // frequencies must match (a,b,c,d) within sampling error.
+    let Some(rt) = runtime() else { return };
+    let scale = 14u32;
+    let tuples = rt.edge_batch((7, 9), scale, 100).unwrap();
+    let top = 1u32 << (scale - 1);
+    let frac = |f: &dyn Fn(&dyadhytm::graph::EdgeTuple) -> bool| {
+        tuples.iter().filter(|t| f(t)).count() as f64 / tuples.len() as f64
+    };
+    let a = frac(&|t| t.src < top && t.dst < top);
+    let b = frac(&|t| t.src < top && t.dst >= top);
+    let c = frac(&|t| t.src >= top && t.dst < top);
+    let d = frac(&|t| t.src >= top && t.dst >= top);
+    assert!((a - 0.55).abs() < 0.02, "a={a}");
+    assert!((b - 0.10).abs() < 0.02, "b={b}");
+    assert!((c - 0.10).abs() < 0.02, "c={c}");
+    assert!((d - 0.25).abs() < 0.02, "d={d}");
+}
+
+#[test]
+fn classify_agrees_with_native_scan() {
+    let Some(rt) = runtime() else { return };
+    let tuples = rt.edge_batch((11, 13), 15, 1 << 15).unwrap();
+    let weights: Vec<u32> = tuples.iter().map(|t| t.weight).collect();
+    let native_max = weights.iter().copied().max().unwrap();
+    assert_eq!(rt.max_weight(&weights).unwrap(), native_max);
+    let (tile_max, mask) = rt.classify(&weights, native_max).unwrap();
+    assert_eq!(tile_max.iter().copied().max().unwrap(), native_max);
+    let hits: u32 = mask.iter().sum();
+    let expect = weights.iter().filter(|&&w| w == native_max).count() as u32;
+    assert_eq!(hits, expect);
+}
+
+#[test]
+fn max_weight_handles_ragged_tails() {
+    let Some(rt) = runtime() else { return };
+    // 1.5 batches: the pad-with-zero path.
+    let mut weights = vec![5u32; rt.manifest.batch + rt.manifest.batch / 2];
+    weights[rt.manifest.batch + 17] = 999;
+    assert_eq!(rt.max_weight(&weights).unwrap(), 999);
+}
+
+#[test]
+fn full_pipeline_from_artifact_tuples() {
+    // The end-to-end composition: artifact tuples -> live generation
+    // kernel -> computation kernel -> verification.
+    let Some(rt) = runtime() else { return };
+    let scale = 10u32;
+    let tuples = rt.generate_tuples(0x55CA_2017, scale, 8).unwrap();
+    assert_eq!(tuples.len(), 8 << scale);
+
+    let cfg = Ssca2Config::new(scale);
+    let g = Graph::alloc(cfg);
+    let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+    let (_, stats) = generation::run(&sys, &g, &tuples, PolicySpec::DyAd { n: 43 }, 4, 3);
+    assert_eq!(stats.total().total_commits(), tuples.len() as u64);
+    verify::check_graph(&g, &tuples).unwrap();
+
+    let comp = dyadhytm::graph::computation::run(&sys, &g, PolicySpec::DyAd { n: 43 }, 4, 5);
+    verify::check_results(&g, &tuples).unwrap();
+    assert!(comp.selected > 0);
+}
+
+#[test]
+fn native_and_artifact_hub_skew_agree() {
+    // Both generators must concentrate degree on low vertex ids the
+    // same way (power-law head).
+    let Some(rt) = runtime() else { return };
+    let scale = 12u32;
+    let art = rt.generate_tuples(1, scale, 8).unwrap();
+    let nat = rmat::generate(1, scale, 8);
+    let head_frac = |ts: &[dyadhytm::graph::EdgeTuple]| {
+        let head = 1u32 << (scale - 4); // lowest 1/16 of the id space
+        ts.iter().filter(|t| t.src < head).count() as f64 / ts.len() as f64
+    };
+    let fa = head_frac(&art);
+    let fn_ = head_frac(&nat);
+    assert!(
+        (fa - fn_).abs() < 0.05,
+        "hub mass differs: artifact {fa} vs native {fn_}"
+    );
+    // And both are heavily skewed: theory says P(src in lowest 1/16) =
+    // (a+b)^4 = 0.65^4 ~= 0.178; uniform would put 0.0625 here.
+    assert!(fa > 0.12 && fn_ > 0.12, "no skew: {fa} {fn_}");
+    assert!((fa - 0.178).abs() < 0.03, "artifact off theory: {fa}");
+}
