@@ -1,0 +1,68 @@
+//! Bench: the speculative batch backend vs DyAdHyTM vs the coarse lock
+//! on the SSCA-2 edge-insertion (generation) workload.
+//!
+//! Prints a markdown table plus one machine-readable `BENCH_JSON` line
+//! per cell (the same flat-JSON record shape the other `BENCH_*`
+//! outputs use), so sweeps can be scraped with `grep '^BENCH_JSON'`.
+//!
+//! ```sh
+//! cargo bench --bench batch_throughput
+//! ```
+
+use std::sync::Arc;
+
+use dyadhytm::graph::{generation, rmat, verify, Graph, Ssca2Config};
+use dyadhytm::htm::HtmConfig;
+use dyadhytm::hytm::{PolicySpec, TmSystem};
+
+fn main() {
+    let scale = 12u32;
+    let seed = 0x55CA_2017u64;
+    let t0 = std::time::Instant::now();
+    let variants = [
+        PolicySpec::Batch { block: 2048 },
+        PolicySpec::DyAd { n: 43 },
+        PolicySpec::CoarseLock,
+    ];
+
+    println!(
+        "### batch_throughput — SSCA-2 generation kernel, live (scale {scale}, edge factor 8)\n"
+    );
+    println!("| policy | threads | edges | elapsed ms | edges/s | commits | sw_aborts |");
+    println!("|---|---|---|---|---|---|---|");
+
+    for &threads in &[1usize, 2, 4, 8] {
+        for policy in variants {
+            let cfg = Ssca2Config::new(scale).with_seed(seed);
+            let g = Graph::alloc(cfg);
+            let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
+            let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+            let (elapsed, stats) = generation::run(&sys, &g, &tuples, policy, threads, seed);
+            verify::check_graph(&g, &tuples)
+                .unwrap_or_else(|e| panic!("{} corrupted the graph: {e}", policy.name()));
+            let total = stats.total();
+            let eps = tuples.len() as f64 / elapsed.as_secs_f64().max(1e-9);
+            println!(
+                "| {} | {threads} | {} | {:.1} | {:.0} | {} | {} |",
+                policy.name(),
+                tuples.len(),
+                elapsed.as_secs_f64() * 1e3,
+                eps,
+                total.total_commits(),
+                total.sw_aborts,
+            );
+            println!(
+                "BENCH_JSON {{\"bench\":\"batch_throughput\",\"kernel\":\"generation\",\
+                 \"policy\":\"{}\",\"scale\":{scale},\"threads\":{threads},\"edges\":{},\
+                 \"elapsed_ns\":{},\"edges_per_sec\":{:.0},\"commits\":{},\"sw_aborts\":{}}}",
+                policy.name(),
+                tuples.len(),
+                elapsed.as_nanos(),
+                eps,
+                total.total_commits(),
+                total.sw_aborts,
+            );
+        }
+    }
+    eprintln!("[batch_throughput: finished in {:?}]", t0.elapsed());
+}

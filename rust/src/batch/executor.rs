@@ -1,0 +1,159 @@
+//! The batch worker loop: execute → record → validate → abort/re-incarnate.
+//!
+//! Each worker pulls [`Task`]s from the shared [`Scheduler`]. Execution
+//! runs the transaction body against an [`MvView`] — a
+//! [`crate::tm::access::TxAccess`] implementation that reads through
+//! the multi-version store (recording the observed version per read)
+//! and buffers writes locally. Validation re-reads the recorded read
+//! set; on mismatch the incarnation's writes become ESTIMATEs and the
+//! transaction re-executes with a bumped incarnation number.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::mem::{Addr, TxHeap};
+use crate::tm::access::{Abort, TxAccess, TxResult};
+use crate::tm::AbortCause;
+
+use super::mvmemory::{MvMemory, MvRead, ReadDesc, ReadOrigin};
+use super::scheduler::{Scheduler, Task, TxnIdx, Version};
+use super::BatchTxn;
+
+/// Cumulative counters shared by all workers of one batch run.
+#[derive(Debug, Default)]
+pub struct BatchCounters {
+    /// Incarnation executions started (≥ batch size; the excess is
+    /// speculation waste).
+    pub executions: AtomicU64,
+    /// Validation tasks performed.
+    pub validations: AtomicU64,
+    /// Validations that aborted an incarnation.
+    pub validation_aborts: AtomicU64,
+    /// Executions suspended on an ESTIMATE of a lower transaction.
+    pub dependencies: AtomicU64,
+}
+
+/// Speculative memory view of one executing incarnation.
+struct MvView<'r> {
+    heap: &'r TxHeap,
+    mv: &'r MvMemory,
+    txn: TxnIdx,
+    reads: Vec<ReadDesc>,
+    writes: Vec<(Addr, u64)>,
+    blocked_on: Option<TxnIdx>,
+}
+
+impl TxAccess for MvView<'_> {
+    fn read(&mut self, addr: Addr) -> TxResult<u64> {
+        // Read-your-own-writes from the local buffer first.
+        if let Some(w) = self.writes.iter().rev().find(|w| w.0 == addr) {
+            return Ok(w.1);
+        }
+        match self.mv.read(addr, self.txn) {
+            MvRead::Value(version, v) => {
+                self.reads.push(ReadDesc {
+                    addr,
+                    origin: ReadOrigin::Version(version),
+                });
+                Ok(v)
+            }
+            MvRead::Base => {
+                self.reads.push(ReadDesc {
+                    addr,
+                    origin: ReadOrigin::Base,
+                });
+                Ok(self.heap.load_acquire(addr))
+            }
+            MvRead::Estimate(blocking) => {
+                // A lower transaction is about to rewrite this value:
+                // abort the attempt and suspend on it.
+                self.blocked_on = Some(blocking);
+                Err(Abort(AbortCause::Conflict))
+            }
+        }
+    }
+
+    fn write(&mut self, addr: Addr, val: u64) -> TxResult<()> {
+        if let Some(slot) = self.writes.iter_mut().find(|w| w.0 == addr) {
+            slot.1 = val;
+        } else {
+            self.writes.push((addr, val));
+        }
+        Ok(())
+    }
+}
+
+/// One worker's borrowed view of the shared batch-run state.
+pub(super) struct Worker<'r, 'b> {
+    pub heap: &'r TxHeap,
+    pub txns: &'r [BatchTxn<'b>],
+    pub mv: &'r MvMemory,
+    pub scheduler: &'r Scheduler,
+    pub counters: &'r BatchCounters,
+}
+
+impl Worker<'_, '_> {
+    /// Pull and run tasks until the whole batch is executed+validated.
+    pub fn run(&self) {
+        let mut task: Option<Task> = None;
+        loop {
+            task = match task {
+                Some(Task::Execution(v)) => self.try_execute(v),
+                Some(Task::Validation(v)) => self.try_validate(v),
+                None => {
+                    if self.scheduler.done() {
+                        return;
+                    }
+                    std::hint::spin_loop();
+                    self.scheduler.next_task()
+                }
+            };
+        }
+    }
+
+    fn try_execute(&self, version: Version) -> Option<Task> {
+        let (txn, incarnation) = version;
+        loop {
+            self.counters.executions.fetch_add(1, Ordering::Relaxed);
+            let mut view = MvView {
+                heap: self.heap,
+                mv: self.mv,
+                txn,
+                reads: Vec::new(),
+                writes: Vec::new(),
+                blocked_on: None,
+            };
+            match (self.txns[txn].body)(&mut view) {
+                Ok(()) => {
+                    let wrote_new = self.mv.record(version, view.reads, &view.writes);
+                    return self.scheduler.finish_execution(txn, incarnation, wrote_new);
+                }
+                Err(_) => {
+                    let blocking = view.blocked_on.expect(
+                        "batch transaction bodies must be infallible apart from \
+                         ESTIMATE dependencies raised by the view itself",
+                    );
+                    self.counters.dependencies.fetch_add(1, Ordering::Relaxed);
+                    if self.scheduler.add_dependency(txn, blocking) {
+                        // Suspended; a later finish_execution re-readies
+                        // it with the next incarnation number.
+                        return None;
+                    }
+                    // The blocking transaction finished in the window
+                    // between our read and now: just re-run in place.
+                }
+            }
+        }
+    }
+
+    fn try_validate(&self, version: Version) -> Option<Task> {
+        let (txn, incarnation) = version;
+        self.counters.validations.fetch_add(1, Ordering::Relaxed);
+        let valid = self.mv.validate_read_set(txn);
+        let aborted = !valid && self.scheduler.try_validation_abort(txn, incarnation);
+        if aborted {
+            self.counters.validation_aborts.fetch_add(1, Ordering::Relaxed);
+            self.mv.convert_writes_to_estimates(txn);
+        }
+        self.scheduler.finish_validation(txn, aborted)
+    }
+}

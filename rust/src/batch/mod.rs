@@ -1,0 +1,329 @@
+//! `batch` — a Block-STM-style speculative batch executor: the fifth
+//! synchronization backend.
+//!
+//! The paper's executors ([`crate::hytm`]) admit transactions one at a
+//! time per thread and synchronize each against all concurrent peers.
+//! This subsystem instead admits a whole *batch* (a block) of
+//! transactions with a fixed serialization order — their index in the
+//! batch — and executes them optimistically in parallel:
+//!
+//! * [`mvmemory`] — a multi-version store keyed by `(txn_idx,
+//!   incarnation)` with ESTIMATE markers for aborted writes;
+//! * [`scheduler`] — execution/validation task streams over atomic
+//!   index counters (the Block-STM collaborative scheduler);
+//! * [`executor`] — the worker loop: execute against a recording
+//!   [`crate::tm::access::TxAccess`] view → record read/write sets →
+//!   validate → abort/re-incarnate;
+//! * [`workload`] — adapters feeding the SSCA-2 kernels and the
+//!   simulator's [`crate::sim::workload::TxnDesc`] shapes through the
+//!   batch API.
+//!
+//! **Determinism guarantee.** Whatever interleaving the workers take,
+//! the final heap state equals executing the batch *sequentially in
+//! index order* — bit for bit. That is what makes the backend
+//! measurable head-to-head against the paper's policies: same inputs,
+//! same outputs, different concurrency control. The guarantee is
+//! enforced by tests in this module and the `batch_determinism`
+//! property suite.
+//!
+//! Select it end-to-end with `--policy batch` (a
+//! [`crate::hytm::PolicySpec::Batch`] variant): the SSCA-2 generation
+//! and computation kernels then run through [`BatchSystem`].
+
+pub mod executor;
+pub mod mvmemory;
+pub mod scheduler;
+pub mod workload;
+
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+use crate::mem::TxHeap;
+use crate::stats::TxStats;
+use crate::tm::access::{TxAccess, TxResult};
+
+use executor::{BatchCounters, Worker};
+use mvmemory::MvMemory;
+use scheduler::Scheduler;
+
+/// Default number of transactions admitted per speculative block
+/// (`--policy batch=N` overrides it).
+pub const DEFAULT_BLOCK: usize = 2048;
+
+/// A batch transaction body. Must be a pure function of the values it
+/// reads through the access handle (it may be re-executed any number of
+/// times, concurrently with other transactions), and must not return
+/// `Err` of its own — only the speculative view aborts an attempt.
+pub type BatchBody<'b> = Box<dyn Fn(&mut dyn TxAccess) -> TxResult<()> + Send + Sync + 'b>;
+
+/// One transaction of a batch.
+pub struct BatchTxn<'b> {
+    pub body: BatchBody<'b>,
+}
+
+impl<'b> BatchTxn<'b> {
+    pub fn new(body: impl Fn(&mut dyn TxAccess) -> TxResult<()> + Send + Sync + 'b) -> Self {
+        Self {
+            body: Box::new(body),
+        }
+    }
+}
+
+/// Outcome counters of one (or several, merged) batch runs.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchReport {
+    /// Transactions committed (= batch size; every txn commits).
+    pub txns: usize,
+    /// Incarnation executions started.
+    pub executions: u64,
+    /// Validation tasks performed.
+    pub validations: u64,
+    /// Validation aborts (re-incarnations forced by a read-set change).
+    pub validation_aborts: u64,
+    /// Executions suspended on a lower transaction's ESTIMATE.
+    pub dependencies: u64,
+    pub elapsed: Duration,
+}
+
+impl BatchReport {
+    /// Accumulate another run (e.g. the next block of a long stream).
+    pub fn merge(&mut self, other: &BatchReport) {
+        self.txns += other.txns;
+        self.executions += other.executions;
+        self.validations += other.validations;
+        self.validation_aborts += other.validation_aborts;
+        self.dependencies += other.dependencies;
+        self.elapsed += other.elapsed;
+    }
+
+    /// Fold into the stats-plane shape: batch commits are software
+    /// commits (speculation in software, like an STM), re-executions
+    /// count as software aborts.
+    pub fn to_stats(&self) -> TxStats {
+        let mut s = TxStats::new();
+        s.sw_commits = self.txns as u64;
+        s.sw_aborts = self.validation_aborts + self.dependencies;
+        s.time_ns = self.elapsed.as_nanos() as u64;
+        s
+    }
+}
+
+/// The batch backend entry point.
+pub struct BatchSystem;
+
+impl BatchSystem {
+    /// Execute `txns` with `concurrency` workers. Blocks until every
+    /// transaction has committed, then flushes the winning versions to
+    /// `heap`. The final heap state is bit-identical to running the
+    /// batch sequentially in index order.
+    pub fn run(heap: &TxHeap, txns: &[BatchTxn<'_>], concurrency: usize) -> BatchReport {
+        let t0 = Instant::now();
+        if txns.is_empty() {
+            return BatchReport {
+                elapsed: t0.elapsed(),
+                ..BatchReport::default()
+            };
+        }
+        let workers = concurrency.max(1).min(txns.len());
+        let scheduler = Scheduler::new(txns.len());
+        let mv = MvMemory::new(txns.len());
+        let counters = BatchCounters::default();
+        // If a worker panics (a body violating the infallibility
+        // contract, or a bug in a user closure), it unwinds with
+        // `num_active` still elevated and the done-check could never
+        // fire — stranding its peers in the polling loop and hanging
+        // the join below. This guard halts the scheduler on the way
+        // out of a panicking worker; scope then joins everyone and
+        // re-raises the original panic.
+        struct HaltOnPanic<'a>(&'a Scheduler);
+        impl Drop for HaltOnPanic<'_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    self.0.halt();
+                }
+            }
+        }
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let w = Worker {
+                    heap,
+                    txns,
+                    mv: &mv,
+                    scheduler: &scheduler,
+                    counters: &counters,
+                };
+                s.spawn(move || {
+                    let _guard = HaltOnPanic(w.scheduler);
+                    w.run()
+                });
+            }
+        });
+        mv.write_back(heap);
+        BatchReport {
+            txns: txns.len(),
+            executions: counters.executions.load(Ordering::Relaxed),
+            validations: counters.validations.load(Ordering::Relaxed),
+            validation_aborts: counters.validation_aborts.load(Ordering::Relaxed),
+            dependencies: counters.dependencies.load(Ordering::Relaxed),
+            elapsed: t0.elapsed(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tm::access::DirectAccess;
+
+    fn counter_txns<'h>(addr: usize, n: usize) -> Vec<BatchTxn<'h>> {
+        (0..n)
+            .map(|_| {
+                BatchTxn::new(move |t: &mut dyn TxAccess| {
+                    let v = t.read(addr)?;
+                    t.write(addr, v + 1)
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let heap = TxHeap::new(64);
+        let r = BatchSystem::run(&heap, &[], 4);
+        assert_eq!(r.txns, 0);
+        assert_eq!(r.executions, 0);
+    }
+
+    #[test]
+    fn single_worker_matches_sequential() {
+        let heap = TxHeap::new(64);
+        let a = heap.alloc(1);
+        let r = BatchSystem::run(&heap, &counter_txns(a, 50), 1);
+        assert_eq!(r.txns, 50);
+        assert_eq!(heap.load(a), 50);
+    }
+
+    #[test]
+    fn high_conflict_counter_is_exact_under_concurrency() {
+        // Every transaction RMWs the same word: worst case for
+        // speculation, but the result must still be exact.
+        for workers in [2usize, 4, 8] {
+            let heap = TxHeap::new(64);
+            let a = heap.alloc(1);
+            heap.store(a, 1000);
+            let r = BatchSystem::run(&heap, &counter_txns(a, 200), workers);
+            assert_eq!(heap.load(a), 1200, "workers={workers}");
+            assert!(r.executions >= 200, "every txn executes at least once");
+            assert_eq!(r.txns, 200);
+        }
+    }
+
+    #[test]
+    fn disjoint_txns_commit_without_aborts() {
+        let heap = TxHeap::new(1 << 12);
+        let base = heap.alloc(256);
+        let txns: Vec<BatchTxn> = (0..64)
+            .map(|i| {
+                BatchTxn::new(move |t: &mut dyn TxAccess| {
+                    let v = t.read(base + i)?;
+                    t.write(base + i, v + 10 + i as u64)
+                })
+            })
+            .collect();
+        let r = BatchSystem::run(&heap, &txns, 4);
+        assert_eq!(r.validation_aborts, 0, "disjoint batch must not abort");
+        for i in 0..64usize {
+            assert_eq!(heap.load(base + i), 10 + i as u64);
+        }
+    }
+
+    #[test]
+    fn read_chain_respects_index_order() {
+        // txn i reads slot[i-1] and writes slot[i] = slot[i-1] + 1: the
+        // only correct outcome is the fully propagated chain, which
+        // forces the executor through dependencies/re-incarnations.
+        const N: usize = 32;
+        let heap = TxHeap::new(1 << 10);
+        let base = heap.alloc(N + 1);
+        heap.store(base, 7);
+        let txns: Vec<BatchTxn> = (0..N)
+            .map(|i| {
+                BatchTxn::new(move |t: &mut dyn TxAccess| {
+                    let v = t.read(base + i)?;
+                    t.write(base + i + 1, v + 1)
+                })
+            })
+            .collect();
+        for workers in [1usize, 3, 8] {
+            let heap2 = TxHeap::new(1 << 10);
+            let b2 = heap2.alloc(N + 1);
+            assert_eq!(b2, base);
+            heap2.store(b2, 7);
+            BatchSystem::run(&heap2, &txns, workers);
+            for i in 0..=N {
+                assert_eq!(heap2.load(b2 + i), 7 + i as u64, "slot {i}, workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn data_dependent_write_sets_match_sequential() {
+        // Append-to-log shape (the computation kernel's collect phase):
+        // the write address depends on a value read — write sets change
+        // across incarnations.
+        const N: usize = 40;
+        let run_seq = |heap: &TxHeap, txns: &[BatchTxn]| {
+            let mut acc = DirectAccess { heap };
+            for t in txns {
+                (t.body)(&mut acc).unwrap();
+            }
+        };
+        let mk_txns = |count_addr: usize, log_base: usize| -> Vec<BatchTxn<'static>> {
+            (0..N)
+                .map(|i| {
+                    BatchTxn::new(move |t: &mut dyn TxAccess| {
+                        let n = t.read(count_addr)?;
+                        t.write(log_base + n as usize, 1000 + i as u64)?;
+                        t.write(count_addr, n + 1)
+                    })
+                })
+                .collect()
+        };
+        let heap_a = TxHeap::new(1 << 10);
+        let count_a = heap_a.alloc_lines(1);
+        let log_a = heap_a.alloc(N);
+        run_seq(&heap_a, &mk_txns(count_a, log_a));
+
+        let heap_b = TxHeap::new(1 << 10);
+        let count_b = heap_b.alloc_lines(1);
+        let log_b = heap_b.alloc(N);
+        assert_eq!((count_a, log_a), (count_b, log_b));
+        BatchSystem::run(&heap_b, &mk_txns(count_b, log_b), 4);
+
+        assert_eq!(heap_a.load(count_a), heap_b.load(count_b));
+        for i in 0..N {
+            assert_eq!(heap_a.load(log_a + i), heap_b.load(log_b + i), "log slot {i}");
+        }
+    }
+
+    #[test]
+    fn report_merge_accumulates() {
+        let mut a = BatchReport {
+            txns: 10,
+            executions: 12,
+            validations: 11,
+            validation_aborts: 2,
+            dependencies: 1,
+            elapsed: Duration::from_millis(5),
+        };
+        let b = a;
+        a.merge(&b);
+        assert_eq!(a.txns, 20);
+        assert_eq!(a.executions, 24);
+        assert_eq!(a.elapsed, Duration::from_millis(10));
+        let s = a.to_stats();
+        assert_eq!(s.sw_commits, 20);
+        assert_eq!(s.sw_aborts, 6);
+        assert_eq!(s.total_commits(), 20);
+    }
+}

@@ -1,0 +1,267 @@
+//! Multi-version memory for the speculative batch executor.
+//!
+//! Every speculative write lands here, never in the [`TxHeap`] — the
+//! heap stays at its pre-batch snapshot until [`MvMemory::write_back`].
+//! Per address the structure keeps one entry per *transaction index*
+//! (only the latest incarnation of each), ordered, so a reader at index
+//! `i` picks the highest writer strictly below `i` and falls through to
+//! the heap when there is none. Entries of an aborted incarnation are
+//! flagged ESTIMATE: readers treat them as "this value is about to be
+//! rewritten" and suspend instead of speculating on a known-stale value.
+//!
+//! Addresses are word indices (`mem::Addr`), exactly what the
+//! [`crate::tm::access::TxAccess`] bodies already traffic in, so the
+//! same transaction closures run unchanged under HTM, STM, the locks,
+//! or this executor. Sharded mutex-protected hash maps keep neighbour
+//! cache lines in different shards (addresses are dense and small);
+//! each map value is a `BTreeMap<TxnIdx, _>` for the range scan.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
+
+use crate::mem::{Addr, TxHeap};
+
+use super::scheduler::{Incarnation, TxnIdx, Version};
+
+/// Shard count: a power of two well above any worker count we run.
+const SHARDS: usize = 64;
+
+#[derive(Clone, Copy, Debug)]
+struct Cell {
+    incarnation: Incarnation,
+    /// ESTIMATE marker: the owning incarnation was aborted and will
+    /// re-execute; readers must wait rather than consume the value.
+    estimate: bool,
+    value: u64,
+}
+
+/// Where a speculative read was served from — the version the read
+/// validates against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadOrigin {
+    /// Fell through to the (pre-batch) heap snapshot.
+    Base,
+    /// Served by a lower transaction's recorded write.
+    Version(Version),
+}
+
+/// One entry of a transaction's read set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReadDesc {
+    pub addr: Addr,
+    pub origin: ReadOrigin,
+}
+
+/// Result of a speculative read.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MvRead {
+    /// No lower writer: read the heap.
+    Base,
+    /// A lower transaction wrote this value.
+    Value(Version, u64),
+    /// A lower transaction's aborted write: suspend on that index.
+    Estimate(TxnIdx),
+}
+
+/// The multi-version store plus per-transaction read/write-set records.
+pub struct MvMemory {
+    shards: Vec<Mutex<HashMap<Addr, BTreeMap<TxnIdx, Cell>>>>,
+    /// Read set of each transaction's last *completed* incarnation.
+    reads: Vec<Mutex<Vec<ReadDesc>>>,
+    /// Write-set addresses of each transaction's last incarnation.
+    writes: Vec<Mutex<Vec<Addr>>>,
+}
+
+impl MvMemory {
+    pub fn new(n: usize) -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            reads: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            writes: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+        }
+    }
+
+    #[inline]
+    fn shard(&self, addr: Addr) -> &Mutex<HashMap<Addr, BTreeMap<TxnIdx, Cell>>> {
+        &self.shards[addr % SHARDS]
+    }
+
+    /// Read `addr` as transaction `txn`: the highest writer below `txn`,
+    /// or the heap when none exists.
+    pub fn read(&self, addr: Addr, txn: TxnIdx) -> MvRead {
+        let shard = self.shard(addr).lock().unwrap();
+        match shard.get(&addr).and_then(|m| m.range(..txn).next_back()) {
+            None => MvRead::Base,
+            Some((&writer, cell)) => {
+                if cell.estimate {
+                    MvRead::Estimate(writer)
+                } else {
+                    MvRead::Value((writer, cell.incarnation), cell.value)
+                }
+            }
+        }
+    }
+
+    /// Record a finished incarnation's read and write sets. Stale
+    /// entries from the previous incarnation (addresses no longer
+    /// written) are removed. Returns `true` when the incarnation wrote
+    /// to an address its predecessor did not — the scheduler then
+    /// forces higher transactions to revalidate.
+    pub fn record(&self, version: Version, reads: Vec<ReadDesc>, writes: &[(Addr, u64)]) -> bool {
+        let (txn, incarnation) = version;
+        for &(addr, value) in writes {
+            let mut shard = self.shard(addr).lock().unwrap();
+            shard.entry(addr).or_default().insert(
+                txn,
+                Cell {
+                    incarnation,
+                    estimate: false,
+                    value,
+                },
+            );
+        }
+        let mut prev = self.writes[txn].lock().unwrap();
+        let wrote_new = writes.iter().any(|&(addr, _)| !prev.contains(&addr));
+        for &addr in prev.iter() {
+            if !writes.iter().any(|&(a, _)| a == addr) {
+                let mut shard = self.shard(addr).lock().unwrap();
+                let emptied = match shard.get_mut(&addr) {
+                    Some(m) => {
+                        m.remove(&txn);
+                        m.is_empty()
+                    }
+                    None => false,
+                };
+                if emptied {
+                    shard.remove(&addr);
+                }
+            }
+        }
+        *prev = writes.iter().map(|&(addr, _)| addr).collect();
+        drop(prev);
+        *self.reads[txn].lock().unwrap() = reads;
+        wrote_new
+    }
+
+    /// Mark every write of `txn`'s last incarnation as an ESTIMATE
+    /// (called right after a validation abort wins, before the
+    /// re-execution is scheduled).
+    pub fn convert_writes_to_estimates(&self, txn: TxnIdx) {
+        let prev = self.writes[txn].lock().unwrap();
+        for &addr in prev.iter() {
+            let mut shard = self.shard(addr).lock().unwrap();
+            if let Some(cell) = shard.get_mut(&addr).and_then(|m| m.get_mut(&txn)) {
+                cell.estimate = true;
+            }
+        }
+    }
+
+    /// Re-read `txn`'s recorded read set and check every observed
+    /// version still matches. ESTIMATEs and changed versions fail.
+    pub fn validate_read_set(&self, txn: TxnIdx) -> bool {
+        let snapshot = self.reads[txn].lock().unwrap().clone();
+        snapshot.iter().all(|r| match (self.read(r.addr, txn), r.origin) {
+            (MvRead::Base, ReadOrigin::Base) => true,
+            (MvRead::Value(now, _), ReadOrigin::Version(then)) => now == then,
+            _ => false,
+        })
+    }
+
+    /// After the batch completes: flush the winning (highest-index)
+    /// version of every address into the heap. Equivalent to committing
+    /// the transactions one by one in index order.
+    pub fn write_back(&self, heap: &TxHeap) {
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            for (&addr, versions) in shard.iter() {
+                if let Some((_, cell)) = versions.iter().next_back() {
+                    debug_assert!(
+                        !cell.estimate,
+                        "ESTIMATE survived to write-back at addr {addr}"
+                    );
+                    heap.store_release(addr, cell.value);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_falls_through_to_base_then_sees_writers() {
+        let mv = MvMemory::new(4);
+        assert_eq!(mv.read(100, 2), MvRead::Base);
+        mv.record((1, 0), Vec::new(), &[(100, 7)]);
+        assert_eq!(mv.read(100, 2), MvRead::Value((1, 0), 7));
+        // A reader at or below the writer's index never sees it.
+        assert_eq!(mv.read(100, 1), MvRead::Base);
+        assert_eq!(mv.read(100, 0), MvRead::Base);
+    }
+
+    #[test]
+    fn highest_lower_writer_wins() {
+        let mv = MvMemory::new(5);
+        mv.record((0, 0), Vec::new(), &[(8, 10)]);
+        mv.record((2, 0), Vec::new(), &[(8, 20)]);
+        assert_eq!(mv.read(8, 1), MvRead::Value((0, 0), 10));
+        assert_eq!(mv.read(8, 3), MvRead::Value((2, 0), 20));
+        assert_eq!(mv.read(8, 4), MvRead::Value((2, 0), 20));
+    }
+
+    #[test]
+    fn estimates_surface_the_blocking_txn() {
+        let mv = MvMemory::new(3);
+        mv.record((1, 0), Vec::new(), &[(64, 5)]);
+        mv.convert_writes_to_estimates(1);
+        assert_eq!(mv.read(64, 2), MvRead::Estimate(1));
+        // Re-execution replaces the estimate.
+        mv.record((1, 1), Vec::new(), &[(64, 6)]);
+        assert_eq!(mv.read(64, 2), MvRead::Value((1, 1), 6));
+    }
+
+    #[test]
+    fn record_removes_stale_addresses_and_reports_new_ones() {
+        let mv = MvMemory::new(3);
+        assert!(mv.record((1, 0), Vec::new(), &[(8, 1), (16, 2)]));
+        // Same footprint: not new.
+        assert!(!mv.record((1, 1), Vec::new(), &[(8, 3), (16, 4)]));
+        // Different footprint: 24 is new, 16 goes stale.
+        assert!(mv.record((1, 2), Vec::new(), &[(8, 5), (24, 6)]));
+        assert_eq!(mv.read(16, 2), MvRead::Base, "stale entry must vanish");
+        assert_eq!(mv.read(24, 2), MvRead::Value((1, 2), 6));
+    }
+
+    #[test]
+    fn validation_tracks_version_changes() {
+        let mv = MvMemory::new(4);
+        mv.record((0, 0), Vec::new(), &[(8, 1)]);
+        // txn 2 read (0,0) at addr 8 and base at addr 16.
+        mv.record(
+            (2, 0),
+            vec![
+                ReadDesc { addr: 8, origin: ReadOrigin::Version((0, 0)) },
+                ReadDesc { addr: 16, origin: ReadOrigin::Base },
+            ],
+            &[],
+        );
+        assert!(mv.validate_read_set(2));
+        // txn 1 writes addr 16: txn 2's base read is now stale.
+        mv.record((1, 0), Vec::new(), &[(16, 9)]);
+        assert!(!mv.validate_read_set(2));
+    }
+
+    #[test]
+    fn write_back_commits_highest_version() {
+        let heap = TxHeap::new(256);
+        let a = heap.alloc(1);
+        heap.store(a, 1);
+        let mv = MvMemory::new(3);
+        mv.record((0, 0), Vec::new(), &[(a, 10)]);
+        mv.record((2, 1), Vec::new(), &[(a, 30)]);
+        mv.write_back(&heap);
+        assert_eq!(heap.load(a), 30);
+    }
+}

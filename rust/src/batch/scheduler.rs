@@ -1,0 +1,383 @@
+//! The Block-STM collaborative scheduler.
+//!
+//! Two logical task streams — execution and validation — are driven by
+//! two atomic counters over the batch's transaction indices. Workers
+//! pull whichever stream is further behind, preferring validations
+//! (they are cheap and unblock the commit prefix). A transaction's
+//! lifecycle is tracked per index:
+//!
+//! ```text
+//! ReadyToExecute --try_incarnate--> Executing --finish_execution--> Executed
+//!       ^                              |                               |
+//!       | set_ready (incarnation+1)    | add_dependency (ESTIMATE      | try_validation_abort
+//!       |                              v  read: suspend on lower txn)  v
+//!       +---------------------------- Aborting <-----------------------+
+//! ```
+//!
+//! The counters only ever move *down* through `fetch_min` when work is
+//! invalidated (a lower transaction re-executed or aborted), and a
+//! `decrease_cnt` generation counter makes the done-check safe against
+//! racing decreases — the same protocol as the Block-STM paper's
+//! Algorithm 4 and the scheduler in the SNIPPETS exemplars.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Index of a transaction inside one batch.
+pub type TxnIdx = usize;
+
+/// How many times a transaction has been (re-)executed.
+pub type Incarnation = u32;
+
+/// One executable unit: `(transaction index, incarnation)`.
+pub type Version = (TxnIdx, Incarnation);
+
+/// What a worker should do next.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    /// Run the transaction body speculatively and record its effects.
+    Execution(Version),
+    /// Re-read the recorded read set and compare observed versions.
+    Validation(Version),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    ReadyToExecute,
+    Executing,
+    Executed,
+    Aborting,
+}
+
+struct TxnState {
+    incarnation: Incarnation,
+    status: Status,
+    /// Transactions suspended waiting for this one to finish executing.
+    deps: Vec<TxnIdx>,
+}
+
+/// Shared scheduler state for one batch run.
+pub struct Scheduler {
+    n: usize,
+    execution_idx: AtomicUsize,
+    validation_idx: AtomicUsize,
+    /// Bumped on every counter decrease; lets `check_done` detect a
+    /// decrease racing its reads of the two indices.
+    decrease_cnt: AtomicUsize,
+    num_active: AtomicUsize,
+    done_marker: AtomicBool,
+    txns: Vec<Mutex<TxnState>>,
+}
+
+impl Scheduler {
+    pub fn new(n: usize) -> Self {
+        Self {
+            n,
+            execution_idx: AtomicUsize::new(0),
+            validation_idx: AtomicUsize::new(0),
+            decrease_cnt: AtomicUsize::new(0),
+            num_active: AtomicUsize::new(0),
+            done_marker: AtomicBool::new(n == 0),
+            txns: (0..n)
+                .map(|_| {
+                    Mutex::new(TxnState {
+                        incarnation: 0,
+                        status: Status::ReadyToExecute,
+                        deps: Vec::new(),
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    /// Has every transaction been executed and validated?
+    #[inline]
+    pub fn done(&self) -> bool {
+        self.done_marker.load(Ordering::SeqCst)
+    }
+
+    /// Emergency stop: flips the done marker so every worker drops out
+    /// of its polling loop. Used by the panic guard in
+    /// `BatchSystem::run` — one panicking worker (e.g. a transaction
+    /// body violating the infallibility contract) must not strand its
+    /// peers spinning forever on a `num_active` count that can no
+    /// longer reach zero.
+    pub fn halt(&self) {
+        self.done_marker.store(true, Ordering::SeqCst);
+    }
+
+    fn decrease_execution_idx(&self, t: TxnIdx) {
+        self.execution_idx.fetch_min(t, Ordering::SeqCst);
+        self.decrease_cnt.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn decrease_validation_idx(&self, t: TxnIdx) {
+        self.validation_idx.fetch_min(t, Ordering::SeqCst);
+        self.decrease_cnt.fetch_add(1, Ordering::SeqCst);
+    }
+
+    fn check_done(&self) {
+        let observed = self.decrease_cnt.load(Ordering::SeqCst);
+        if self.execution_idx.load(Ordering::SeqCst) >= self.n
+            && self.validation_idx.load(Ordering::SeqCst) >= self.n
+            && self.num_active.load(Ordering::SeqCst) == 0
+            && observed == self.decrease_cnt.load(Ordering::SeqCst)
+        {
+            self.done_marker.store(true, Ordering::SeqCst);
+        }
+    }
+
+    fn try_incarnate(&self, t: TxnIdx) -> Option<Version> {
+        let mut s = self.txns[t].lock().unwrap();
+        if s.status == Status::ReadyToExecute {
+            s.status = Status::Executing;
+            Some((t, s.incarnation))
+        } else {
+            None
+        }
+    }
+
+    fn next_version_to_execute(&self) -> Option<Version> {
+        if self.execution_idx.load(Ordering::SeqCst) >= self.n {
+            // Counted-active workers never sit in this branch, so the
+            // done-check can observe num_active == 0.
+            self.check_done();
+            return None;
+        }
+        self.num_active.fetch_add(1, Ordering::SeqCst);
+        let idx = self.execution_idx.fetch_add(1, Ordering::SeqCst);
+        if idx < self.n {
+            if let Some(v) = self.try_incarnate(idx) {
+                return Some(v);
+            }
+        }
+        self.num_active.fetch_sub(1, Ordering::SeqCst);
+        None
+    }
+
+    fn next_version_to_validate(&self) -> Option<Version> {
+        if self.validation_idx.load(Ordering::SeqCst) >= self.n {
+            self.check_done();
+            return None;
+        }
+        self.num_active.fetch_add(1, Ordering::SeqCst);
+        let idx = self.validation_idx.fetch_add(1, Ordering::SeqCst);
+        if idx < self.n {
+            let s = self.txns[idx].lock().unwrap();
+            if s.status == Status::Executed {
+                return Some((idx, s.incarnation));
+            }
+        }
+        self.num_active.fetch_sub(1, Ordering::SeqCst);
+        None
+    }
+
+    /// Pull the next task, preferring the stream that is further
+    /// behind. Returns `None` when no task was available *right now*
+    /// (the caller re-polls until [`Scheduler::done`]).
+    pub fn next_task(&self) -> Option<Task> {
+        if self.done() {
+            return None;
+        }
+        if self.validation_idx.load(Ordering::SeqCst)
+            < self.execution_idx.load(Ordering::SeqCst)
+        {
+            self.next_version_to_validate().map(Task::Validation)
+        } else {
+            self.next_version_to_execute().map(Task::Execution)
+        }
+    }
+
+    /// The executing `txn` read an ESTIMATE written by `blocking`
+    /// (always a lower index): suspend it until `blocking` finishes.
+    /// Returns `false` when `blocking` already finished — the caller
+    /// should simply re-execute instead of suspending.
+    pub fn add_dependency(&self, txn: TxnIdx, blocking: TxnIdx) -> bool {
+        debug_assert!(blocking < txn, "dependencies only point down");
+        // Locks are taken in ascending index order everywhere, so the
+        // (blocking, txn) pair cannot deadlock.
+        let mut b = self.txns[blocking].lock().unwrap();
+        if b.status == Status::Executed {
+            return false;
+        }
+        {
+            let mut t = self.txns[txn].lock().unwrap();
+            debug_assert_eq!(t.status, Status::Executing);
+            t.status = Status::Aborting;
+        }
+        b.deps.push(txn);
+        drop(b);
+        // The execution task halts here; the dependency resume path
+        // re-dispatches it.
+        self.num_active.fetch_sub(1, Ordering::SeqCst);
+        true
+    }
+
+    fn set_ready(&self, t: TxnIdx) {
+        let mut s = self.txns[t].lock().unwrap();
+        debug_assert_eq!(s.status, Status::Aborting);
+        s.incarnation += 1;
+        s.status = Status::ReadyToExecute;
+    }
+
+    /// Incarnation `(txn, incarnation)` finished executing and its
+    /// effects are recorded. Resumes suspended dependents and decides
+    /// what (if anything) to validate next. Returns a follow-up task
+    /// for the same worker, or `None` (task complete).
+    pub fn finish_execution(
+        &self,
+        txn: TxnIdx,
+        incarnation: Incarnation,
+        wrote_new_location: bool,
+    ) -> Option<Task> {
+        let deps = {
+            let mut s = self.txns[txn].lock().unwrap();
+            debug_assert_eq!(s.status, Status::Executing);
+            debug_assert_eq!(s.incarnation, incarnation);
+            s.status = Status::Executed;
+            std::mem::take(&mut s.deps)
+        };
+        if let Some(&min_dep) = deps.iter().min() {
+            for &d in &deps {
+                self.set_ready(d);
+            }
+            self.decrease_execution_idx(min_dep);
+        }
+        if self.validation_idx.load(Ordering::SeqCst) > txn {
+            if wrote_new_location {
+                // Writes appeared at fresh addresses: everything at or
+                // above this index must revalidate.
+                self.decrease_validation_idx(txn);
+            } else {
+                // Same write footprint as before: only this transaction
+                // needs validating, and this worker does it in place.
+                return Some(Task::Validation((txn, incarnation)));
+            }
+        }
+        self.num_active.fetch_sub(1, Ordering::SeqCst);
+        None
+    }
+
+    /// Try to claim the abort of `(txn, incarnation)` after a failed
+    /// validation. Only one claimant wins; a loser's stale verdict is
+    /// simply dropped.
+    pub fn try_validation_abort(&self, txn: TxnIdx, incarnation: Incarnation) -> bool {
+        let mut s = self.txns[txn].lock().unwrap();
+        if s.status == Status::Executed && s.incarnation == incarnation {
+            s.status = Status::Aborting;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Wrap up a validation task. On abort: bump the incarnation,
+    /// force higher transactions to revalidate, and hand the
+    /// re-execution to this worker when possible.
+    pub fn finish_validation(&self, txn: TxnIdx, aborted: bool) -> Option<Task> {
+        if aborted {
+            self.set_ready(txn);
+            self.decrease_validation_idx(txn + 1);
+            if self.execution_idx.load(Ordering::SeqCst) > txn {
+                if let Some(v) = self.try_incarnate(txn) {
+                    return Some(Task::Execution(v));
+                }
+            }
+        }
+        self.num_active.fetch_sub(1, Ordering::SeqCst);
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_batch_is_done_immediately() {
+        let s = Scheduler::new(0);
+        assert!(s.done());
+        assert_eq!(s.next_task(), None);
+    }
+
+    #[test]
+    fn single_txn_execute_then_validate_then_done() {
+        let s = Scheduler::new(1);
+        let t = s.next_task().unwrap();
+        assert_eq!(t, Task::Execution((0, 0)));
+        // First incarnation wrote new locations but nothing is above
+        // it; validation_idx == 0 is not > 0, so no inline validation.
+        assert_eq!(s.finish_execution(0, 0, true), None);
+        let t = s.next_task().unwrap();
+        assert_eq!(t, Task::Validation((0, 0)));
+        assert_eq!(s.finish_validation(0, false), None);
+        // Drain the counters past n; the done marker flips.
+        for _ in 0..4 {
+            if s.next_task().is_some() {
+                panic!("no tasks should remain");
+            }
+            if s.done() {
+                return;
+            }
+        }
+        panic!("scheduler never reached done");
+    }
+
+    #[test]
+    fn validation_abort_reincarnates() {
+        let s = Scheduler::new(2);
+        assert_eq!(s.next_task(), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(), Some(Task::Execution((1, 0))));
+        assert_eq!(s.finish_execution(0, 0, true), None);
+        assert_eq!(s.finish_execution(1, 0, true), None);
+        // Validate 0 fine, abort 1.
+        assert_eq!(s.next_task(), Some(Task::Validation((0, 0))));
+        assert_eq!(s.finish_validation(0, false), None);
+        assert_eq!(s.next_task(), Some(Task::Validation((1, 0))));
+        assert!(s.try_validation_abort(1, 0));
+        // Second claimant loses.
+        assert!(!s.try_validation_abort(1, 0));
+        let t = s.finish_validation(1, true);
+        assert_eq!(t, Some(Task::Execution((1, 1))), "re-incarnated in place");
+        assert_eq!(s.finish_execution(1, 1, false), Some(Task::Validation((1, 1))));
+        assert_eq!(s.finish_validation(1, false), None);
+        while !s.done() {
+            assert_eq!(s.next_task(), None);
+        }
+    }
+
+    #[test]
+    fn dependency_suspends_and_resumes() {
+        let s = Scheduler::new(2);
+        assert_eq!(s.next_task(), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(), Some(Task::Execution((1, 0))));
+        // txn 1 reads an ESTIMATE from txn 0: suspend.
+        assert!(s.add_dependency(1, 0));
+        // txn 0 finishing must resume txn 1 with incarnation 1.
+        assert_eq!(s.finish_execution(0, 0, true), None);
+        let mut saw_exec1 = false;
+        for _ in 0..8 {
+            match s.next_task() {
+                Some(Task::Execution((1, 1))) => {
+                    saw_exec1 = true;
+                    break;
+                }
+                Some(Task::Validation((0, 0))) => {
+                    s.finish_validation(0, false);
+                }
+                Some(other) => panic!("unexpected task {other:?}"),
+                None => {}
+            }
+        }
+        assert!(saw_exec1, "suspended txn was never re-dispatched");
+    }
+
+    #[test]
+    fn add_dependency_fails_after_blocking_executed() {
+        let s = Scheduler::new(2);
+        assert_eq!(s.next_task(), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(), Some(Task::Execution((1, 0))));
+        assert_eq!(s.finish_execution(0, 0, true), None);
+        assert!(!s.add_dependency(1, 0), "blocking txn already executed");
+    }
+}

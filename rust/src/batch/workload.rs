@@ -1,0 +1,324 @@
+//! Feeding real workloads through the batch executor.
+//!
+//! Three adapters:
+//!
+//! * SSCA-2 **generation kernel**: the tuple list becomes one insert
+//!   transaction per `cfg.batch` edges, with the *same* cell-assignment
+//!   order as the sequential path — so the built graph is bit-identical
+//!   to a serial build, whatever the workers do.
+//! * SSCA-2 **computation kernel**: chunked gmax probes (phase 1) and
+//!   in-cell-order band appends (phase 2).
+//! * **Descriptor bodies**: turn the simulator's
+//!   [`TxnDesc`](crate::sim::workload::TxnDesc) cache-line footprints
+//!   into executable read/modify/write bodies on a scratch heap — the
+//!   substrate of the `batch_determinism` property tests.
+
+use std::time::{Duration, Instant};
+
+use crate::graph::computation::{append_results, ComputationResult, COLLECT_FLUSH};
+use crate::graph::generation::insert_edge;
+use crate::graph::layout::Graph;
+use crate::graph::rmat::EdgeTuple;
+use crate::mem::{TxHeap, WORDS_PER_LINE};
+use crate::sim::workload::TxnDesc;
+use crate::stats::StatsTable;
+use crate::tm::access::{DirectAccess, TxAccess, TxResult};
+
+use super::{BatchReport, BatchSystem, BatchTxn};
+
+/// Scanned edges folded into one gmax-probe transaction (phase 1 of
+/// the computation kernel under the batch backend).
+pub const PROBE_CHUNK: usize = 16;
+
+/// Transaction `j` of the edge-insertion batch: inserts
+/// `tuples[j*chunk..][..chunk]` into cells `j*chunk ..`, matching the
+/// cell order a sequential insert produces.
+pub fn edge_insert_txn<'g>(
+    g: &'g Graph,
+    tuples: &'g [EdgeTuple],
+    chunk: usize,
+    j: usize,
+) -> BatchTxn<'g> {
+    let chunk = chunk.max(1);
+    let lo = j * chunk;
+    let hi = (lo + chunk).min(tuples.len());
+    let slice = &tuples[lo..hi];
+    BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
+        for (k, e) in slice.iter().enumerate() {
+            // The same critical section every other backend runs —
+            // shared so all builds stay bit-identical.
+            insert_edge(t, g, lo + k, e)?;
+        }
+        Ok(())
+    })
+}
+
+/// All edge-insertion transactions for `tuples`, `chunk` edges per
+/// transaction. Convenience for tests/examples; the streaming
+/// [`run_generation`] below builds one block at a time instead.
+pub fn edge_insert_txns<'g>(
+    g: &'g Graph,
+    tuples: &'g [EdgeTuple],
+    chunk: usize,
+) -> Vec<BatchTxn<'g>> {
+    let chunk = chunk.max(1);
+    (0..tuples.len().div_ceil(chunk))
+        .map(|j| edge_insert_txn(g, tuples, chunk, j))
+        .collect()
+}
+
+/// Generation kernel through [`BatchSystem`]: blocks of `block`
+/// transactions, `concurrency` workers each. Mirrors the signature of
+/// [`crate::graph::generation::run`]. Blocks are constructed lazily so
+/// peak memory is O(block), not O(edges).
+pub fn run_generation(
+    g: &Graph,
+    tuples: &[EdgeTuple],
+    concurrency: usize,
+    block: usize,
+) -> (Duration, StatsTable) {
+    let t0 = Instant::now();
+    let chunk = g.cfg.batch.max(1);
+    let block = block.max(1);
+    let n_txns = tuples.len().div_ceil(chunk);
+    let mut report = BatchReport::default();
+    let mut j0 = 0;
+    while j0 < n_txns {
+        let j1 = (j0 + block).min(n_txns);
+        let blk: Vec<BatchTxn> = (j0..j1)
+            .map(|j| edge_insert_txn(g, tuples, chunk, j))
+            .collect();
+        report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
+        j0 = j1;
+    }
+    // The transactional paths advance the pool cursor as they reserve
+    // cells; the batch path assigns cells by index, so it settles the
+    // cursor once at the end — same final value.
+    g.heap.store(g.pool_cursor, tuples.len() as u64);
+    let elapsed = t0.elapsed();
+    let mut table = StatsTable::new();
+    let mut stats = report.to_stats();
+    stats.time_ns = elapsed.as_nanos() as u64;
+    table.push(0, stats);
+    (elapsed, table)
+}
+
+fn append_txn(g: &Graph, cells: Vec<u64>) -> BatchTxn<'_> {
+    BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
+        append_results(t, g, &cells)
+    })
+}
+
+/// Computation kernel through [`BatchSystem`]. Mirrors
+/// [`crate::graph::computation::run`]: phase 1 finds the max weight
+/// (chunked probes), phase 2 appends the top band in cell order.
+pub fn run_computation(g: &Graph, concurrency: usize, block: usize) -> ComputationResult {
+    let t0 = Instant::now();
+    let total_cells = g.cells_allocated();
+    let block = block.max(1);
+
+    // Phase 1: gmax probes. Weights are immutable after generation, so
+    // each body scans its cell range non-transactionally (exactly as
+    // the sequential kernel does) — the transaction is the paper's
+    // `read gmax; maybe write` critical section, PROBE_CHUNK scanned
+    // edges per txn. Closures capture only their (lo, hi) range, so
+    // nothing is materialized up front.
+    let gmax_addr = g.gmax;
+    let mut report = BatchReport::default();
+    let n_probes = total_cells.div_ceil(PROBE_CHUNK);
+    let mut j0 = 0;
+    while j0 < n_probes {
+        let j1 = (j0 + block).min(n_probes);
+        let blk: Vec<BatchTxn> = (j0..j1)
+            .map(|j| {
+                let lo = j * PROBE_CHUNK;
+                let hi = (lo + PROBE_CHUNK).min(total_cells);
+                BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
+                    let mut cur = t.read(gmax_addr)?;
+                    for i in lo..hi {
+                        let w = g.heap.load(g.cell(i) + Graph::CELL_WEIGHT);
+                        if w > cur {
+                            t.write(gmax_addr, w)?;
+                            cur = w;
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
+        j0 = j1;
+    }
+
+    let max_weight = g.heap.load(g.gmax) as u32;
+    let cutoff = g.weight_cutoff() as u64;
+
+    // Phase 2: collect the band, `flush` hits per append transaction,
+    // in cell order — the deterministic sequential order. Blocks are
+    // flushed to the executor as they fill, keeping memory O(block).
+    let flush = g.cfg.batch.max(COLLECT_FLUSH);
+    let mut blk: Vec<BatchTxn> = Vec::new();
+    let mut pending: Vec<u64> = Vec::new();
+    for i in 0..total_cells {
+        let cell = g.cell(i);
+        if g.heap.load(cell + Graph::CELL_WEIGHT) > cutoff {
+            pending.push(cell as u64);
+            if pending.len() == flush {
+                blk.push(append_txn(g, std::mem::take(&mut pending)));
+                if blk.len() == block {
+                    report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
+                    blk.clear();
+                }
+            }
+        }
+    }
+    if !pending.is_empty() {
+        blk.push(append_txn(g, pending));
+    }
+    if !blk.is_empty() {
+        report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
+    }
+
+    let selected = g.heap.load(g.result_count) as usize;
+    let elapsed = t0.elapsed();
+    let mut table = StatsTable::new();
+    let mut stats = report.to_stats();
+    stats.time_ns = elapsed.as_nanos() as u64;
+    table.push(0, stats);
+    ComputationResult {
+        max_weight,
+        cutoff: cutoff as u32,
+        selected,
+        elapsed,
+        stats: table,
+    }
+}
+
+/// Turn a simulator descriptor into an executable body on a scratch
+/// heap: reads fold into an accumulator, each written line is
+/// read-modify-written with a mix of the accumulator. The result is a
+/// deterministic function of the memory the body observes, so batch
+/// and sequential execution must agree bit-for-bit. Lines map to
+/// addresses as `line * WORDS_PER_LINE`; callers bound `wlines` /
+/// `rlines` by `heap.capacity() / WORDS_PER_LINE`.
+pub fn desc_txn(desc: TxnDesc, salt: u64) -> BatchTxn<'static> {
+    BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
+        let mut acc = salt;
+        for &line in desc.rlines() {
+            acc ^= t.read(line as usize * WORDS_PER_LINE)?;
+        }
+        for &line in desc.wlines() {
+            let addr = line as usize * WORDS_PER_LINE;
+            let v = t.read(addr)?;
+            acc = acc
+                .rotate_left(13)
+                .wrapping_add(v ^ 0x9E37_79B9_7F4A_7C15);
+            t.write(addr, acc)?;
+        }
+        Ok(())
+    })
+}
+
+/// Sequential oracle: run the batch in index order, directly against
+/// the heap. Defines the state every concurrent execution must match.
+pub fn run_sequential(heap: &TxHeap, txns: &[BatchTxn<'_>]) {
+    let mut acc = DirectAccess { heap };
+    for txn in txns {
+        (txn.body)(&mut acc).expect("direct execution cannot abort");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::layout::Ssca2Config;
+    use crate::graph::{rmat, verify};
+
+    #[test]
+    fn batched_generation_matches_serial_build_bitwise() {
+        let cfg = Ssca2Config::new(7);
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+
+        // Serial oracle.
+        let ga = Graph::alloc(cfg);
+        run_sequential(&ga.heap, &edge_insert_txns(&ga, &tuples, 1));
+        ga.heap.store(ga.pool_cursor, tuples.len() as u64);
+
+        // Batch backend, several worker counts.
+        for workers in [1usize, 2, 4] {
+            let gb = Graph::alloc(cfg);
+            let (_, table) = run_generation(&gb, &tuples, workers, 256);
+            verify::check_graph(&gb, &tuples).unwrap();
+            assert_eq!(
+                table.total().total_commits(),
+                tuples.len() as u64,
+                "one commit per edge at chunk=1"
+            );
+            assert_eq!(ga.heap.allocated(), gb.heap.allocated());
+            for addr in 0..ga.heap.allocated() {
+                assert_eq!(
+                    ga.heap.load(addr),
+                    gb.heap.load(addr),
+                    "heap divergence at word {addr} with {workers} workers"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_generation_matches_too() {
+        let mut cfg = Ssca2Config::new(6);
+        cfg.batch = 8;
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        let g = Graph::alloc(cfg);
+        let (_, table) = run_generation(&g, &tuples, 3, 64);
+        verify::check_graph(&g, &tuples).unwrap();
+        assert_eq!(
+            table.total().total_commits(),
+            (tuples.len() as u64).div_ceil(8)
+        );
+    }
+
+    #[test]
+    fn batch_computation_finds_true_max_and_band() {
+        let cfg = Ssca2Config::new(6);
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        let g = Graph::alloc(cfg);
+        run_sequential(&g.heap, &edge_insert_txns(&g, &tuples, 1));
+        g.heap.store(g.pool_cursor, tuples.len() as u64);
+
+        let r = run_computation(&g, 4, 128);
+        let true_max = tuples.iter().map(|e| e.weight).max().unwrap();
+        assert_eq!(r.max_weight, true_max);
+        verify::check_results(&g, &tuples).unwrap();
+        assert!(r.selected > 0);
+    }
+
+    #[test]
+    fn desc_txn_is_deterministic() {
+        let heap_a = TxHeap::new(32 * WORDS_PER_LINE);
+        let heap_b = TxHeap::new(32 * WORDS_PER_LINE);
+        let mut d = TxnDesc {
+            work: 0,
+            wlines: [0; crate::sim::workload::MAX_WLINES],
+            n_wlines: 2,
+            rlines: [0; 2],
+            n_rlines: 1,
+            n_reads: 0,
+            n_writes: 0,
+            footprint_lines: 0,
+        };
+        d.wlines[0] = 3;
+        d.wlines[1] = 5;
+        d.rlines[0] = 7;
+        let txns = vec![desc_txn(d, 42), desc_txn(d, 43)];
+        run_sequential(&heap_a, &txns);
+        BatchSystem::run(&heap_b, &txns, 2);
+        for line in [3usize, 5, 7] {
+            assert_eq!(
+                heap_a.load(line * WORDS_PER_LINE),
+                heap_b.load(line * WORDS_PER_LINE)
+            );
+        }
+    }
+}

@@ -61,6 +61,18 @@ fn scan_and_merge_max(g: &Graph, ex: &mut ThreadExecutor<'_>, lo: usize, hi: usi
     }
 }
 
+/// The collect-phase append critical section, shared with the batch
+/// backend (`crate::batch::workload`): push `cells` onto the shared
+/// result list and bump its count. One definition keeps every backend's
+/// result-list protocol in lockstep.
+pub fn append_results(t: &mut dyn TxAccess, g: &Graph, cells: &[u64]) -> TxResult<()> {
+    let count = t.read(g.result_count)?;
+    for (k, &cell) in cells.iter().enumerate() {
+        t.write(g.results_base + count as usize + k, cell)?;
+    }
+    t.write(g.result_count, count + cells.len() as u64)
+}
+
 /// Phase 2 worker: append every top-band edge to the shared list.
 /// Appends are batched `batch` edges per transaction (the same task-size
 /// knob as the generation kernel).
@@ -80,12 +92,7 @@ fn collect_band(
             return;
         }
         ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<()> {
-            let count = t.read(g.result_count)?;
-            for (k, &cell) in pending.iter().enumerate() {
-                t.write(g.results_base + count as usize + k, cell)?;
-            }
-            t.write(g.result_count, count + pending.len() as u64)?;
-            Ok(())
+            append_results(t, g, pending)
         });
         pending.clear();
     };
@@ -115,6 +122,11 @@ pub fn run(
     seed: u64,
 ) -> ComputationResult {
     assert!(threads >= 1);
+    if let PolicySpec::Batch { block } = spec {
+        // Speculative batch backend: same two phases, admitted as
+        // blocks of deterministic-order transactions.
+        return crate::batch::workload::run_computation(g, threads, block);
+    }
     let total_cells = g.cells_allocated();
     let t0 = Instant::now();
     let mut table = StatsTable::new();
@@ -212,6 +224,7 @@ mod tests {
             PolicySpec::HtmALock { retries: 8 },
             PolicySpec::Rnd { lo: 1, hi: 50 },
             PolicySpec::DyAd { n: 43 },
+            PolicySpec::Batch { block: 128 },
         ] {
             let (sys, g, tuples) = built(6);
             let r = run(&sys, &g, spec, 4, 11);

@@ -28,6 +28,30 @@ use crate::tm::access::{TxAccess, TxResult};
 use super::layout::{Graph, POOL_CHUNK_CELLS};
 use super::rmat::EdgeTuple;
 
+/// The paper's per-edge critical section, shared by every backend that
+/// builds the graph (the policy executors here and the speculative
+/// batch path in `crate::batch::workload`): link a fresh cell at
+/// `cell_index` in front of `e.src`'s adjacency list and bump its
+/// degree. Keeping this in one place is what guarantees all backends
+/// build bit-identical graphs.
+pub fn insert_edge(
+    t: &mut dyn TxAccess,
+    g: &Graph,
+    cell_index: usize,
+    e: &EdgeTuple,
+) -> TxResult<()> {
+    let cell = g.cell(cell_index);
+    let head = g.head(e.src);
+    let old = t.read(head)?;
+    t.write(cell + Graph::CELL_DST, e.dst as u64)?;
+    t.write(cell + Graph::CELL_WEIGHT, e.weight as u64)?;
+    t.write(cell + Graph::CELL_NEXT, old)?;
+    t.write(cell + Graph::CELL_ID, cell_index as u64 + 1)?;
+    t.write(head, cell as u64)?;
+    let deg = t.read(g.degree(e.src))?;
+    t.write(g.degree(e.src), deg + 1)
+}
+
 /// Insert `tuples[lo..hi]` as one thread's share; returns this thread's
 /// stats. `executor` carries the policy.
 pub fn insert_slice(
@@ -63,16 +87,7 @@ pub fn insert_slice(
         // The critical section: insert `chunk.len()` edges atomically.
         ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<()> {
             for (k, e) in chunk.iter().enumerate() {
-                let cell = g.cell(first_cell + k);
-                let head = g.head(e.src);
-                let old = t.read(head)?;
-                t.write(cell + Graph::CELL_DST, e.dst as u64)?;
-                t.write(cell + Graph::CELL_WEIGHT, e.weight as u64)?;
-                t.write(cell + Graph::CELL_NEXT, old)?;
-                t.write(cell + Graph::CELL_ID, (first_cell + k) as u64 + 1)?;
-                t.write(head, cell as u64)?;
-                let deg = t.read(g.degree(e.src))?;
-                t.write(g.degree(e.src), deg + 1)?;
+                insert_edge(t, g, first_cell + k, e)?;
             }
             Ok(())
         });
@@ -93,6 +108,11 @@ pub fn run(
     seed: u64,
 ) -> (Duration, StatsTable) {
     assert!(threads >= 1);
+    if let PolicySpec::Batch { block } = spec {
+        // The batch backend owns its own worker pool and serialization
+        // order; `threads` becomes its concurrency level.
+        return crate::batch::workload::run_generation(g, tuples, threads, block);
+    }
     let t0 = Instant::now();
     let mut table = StatsTable::new();
     let shard = tuples.len().div_ceil(threads);
@@ -157,6 +177,7 @@ mod tests {
             PolicySpec::StmNorec,
             PolicySpec::HtmSpin { retries: 8 },
             PolicySpec::DyAd { n: 43 },
+            PolicySpec::Batch { block: 256 },
         ] {
             let (sys, g, tuples) = setup(7);
             let (_, table) = run(&sys, &g, &tuples, spec, 4, 99);

@@ -46,6 +46,13 @@ pub enum PolicySpec {
     /// PhTM (Lev et al.): phase-global HW/SW switching — the paper's
     /// taxonomy class 2, as an ablation baseline (A5).
     PhTm { retries: u32, sw_quantum: u32 },
+    /// Block-STM-style speculative batch execution (`crate::batch`):
+    /// transactions are admitted in blocks of `block` with a fixed
+    /// serialization order and run against multi-version memory. The
+    /// graph kernels dispatch this spec to `batch::BatchSystem`; a
+    /// single transaction fed through `ThreadExecutor` degenerates to a
+    /// batch of one, i.e. one optimistic software attempt.
+    Batch { block: usize },
 }
 
 impl PolicySpec {
@@ -93,6 +100,7 @@ impl PolicySpec {
             PolicySpec::DyAd { .. } => "dyad-hytm",
             PolicySpec::DyAdTl2 { .. } => "dyad-tl2",
             PolicySpec::PhTm { .. } => "phtm",
+            PolicySpec::Batch { .. } => "batch",
         }
     }
 
@@ -133,6 +141,11 @@ impl PolicySpec {
             "phtm" => PolicySpec::PhTm {
                 retries: n_or(8),
                 sw_quantum: 64,
+            },
+            "batch" => PolicySpec::Batch {
+                block: arg
+                    .and_then(|a| a.parse().ok())
+                    .unwrap_or(crate::batch::DEFAULT_BLOCK),
             },
             _ => return None,
         })
@@ -233,6 +246,11 @@ impl<'s> ThreadExecutor<'s> {
                 retries,
                 sw_quantum,
             } => self.run_phtm(retries, sw_quantum as u64, body),
+            // A batch of one is exactly one optimistic software
+            // attempt; batch-level speculation lives in
+            // `crate::batch::BatchSystem`, which the graph kernels
+            // dispatch to directly for this spec.
+            PolicySpec::Batch { .. } => self.run_stm_norec(body),
         }
     }
 
@@ -461,6 +479,9 @@ mod tests {
             PolicySpec::DyAd { n: 43 },
             PolicySpec::DyAdTl2 { n: 43 },
             PolicySpec::PhTm { retries: 4, sw_quantum: 16 },
+            PolicySpec::Batch {
+                block: crate::batch::DEFAULT_BLOCK,
+            },
         ]
     }
 
@@ -483,6 +504,36 @@ mod tests {
             Some(PolicySpec::HtmSpin { retries: 3 })
         );
         assert_eq!(PolicySpec::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn parse_roundtrips_fig_sets_and_batch_exactly() {
+        // Satellite guarantee: `parse(name()) == Some(spec)` — not just
+        // name equality — for every figure-set variant and the batch
+        // backend, so the CLI defaults match the paper defaults.
+        let mut specs = PolicySpec::fig2_set();
+        specs.extend(PolicySpec::fig3_set());
+        specs.push(PolicySpec::Batch {
+            block: crate::batch::DEFAULT_BLOCK,
+        });
+        for spec in specs {
+            assert_eq!(
+                PolicySpec::parse(spec.name()),
+                Some(spec),
+                "default-parameter round-trip for {}",
+                spec.name()
+            );
+        }
+        assert_eq!(
+            PolicySpec::parse("batch=512"),
+            Some(PolicySpec::Batch { block: 512 })
+        );
+        assert_eq!(
+            PolicySpec::parse("batch"),
+            Some(PolicySpec::Batch {
+                block: crate::batch::DEFAULT_BLOCK
+            })
+        );
     }
 
     #[test]

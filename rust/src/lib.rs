@@ -18,9 +18,27 @@
 //!   Rust via the PJRT CPU client ([`runtime`]). Python never runs on the
 //!   request path.
 //!
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record.
+//! ## The batch backend
+//!
+//! Beyond the paper's four retry policies, the crate carries a fifth
+//! synchronization backend: [`batch`], a Block-STM-style speculative
+//! batch executor. Instead of admitting transactions one at a time,
+//! it admits a *block* with a fixed serialization order (batch index)
+//! and executes the block optimistically over multi-version memory —
+//! execution/validation task streams, ESTIMATE markers, and
+//! abort/re-incarnate recovery. Its output is guaranteed bit-identical
+//! to sequential execution of the block, which makes it directly
+//! comparable against the paper's policies on the same SSCA-2 kernels:
+//! select it with `--policy batch[=BLOCK]` from the CLI, or
+//! `PolicySpec::Batch` programmatically. See `benches/batch_throughput`
+//! for the head-to-head measurement.
+//!
+//! System inventory and the paper-vs-measured record live in
+//! `ROADMAP.md` (north star, open items) and `PAPER.md` (source
+//! abstract) at the repository root; per-module documentation below is
+//! the detailed design reference.
 
+pub mod batch;
 pub mod coordinator;
 pub mod graph;
 pub mod htm;

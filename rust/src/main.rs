@@ -6,7 +6,9 @@
 //! ```text
 //! dyadhytm run    [--policy P] [--scale S] [--threads T] [--batch B]
 //!                 [--seed N] [--artifacts] [--tiny-htm] [--no-verify]
-//!                 one live SSCA-2 experiment (real threads, verified)
+//!                 one live SSCA-2 experiment (real threads, verified).
+//!                 `--policy batch[=BLOCK]` selects the Block-STM-style
+//!                 speculative batch backend (threads = workers)
 //! dyadhytm sim    --fig <t0|2a..2f|3a..3c|4a..4c|all> [--seed N]
 //!                 regenerate a paper figure on the simulated 28-HT node
 //! dyadhytm sim    --policy P --scale S --threads T [--kernel g|c|b]
@@ -305,6 +307,7 @@ fn main() -> ExitCode {
             for s in [
                 "lock", "stm", "stm-tl2", "htm-alock[=R]", "htm-spin[=R]", "hle",
                 "rnd[=LO-HI]", "fx[=N]", "stad[=N]", "dyad[=N]", "dyad-tl2[=N]",
+                "phtm[=R]", "batch[=BLOCK]",
             ] {
                 println!("{s}");
             }

@@ -148,6 +148,10 @@ impl Simulator {
             }
             PolicySpec::Hle => Mode::HtmLock { retries: 0 },
             PolicySpec::PhTm { sw_quantum, .. } => Mode::Phased { sw_quantum },
+            // The simulator has no multi-version model; optimistic
+            // software execution + validation is the closest cost
+            // approximation for the batch backend.
+            PolicySpec::Batch { .. } => Mode::Stm,
             _ => Mode::Hybrid,
         };
         // Test-and-set fallback (HTMALock) pays an extra RMW storm per
@@ -495,7 +499,10 @@ fn make_policy(spec: &PolicySpec) -> Option<Box<dyn RetryPolicy>> {
         }
         PolicySpec::Hle => Some(Box::new(FxPolicy::new(0))),
         PolicySpec::PhTm { retries, .. } => Some(Box::new(FxPolicy::new(retries))),
-        PolicySpec::CoarseLock | PolicySpec::StmNorec | PolicySpec::StmTl2 => None,
+        PolicySpec::CoarseLock
+        | PolicySpec::StmNorec
+        | PolicySpec::StmTl2
+        | PolicySpec::Batch { .. } => None,
     }
 }
 

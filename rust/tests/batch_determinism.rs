@@ -1,0 +1,151 @@
+//! Property suite: the batch backend's determinism guarantee.
+//!
+//! `BatchSystem::run` must leave the heap bit-identical to executing
+//! the same transactions sequentially in index order — for random
+//! `TxnDesc`-shaped batches (uniform and Zipf-skewed high-conflict
+//! footprints), random worker counts, and random initial heap states.
+
+use dyadhytm::batch::workload::{desc_txn, run_sequential};
+use dyadhytm::batch::{BatchSystem, BatchTxn};
+use dyadhytm::mem::{TxHeap, WORDS_PER_LINE};
+use dyadhytm::sim::workload::{TxnDesc, MAX_WLINES};
+use dyadhytm::util::qcheck::qcheck_res;
+use dyadhytm::util::rng::Rng;
+use dyadhytm::util::zipf::Zipf;
+
+/// Lines available on the scratch heaps (line 0 stays reserved).
+const LINES: usize = 48;
+
+/// Draw a random transaction descriptor whose write/read lines come
+/// from `zipf` over `1..LINES` — `s` near 0 gives sparse batches, `s`
+/// above 1 concentrates everything on a few hot lines.
+fn random_desc(rng: &mut Rng, zipf: &Zipf) -> TxnDesc {
+    let mut d = TxnDesc {
+        work: 0,
+        wlines: [0; MAX_WLINES],
+        n_wlines: 0,
+        rlines: [0; 2],
+        n_rlines: 0,
+        n_reads: 0,
+        n_writes: 0,
+        footprint_lines: 0,
+    };
+    let n_w = 1 + rng.below(4) as usize;
+    for _ in 0..n_w {
+        let line = 1 + zipf.sample(rng) as u64;
+        // push_wline-style dedup.
+        if !d.wlines[..d.n_wlines as usize].contains(&line) {
+            d.wlines[d.n_wlines as usize] = line;
+            d.n_wlines += 1;
+        }
+    }
+    let n_r = rng.below(3) as usize;
+    for i in 0..n_r.min(2) {
+        d.rlines[i] = 1 + zipf.sample(rng) as u64;
+        d.n_rlines = (i + 1) as u8;
+    }
+    d.n_reads = d.n_wlines as u32 + d.n_rlines as u32;
+    d.n_writes = d.n_wlines as u32;
+    d.footprint_lines = d.n_wlines as u16;
+    d
+}
+
+/// Build a batch, a seeded initial heap image, and compare sequential
+/// vs speculative execution word by word.
+fn check_case(seed: u64, zipf_s: f64, n_txns: usize, workers: usize) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(LINES - 1, zipf_s);
+    let txns: Vec<BatchTxn> = (0..n_txns)
+        .map(|_| {
+            let d = random_desc(&mut rng, &zipf);
+            desc_txn(d, rng.next_u64())
+        })
+        .collect();
+
+    let words = LINES * WORDS_PER_LINE;
+    let heap_seq = TxHeap::new(words);
+    let heap_par = TxHeap::new(words);
+    // Random (identical) initial contents.
+    let mut init = Rng::new(seed ^ 0xD15C);
+    for addr in 0..words {
+        let v = init.next_u64();
+        heap_seq.store(addr, v);
+        heap_par.store(addr, v);
+    }
+
+    run_sequential(&heap_seq, &txns);
+    let report = BatchSystem::run(&heap_par, &txns, workers);
+    if report.txns != n_txns {
+        return Err(format!("committed {} of {n_txns}", report.txns));
+    }
+    for addr in 0..words {
+        let (a, b) = (heap_seq.load(addr), heap_par.load(addr));
+        if a != b {
+            return Err(format!(
+                "divergence at word {addr}: sequential {a:#x} vs batch {b:#x} \
+                 (zipf_s={zipf_s}, n={n_txns}, workers={workers})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_batch_equals_sequential_sparse() {
+    qcheck_res(
+        "batch == sequential (uniform footprints)",
+        20,
+        |rng| {
+            (
+                rng.next_u64(),
+                8 + rng.below(40) as usize,
+                1 + rng.below(6) as usize,
+            )
+        },
+        |&(seed, n, workers)| check_case(seed, 0.0, n, workers),
+    );
+}
+
+#[test]
+fn prop_batch_equals_sequential_zipf_skewed() {
+    // High-conflict: Zipf 1.2 concentrates most writes on a handful of
+    // hub lines, maximizing validation aborts and dependencies.
+    qcheck_res(
+        "batch == sequential (Zipf-skewed hubs)",
+        20,
+        |rng| {
+            (
+                rng.next_u64(),
+                8 + rng.below(40) as usize,
+                1 + rng.below(6) as usize,
+            )
+        },
+        |&(seed, n, workers)| check_case(seed, 1.2, n, workers),
+    );
+}
+
+#[test]
+fn pathological_single_hub_line() {
+    // Every transaction RMWs the same line: full serialization through
+    // the multi-version store. Still must match sequential exactly.
+    for workers in [1usize, 2, 4, 7] {
+        check_case(0xBEE5 ^ workers as u64, 8.0, 64, workers).unwrap();
+    }
+}
+
+#[test]
+fn batch_reports_speculation_work_under_conflict() {
+    // Sanity on the counters: a hub-heavy batch with several workers
+    // must do at least one execution per txn, and the determinism
+    // guarantee must hold even when aborts occur.
+    let mut rng = Rng::new(9);
+    let zipf = Zipf::new(4, 1.5);
+    let txns: Vec<BatchTxn> = (0..96)
+        .map(|_| desc_txn(random_desc(&mut rng, &zipf), rng.next_u64()))
+        .collect();
+    let heap = TxHeap::new(LINES * WORDS_PER_LINE);
+    let report = BatchSystem::run(&heap, &txns, 4);
+    assert_eq!(report.txns, 96);
+    assert!(report.executions >= 96);
+    assert!(report.validations >= 96, "every txn validates at least once");
+}

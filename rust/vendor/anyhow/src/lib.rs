@@ -1,0 +1,194 @@
+//! Offline shim of the `anyhow` error-handling crate.
+//!
+//! The build environment has no registry access, so this vendored crate
+//! re-implements exactly the subset the repository uses: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!` /
+//! `bail!` / `ensure!` macros. Error values flatten their source chain
+//! into strings at construction; both `{e}` and `{e:#}` print the full
+//! `outer: inner: ...` chain (the only formatting this repo relies on).
+//!
+//! Unlike upstream, [`Error`] implements [`std::error::Error`] — that
+//! lets one blanket [`Context`] impl cover both foreign errors and
+//! `anyhow::Error` itself without overlapping-impl tricks. Nothing in
+//! this repo depends on upstream's `Error: !StdError` quirk.
+
+use std::fmt;
+
+/// A string-backed error with a context chain. `chain[0]` is the
+/// outermost (most recently attached) message.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>`: defaults the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a single displayable message.
+    pub fn msg(message: impl fmt::Display) -> Self {
+        Self {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Capture a foreign error together with its `source()` chain.
+    pub fn from_std(err: &(dyn std::error::Error + 'static)) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut cur = err.source();
+        while let Some(src) = cur {
+            chain.push(src.to_string());
+            cur = src.source();
+        }
+        Self { chain }
+    }
+
+    /// Attach an outer context message (consuming, like upstream's
+    /// `Error::context`).
+    pub fn context(mut self, context: impl fmt::Display) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Always the whole chain, `outer: inner: root`. (Upstream prints
+        // only the outermost message for `{}`; printing the chain keeps
+        // nested causes intact when an `Error` is re-captured through
+        // the blanket `Context` impl, and every in-repo call site wants
+        // the chain anyway.)
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T, E>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "no such file")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .context("reading manifest")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest: no such file");
+        assert_eq!(format!("{e:#}"), "reading manifest: no such file");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 3;
+        let b = anyhow!("got {}", n);
+        assert_eq!(b.to_string(), "got 3");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_and_ensure_return_err() {
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {}", flag);
+            bail!("always fails");
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(f(true).unwrap_err().to_string(), "always fails");
+        fn g() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(g().unwrap_err().to_string().contains("Condition failed"));
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains() {
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert_eq!(e.chain().count(), 2);
+    }
+}

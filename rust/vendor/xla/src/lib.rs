@@ -1,0 +1,122 @@
+//! Stub of the `xla-rs` PJRT binding surface used by `runtime/artifacts.rs`.
+//!
+//! The real crate links libxla and executes the AOT HLO artifacts on the
+//! PJRT CPU client. This stub keeps every call site type-correct in
+//! environments where those native libraries are absent:
+//! [`PjRtClient::cpu`] fails with a clear message, and since every other
+//! entry point can only be reached through a client, none of the
+//! `unreachable!` bodies below can fire at runtime. The artifact path is
+//! optional throughout the repo (guarded by `ArtifactRuntime::available`
+//! checks), so the native-Rust R-MAT generators take over transparently.
+//!
+//! To use real PJRT artifacts, replace this path dependency with the
+//! actual bindings; the API subset here matches them exactly.
+
+use anyhow::{bail, Result};
+
+/// PJRT client handle (stub: cannot be constructed).
+pub struct PjRtClient {
+    _private: (),
+}
+
+/// A compiled, loaded executable (stub: unreachable without a client).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+/// A device buffer returned by execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+/// A host-side literal value.
+pub struct Literal {
+    _private: (),
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+/// An XLA computation built from an HLO proto.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// In the real bindings this spins up the PJRT CPU client. The stub
+    /// always fails: callers treat this as "artifact path unavailable".
+    pub fn cpu() -> Result<Self> {
+        bail!(
+            "PJRT backend not linked into this build (stub `xla` crate); \
+             use the native tuple generator or link the real xla-rs bindings"
+        )
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unreachable!("stub PjRtClient cannot exist")
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unreachable!("stub PjRtLoadedExecutable cannot exist")
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unreachable!("stub PjRtBuffer cannot exist")
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unreachable!("stub Literal cannot be produced by execution")
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        unreachable!("stub Literal cannot be produced by execution")
+    }
+
+    pub fn to_tuple3(&self) -> Result<(Literal, Literal, Literal)> {
+        unreachable!("stub Literal cannot be produced by execution")
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        bail!("PJRT backend not linked into this build (stub `xla` crate)")
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_loudly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_vec1_is_constructible() {
+        // artifacts.rs builds literals before executing; construction
+        // must succeed even though execution is unreachable.
+        let _ = Literal::vec1(&[1u32, 2]);
+        let _ = Literal::vec1(&[0.5f32]);
+    }
+}
