@@ -13,7 +13,7 @@
 use std::sync::Arc;
 
 use dyadhytm::batch::{workload, BatchSystem, BatchTxn};
-use dyadhytm::graph::{computation, generation, rmat, verify, Graph, Ssca2Config};
+use dyadhytm::graph::{computation, generation, rmat, subgraph, verify, Graph, Ssca2Config};
 use dyadhytm::htm::HtmConfig;
 use dyadhytm::hytm::{PolicySpec, TmSystem};
 use dyadhytm::mem::TxHeap;
@@ -79,5 +79,25 @@ fn main() {
 
     verify::check_graph(&g, &tuples).expect("graph invariants");
     verify::check_results(&g, &tuples).expect("extraction invariants");
+
+    // 5. Kernel 3 (subgraph extraction), also through the batch
+    //    backend: each BFS level's vertex claims are admitted as
+    //    deterministic blocks, and the claimed ball must match the
+    //    serial oracle exactly.
+    let roots = subgraph::roots_from_results(&g);
+    let k3 = subgraph::run(&sys, &g, &roots, 3, policy, 4, 11);
+    subgraph::verify_subgraph(&g, &roots, 3, &k3).expect("kernel-3 oracle");
+    assert_eq!(
+        k3.stats.total().norec_fallback,
+        0,
+        "kernel 3 must route through BatchSystem, not the NOrec fallback"
+    );
+    println!(
+        "subgraph kernel (batch backend): {} roots -> {} vertices in {:?} (levels {:?})",
+        roots.len(),
+        k3.total_marked,
+        k3.elapsed,
+        k3.level_sizes,
+    );
     println!("verified OK");
 }

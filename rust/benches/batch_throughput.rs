@@ -1,19 +1,105 @@
 //! Bench: the speculative batch backend vs DyAdHyTM vs the coarse lock
-//! on the SSCA-2 edge-insertion (generation) workload.
+//! on the SSCA-2 edge-insertion (generation) workload, plus a
+//! block-size × conflict-rate sweep on the descriptor substrate.
 //!
-//! Prints a markdown table plus one machine-readable `BENCH_JSON` line
+//! Prints markdown tables plus one machine-readable `BENCH_JSON` line
 //! per cell (the same flat-JSON record shape the other `BENCH_*`
 //! outputs use), so sweeps can be scraped with `grep '^BENCH_JSON'`.
+//! Record kinds: `"bench":"batch_throughput"` (generation head-to-head)
+//! and `"bench":"batch_block_sweep"` (block vs conflict rate).
 //!
 //! ```sh
 //! cargo bench --bench batch_throughput
 //! ```
 
 use std::sync::Arc;
+use std::time::Instant;
 
+use dyadhytm::batch::{BatchReport, BatchSystem, BatchTxn};
 use dyadhytm::graph::{generation, rmat, verify, Graph, Ssca2Config};
 use dyadhytm::htm::HtmConfig;
 use dyadhytm::hytm::{PolicySpec, TmSystem};
+use dyadhytm::mem::{TxHeap, WORDS_PER_LINE};
+use dyadhytm::tm::access::TxAccess;
+use dyadhytm::util::rng::Rng;
+use dyadhytm::util::zipf::Zipf;
+
+/// Sweep the admission block size against the workload's conflict
+/// skew: Zipf-s 0 spreads RMWs uniformly over the lines, s = 1.5
+/// concentrates them on a few hubs. Emits one `batch_block_sweep`
+/// BENCH_JSON record per cell so the perf trajectory accumulates
+/// comparable points across PRs.
+fn block_conflict_sweep() {
+    const SWEEP_TXNS: usize = 4096;
+    const LINES: usize = 64;
+    const WORKERS: usize = 4;
+
+    println!("\n### batch_throughput — block size vs conflict rate (Zipf RMW substrate, {WORKERS} workers)\n");
+    println!("| block | zipf_s | txns | elapsed ms | txns/s | executions | validation_aborts | dependencies | conflict_rate |");
+    println!("|---|---|---|---|---|---|---|---|---|");
+
+    for &block in &[256usize, 1024, 4096] {
+        for &zipf_s in &[0.0f64, 0.8, 1.5] {
+            let mut rng = Rng::new(0xB10C ^ block as u64 ^ (zipf_s * 8.0) as u64);
+            let zipf = Zipf::new(LINES - 1, zipf_s);
+            // Two Zipf-drawn RMW lines + one read line per txn: the
+            // hub-counter shape of the generation kernel, skew-tunable.
+            let txns: Vec<BatchTxn> = (0..SWEEP_TXNS)
+                .map(|_| {
+                    let w1 = (1 + zipf.sample(&mut rng)) * WORDS_PER_LINE;
+                    let w2 = (1 + zipf.sample(&mut rng)) * WORDS_PER_LINE;
+                    let r = (1 + zipf.sample(&mut rng)) * WORDS_PER_LINE;
+                    let salt = rng.next_u64();
+                    BatchTxn::new(move |t: &mut dyn TxAccess| {
+                        let mut acc = salt ^ t.read(r)?;
+                        let v = t.read(w1)?;
+                        acc = acc.rotate_left(13).wrapping_add(v);
+                        t.write(w1, acc)?;
+                        let v2 = t.read(w2)?;
+                        t.write(w2, acc ^ v2)
+                    })
+                })
+                .collect();
+
+            let heap = TxHeap::new(LINES * WORDS_PER_LINE);
+            let t0 = Instant::now();
+            let mut report = BatchReport::default();
+            let mut j0 = 0;
+            while j0 < txns.len() {
+                let j1 = (j0 + block).min(txns.len());
+                report.merge(&BatchSystem::run(&heap, &txns[j0..j1], WORKERS));
+                j0 = j1;
+            }
+            let elapsed = t0.elapsed();
+            let tps = SWEEP_TXNS as f64 / elapsed.as_secs_f64().max(1e-9);
+            let conflict_rate =
+                report.validation_aborts as f64 / report.executions.max(1) as f64;
+            println!(
+                "| {block} | {zipf_s} | {SWEEP_TXNS} | {:.1} | {:.0} | {} | {} | {} | {:.4} |",
+                elapsed.as_secs_f64() * 1e3,
+                tps,
+                report.executions,
+                report.validation_aborts,
+                report.dependencies,
+                conflict_rate,
+            );
+            println!(
+                "BENCH_JSON {{\"bench\":\"batch_block_sweep\",\"block\":{block},\
+                 \"zipf_s\":{zipf_s},\"workers\":{WORKERS},\"txns\":{SWEEP_TXNS},\
+                 \"elapsed_ns\":{},\"txns_per_sec\":{:.0},\"executions\":{},\
+                 \"validations\":{},\"validation_aborts\":{},\"dependencies\":{},\
+                 \"conflict_rate\":{:.4}}}",
+                elapsed.as_nanos(),
+                tps,
+                report.executions,
+                report.validations,
+                report.validation_aborts,
+                report.dependencies,
+                conflict_rate,
+            );
+        }
+    }
+}
 
 fn main() {
     let scale = 12u32;
@@ -64,5 +150,6 @@ fn main() {
             );
         }
     }
+    block_conflict_sweep();
     eprintln!("[batch_throughput: finished in {:?}]", t0.elapsed());
 }

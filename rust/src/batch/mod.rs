@@ -14,9 +14,10 @@
 //! * [`executor`] — the worker loop: execute against a recording
 //!   [`crate::tm::access::TxAccess`] view → record read/write sets →
 //!   validate → abort/re-incarnate;
-//! * [`workload`] — adapters feeding the SSCA-2 kernels and the
-//!   simulator's [`crate::sim::workload::TxnDesc`] shapes through the
-//!   batch API.
+//! * [`workload`] — adapters feeding the SSCA-2 kernels (generation,
+//!   computation, and kernel-3 subgraph extraction as a
+//!   level-synchronous batch BFS) and the simulator's
+//!   [`crate::sim::workload::TxnDesc`] shapes through the batch API.
 //!
 //! **Determinism guarantee.** Whatever interleaving the workers take,
 //! the final heap state equals executing the batch *sequentially in
@@ -26,9 +27,20 @@
 //! enforced by tests in this module and the `batch_determinism`
 //! property suite.
 //!
-//! Select it end-to-end with `--policy batch` (a
-//! [`crate::hytm::PolicySpec::Batch`] variant): the SSCA-2 generation
-//! and computation kernels then run through [`BatchSystem`].
+//! **Full routing.** Select it end-to-end with `--policy batch` (a
+//! [`crate::hytm::PolicySpec::Batch`] variant): all three SSCA-2
+//! kernels — generation, computation, and kernel-3 subgraph extraction
+//! ([`workload::run_subgraph`]) — and the streaming pipeline
+//! ([`crate::runtime::pipeline`], which drains its bounded channel in
+//! blocks of insert-transactions) run through [`BatchSystem`]. No path
+//! silently degrades to per-transaction NOrec: a `Batch` spec reaching
+//! `ThreadExecutor::execute` is loudly warned and accounted under the
+//! `norec_fallback` stats counter, and reported as
+//! `batch(fallback:norec)`. The simulator prices the backend with its
+//! own multi-version cost mode (`sim::engine`'s `Mode::MultiVersion`):
+//! estimate-wait, validation, and re-incarnation charges mirroring the
+//! [`BatchReport`] counters, instead of approximating it as a plain
+//! STM.
 
 pub mod executor;
 pub mod mvmemory;

@@ -1,6 +1,6 @@
 //! Feeding real workloads through the batch executor.
 //!
-//! Three adapters:
+//! Four adapters:
 //!
 //! * SSCA-2 **generation kernel**: the tuple list becomes one insert
 //!   transaction per `cfg.batch` edges, with the *same* cell-assignment
@@ -8,10 +8,19 @@
 //!   to a serial build, whatever the workers do.
 //! * SSCA-2 **computation kernel**: chunked gmax probes (phase 1) and
 //!   in-cell-order band appends (phase 2).
+//! * SSCA-2 **subgraph kernel (kernel 3)**: level-synchronous
+//!   multi-source BFS where each level's vertex claims (`read mark; if
+//!   unmarked, write level`) are admitted as deterministic blocks — the
+//!   claimed ball and every per-vertex level are bit-identical to the
+//!   serial oracle in [`crate::graph::subgraph::verify_subgraph`].
 //! * **Descriptor bodies**: turn the simulator's
 //!   [`TxnDesc`](crate::sim::workload::TxnDesc) cache-line footprints
 //!   into executable read/modify/write bodies on a scratch heap — the
 //!   substrate of the `batch_determinism` property tests.
+//!
+//! The streaming pipeline (`crate::runtime::pipeline`) reuses
+//! [`edge_insert_block`] to drain its bounded channel in blocks under
+//! `--policy batch`.
 
 use std::time::{Duration, Instant};
 
@@ -19,6 +28,7 @@ use crate::graph::computation::{append_results, ComputationResult, COLLECT_FLUSH
 use crate::graph::generation::insert_edge;
 use crate::graph::layout::Graph;
 use crate::graph::rmat::EdgeTuple;
+use crate::graph::subgraph::SubgraphResult;
 use crate::mem::{TxHeap, WORDS_PER_LINE};
 use crate::sim::workload::TxnDesc;
 use crate::stats::StatsTable;
@@ -53,6 +63,34 @@ pub fn edge_insert_txn<'g>(
     })
 }
 
+/// Insert-transactions for `tuples`, `chunk` edges per transaction,
+/// with cells assigned sequentially from `first_cell` — the building
+/// block of the streaming pipeline's batch drain, where `first_cell`
+/// is the number of edges already inserted by previous blocks. The
+/// cell order equals a sequential insert of the whole stream.
+pub fn edge_insert_block<'g>(
+    g: &'g Graph,
+    tuples: &'g [EdgeTuple],
+    first_cell: usize,
+    chunk: usize,
+) -> Vec<BatchTxn<'g>> {
+    let chunk = chunk.max(1);
+    (0..tuples.len().div_ceil(chunk))
+        .map(move |j| {
+            let lo = j * chunk;
+            let hi = (lo + chunk).min(tuples.len());
+            let slice = &tuples[lo..hi];
+            let cell0 = first_cell + lo;
+            BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
+                for (k, e) in slice.iter().enumerate() {
+                    insert_edge(t, g, cell0 + k, e)?;
+                }
+                Ok(())
+            })
+        })
+        .collect()
+}
+
 /// All edge-insertion transactions for `tuples`, `chunk` edges per
 /// transaction. Convenience for tests/examples; the streaming
 /// [`run_generation`] below builds one block at a time instead.
@@ -61,10 +99,7 @@ pub fn edge_insert_txns<'g>(
     tuples: &'g [EdgeTuple],
     chunk: usize,
 ) -> Vec<BatchTxn<'g>> {
-    let chunk = chunk.max(1);
-    (0..tuples.len().div_ceil(chunk))
-        .map(|j| edge_insert_txn(g, tuples, chunk, j))
-        .collect()
+    edge_insert_block(g, tuples, 0, chunk)
 }
 
 /// Generation kernel through [`BatchSystem`]: blocks of `block`
@@ -194,6 +229,135 @@ pub fn run_computation(g: &Graph, concurrency: usize, block: usize) -> Computati
     }
 }
 
+/// Claim every vertex of `candidates` at `mark_val` through
+/// [`BatchSystem`] — `chunk` claims per transaction, `block`
+/// transactions per speculative run — then return the newly claimed
+/// vertices in first-candidate order, which is exactly the order the
+/// serial BFS oracle discovers them in. `seen` dedups within the level
+/// (a vertex reachable through two frontier members is claimed once).
+#[allow(clippy::too_many_arguments)]
+fn claim_level(
+    g: &Graph,
+    marks_base: crate::mem::Addr,
+    candidates: &[u32],
+    mark_val: u64,
+    concurrency: usize,
+    block: usize,
+    chunk: usize,
+    report: &mut BatchReport,
+    seen: &mut [bool],
+) -> Vec<u32> {
+    let n_txns = candidates.len().div_ceil(chunk);
+    let mut j0 = 0;
+    while j0 < n_txns {
+        let j1 = (j0 + block).min(n_txns);
+        let blk: Vec<BatchTxn> = (j0..j1)
+            .map(|j| {
+                let lo = j * chunk;
+                let hi = (lo + chunk).min(candidates.len());
+                let slice = &candidates[lo..hi];
+                BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
+                    for &v in slice {
+                        // The same `read mark; if unmarked, write level`
+                        // critical section the policy executors run.
+                        let addr = marks_base + v as usize;
+                        if t.read(addr)? == 0 {
+                            t.write(addr, mark_val)?;
+                        }
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
+        j0 = j1;
+    }
+    // The committed marks decide the next frontier: a candidate whose
+    // mark equals `mark_val` was claimed this level; first occurrence
+    // wins, matching the serial discovery order.
+    let mut next = Vec::new();
+    for &v in candidates {
+        if !seen[v as usize] && g.heap.load(marks_base + v as usize) == mark_val {
+            seen[v as usize] = true;
+            next.push(v);
+        }
+    }
+    next
+}
+
+/// Subgraph kernel (kernel 3) through [`BatchSystem`]: mirrors
+/// [`crate::graph::subgraph::run`]. Each BFS level's claims are
+/// admitted as deterministic blocks (`g.cfg.batch` claims per
+/// transaction, the same task-size knob as the other kernels), so the
+/// claimed ball and every per-vertex level are bit-identical to the
+/// serial oracle regardless of `concurrency`. Power-law hubs make the
+/// early levels conflict-dense — the multi-version store absorbs the
+/// races the per-transaction executors fight over.
+pub fn run_subgraph(
+    g: &Graph,
+    roots: &[u32],
+    depth: usize,
+    concurrency: usize,
+    block: usize,
+) -> SubgraphResult {
+    let t0 = Instant::now();
+    let n = g.cfg.vertices();
+    // Mark region: one word per vertex, level+1 when claimed (the same
+    // layout the threaded kernel allocates).
+    let marks_base = g.heap.alloc_lines(n.div_ceil(WORDS_PER_LINE));
+    let block = block.max(1);
+    let chunk = g.cfg.batch.max(1);
+    let mut report = BatchReport::default();
+    let mut seen = vec![false; n];
+
+    // Level 0: claim the roots.
+    let mut frontier = claim_level(
+        g, marks_base, roots, 1, concurrency, block, chunk, &mut report, &mut seen,
+    );
+    let mut level_sizes = vec![frontier.len()];
+
+    for level in 1..=depth {
+        if frontier.is_empty() {
+            break;
+        }
+        // Candidate order = (frontier order, adjacency order): the
+        // serial oracle's discovery order. The adjacency walk is
+        // non-transactional — the graph is frozen after kernel 1.
+        let mut candidates: Vec<u32> = Vec::new();
+        for &v in &frontier {
+            for (dst, _, _) in g.adjacency(v) {
+                candidates.push(dst);
+            }
+        }
+        frontier = claim_level(
+            g,
+            marks_base,
+            &candidates,
+            (level + 1) as u64,
+            concurrency,
+            block,
+            chunk,
+            &mut report,
+            &mut seen,
+        );
+        level_sizes.push(frontier.len());
+    }
+
+    let total_marked = level_sizes.iter().sum();
+    let elapsed = t0.elapsed();
+    let mut table = StatsTable::new();
+    let mut stats = report.to_stats();
+    stats.time_ns = elapsed.as_nanos() as u64;
+    table.push(0, stats);
+    SubgraphResult {
+        level_sizes,
+        total_marked,
+        elapsed,
+        stats: table,
+        marks_base,
+    }
+}
+
 /// Turn a simulator descriptor into an executable body on a scratch
 /// heap: reads fold into an accumulator, each written line is
 /// read-modify-written with a mix of the accumulator. The result is a
@@ -292,6 +456,49 @@ mod tests {
         assert_eq!(r.max_weight, true_max);
         verify::check_results(&g, &tuples).unwrap();
         assert!(r.selected > 0);
+    }
+
+    #[test]
+    fn batch_subgraph_matches_serial_oracle_across_workers() {
+        use crate::graph::subgraph;
+
+        let mut totals = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let cfg = Ssca2Config::new(7);
+            let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+            let g = Graph::alloc(cfg);
+            run_sequential(&g.heap, &edge_insert_txns(&g, &tuples, 1));
+            g.heap.store(g.pool_cursor, tuples.len() as u64);
+            let _ = run_computation(&g, 2, 64);
+            let roots = subgraph::roots_from_results(&g);
+            assert!(!roots.is_empty());
+            let r = run_subgraph(&g, &roots, 3, workers, 32);
+            subgraph::verify_subgraph(&g, &roots, 3, &r)
+                .unwrap_or_else(|e| panic!("workers={workers}: {e}"));
+            assert!(
+                r.stats.total().sw_commits >= roots.len() as u64,
+                "at chunk=1 every root claim is one committed transaction"
+            );
+            totals.push(r.total_marked);
+        }
+        assert!(
+            totals.windows(2).all(|w| w[0] == w[1]),
+            "visited set must be worker-count-independent: {totals:?}"
+        );
+    }
+
+    #[test]
+    fn batch_subgraph_depth_zero_claims_only_roots() {
+        let cfg = Ssca2Config::new(6);
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        let g = Graph::alloc(cfg);
+        run_sequential(&g.heap, &edge_insert_txns(&g, &tuples, 1));
+        g.heap.store(g.pool_cursor, tuples.len() as u64);
+        let _ = run_computation(&g, 2, 64);
+        let roots = crate::graph::subgraph::roots_from_results(&g);
+        let r = run_subgraph(&g, &roots, 0, 3, 16);
+        assert_eq!(r.total_marked, roots.len());
+        crate::graph::subgraph::verify_subgraph(&g, &roots, 0, &r).unwrap();
     }
 
     #[test]

@@ -165,13 +165,17 @@ pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
         false
     };
 
+    // Label from the observed stats: a batch run that degraded to the
+    // per-transaction NOrec fallback anywhere is reported as
+    // `batch(fallback:norec)`, never as plain `batch`.
+    let mut merged = gen_stats.total();
+    merged.merge(&comp.stats.total());
+    let policy_label = cfg.policy.label(&merged);
+
     Ok(LiveReport {
         cfg_label: format!(
-            "{} scale={} threads={} batch={}",
-            cfg.policy.name(),
-            cfg.scale,
-            cfg.threads,
-            cfg.batch
+            "{policy_label} scale={} threads={} batch={}",
+            cfg.scale, cfg.threads, cfg.batch
         ),
         tuples: tuples.len(),
         tuple_source,
@@ -203,6 +207,20 @@ mod tests {
         );
         let md = r.to_markdown();
         assert!(md.contains("generation kernel"));
+    }
+
+    #[test]
+    fn live_batch_run_reports_no_norec_fallback() {
+        let cfg = RunConfig::new(7, PolicySpec::Batch { block: 128 }, 3);
+        let r = run_live(&cfg).unwrap();
+        assert!(r.verified);
+        let mut merged = r.gen_stats.total();
+        merged.merge(&r.comp_stats.total());
+        assert_eq!(
+            merged.norec_fallback, 0,
+            "live kernels must route through BatchSystem, not the NOrec fallback"
+        );
+        assert!(r.cfg_label.starts_with("batch "), "label: {}", r.cfg_label);
     }
 
     #[test]

@@ -13,7 +13,10 @@
 //! set* (the distance-≤depth ball of the root set) regardless of thread
 //! interleaving — which is what [`verify_subgraph`] checks against a
 //! serial oracle, making this kernel a strong end-to-end serializability
-//! probe for every policy.
+//! probe for every policy. Under `PolicySpec::Batch` the kernel
+//! dispatches to [`crate::batch::workload::run_subgraph`], which admits
+//! each level's claims as deterministic blocks through `BatchSystem` —
+//! no per-transaction NOrec fallback.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -60,6 +63,12 @@ pub fn run(
     seed: u64,
 ) -> SubgraphResult {
     assert!(threads >= 1);
+    if let PolicySpec::Batch { block } = spec {
+        // The batch backend owns its worker pool and serialization
+        // order; `threads` becomes its concurrency level. No silent
+        // NOrec fallback: the claims run through `BatchSystem`.
+        return crate::batch::workload::run_subgraph(g, roots, depth, threads, block);
+    }
     let n = g.cfg.vertices();
     // Mark region: one word per vertex, level+1 when claimed.
     let marks_base = g.heap.alloc_lines(n.div_ceil(WORDS_PER_LINE));
@@ -256,6 +265,7 @@ mod tests {
                 retries: 4,
                 sw_quantum: 32,
             },
+            PolicySpec::Batch { block: 64 },
         ] {
             let (sys, g) = built(7);
             let roots = roots_from_results(&g);

@@ -48,10 +48,12 @@ pub enum PolicySpec {
     PhTm { retries: u32, sw_quantum: u32 },
     /// Block-STM-style speculative batch execution (`crate::batch`):
     /// transactions are admitted in blocks of `block` with a fixed
-    /// serialization order and run against multi-version memory. The
-    /// graph kernels dispatch this spec to `batch::BatchSystem`; a
-    /// single transaction fed through `ThreadExecutor` degenerates to a
-    /// batch of one, i.e. one optimistic software attempt.
+    /// serialization order and run against multi-version memory. Every
+    /// shipped path (generation, computation, subgraph extraction, the
+    /// streaming pipeline) dispatches this spec to `batch::BatchSystem`.
+    /// A single transaction fed through `ThreadExecutor` degenerates to
+    /// one optimistic NOrec attempt — loudly warned and accounted as
+    /// `norec_fallback`, and reported as `batch(fallback:norec)`.
     Batch { block: usize },
 }
 
@@ -151,6 +153,19 @@ impl PolicySpec {
         })
     }
 
+    /// Reporting label for a finished run: stats produced under a
+    /// `Batch` spec that contain NOrec-fallback transactions are
+    /// labeled `batch(fallback:norec)` so a degraded run can't
+    /// masquerade as batch speculation. Every other (spec, stats) pair
+    /// is just [`PolicySpec::name`].
+    pub fn label(&self, stats: &TxStats) -> &'static str {
+        if matches!(self, PolicySpec::Batch { .. }) && stats.norec_fallback > 0 {
+            "batch(fallback:norec)"
+        } else {
+            self.name()
+        }
+    }
+
     fn make_retry_policy(&self) -> Option<Box<dyn RetryPolicy>> {
         match *self {
             PolicySpec::Rnd { lo, hi } => Some(Box::new(RndPolicy::new(lo, hi))),
@@ -193,6 +208,27 @@ impl TmSystem {
             heap,
         }
     }
+}
+
+/// Once-per-process warning for the NOrec fallback under
+/// `PolicySpec::Batch`: a single transaction pushed through
+/// [`ThreadExecutor::execute`] cannot be block-speculated, so it runs
+/// as one optimistic NOrec attempt — correct, but it is *not* the batch
+/// backend, and quiet degradation is exactly the bug class ISSUE 2
+/// closes. (A `debug_assert!` here would outlaw the documented
+/// batch-of-one degenerate case, so the contract is a loud log plus the
+/// `norec_fallback` stats counter instead.)
+fn warn_batch_fallback_once() {
+    static WARNED: std::sync::Once = std::sync::Once::new();
+    WARNED.call_once(|| {
+        eprintln!(
+            "[dyadhytm] warning: PolicySpec::Batch executed through \
+             ThreadExecutor — running per-transaction NOrec, not BatchSystem; \
+             stats for this run are labeled batch(fallback:norec). Route the \
+             workload through crate::batch (generation/computation/subgraph/\
+             pipeline all do this) to get block speculation."
+        );
+    });
 }
 
 /// Per-thread executor: owns the thread's RNG, stats, and policy state.
@@ -246,11 +282,19 @@ impl<'s> ThreadExecutor<'s> {
                 retries,
                 sw_quantum,
             } => self.run_phtm(retries, sw_quantum as u64, body),
-            // A batch of one is exactly one optimistic software
-            // attempt; batch-level speculation lives in
-            // `crate::batch::BatchSystem`, which the graph kernels
-            // dispatch to directly for this spec.
-            PolicySpec::Batch { .. } => self.run_stm_norec(body),
+            // Unreachable from any shipped path: generation,
+            // computation, subgraph, and the streaming pipeline all
+            // dispatch `Batch` to `crate::batch::BatchSystem` before a
+            // ThreadExecutor sees it. A caller landing here is silently
+            // degrading block speculation to per-transaction NOrec —
+            // make it loud and account it separately so the stats can't
+            // masquerade as batch commits (`PolicySpec::label` reports
+            // the run as `batch(fallback:norec)`).
+            PolicySpec::Batch { .. } => {
+                warn_batch_fallback_once();
+                self.stats.norec_fallback += 1;
+                self.run_stm_norec(body)
+            }
         }
     }
 
@@ -583,6 +627,30 @@ mod tests {
                 spec.name()
             );
         }
+    }
+
+    #[test]
+    fn batch_through_executor_is_loudly_accounted_as_fallback() {
+        // The graph kernels and the pipeline never take this path; a
+        // caller that does must see every transaction counted under
+        // `norec_fallback` and the run relabeled.
+        let heap = Arc::new(TxHeap::new(1 << 12));
+        let a = heap.alloc(1);
+        let sys = TmSystem::new(heap, HtmConfig::broadwell());
+        let spec = PolicySpec::Batch { block: 4 };
+        let mut ex = ThreadExecutor::new(&sys, spec, 0, 1);
+        for _ in 0..5 {
+            ex.execute(&mut |t: &mut dyn TxAccess| {
+                let v = t.read(a)?;
+                t.write(a, v + 1)
+            });
+        }
+        assert_eq!(ex.stats.norec_fallback, 5);
+        assert_eq!(ex.stats.sw_commits, 5);
+        assert_eq!(spec.label(&ex.stats), "batch(fallback:norec)");
+        // Other specs and clean batch stats keep their plain names.
+        assert_eq!(PolicySpec::StmNorec.label(&ex.stats), "stm");
+        assert_eq!(spec.label(&TxStats::new()), "batch");
     }
 
     #[test]

@@ -30,8 +30,18 @@
 //! to sequential execution of the block, which makes it directly
 //! comparable against the paper's policies on the same SSCA-2 kernels:
 //! select it with `--policy batch[=BLOCK]` from the CLI, or
-//! `PolicySpec::Batch` programmatically. See `benches/batch_throughput`
-//! for the head-to-head measurement.
+//! `PolicySpec::Batch` programmatically. The spec routes *every*
+//! end-to-end path through `BatchSystem`: the generation and
+//! computation kernels, kernel-3 subgraph extraction (a
+//! level-synchronous batch BFS, `batch::workload::run_subgraph`), and
+//! the streaming pipeline (`runtime::pipeline`, which drains its
+//! bounded channel in blocks). A `Batch` spec that reaches a
+//! per-transaction executor instead is loudly warned and reported as
+//! `batch(fallback:norec)`. In the simulator the backend is priced by
+//! a dedicated multi-version cost mode (estimate-wait, validation, and
+//! re-incarnation charges), not approximated as a plain STM. See
+//! `benches/batch_throughput` for the head-to-head measurement and the
+//! block-size × conflict-rate sweep.
 //!
 //! System inventory and the paper-vs-measured record live in
 //! `ROADMAP.md` (north star, open items) and `PAPER.md` (source

@@ -216,8 +216,13 @@ fn cmd_pipeline(mut a: Args) -> anyhow::Result<()> {
     let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
     let report = pipeline::run(&sys, &g, source, &cfg)?;
     println!(
-        "pipeline: {} edges in {:?} ({:.0} edges/s), producer blocked {:?}",
-        report.edges, report.elapsed, report.edges_per_sec, report.producer_blocked
+        "pipeline: {} edges in {:?} ({:.0} edges/s), producer blocked {:?}, \
+         consumers blocked {:?}",
+        report.edges,
+        report.elapsed,
+        report.edges_per_sec,
+        report.producer_blocked,
+        report.consumer_blocked
     );
     println!("{}", report.stats.to_markdown());
     Ok(())

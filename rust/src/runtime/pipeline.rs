@@ -8,12 +8,27 @@
 //! owns the tuple source and feeds a bounded channel (backpressure);
 //! `workers` insert concurrently under the configured policy. This is
 //! the deployment-shaped path a downstream user would actually run.
+//!
+//! Under `--policy batch` the consumer side is the speculative batch
+//! backend instead of per-transaction executors: a drainer thread pulls
+//! tuple batches off the same bounded channel, folds them into blocks
+//! of insert-transactions with globally sequential cell indices, and
+//! hands each block to [`BatchSystem`] (`cfg.workers` speculation
+//! workers). The built graph is bit-identical to a sequential insert of
+//! the streamed tuple order, and the bounded channel still applies
+//! backpressure between the producer and the drainer.
+//!
+//! Accounting: worker `time_ns` covers only the insertion critical
+//! path; time spent blocked on the queue is surfaced separately as
+//! [`PipelineReport::consumer_blocked`], mirroring `producer_blocked`.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::batch::workload::edge_insert_block;
+use crate::batch::{BatchReport, BatchSystem};
 use crate::graph::rmat::EdgeTuple;
 use crate::graph::{generation, Graph};
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
@@ -56,8 +71,13 @@ impl PipelineConfig {
         }
     }
 
-    pub fn total_edges(&self) -> usize {
-        (1usize << self.scale) * self.edge_factor as usize
+    /// Total edges (`2^scale * edge_factor`), or `None` when the count
+    /// overflows `usize` (`scale >= 64 - log2(edge_factor)` on 64-bit):
+    /// callers get a clean error instead of a shift/multiply overflow.
+    pub fn total_edges(&self) -> Option<usize> {
+        1usize
+            .checked_shl(self.scale)
+            .and_then(|n| n.checked_mul(self.edge_factor as usize))
     }
 }
 
@@ -68,6 +88,11 @@ pub struct PipelineReport {
     pub elapsed: Duration,
     /// Time the producer spent blocked on the full queue (backpressure).
     pub producer_blocked: Duration,
+    /// Time the consumer side spent blocked waiting for tuples (summed
+    /// across workers; for the batch backend, the drainer's wait). Kept
+    /// out of the per-worker `time_ns` so stats time only the insertion
+    /// critical path.
+    pub consumer_blocked: Duration,
     pub edges_per_sec: f64,
     pub stats: StatsTable,
 }
@@ -75,9 +100,9 @@ pub struct PipelineReport {
 fn produce(
     source: &mut TupleSource,
     cfg: &PipelineConfig,
+    total: usize,
     tx: SyncSender<Vec<EdgeTuple>>,
 ) -> Result<Duration> {
-    let total = cfg.total_edges();
     let mut sent = 0usize;
     let mut blocked = Duration::ZERO;
     let mut batch_idx = 0u64;
@@ -114,17 +139,25 @@ fn consume(
     g: &Graph,
     rx: &std::sync::Mutex<Receiver<Vec<EdgeTuple>>>,
     ex: &mut ThreadExecutor<'_>,
-) -> u64 {
+) -> (u64, Duration, Duration) {
     let mut inserted = 0;
+    let mut insert_time = Duration::ZERO;
+    let mut queue_wait = Duration::ZERO;
     loop {
-        // One worker holds the lock only long enough to take a batch.
-        let batch = match rx.lock().unwrap().recv() {
+        // One worker holds the lock only long enough to take a batch;
+        // the recv wait is queue time, not insertion time.
+        let t0 = Instant::now();
+        let batch = rx.lock().unwrap().recv();
+        queue_wait += t0.elapsed();
+        let batch = match batch {
             Ok(b) => b,
             Err(_) => break, // producer done and queue drained
         };
+        let t1 = Instant::now();
         inserted += generation::insert_slice(g, ex, &batch);
+        insert_time += t1.elapsed();
     }
-    inserted
+    (inserted, insert_time, queue_wait)
 }
 
 /// Run the streaming pipeline; the graph must be freshly allocated and
@@ -137,11 +170,24 @@ pub fn run(
     cfg: &PipelineConfig,
 ) -> Result<PipelineReport> {
     assert_eq!(g.cfg.scale, cfg.scale, "graph sized for a different scale");
+    let total = cfg.total_edges().ok_or_else(|| {
+        anyhow::anyhow!(
+            "scale {} with edge factor {} overflows the usize edge count",
+            cfg.scale,
+            cfg.edge_factor
+        )
+    })?;
+    if let PolicySpec::Batch { block } = cfg.policy {
+        // No silent NOrec fallback: the batch spec drains the channel
+        // in blocks through BatchSystem.
+        return run_batch(g, source, cfg, total, block);
+    }
     let (tx, rx) = sync_channel::<Vec<EdgeTuple>>(cfg.queue_depth);
     let rx = std::sync::Mutex::new(rx);
     let t0 = Instant::now();
     let mut table = StatsTable::new();
     let mut producer_blocked = Duration::ZERO;
+    let mut consumer_blocked = Duration::ZERO;
 
     std::thread::scope(|s| -> Result<()> {
         let mut handles = Vec::new();
@@ -149,36 +195,130 @@ pub fn run(
             let rx = &rx;
             let mut ex = ThreadExecutor::new(sys, cfg.policy, tid as u32, cfg.seed);
             handles.push(s.spawn(move || {
-                let t = Instant::now();
-                let inserted = consume(g, rx, &mut ex);
-                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
-                (inserted, ex.stats)
+                let (inserted, insert_time, queue_wait) = consume(g, rx, &mut ex);
+                ex.stats.time_ns = insert_time.as_nanos() as u64;
+                (inserted, queue_wait, ex.stats)
             }));
         }
         // The PJRT client is thread-pinned (!Send): the caller thread IS
         // the producer; workers overlap with it through the channel.
-        producer_blocked = produce(&mut source, cfg, tx)?;
+        producer_blocked = produce(&mut source, cfg, total, tx)?;
         // The sender is dropped; workers drain the queue and exit.
-        let mut total = 0;
+        let mut inserted_total = 0;
         for (tid, h) in handles.into_iter().enumerate() {
-            let (inserted, stats) = h.join().expect("worker panicked");
-            total += inserted;
+            let (inserted, queue_wait, stats) = h.join().expect("worker panicked");
+            inserted_total += inserted;
+            consumer_blocked += queue_wait;
             table.push(tid, stats);
         }
         anyhow::ensure!(
-            total == cfg.total_edges() as u64,
-            "inserted {total} != expected {}",
-            cfg.total_edges()
+            inserted_total == total as u64,
+            "inserted {inserted_total} != expected {total}"
         );
         Ok(())
     })?;
 
     let elapsed = t0.elapsed();
     Ok(PipelineReport {
-        edges: cfg.total_edges(),
+        edges: total,
         elapsed,
         producer_blocked,
-        edges_per_sec: cfg.total_edges() as f64 / elapsed.as_secs_f64(),
+        consumer_blocked,
+        edges_per_sec: total as f64 / elapsed.as_secs_f64(),
+        stats: table,
+    })
+}
+
+/// The `--policy batch` consumer side: a single drainer thread pulls
+/// tuple batches, accumulates them into blocks of `block`
+/// insert-transactions (`g.cfg.batch` edges each, cells assigned by
+/// global stream index), and runs each block through [`BatchSystem`]
+/// with `cfg.workers` speculation workers. Determinism: the built
+/// graph equals a sequential insert of the streamed tuple order, bit
+/// for bit.
+fn run_batch(
+    g: &Graph,
+    mut source: TupleSource,
+    cfg: &PipelineConfig,
+    total: usize,
+    block: usize,
+) -> Result<PipelineReport> {
+    let (tx, rx) = sync_channel::<Vec<EdgeTuple>>(cfg.queue_depth);
+    let t0 = Instant::now();
+    let chunk = g.cfg.batch.max(1);
+    let block = block.max(1);
+    let workers = cfg.workers.max(1);
+    let mut table = StatsTable::new();
+    let mut producer_blocked = Duration::ZERO;
+    let mut consumer_blocked = Duration::ZERO;
+
+    std::thread::scope(|s| -> Result<()> {
+        let drainer = s.spawn(move || {
+            let mut report = BatchReport::default();
+            let mut inserted = 0usize;
+            let mut insert_time = Duration::ZERO;
+            let mut queue_wait = Duration::ZERO;
+            let mut buf: Vec<EdgeTuple> = Vec::new();
+            loop {
+                let tw = Instant::now();
+                let msg = rx.recv();
+                queue_wait += tw.elapsed();
+                match msg {
+                    Ok(batch) => {
+                        buf.extend(batch);
+                        // Flush whole blocks as soon as they fill so the
+                        // buffer stays O(block), not O(edges). The block
+                        // runs straight off the buffer (no copy); the
+                        // consumed prefix is drained afterwards.
+                        while buf.len() >= block * chunk {
+                            let take = block * chunk;
+                            let ti = Instant::now();
+                            let txns =
+                                edge_insert_block(g, &buf[..take], inserted, chunk);
+                            report.merge(&BatchSystem::run(&g.heap, &txns, workers));
+                            insert_time += ti.elapsed();
+                            drop(txns);
+                            buf.drain(..take);
+                            inserted += take;
+                        }
+                    }
+                    Err(_) => break, // producer done and queue drained
+                }
+            }
+            if !buf.is_empty() {
+                let ti = Instant::now();
+                let txns = edge_insert_block(g, &buf, inserted, chunk);
+                report.merge(&BatchSystem::run(&g.heap, &txns, workers));
+                insert_time += ti.elapsed();
+                inserted += buf.len();
+            }
+            (inserted, report, insert_time, queue_wait)
+        });
+        producer_blocked = produce(&mut source, cfg, total, tx)?;
+        let (inserted, report, insert_time, queue_wait) =
+            drainer.join().expect("drainer panicked");
+        consumer_blocked = queue_wait;
+        anyhow::ensure!(
+            inserted == total,
+            "inserted {inserted} != expected {total}"
+        );
+        // The batch path assigns cells by stream index; settle the
+        // shared pool cursor to the same final value the transactional
+        // paths reach.
+        g.heap.store(g.pool_cursor, total as u64);
+        let mut stats = report.to_stats();
+        stats.time_ns = insert_time.as_nanos() as u64;
+        table.push(0, stats);
+        Ok(())
+    })?;
+
+    let elapsed = t0.elapsed();
+    Ok(PipelineReport {
+        edges: total,
+        elapsed,
+        producer_blocked,
+        consumer_blocked,
+        edges_per_sec: total as f64 / elapsed.as_secs_f64(),
         stats: table,
     })
 }
@@ -186,6 +326,7 @@ pub fn run(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::batch::workload;
     use crate::graph::{rmat, verify, Ssca2Config};
     use crate::htm::HtmConfig;
     use std::sync::Arc;
@@ -195,6 +336,18 @@ mod tests {
         let g = Graph::alloc(cfg);
         let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
         (sys, g)
+    }
+
+    /// Rebuild the tuple order the native source streams.
+    fn streamed_tuples(seed: u64, batch: usize, scale: u32, total: usize) -> Vec<EdgeTuple> {
+        let mut tuples = Vec::new();
+        let mut i = 0;
+        while tuples.len() < total {
+            tuples.extend(rmat::generate_chunk(seed, i, batch, scale, 8));
+            i += 1;
+        }
+        tuples.truncate(total);
+        tuples
     }
 
     #[test]
@@ -208,13 +361,7 @@ mod tests {
         assert_eq!(report.stats.rows.len(), 3);
         // The streamed tuple multiset equals the chunked generator's
         // output: rebuild it and verify.
-        let mut tuples = Vec::new();
-        let mut i = 0;
-        while tuples.len() < report.edges {
-            tuples.extend(rmat::generate_chunk(seed, i, 512, 9, 8));
-            i += 1;
-        }
-        tuples.truncate(report.edges);
+        let tuples = streamed_tuples(seed, 512, 9, report.edges);
         verify::check_graph(&g, &tuples).unwrap();
     }
 
@@ -255,5 +402,65 @@ mod tests {
             totals.push(r.stats.total().total_commits());
         }
         assert_eq!(totals[0], totals[1], "commit counts are workload-determined");
+    }
+
+    #[test]
+    fn batch_pipeline_matches_serial_build_bitwise() {
+        // `--policy batch`: the pipeline must route through BatchSystem
+        // and build the exact graph a sequential insert of the streamed
+        // tuple order builds.
+        let (sys, g) = setup(8);
+        let mut cfg = PipelineConfig::new(8, PolicySpec::Batch { block: 32 }, 3);
+        cfg.native_batch = 128;
+        let seed = cfg.seed;
+        let report = run(&sys, &g, TupleSource::Native { seed }, &cfg).unwrap();
+        assert_eq!(report.edges, 8 << 8);
+        assert_eq!(report.stats.rows.len(), 1, "batch path reports one merged row");
+        assert_eq!(
+            report.stats.total().sw_commits,
+            (8 << 8) as u64,
+            "one commit per insert transaction at chunk=1"
+        );
+
+        let tuples = streamed_tuples(seed, 128, 8, report.edges);
+        verify::check_graph(&g, &tuples).unwrap();
+
+        // Bit-for-bit against the serial oracle.
+        let g2 = Graph::alloc(Ssca2Config::new(8));
+        workload::run_sequential(&g2.heap, &workload::edge_insert_txns(&g2, &tuples, 1));
+        g2.heap.store(g2.pool_cursor, tuples.len() as u64);
+        assert_eq!(g.heap.allocated(), g2.heap.allocated());
+        for addr in 0..g.heap.allocated() {
+            assert_eq!(
+                g.heap.load(addr),
+                g2.heap.load(addr),
+                "heap divergence at word {addr}"
+            );
+        }
+    }
+
+    #[test]
+    fn batch_pipeline_respects_backpressure_with_tiny_queue() {
+        let (sys, g) = setup(7);
+        let mut cfg = PipelineConfig::new(7, PolicySpec::Batch { block: 8 }, 2);
+        cfg.queue_depth = 1;
+        cfg.native_batch = 32;
+        let seed = cfg.seed;
+        let report = run(&sys, &g, TupleSource::Native { seed }, &cfg).unwrap();
+        assert_eq!(report.edges, 8 << 7);
+        let tuples = streamed_tuples(seed, 32, 7, report.edges);
+        verify::check_graph(&g, &tuples).unwrap();
+    }
+
+    #[test]
+    fn total_edges_checks_overflow() {
+        let ok = PipelineConfig::new(9, PolicySpec::StmNorec, 1);
+        assert_eq!(ok.total_edges(), Some(8 << 9));
+        // 2^63 * 8 overflows a 64-bit usize in the multiply...
+        let mul_overflow = PipelineConfig::new(63, PolicySpec::StmNorec, 1);
+        assert_eq!(mul_overflow.total_edges(), None);
+        // ...and scale >= 64 overflows the shift itself.
+        let shift_overflow = PipelineConfig::new(70, PolicySpec::StmNorec, 1);
+        assert_eq!(shift_overflow.total_edges(), None);
     }
 }

@@ -39,6 +39,26 @@ pub struct CostModel {
     /// Validation on abort/retry: per read-log entry re-read.
     pub sw_validate_per_read: u64,
 
+    // -- multi-version (batch backend) execution -------------------------
+    /// Per versioned read: shard lock + version-map lookup in the
+    /// multi-version store (`batch::mvmemory`), vs `sw_read`'s value-log
+    /// append.
+    pub mv_read: u64,
+    /// Per buffered write (local write-set append; publication is paid
+    /// in the commit/validation term).
+    pub mv_write: u64,
+    /// Validation re-read per read-set entry. Every transaction
+    /// validates at least once before its block commits.
+    pub mv_validate_per_read: u64,
+    /// Re-incarnation after a failed validation: convert the write set
+    /// to ESTIMATEs + rescheduling (the PR-1 `validation_aborts`
+    /// counter).
+    pub mv_abort: u64,
+    /// Suspension on a lower transaction's ESTIMATE: parked until the
+    /// blocking transaction finishes and the scheduler re-readies us
+    /// (the PR-1 `dependencies` counter).
+    pub mv_estimate_wait: u64,
+
     // -- locks -----------------------------------------------------------
     /// Uncontended acquire+release round trip (atomic RMW pair).
     pub lock_cycle: u64,
@@ -87,6 +107,11 @@ impl CostModel {
             sw_write: 16,
             sw_commit: 60,
             sw_validate_per_read: 14,
+            mv_read: 34,
+            mv_write: 12,
+            mv_validate_per_read: 14,
+            mv_abort: 120,
+            mv_estimate_wait: 400,
             lock_cycle: 70,
             direct_access: 8,
             rng_draw: 20,
@@ -145,6 +170,18 @@ impl CostModel {
     pub fn locked_txn_cycles(&self, r: u64, w: u64) -> u64 {
         self.lock_cycle + self.direct_access * (r + w)
     }
+
+    /// Duration of one multi-version (batch backend) execution attempt:
+    /// optimistic execution through the version store, the mandatory
+    /// validation pass, and the transaction's share of the block
+    /// write-back (amortized into the commit term).
+    pub fn mv_txn_cycles(&self, r: u64, w: u64) -> u64 {
+        self.sw_begin
+            + self.mv_read * r
+            + self.mv_write * w
+            + self.mv_validate_per_read * r
+            + self.sw_commit
+    }
 }
 
 impl Default for CostModel {
@@ -191,6 +228,17 @@ mod tests {
     fn stm_is_slower_than_htm_per_txn() {
         let m = CostModel::broadwell();
         assert!(m.sw_txn_cycles(2, 6) > m.hw_txn_cycles(2, 6));
+    }
+
+    #[test]
+    fn mv_attempt_costs_more_than_plain_stm_attempt() {
+        // The multi-version store's per-read lookup + mandatory
+        // validation make a conflict-free MV attempt dearer than a
+        // conflict-free NOrec attempt — the batch backend buys its
+        // no-serial-write-back commit with per-access overhead.
+        let m = CostModel::broadwell();
+        assert!(m.mv_txn_cycles(2, 6) > m.sw_txn_cycles(2, 6));
+        assert!(m.mv_read > m.sw_read);
     }
 
     #[test]

@@ -15,7 +15,13 @@
 //!   times through `seq_free_at`;
 //! * lock-path and STM writes recorded with their completion timestamps
 //!   invalidate overlapping speculators exactly as the live
-//!   subscription + commit fence do.
+//!   subscription + commit fence do;
+//! * the batch backend runs as [`Mode::MultiVersion`]: admission order
+//!   is the serialization order, only lower-index commits invalidate an
+//!   execution, failed validations charge re-incarnation (and, for
+//!   repeat offenders, ESTIMATE-wait) costs, and commits skip NOrec's
+//!   serial write-back — the block write-back is amortized per
+//!   transaction in [`CostModel::mv_txn_cycles`].
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
@@ -50,6 +56,14 @@ enum Mode {
     Hybrid,
     /// PhTM: phase-global HW/SW switching (ablation A5).
     Phased { sw_quantum: u32 },
+    /// Block-STM-style multi-version batch execution
+    /// (`PolicySpec::Batch`): transactions take a global serialization
+    /// index; only *lower-index* writers can invalidate an execution,
+    /// and commits never serialize through NOrec's sequence lock. Failed
+    /// validations charge re-incarnation (and, for repeat offenders,
+    /// ESTIMATE-wait) costs — the virtual-time analogue of the live
+    /// `BatchReport` counters.
+    MultiVersion,
 }
 
 /// Per-thread simulation state.
@@ -62,6 +76,11 @@ struct ThreadSim {
     cur: Option<TxnDesc>,
     /// Persistent capacity verdict for the current transaction.
     cur_capacity: bool,
+    /// Global serialization index of the current transaction
+    /// (Mode::MultiVersion only).
+    mv_idx: u64,
+    /// Re-incarnations of the current transaction (Mode::MultiVersion).
+    mv_retries: u32,
     state: TState,
     done: bool,
 }
@@ -148,10 +167,11 @@ impl Simulator {
             }
             PolicySpec::Hle => Mode::HtmLock { retries: 0 },
             PolicySpec::PhTm { sw_quantum, .. } => Mode::Phased { sw_quantum },
-            // The simulator has no multi-version model; optimistic
-            // software execution + validation is the closest cost
-            // approximation for the batch backend.
-            PolicySpec::Batch { .. } => Mode::Stm,
+            // The batch backend is priced as what it is: multi-version
+            // speculative execution with a fixed serialization order
+            // (block admission is a live-executor concern; the cost
+            // model amortizes the block write-back per transaction).
+            PolicySpec::Batch { .. } => Mode::MultiVersion,
             _ => Mode::Hybrid,
         };
         // Test-and-set fallback (HTMALock) pays an extra RMW storm per
@@ -172,6 +192,8 @@ impl Simulator {
                 clock: 0,
                 cur: None,
                 cur_capacity: false,
+                mv_idx: 0,
+                mv_retries: 0,
                 state: TState::Ready,
                 done: false,
             })
@@ -188,6 +210,18 @@ impl Simulator {
         let mut ph_sw: bool = false;
         let mut ph_sw_left: i64 = 0;
         let mut ph_inflight: u32 = 0;
+        // Multi-version state (Mode::MultiVersion only): the global
+        // serialization order and, per line, the recent commit history
+        // as (time, writer index) pairs. A history — not just the last
+        // writer — because a higher-index commit must not hide a
+        // lower-index commit that also landed inside an open window.
+        // Entries older than the longest attempt window seen so far can
+        // never fall inside any future window (event times are
+        // processed in nondecreasing order), so they are pruned lazily.
+        let mut mv_next_idx: u64 = 0;
+        let mut mv_commits: HashMap<u64, std::collections::VecDeque<(u64, u64)>> =
+            HashMap::new();
+        let mut mv_max_window: u64 = 0;
         // RNDHyTM's per-transaction rand() goes through libc's internal
         // lock: draws from all threads serialize (the paper: "overhead
         // due to random number generation which is quite significant").
@@ -254,6 +288,20 @@ impl Simulator {
                                 desc.n_reads as u64,
                                 desc.n_writes as u64,
                             ));
+                            th.state = TState::SwCheck { start };
+                            queue.push(Reverse((start + d, tid)));
+                        }
+                        Mode::MultiVersion => {
+                            // Admission order is the serialization
+                            // order: take the next global index.
+                            th.mv_idx = mv_next_idx;
+                            mv_next_idx += 1;
+                            th.mv_retries = 0;
+                            let d = scale(self.cost.mv_txn_cycles(
+                                desc.n_reads as u64,
+                                desc.n_writes as u64,
+                            ));
+                            mv_max_window = mv_max_window.max(d);
                             th.state = TState::SwCheck { start };
                             queue.push(Reverse((start + d, tid)));
                         }
@@ -413,6 +461,69 @@ impl Simulator {
                 // -------------------------------------------- SwCheck
                 TState::SwCheck { start } => {
                     let desc = th.cur.expect("SwCheck without txn");
+                    if mode == Mode::MultiVersion {
+                        // Multi-version validation: only a *lower*
+                        // transaction in the serialization order
+                        // committing to a touched line inside the
+                        // window invalidates this execution — higher
+                        // writers are invisible to its versioned reads.
+                        // The per-line history is scanned (not just the
+                        // last writer) so a later higher-index commit
+                        // cannot mask a lower-index one.
+                        let my_idx = th.mv_idx;
+                        let horizon = now.saturating_sub(mv_max_window);
+                        let mut hit = |l: &u64| {
+                            let Some(commits) = mv_commits.get_mut(l) else {
+                                return false;
+                            };
+                            while matches!(commits.front(), Some(&(t, _)) if t < horizon)
+                            {
+                                commits.pop_front();
+                            }
+                            commits
+                                .iter()
+                                .any(|&(t, i)| t > start && t <= now && i < my_idx)
+                        };
+                        let lower_conflict = desc.wlines().iter().any(&mut hit)
+                            || desc.rlines().iter().any(&mut hit);
+                        if lower_conflict {
+                            // Re-incarnate: failed validation + ESTIMATE
+                            // conversion; repeat offenders model the
+                            // dependency path (suspend on the lower
+                            // writer's ESTIMATE) with the parked wait on
+                            // top. Mirrors the live `validation_aborts`
+                            // / `dependencies` counters, folded into
+                            // sw_aborts exactly as BatchReport::to_stats
+                            // does.
+                            th.stats.sw_aborts += 1;
+                            let mut penalty = self.cost.mv_validate_per_read
+                                * desc.n_reads as u64
+                                + self.cost.mv_abort;
+                            if th.mv_retries > 0 {
+                                penalty += self.cost.mv_estimate_wait;
+                            }
+                            th.mv_retries += 1;
+                            let s2 = now + scale(penalty);
+                            let d = scale(self.cost.mv_txn_cycles(
+                                desc.n_reads as u64,
+                                desc.n_writes as u64,
+                            ));
+                            th.state = TState::SwCheck { start: s2 };
+                            queue.push(Reverse((s2 + d, tid)));
+                        } else {
+                            // Commit: versions publish without NOrec's
+                            // serial write-back (the block write-back is
+                            // amortized into mv_txn_cycles).
+                            for &l in desc.wlines() {
+                                mv_commits.entry(l).or_default().push_back((now, my_idx));
+                            }
+                            th.stats.sw_commits += 1;
+                            th.cur = None;
+                            th.state = TState::Ready;
+                            queue.push(Reverse((now, tid)));
+                        }
+                        continue;
+                    }
                     if lines_conflict(&last_write, &desc, start, now) {
                         // Validation failure: revalidate + retry in SW.
                         th.stats.sw_aborts += 1;
@@ -544,6 +655,7 @@ mod tests {
             PolicySpec::Hle,
             PolicySpec::DyAd { n: 43 },
             PolicySpec::Rnd { lo: 1, hi: 50 },
+            PolicySpec::Batch { block: 2048 },
         ] {
             let out = run_gen(spec, 4, 10);
             let m = SimWorkload::new(10).edges();
@@ -586,6 +698,72 @@ mod tests {
         let stm = run_gen(PolicySpec::StmNorec, 4, 12).seconds;
         let dyad = run_gen(PolicySpec::DyAd { n: 43 }, 4, 12).seconds;
         assert!(dyad < stm);
+    }
+
+    #[test]
+    fn batch_mode_is_multiversion_not_stm() {
+        let batch = run_gen(PolicySpec::Batch { block: 2048 }, 4, 10);
+        let stm = run_gen(PolicySpec::StmNorec, 4, 10);
+        let m = SimWorkload::new(10).edges();
+        let t = batch.stats.total();
+        assert_eq!(t.total_commits(), m);
+        assert_eq!(t.sw_commits, m, "MV commits are software commits");
+        assert_eq!(t.hw_attempts, 0, "MV execution never touches the HTM");
+        assert_ne!(
+            batch.cycles, stm.cycles,
+            "batch must not alias the plain-STM cost model"
+        );
+    }
+
+    #[test]
+    fn multiversion_single_thread_never_aborts() {
+        // Serial admission: every window closes before the next opens,
+        // so no lower-index commit can land inside it.
+        let out = run_gen(PolicySpec::Batch { block: 1024 }, 1, 10);
+        let t = out.stats.total();
+        assert_eq!(t.sw_commits, SimWorkload::new(10).edges());
+        assert_eq!(t.sw_aborts, 0, "serial admission cannot conflict");
+    }
+
+    #[test]
+    fn multiversion_beats_norec_when_writeback_serializes() {
+        // Zero non-critical work: back-to-back critical sections, where
+        // NOrec pays whole-window conflicts plus the serial write-back
+        // for every writer commit. Multi-version execution only
+        // re-incarnates against *lower*-index active transactions (a
+        // bounded set), so it must finish first.
+        let cost = CostModel {
+            edge_gen_work: 0,
+            ..CostModel::broadwell()
+        };
+        let run = |spec| {
+            let w = SimWorkload::new(12);
+            let sim = Simulator::new(cost.clone());
+            let streams: Vec<Box<dyn Iterator<Item = TxnDesc>>> = (0..14)
+                .map(|tid| {
+                    Box::new(w.generation_stream(&cost, 14, tid))
+                        as Box<dyn Iterator<Item = TxnDesc>>
+                })
+                .collect();
+            sim.run(spec, 14, streams, 3)
+        };
+        let stm = run(PolicySpec::StmNorec);
+        let mv = run(PolicySpec::Batch { block: 2048 });
+        assert_eq!(
+            mv.stats.total().sw_commits,
+            SimWorkload::new(12).edges(),
+            "every transaction commits under MV"
+        );
+        assert!(
+            mv.stats.total().sw_aborts > 0,
+            "hub conflicts must force re-incarnations"
+        );
+        assert!(
+            mv.cycles < stm.cycles,
+            "multi-version {} must beat serial-write-back NOrec {}",
+            mv.cycles,
+            stm.cycles
+        );
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //! * an event-driven conflict engine ([`engine`]): a transaction
 //!   windows `[start, commit)`; it aborts if any line it touched was
 //!   committed to inside its window, if a subscribed lock moved, or if
-//!   its footprint trips the capacity model;
+//!   its footprint trips the capacity model — except under
+//!   `PolicySpec::Batch`, which runs as a multi-version mode: only
+//!   lower-serialization-index commits invalidate a window, and failed
+//!   validations charge re-incarnation/ESTIMATE-wait costs instead of
+//!   NOrec's serial write-back;
 //! * hyperthread derating beyond 14 threads (shared execution ports →
 //!   per-thread IPC drops; [`cost::CostModel::derate`]).
 //!

@@ -29,6 +29,13 @@ pub struct TxStats {
     /// Transactions executed under a non-speculative lock fallback
     /// (HTMALock / HTMSpin / HLE second attempt).
     pub lock_commits: u64,
+    /// Transactions a `PolicySpec::Batch` executor ran on the
+    /// per-transaction NOrec fallback instead of `BatchSystem`. Zero on
+    /// every routed path (generation, computation, subgraph, pipeline);
+    /// non-zero means a caller is degrading batch speculation to plain
+    /// NOrec, and the run is reported as `batch(fallback:norec)` (see
+    /// `PolicySpec::label`).
+    pub norec_fallback: u64,
     /// Wall-clock or virtual nanoseconds attributed to this thread.
     pub time_ns: u64,
 }
@@ -66,6 +73,7 @@ impl TxStats {
         self.sw_commits += other.sw_commits;
         self.sw_aborts += other.sw_aborts;
         self.lock_commits += other.lock_commits;
+        self.norec_fallback += other.norec_fallback;
         self.time_ns = self.time_ns.max(other.time_ns);
     }
 }

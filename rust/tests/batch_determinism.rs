@@ -7,7 +7,12 @@
 
 use dyadhytm::batch::workload::{desc_txn, run_sequential};
 use dyadhytm::batch::{BatchSystem, BatchTxn};
+use dyadhytm::graph::{computation, generation, rmat, subgraph, verify, Graph, Ssca2Config};
+use dyadhytm::htm::HtmConfig;
+use dyadhytm::hytm::{PolicySpec, TmSystem};
 use dyadhytm::mem::{TxHeap, WORDS_PER_LINE};
+use dyadhytm::runtime::pipeline::{self, PipelineConfig};
+use dyadhytm::runtime::TupleSource;
 use dyadhytm::sim::workload::{TxnDesc, MAX_WLINES};
 use dyadhytm::util::qcheck::qcheck_res;
 use dyadhytm::util::rng::Rng;
@@ -131,6 +136,106 @@ fn pathological_single_hub_line() {
     for workers in [1usize, 2, 4, 7] {
         check_case(0xBEE5 ^ workers as u64, 8.0, 64, workers).unwrap();
     }
+}
+
+/// Build a graph + kernel-2 results for the subgraph tests: the RMAT
+/// edge distribution is the Zipf-skewed (power-law hub) regime the
+/// paper's kernel-3 dynamics live in.
+fn built_graph(scale: u32, seed: u64) -> (TmSystem, Graph) {
+    let cfg = Ssca2Config::new(scale).with_seed(seed);
+    let g = Graph::alloc(cfg);
+    let sys = TmSystem::new(std::sync::Arc::clone(&g.heap), HtmConfig::broadwell());
+    let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+    generation::build_serial(&sys, &g, &tuples);
+    let _ = computation::run(&sys, &g, PolicySpec::CoarseLock, 2, 5);
+    (sys, g)
+}
+
+#[test]
+fn prop_batch_subgraph_matches_serial_oracle() {
+    // Kernel 3 under `--policy batch`: the claimed ball and every
+    // per-vertex BFS level must equal the serial oracle for random
+    // seeds, depths, and worker counts in {1, 2, 4}.
+    qcheck_res(
+        "batch kernel-3 == serial BFS oracle",
+        6,
+        |rng| {
+            (
+                rng.next_u64(),
+                1 + rng.below(3) as usize,
+                [1usize, 2, 4][rng.below(3) as usize],
+            )
+        },
+        |&(seed, depth, workers)| {
+            let (sys, g) = built_graph(7, seed);
+            let roots = subgraph::roots_from_results(&g);
+            if roots.is_empty() {
+                return Err("no kernel-2 roots".into());
+            }
+            let r = subgraph::run(
+                &sys,
+                &g,
+                &roots,
+                depth,
+                PolicySpec::Batch { block: 64 },
+                workers,
+                seed,
+            );
+            subgraph::verify_subgraph(&g, &roots, depth, &r)
+                .map_err(|e| format!("workers={workers} depth={depth}: {e}"))?;
+            if r.stats.total().norec_fallback != 0 {
+                return Err("kernel 3 took the NOrec fallback under batch".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn batch_subgraph_agrees_with_every_other_policy() {
+    // The batch backend must visit exactly the set the lock and DyAd
+    // paths visit (level-synchronous BFS is schedule-independent).
+    let mut totals = Vec::new();
+    for spec in [
+        PolicySpec::CoarseLock,
+        PolicySpec::DyAd { n: 43 },
+        PolicySpec::Batch { block: 32 },
+    ] {
+        let (sys, g) = built_graph(7, 0x5EED);
+        let roots = subgraph::roots_from_results(&g);
+        let r = subgraph::run(&sys, &g, &roots, 3, spec, 4, 9);
+        subgraph::verify_subgraph(&g, &roots, 3, &r)
+            .unwrap_or_else(|e| panic!("{}: {e}", spec.name()));
+        totals.push((r.total_marked, r.level_sizes.clone()));
+    }
+    assert!(
+        totals.windows(2).all(|w| w[0] == w[1]),
+        "per-level claim counts must be policy-independent: {totals:?}"
+    );
+}
+
+#[test]
+fn pipeline_smoke_under_batch_policy() {
+    // Small-scale streaming pipeline under `--policy batch`: drains the
+    // bounded channel through BatchSystem and builds a verified graph.
+    let cfg0 = Ssca2Config::new(8);
+    let g = Graph::alloc(cfg0);
+    let sys = TmSystem::new(std::sync::Arc::clone(&g.heap), HtmConfig::broadwell());
+    let mut cfg = PipelineConfig::new(8, PolicySpec::Batch { block: 64 }, 2);
+    cfg.native_batch = 256;
+    let seed = cfg.seed;
+    let report = pipeline::run(&sys, &g, TupleSource::Native { seed }, &cfg).unwrap();
+    assert_eq!(report.edges, 8 << 8);
+    assert_eq!(report.stats.total().norec_fallback, 0);
+    assert_eq!(report.stats.total().sw_commits, (8 << 8) as u64);
+    let mut tuples = Vec::new();
+    let mut i = 0;
+    while tuples.len() < report.edges {
+        tuples.extend(rmat::generate_chunk(seed, i, 256, 8, 8));
+        i += 1;
+    }
+    tuples.truncate(report.edges);
+    verify::check_graph(&g, &tuples).unwrap();
 }
 
 #[test]
