@@ -1,20 +1,35 @@
 //! Bench: the speculative batch backend vs DyAdHyTM vs the coarse lock
 //! on the SSCA-2 edge-insertion (generation) workload, plus a
-//! block-size × conflict-rate sweep on the descriptor substrate.
+//! block-size × conflict-rate sweep on the descriptor substrate that
+//! A/Bs the **lock-free multi-version store against the sharded-mutex
+//! baseline** and measures where the **adaptive block controller**
+//! converges relative to the best fixed block.
 //!
 //! Prints markdown tables plus one machine-readable `BENCH_JSON` line
 //! per cell (the same flat-JSON record shape the other `BENCH_*`
 //! outputs use), so sweeps can be scraped with `grep '^BENCH_JSON'`.
 //! Record kinds: `"bench":"batch_throughput"` (generation head-to-head)
-//! and `"bench":"batch_block_sweep"` (block vs conflict rate).
+//! and `"bench":"batch_block_sweep"` (block vs conflict rate, one
+//! record per (store, block, skew) cell plus one per adaptive run).
+//!
+//! The sweep additionally writes the stable perf-trajectory file
+//! **`BENCH_batch.json`** at the repository root: a JSON array of
+//! `{policy, block, conflict, txns_per_sec, ...}` records (`policy` is
+//! `batch` for the lock-free store, `batch-mutex` for the baseline,
+//! `batch-adaptive` for the controller run, whose `block` is the
+//! converged size). CI runs the bench in smoke mode (`BENCH_SMOKE=1`,
+//! smaller sizes) and uploads the file as an artifact.
 //!
 //! ```sh
-//! cargo bench --bench batch_throughput
+//! cargo bench --bench batch_throughput          # full sizes
+//! BENCH_SMOKE=1 cargo bench --bench batch_throughput
 //! ```
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use dyadhytm::batch::adaptive::BlockSizeController;
+use dyadhytm::batch::workload::run_blocks;
 use dyadhytm::batch::{BatchReport, BatchSystem, BatchTxn};
 use dyadhytm::graph::{generation, rmat, verify, Graph, Ssca2Config};
 use dyadhytm::htm::HtmConfig;
@@ -24,89 +39,225 @@ use dyadhytm::tm::access::TxAccess;
 use dyadhytm::util::rng::Rng;
 use dyadhytm::util::zipf::Zipf;
 
+fn smoke() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
+/// One sweep cell's outcome, destined for `BENCH_batch.json`.
+struct SweepRec {
+    policy: &'static str,
+    block: usize,
+    zipf_s: f64,
+    workers: usize,
+    conflict: f64,
+    txns_per_sec: f64,
+}
+
+impl SweepRec {
+    fn to_json(&self) -> String {
+        format!(
+            "{{\"policy\":\"{}\",\"block\":{},\"conflict\":{:.4},\
+             \"txns_per_sec\":{:.0},\"zipf_s\":{},\"workers\":{}}}",
+            self.policy, self.block, self.conflict, self.txns_per_sec, self.zipf_s,
+            self.workers,
+        )
+    }
+}
+
+/// Two Zipf-drawn RMW lines + one read line per txn: the hub-counter
+/// shape of the generation kernel, skew-tunable. Deterministic per
+/// (skew, count): identical bodies for every store/controller variant.
+fn sweep_txns(zipf_s: f64, n: usize, lines: usize) -> Vec<BatchTxn<'static>> {
+    let mut rng = Rng::new(0xB10C ^ (zipf_s * 8.0) as u64);
+    let zipf = Zipf::new(lines - 1, zipf_s);
+    (0..n)
+        .map(|_| {
+            let w1 = (1 + zipf.sample(&mut rng)) * WORDS_PER_LINE;
+            let w2 = (1 + zipf.sample(&mut rng)) * WORDS_PER_LINE;
+            let r = (1 + zipf.sample(&mut rng)) * WORDS_PER_LINE;
+            let salt = rng.next_u64();
+            BatchTxn::new(move |t: &mut dyn TxAccess| {
+                let mut acc = salt ^ t.read(r)?;
+                let v = t.read(w1)?;
+                acc = acc.rotate_left(13).wrapping_add(v);
+                t.write(w1, acc)?;
+                let v2 = t.read(w2)?;
+                t.write(w2, acc ^ v2)
+            })
+        })
+        .collect()
+}
+
+fn run_fixed(
+    txns: &[BatchTxn<'_>],
+    heap_words: usize,
+    block: usize,
+    workers: usize,
+    mutex_baseline: bool,
+) -> (BatchReport, f64) {
+    let heap = TxHeap::new(heap_words);
+    let t0 = Instant::now();
+    let mut report = BatchReport::default();
+    let mut j0 = 0;
+    while j0 < txns.len() {
+        let j1 = (j0 + block).min(txns.len());
+        let r = if mutex_baseline {
+            BatchSystem::run_baseline_mutex(&heap, &txns[j0..j1], workers)
+        } else {
+            BatchSystem::run(&heap, &txns[j0..j1], workers)
+        };
+        report.merge(&r);
+        j0 = j1;
+    }
+    let tps = txns.len() as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    (report, tps)
+}
+
 /// Sweep the admission block size against the workload's conflict
 /// skew: Zipf-s 0 spreads RMWs uniformly over the lines, s = 1.5
-/// concentrates them on a few hubs. Emits one `batch_block_sweep`
-/// BENCH_JSON record per cell so the perf trajectory accumulates
-/// comparable points across PRs.
-fn block_conflict_sweep() {
-    const SWEEP_TXNS: usize = 4096;
+/// concentrates them on a few hubs. Each (block, skew) cell runs on
+/// both stores; each skew additionally runs the adaptive controller.
+/// Returns the records for `BENCH_batch.json`.
+fn block_conflict_sweep() -> Vec<SweepRec> {
+    let sweep_txn_count: usize = if smoke() { 4096 } else { 16384 };
     const LINES: usize = 64;
     const WORKERS: usize = 4;
+    let heap_words = LINES * WORDS_PER_LINE;
+    let blocks = [256usize, 1024, 4096];
+    let skews = [0.0f64, 0.8, 1.5];
 
-    println!("\n### batch_throughput — block size vs conflict rate (Zipf RMW substrate, {WORKERS} workers)\n");
-    println!("| block | zipf_s | txns | elapsed ms | txns/s | executions | validation_aborts | dependencies | conflict_rate |");
-    println!("|---|---|---|---|---|---|---|---|---|");
+    println!(
+        "\n### batch_throughput — block size vs conflict rate \
+         (Zipf RMW substrate, {WORKERS} workers, {sweep_txn_count} txns)\n"
+    );
+    println!("| store | block | zipf_s | txns/s | executions | validation_aborts | dependencies | conflict_rate |");
+    println!("|---|---|---|---|---|---|---|---|");
 
-    for &block in &[256usize, 1024, 4096] {
-        for &zipf_s in &[0.0f64, 0.8, 1.5] {
-            let mut rng = Rng::new(0xB10C ^ block as u64 ^ (zipf_s * 8.0) as u64);
-            let zipf = Zipf::new(LINES - 1, zipf_s);
-            // Two Zipf-drawn RMW lines + one read line per txn: the
-            // hub-counter shape of the generation kernel, skew-tunable.
-            let txns: Vec<BatchTxn> = (0..SWEEP_TXNS)
-                .map(|_| {
-                    let w1 = (1 + zipf.sample(&mut rng)) * WORDS_PER_LINE;
-                    let w2 = (1 + zipf.sample(&mut rng)) * WORDS_PER_LINE;
-                    let r = (1 + zipf.sample(&mut rng)) * WORDS_PER_LINE;
-                    let salt = rng.next_u64();
-                    BatchTxn::new(move |t: &mut dyn TxAccess| {
-                        let mut acc = salt ^ t.read(r)?;
-                        let v = t.read(w1)?;
-                        acc = acc.rotate_left(13).wrapping_add(v);
-                        t.write(w1, acc)?;
-                        let v2 = t.read(w2)?;
-                        t.write(w2, acc ^ v2)
-                    })
-                })
-                .collect();
-
-            let heap = TxHeap::new(LINES * WORDS_PER_LINE);
-            let t0 = Instant::now();
-            let mut report = BatchReport::default();
-            let mut j0 = 0;
-            while j0 < txns.len() {
-                let j1 = (j0 + block).min(txns.len());
-                report.merge(&BatchSystem::run(&heap, &txns[j0..j1], WORKERS));
-                j0 = j1;
+    let mut records = Vec::new();
+    for &zipf_s in &skews {
+        let txns = sweep_txns(zipf_s, sweep_txn_count, LINES);
+        let mut best_fixed: Option<(usize, f64)> = None;
+        for &block in &blocks {
+            for (policy, mutex_baseline) in [("batch", false), ("batch-mutex", true)] {
+                let (report, tps) =
+                    run_fixed(&txns, heap_words, block, WORKERS, mutex_baseline);
+                let conflict =
+                    report.validation_aborts as f64 / report.executions.max(1) as f64;
+                println!(
+                    "| {policy} | {block} | {zipf_s} | {tps:.0} | {} | {} | {} | {conflict:.4} |",
+                    report.executions, report.validation_aborts, report.dependencies,
+                );
+                println!(
+                    "BENCH_JSON {{\"bench\":\"batch_block_sweep\",\"store\":\"{policy}\",\
+                     \"block\":{block},\"zipf_s\":{zipf_s},\"workers\":{WORKERS},\
+                     \"txns\":{sweep_txn_count},\"txns_per_sec\":{tps:.0},\
+                     \"executions\":{},\"validations\":{},\"validation_aborts\":{},\
+                     \"dependencies\":{},\"conflict_rate\":{conflict:.4}}}",
+                    report.executions,
+                    report.validations,
+                    report.validation_aborts,
+                    report.dependencies,
+                );
+                if !mutex_baseline
+                    && best_fixed.map_or(true, |(_, best_tps)| tps > best_tps)
+                {
+                    best_fixed = Some((block, tps));
+                }
+                records.push(SweepRec {
+                    policy,
+                    block,
+                    zipf_s,
+                    workers: WORKERS,
+                    conflict,
+                    txns_per_sec: tps,
+                });
             }
-            let elapsed = t0.elapsed();
-            let tps = SWEEP_TXNS as f64 / elapsed.as_secs_f64().max(1e-9);
-            let conflict_rate =
-                report.validation_aborts as f64 / report.executions.max(1) as f64;
+        }
+
+        // The adaptive controller on the same substrate, bounded by the
+        // sweep's own grid so "converged" is comparable to "best fixed".
+        let heap = TxHeap::new(heap_words);
+        let mut ctl = BlockSizeController::with_bounds(
+            blocks[1],
+            blocks[0],
+            blocks[blocks.len() - 1],
+            BlockSizeController::GROW_STEP,
+        );
+        let t0 = Instant::now();
+        let report = run_blocks(&heap, &txns, WORKERS, &mut ctl);
+        let tps = sweep_txn_count as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        let conflict = report.validation_aborts as f64 / report.executions.max(1) as f64;
+        let converged = ctl.current();
+        println!(
+            "| batch-adaptive | {converged} | {zipf_s} | {tps:.0} | {} | {} | {} | {conflict:.4} |",
+            report.executions, report.validation_aborts, report.dependencies,
+        );
+        println!(
+            "BENCH_JSON {{\"bench\":\"batch_block_sweep\",\"store\":\"batch-adaptive\",\
+             \"block\":{converged},\"zipf_s\":{zipf_s},\"workers\":{WORKERS},\
+             \"txns\":{sweep_txn_count},\"txns_per_sec\":{tps:.0},\
+             \"grows\":{},\"shrinks\":{},\"conflict_rate\":{conflict:.4}}}",
+            ctl.grows, ctl.shrinks,
+        );
+        records.push(SweepRec {
+            policy: "batch-adaptive",
+            block: converged,
+            zipf_s,
+            workers: WORKERS,
+            conflict,
+            txns_per_sec: tps,
+        });
+        if let Some((best_block, _)) = best_fixed {
             println!(
-                "| {block} | {zipf_s} | {SWEEP_TXNS} | {:.1} | {:.0} | {} | {} | {} | {:.4} |",
-                elapsed.as_secs_f64() * 1e3,
-                tps,
-                report.executions,
-                report.validation_aborts,
-                report.dependencies,
-                conflict_rate,
-            );
-            println!(
-                "BENCH_JSON {{\"bench\":\"batch_block_sweep\",\"block\":{block},\
-                 \"zipf_s\":{zipf_s},\"workers\":{WORKERS},\"txns\":{SWEEP_TXNS},\
-                 \"elapsed_ns\":{},\"txns_per_sec\":{:.0},\"executions\":{},\
-                 \"validations\":{},\"validation_aborts\":{},\"dependencies\":{},\
-                 \"conflict_rate\":{:.4}}}",
-                elapsed.as_nanos(),
-                tps,
-                report.executions,
-                report.validations,
-                report.validation_aborts,
-                report.dependencies,
-                conflict_rate,
+                "> zipf {zipf_s}: adaptive converged to block {converged} \
+                 (best fixed lock-free block: {best_block})"
             );
         }
+    }
+
+    // Headline of the sweep: what the lock-free hot path buys over the
+    // mutex store, per conflict regime (acceptance: >= 1.3x at low
+    // conflict on >= 4 workers).
+    for &zipf_s in &skews {
+        let speedup = |policy: &str| {
+            records
+                .iter()
+                .filter(|r| r.policy == policy && r.zipf_s == zipf_s)
+                .map(|r| r.txns_per_sec)
+                .fold(0.0f64, f64::max)
+        };
+        let lockfree = speedup("batch");
+        let mutex = speedup("batch-mutex");
+        if mutex > 0.0 {
+            println!(
+                "> zipf {zipf_s}: lock-free store {:.2}x vs mutex baseline \
+                 (best-block txns/s {lockfree:.0} vs {mutex:.0})",
+                lockfree / mutex
+            );
+        }
+    }
+    records
+}
+
+/// Write the perf-trajectory file at the repo root (next to
+/// `Cargo.toml`): a stable JSON array, one object per sweep cell.
+fn write_bench_json(records: &[SweepRec]) {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_batch.json");
+    let body: Vec<String> = records.iter().map(|r| format!("  {}", r.to_json())).collect();
+    let json = format!("[\n{}\n]\n", body.join(",\n"));
+    match std::fs::write(path, json) {
+        Ok(()) => println!("\nwrote {} records to {path}", records.len()),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
     }
 }
 
 fn main() {
-    let scale = 12u32;
+    let scale = if smoke() { 10u32 } else { 12 };
     let seed = 0x55CA_2017u64;
     let t0 = std::time::Instant::now();
     let variants = [
         PolicySpec::Batch { block: 2048 },
+        PolicySpec::BatchAdaptive,
         PolicySpec::DyAd { n: 43 },
         PolicySpec::CoarseLock,
     ];
@@ -114,8 +265,8 @@ fn main() {
     println!(
         "### batch_throughput — SSCA-2 generation kernel, live (scale {scale}, edge factor 8)\n"
     );
-    println!("| policy | threads | edges | elapsed ms | edges/s | commits | sw_aborts |");
-    println!("|---|---|---|---|---|---|---|");
+    println!("| policy | threads | edges | elapsed ms | edges/s | commits | sw_aborts | final_block |");
+    println!("|---|---|---|---|---|---|---|---|");
 
     for &threads in &[1usize, 2, 4, 8] {
         for policy in variants {
@@ -129,27 +280,31 @@ fn main() {
             let total = stats.total();
             let eps = tuples.len() as f64 / elapsed.as_secs_f64().max(1e-9);
             println!(
-                "| {} | {threads} | {} | {:.1} | {:.0} | {} | {} |",
+                "| {} | {threads} | {} | {:.1} | {:.0} | {} | {} | {} |",
                 policy.name(),
                 tuples.len(),
                 elapsed.as_secs_f64() * 1e3,
                 eps,
                 total.total_commits(),
                 total.sw_aborts,
+                total.final_block,
             );
             println!(
                 "BENCH_JSON {{\"bench\":\"batch_throughput\",\"kernel\":\"generation\",\
                  \"policy\":\"{}\",\"scale\":{scale},\"threads\":{threads},\"edges\":{},\
-                 \"elapsed_ns\":{},\"edges_per_sec\":{:.0},\"commits\":{},\"sw_aborts\":{}}}",
+                 \"elapsed_ns\":{},\"edges_per_sec\":{:.0},\"commits\":{},\"sw_aborts\":{},\
+                 \"final_block\":{}}}",
                 policy.name(),
                 tuples.len(),
                 elapsed.as_nanos(),
                 eps,
                 total.total_commits(),
                 total.sw_aborts,
+                total.final_block,
             );
         }
     }
-    block_conflict_sweep();
+    let records = block_conflict_sweep();
+    write_bench_json(&records);
     eprintln!("[batch_throughput: finished in {:?}]", t0.elapsed());
 }

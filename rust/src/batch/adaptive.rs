@@ -1,0 +1,252 @@
+//! Runtime-adaptive block sizing for the batch backend.
+//!
+//! DyAdHyTM's thesis is that the winning TM configuration must be
+//! *chosen at runtime from observed abort behaviour* (§3.6, Figure 1b).
+//! [`BlockSizeController`] applies the same adapt-loop shape to the
+//! batch backend's one tuning knob, the admission block size: every
+//! completed block reports how much speculation it wasted
+//! (re-incarnations / executions), and the controller resizes the next
+//! block with an AIMD law —
+//!
+//! * **multiplicative decrease** when the conflict rate spikes above
+//!   [`BlockSizeController::HI_CONFLICT`] (halve the block: fewer
+//!   transactions in flight means fewer lower-index writers to
+//!   invalidate a read), mirroring DyAdHyTM's capacity short-circuit
+//!   (`tries = 0` the moment the abort flags prove retrying is futile);
+//! * **additive increase** while the block runs clean (below
+//!   [`BlockSizeController::LO_CONFLICT`]): grow by
+//!   [`BlockSizeController::GROW_STEP`] to amortize per-block barrier
+//!   and write-back cost, the analogue of staying in hardware while
+//!   the abort flags stay quiet.
+//!
+//! Both the live executors (`batch::workload`, `runtime::pipeline`) and
+//! the discrete-event simulator (`sim::engine`'s `Mode::MultiVersion`)
+//! drive this same controller, so `--policy batch=adaptive` is priced
+//! and measured by one state machine in both worlds — exactly how the
+//! paper's retry policies are shared between `hytm::policies` and the
+//! simulator.
+//!
+//! Determinism is untouched by any controller trajectory: blocks are
+//! executed to completion in admission order, so *any* partition of the
+//! transaction stream into blocks commits the same sequential-order
+//! state bit for bit (enforced by the `batch_determinism` qcheck
+//! property comparing fixed against adaptive sizing).
+
+use crate::stats::TxStats;
+
+/// AIMD block-size controller. [`BlockSizeController::fixed`] pins the
+/// block (the `--policy batch=N` behaviour: `observe` never moves it),
+/// [`BlockSizeController::adaptive`] enables the law above
+/// (`--policy batch=adaptive`).
+#[derive(Clone, Debug)]
+pub struct BlockSizeController {
+    block: usize,
+    min: usize,
+    max: usize,
+    grow: usize,
+    hi: f64,
+    lo: f64,
+    /// Additive-increase decisions taken.
+    pub grows: u64,
+    /// Multiplicative-decrease decisions taken.
+    pub shrinks: u64,
+    /// Blocks observed.
+    pub samples: u64,
+}
+
+impl BlockSizeController {
+    /// Starting block for the adaptive controller: mid-scale, so both
+    /// laws have room to act.
+    pub const ADAPTIVE_INITIAL: usize = 1024;
+    /// Floor of the multiplicative decrease.
+    pub const MIN_BLOCK: usize = 256;
+    /// Ceiling of the additive increase.
+    pub const MAX_BLOCK: usize = 4096;
+    /// Additive-increase step per clean block.
+    pub const GROW_STEP: usize = 256;
+    /// Wasted-execution fraction above which the block halves.
+    pub const HI_CONFLICT: f64 = 0.10;
+    /// Wasted-execution fraction below which the block grows.
+    pub const LO_CONFLICT: f64 = 0.02;
+
+    /// A pinned block size: `observe` is a no-op (modulo counters).
+    pub fn fixed(block: usize) -> Self {
+        let b = block.max(1);
+        Self {
+            block: b,
+            min: b,
+            max: b,
+            grow: 0,
+            hi: Self::HI_CONFLICT,
+            lo: Self::LO_CONFLICT,
+            grows: 0,
+            shrinks: 0,
+            samples: 0,
+        }
+    }
+
+    /// The default adaptive controller.
+    pub fn adaptive() -> Self {
+        Self::with_bounds(
+            Self::ADAPTIVE_INITIAL,
+            Self::MIN_BLOCK,
+            Self::MAX_BLOCK,
+            Self::GROW_STEP,
+        )
+    }
+
+    /// Adaptive controller with explicit bounds (tests, benches, and
+    /// workloads whose natural block scale differs from the default).
+    pub fn with_bounds(initial: usize, min: usize, max: usize, grow: usize) -> Self {
+        let min = min.max(1);
+        let max = max.max(min);
+        Self {
+            block: initial.clamp(min, max),
+            min,
+            max,
+            grow: grow.max(1),
+            hi: Self::HI_CONFLICT,
+            lo: Self::LO_CONFLICT,
+            grows: 0,
+            shrinks: 0,
+            samples: 0,
+        }
+    }
+
+    /// The block size the next admission should use.
+    #[inline]
+    pub fn current(&self) -> usize {
+        self.block
+    }
+
+    /// Whether `observe` can move the block at all.
+    #[inline]
+    pub fn is_adaptive(&self) -> bool {
+        self.min != self.max
+    }
+
+    /// Feed one completed block's outcome: `executions` incarnation
+    /// starts against `committed` transactions (`executions >=
+    /// committed`; the excess is wasted speculation). Applies the AIMD
+    /// law to pick the next block size.
+    pub fn observe(&mut self, executions: u64, committed: u64) {
+        self.samples += 1;
+        if !self.is_adaptive() || committed == 0 {
+            return;
+        }
+        let executions = executions.max(committed);
+        let conflict = 1.0 - committed as f64 / executions as f64;
+        if conflict > self.hi {
+            let next = (self.block / 2).max(self.min);
+            if next != self.block {
+                self.block = next;
+                self.shrinks += 1;
+            }
+        } else if conflict < self.lo {
+            let next = (self.block + self.grow).min(self.max);
+            if next != self.block {
+                self.block = next;
+                self.grows += 1;
+            }
+        }
+    }
+
+    /// Fold the controller's outcome into the stats plane: decision
+    /// counts plus the block size the run converged to (what
+    /// `PolicySpec::label` reports for `batch=adaptive`).
+    pub fn apply_to(&self, stats: &mut TxStats) {
+        stats.block_grows += self.grows;
+        stats.block_shrinks += self.shrinks;
+        stats.final_block = self.block as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_controller_never_moves() {
+        let mut c = BlockSizeController::fixed(512);
+        assert!(!c.is_adaptive());
+        for _ in 0..10 {
+            c.observe(1000, 100); // 90% waste: would halve if adaptive
+            assert_eq!(c.current(), 512);
+        }
+        c.observe(100, 100); // perfectly clean: would grow
+        assert_eq!(c.current(), 512);
+        assert_eq!((c.grows, c.shrinks), (0, 0));
+        assert_eq!(c.samples, 11);
+    }
+
+    #[test]
+    fn clean_blocks_grow_additively_to_the_ceiling() {
+        let mut c = BlockSizeController::with_bounds(100, 50, 400, 100);
+        c.observe(1000, 1000);
+        assert_eq!(c.current(), 200, "additive step");
+        c.observe(1000, 995); // 0.5% waste: still clean
+        assert_eq!(c.current(), 300);
+        c.observe(1000, 1000);
+        assert_eq!(c.current(), 400);
+        c.observe(1000, 1000); // clamped at the ceiling
+        assert_eq!(c.current(), 400);
+        assert_eq!(c.grows, 3, "a clamped step is not a decision");
+    }
+
+    #[test]
+    fn conflict_spikes_halve_multiplicatively_to_the_floor() {
+        let mut c = BlockSizeController::with_bounds(400, 60, 400, 100);
+        c.observe(1000, 800); // 20% waste
+        assert_eq!(c.current(), 200, "multiplicative decrease");
+        c.observe(1000, 800);
+        assert_eq!(c.current(), 100);
+        c.observe(1000, 800);
+        assert_eq!(c.current(), 60, "clamped at the floor");
+        c.observe(1000, 800);
+        assert_eq!(c.current(), 60);
+        assert_eq!(c.shrinks, 3);
+    }
+
+    #[test]
+    fn mid_band_conflict_holds_the_block() {
+        let mut c = BlockSizeController::with_bounds(128, 32, 512, 32);
+        c.observe(1000, 950); // 5% waste: between LO and HI
+        assert_eq!(c.current(), 128);
+        assert_eq!((c.grows, c.shrinks), (0, 0));
+    }
+
+    #[test]
+    fn decrease_wins_back_and_forth() {
+        // AIMD converges from above and below to the same regime.
+        let mut up = BlockSizeController::adaptive();
+        let mut down = BlockSizeController::adaptive();
+        for _ in 0..64 {
+            up.observe(100, 100); // clean
+            down.observe(100, 50); // 50% waste
+        }
+        assert_eq!(up.current(), BlockSizeController::MAX_BLOCK);
+        assert_eq!(down.current(), BlockSizeController::MIN_BLOCK);
+    }
+
+    #[test]
+    fn observe_tolerates_degenerate_counters() {
+        let mut c = BlockSizeController::adaptive();
+        let b0 = c.current();
+        c.observe(0, 0); // empty block
+        assert_eq!(c.current(), b0);
+        c.observe(10, 20); // executions < committed: clamped, clean
+        assert_eq!(c.current(), b0 + BlockSizeController::GROW_STEP);
+    }
+
+    #[test]
+    fn apply_to_reports_the_converged_block() {
+        let mut c = BlockSizeController::with_bounds(100, 50, 400, 100);
+        c.observe(10, 10);
+        c.observe(10, 5);
+        let mut s = TxStats::new();
+        c.apply_to(&mut s);
+        assert_eq!(s.block_grows, 1);
+        assert_eq!(s.block_shrinks, 1);
+        assert_eq!(s.final_block, c.current() as u64);
+    }
+}

@@ -7,6 +7,10 @@
 //! and buffers writes locally. Validation re-reads the recorded read
 //! set; on mismatch the incarnation's writes become ESTIMATEs and the
 //! transaction re-executes with a bumped incarnation number.
+//!
+//! The worker is generic over the [`MvStore`] implementation so the
+//! same loop drives both the lock-free production store and the
+//! sharded-mutex baseline the benchmark compares it against.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -14,7 +18,7 @@ use crate::mem::{Addr, TxHeap};
 use crate::tm::access::{Abort, TxAccess, TxResult};
 use crate::tm::AbortCause;
 
-use super::mvmemory::{MvMemory, MvRead, ReadDesc, ReadOrigin};
+use super::mvmemory::{MvRead, MvStore, ReadDesc, ReadOrigin};
 use super::scheduler::{Scheduler, Task, TxnIdx, Version};
 use super::BatchTxn;
 
@@ -32,17 +36,19 @@ pub struct BatchCounters {
     pub dependencies: AtomicU64,
 }
 
-/// Speculative memory view of one executing incarnation.
-struct MvView<'r> {
+/// Speculative memory view of one executing incarnation. The read and
+/// write sets are plain single-owner `Vec`s — only this worker touches
+/// them until `record` publishes them into the store.
+struct MvView<'r, M: MvStore> {
     heap: &'r TxHeap,
-    mv: &'r MvMemory,
+    mv: &'r M,
     txn: TxnIdx,
     reads: Vec<ReadDesc>,
     writes: Vec<(Addr, u64)>,
     blocked_on: Option<TxnIdx>,
 }
 
-impl TxAccess for MvView<'_> {
+impl<M: MvStore> TxAccess for MvView<'_, M> {
     fn read(&mut self, addr: Addr) -> TxResult<u64> {
         // Read-your-own-writes from the local buffer first.
         if let Some(w) = self.writes.iter().rev().find(|w| w.0 == addr) {
@@ -83,15 +89,15 @@ impl TxAccess for MvView<'_> {
 }
 
 /// One worker's borrowed view of the shared batch-run state.
-pub(super) struct Worker<'r, 'b> {
+pub(super) struct Worker<'r, 'b, M: MvStore> {
     pub heap: &'r TxHeap,
     pub txns: &'r [BatchTxn<'b>],
-    pub mv: &'r MvMemory,
+    pub mv: &'r M,
     pub scheduler: &'r Scheduler,
     pub counters: &'r BatchCounters,
 }
 
-impl Worker<'_, '_> {
+impl<M: MvStore> Worker<'_, '_, M> {
     /// Pull and run tasks until the whole batch is executed+validated.
     pub fn run(&self) {
         let mut task: Option<Task> = None;

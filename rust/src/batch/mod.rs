@@ -7,41 +7,60 @@
 //! transactions with a fixed serialization order — their index in the
 //! batch — and executes them optimistically in parallel:
 //!
-//! * [`mvmemory`] — a multi-version store keyed by `(txn_idx,
-//!   incarnation)` with ESTIMATE markers for aborted writes;
+//! * [`mvmemory`] — the multi-version store. The production
+//!   implementation is **lock-free on the hot path**: the address
+//!   index is CAS-published chains off an atomic shard array, each
+//!   address owns a grow-only version vector whose `(txn, incarnation,
+//!   value)` cells publish through a two-word seqlock, and each
+//!   transaction's read/write sets are immutable nodes handed off
+//!   through one `AtomicPtr` — reads of committed versions take zero
+//!   locks, writes CAS-publish. The PR-1 sharded-mutex layout survives
+//!   as `MutexMvMemory` behind the same `MvStore` trait, purely so the
+//!   benchmark can price what the locks cost;
 //! * [`scheduler`] — execution/validation task streams over atomic
-//!   index counters (the Block-STM collaborative scheduler);
+//!   index counters, with each transaction's lifecycle packed into a
+//!   single `incarnation << 2 | state` atomic status word (CAS
+//!   transitions; the only mutex left guards the rare
+//!   ESTIMATE-dependency lists);
 //! * [`executor`] — the worker loop: execute against a recording
 //!   [`crate::tm::access::TxAccess`] view → record read/write sets →
 //!   validate → abort/re-incarnate;
+//! * [`adaptive`] — the [`adaptive::BlockSizeController`]: AIMD block
+//!   sizing from each block's observed re-incarnation rate
+//!   (multiplicative decrease on conflict spikes, additive increase
+//!   when clean — DyAdHyTM's adapt-at-runtime loop applied to the
+//!   batch knob). `--policy batch=adaptive` runs it live and in the
+//!   simulator; `--policy batch=N` pins the block through the same
+//!   controller;
 //! * [`workload`] — adapters feeding the SSCA-2 kernels (generation,
 //!   computation, and kernel-3 subgraph extraction as a
-//!   level-synchronous batch BFS) and the simulator's
+//!   level-synchronous batch BFS whose per-level candidate stream is
+//!   consumed lazily, never materialized whole) and the simulator's
 //!   [`crate::sim::workload::TxnDesc`] shapes through the batch API.
 //!
-//! **Determinism guarantee.** Whatever interleaving the workers take,
-//! the final heap state equals executing the batch *sequentially in
-//! index order* — bit for bit. That is what makes the backend
-//! measurable head-to-head against the paper's policies: same inputs,
-//! same outputs, different concurrency control. The guarantee is
-//! enforced by tests in this module and the `batch_determinism`
-//! property suite.
+//! **Determinism guarantee.** Whatever interleaving the workers take —
+//! and whatever block sizes the controller picks — the final heap
+//! state equals executing the batch *sequentially in index order* —
+//! bit for bit. That is what makes the backend measurable head-to-head
+//! against the paper's policies: same inputs, same outputs, different
+//! concurrency control. The guarantee is enforced by tests in this
+//! module and the `batch_determinism` property suite (including a
+//! fixed-vs-adaptive sizing property).
 //!
-//! **Full routing.** Select it end-to-end with `--policy batch` (a
-//! [`crate::hytm::PolicySpec::Batch`] variant): all three SSCA-2
-//! kernels — generation, computation, and kernel-3 subgraph extraction
-//! ([`workload::run_subgraph`]) — and the streaming pipeline
-//! ([`crate::runtime::pipeline`], which drains its bounded channel in
-//! blocks of insert-transactions) run through [`BatchSystem`]. No path
-//! silently degrades to per-transaction NOrec: a `Batch` spec reaching
-//! `ThreadExecutor::execute` is loudly warned and accounted under the
-//! `norec_fallback` stats counter, and reported as
-//! `batch(fallback:norec)`. The simulator prices the backend with its
-//! own multi-version cost mode (`sim::engine`'s `Mode::MultiVersion`):
-//! estimate-wait, validation, and re-incarnation charges mirroring the
-//! [`BatchReport`] counters, instead of approximating it as a plain
-//! STM.
+//! **Full routing.** Select it end-to-end with `--policy batch[=N]` or
+//! `--policy batch=adaptive` ([`crate::hytm::PolicySpec::Batch`] /
+//! `PolicySpec::BatchAdaptive`): all three SSCA-2 kernels and the
+//! streaming pipeline ([`crate::runtime::pipeline`]) run through
+//! [`BatchSystem`]. No path silently degrades to per-transaction
+//! NOrec: a batch spec reaching `ThreadExecutor::execute` is loudly
+//! warned, accounted under the `norec_fallback` stats counter, and
+//! reported as `batch(fallback:norec)`. The simulator prices the
+//! backend with its own multi-version cost mode (`sim::engine`'s
+//! `Mode::MultiVersion`): estimate-wait, validation, re-incarnation
+//! charges and per-block admission barriers driven by the *same*
+//! `BlockSizeController` as the live runs.
 
+pub mod adaptive;
 pub mod executor;
 pub mod mvmemory;
 pub mod scheduler;
@@ -55,11 +74,12 @@ use crate::stats::TxStats;
 use crate::tm::access::{TxAccess, TxResult};
 
 use executor::{BatchCounters, Worker};
-use mvmemory::MvMemory;
+use mvmemory::{MutexMvMemory, MvMemory, MvStore};
 use scheduler::Scheduler;
 
 /// Default number of transactions admitted per speculative block
-/// (`--policy batch=N` overrides it).
+/// (`--policy batch=N` overrides it; `--policy batch=adaptive` lets
+/// the controller pick).
 pub const DEFAULT_BLOCK: usize = 2048;
 
 /// A batch transaction body. Must be a pure function of the values it
@@ -124,11 +144,32 @@ impl BatchReport {
 pub struct BatchSystem;
 
 impl BatchSystem {
-    /// Execute `txns` with `concurrency` workers. Blocks until every
-    /// transaction has committed, then flushes the winning versions to
-    /// `heap`. The final heap state is bit-identical to running the
-    /// batch sequentially in index order.
+    /// Execute `txns` with `concurrency` workers over the lock-free
+    /// multi-version store. Blocks until every transaction has
+    /// committed, then flushes the winning versions to `heap`. The
+    /// final heap state is bit-identical to running the batch
+    /// sequentially in index order.
     pub fn run(heap: &TxHeap, txns: &[BatchTxn<'_>], concurrency: usize) -> BatchReport {
+        Self::run_with::<MvMemory>(heap, txns, concurrency)
+    }
+
+    /// Same contract as [`BatchSystem::run`], but over the PR-1
+    /// sharded-mutex store — the baseline `benches/batch_throughput`
+    /// measures the lock-free hot path against. Not used by any
+    /// shipped path.
+    pub fn run_baseline_mutex(
+        heap: &TxHeap,
+        txns: &[BatchTxn<'_>],
+        concurrency: usize,
+    ) -> BatchReport {
+        Self::run_with::<MutexMvMemory>(heap, txns, concurrency)
+    }
+
+    fn run_with<M: MvStore>(
+        heap: &TxHeap,
+        txns: &[BatchTxn<'_>],
+        concurrency: usize,
+    ) -> BatchReport {
         let t0 = Instant::now();
         if txns.is_empty() {
             return BatchReport {
@@ -138,7 +179,7 @@ impl BatchSystem {
         }
         let workers = concurrency.max(1).min(txns.len());
         let scheduler = Scheduler::new(txns.len());
-        let mv = MvMemory::new(txns.len());
+        let mv = M::new(txns.len());
         let counters = BatchCounters::default();
         // If a worker panics (a body violating the infallibility
         // contract, or a bug in a user closure), it unwinds with
@@ -218,7 +259,8 @@ mod tests {
     #[test]
     fn high_conflict_counter_is_exact_under_concurrency() {
         // Every transaction RMWs the same word: worst case for
-        // speculation, but the result must still be exact.
+        // speculation, but the result must still be exact — on both
+        // stores.
         for workers in [2usize, 4, 8] {
             let heap = TxHeap::new(64);
             let a = heap.alloc(1);
@@ -227,6 +269,13 @@ mod tests {
             assert_eq!(heap.load(a), 1200, "workers={workers}");
             assert!(r.executions >= 200, "every txn executes at least once");
             assert_eq!(r.txns, 200);
+
+            let heap_m = TxHeap::new(64);
+            let a_m = heap_m.alloc(1);
+            heap_m.store(a_m, 1000);
+            let rm = BatchSystem::run_baseline_mutex(&heap_m, &counter_txns(a_m, 200), workers);
+            assert_eq!(heap_m.load(a_m), 1200, "mutex baseline, workers={workers}");
+            assert_eq!(rm.txns, 200);
         }
     }
 

@@ -1,39 +1,62 @@
 //! Multi-version memory for the speculative batch executor.
 //!
 //! Every speculative write lands here, never in the [`TxHeap`] — the
-//! heap stays at its pre-batch snapshot until [`MvMemory::write_back`].
-//! Per address the structure keeps one entry per *transaction index*
-//! (only the latest incarnation of each), ordered, so a reader at index
-//! `i` picks the highest writer strictly below `i` and falls through to
-//! the heap when there is none. Entries of an aborted incarnation are
-//! flagged ESTIMATE: readers treat them as "this value is about to be
-//! rewritten" and suspend instead of speculating on a known-stale value.
+//! heap stays at its pre-batch snapshot until `write_back`. Per address
+//! the structure keeps one entry per *transaction index* (only the
+//! latest incarnation of each), so a reader at index `i` picks the
+//! highest writer strictly below `i` and falls through to the heap when
+//! there is none. Entries of an aborted incarnation are flagged
+//! ESTIMATE: readers treat them as "this value is about to be
+//! rewritten" and suspend instead of speculating on a known-stale
+//! value.
+//!
+//! # Lock-free layout
+//!
+//! The store is built so **reads of committed versions take zero
+//! locks** — the whole point of speculating in the low-conflict regime
+//! the paper says optimism should win:
+//!
+//! * the address index is an array of [`SHARDS`] `AtomicPtr` heads,
+//!   each the top of a CAS-published chain of [`AddrEntry`] nodes
+//!   (append-only: nodes are only freed when the store drops, so raw
+//!   traversal needs no reclamation protocol);
+//! * each `AddrEntry` owns a grow-only segmented **version vector**:
+//!   [`VersionSlot`]s claimed once per writing transaction by a CAS on
+//!   the slot's owner word and reused across that transaction's
+//!   incarnations;
+//! * a slot publishes `(incarnation, flags, value)` through a two-word
+//!   **seqlock**: the writer (single per slot — the scheduler
+//!   serializes a transaction's incarnations) stores a WRITING-marked
+//!   meta word, the value, then the final meta word; readers re-check
+//!   the meta word around the value load. Meta words are strictly
+//!   monotonic per slot (incarnations only grow, each flag transition
+//!   happens once per incarnation), so a stable double-read cannot be
+//!   an ABA artifact. All fences are `SeqCst` — plain loads on x86, so
+//!   the read hot path is exactly three uncontended loads per slot;
+//! * per-transaction read/write sets are published as **immutable
+//!   [`RecordedSets`] nodes behind one `AtomicPtr` per transaction**
+//!   (the single-owner handoff replacing the old `Mutex<Vec<_>>`
+//!   cells): `record` builds the node privately and swaps it in, a
+//!   stale validator can still be walking the previous node — which
+//!   stays alive on a `prev` chain until the store drops — and its
+//!   stale verdict is dropped by the scheduler's incarnation check.
+//!
+//! A Mutex-sharded baseline ([`MutexMvMemory`], the PR-1 layout) is
+//! kept behind the same [`MvStore`] trait so `benches/batch_throughput`
+//! can measure exactly what the lock-free hot path buys.
 //!
 //! Addresses are word indices (`mem::Addr`), exactly what the
 //! [`crate::tm::access::TxAccess`] bodies already traffic in, so the
 //! same transaction closures run unchanged under HTM, STM, the locks,
-//! or this executor. Sharded mutex-protected hash maps keep neighbour
-//! cache lines in different shards (addresses are dense and small);
-//! each map value is a `BTreeMap<TxnIdx, _>` for the range scan.
+//! or this executor.
 
 use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering::SeqCst};
 use std::sync::Mutex;
 
 use crate::mem::{Addr, TxHeap};
 
 use super::scheduler::{Incarnation, TxnIdx, Version};
-
-/// Shard count: a power of two well above any worker count we run.
-const SHARDS: usize = 64;
-
-#[derive(Clone, Copy, Debug)]
-struct Cell {
-    incarnation: Incarnation,
-    /// ESTIMATE marker: the owning incarnation was aborted and will
-    /// re-execute; readers must wait rather than consume the value.
-    estimate: bool,
-    value: u64,
-}
 
 /// Where a speculative read was served from — the version the read
 /// validates against.
@@ -63,32 +86,522 @@ pub enum MvRead {
     Estimate(TxnIdx),
 }
 
-/// The multi-version store plus per-transaction read/write-set records.
+/// The multi-version store contract the batch executor runs against.
+/// `MvMemory` is the lock-free production implementation;
+/// `MutexMvMemory` is the sharded-mutex baseline kept for the
+/// head-to-head benchmark.
+pub trait MvStore: Sync {
+    /// Fresh store for a batch of `n` transactions.
+    fn new(n: usize) -> Self;
+
+    /// Read `addr` as transaction `txn`: the highest writer below
+    /// `txn`, or the heap when none exists.
+    fn read(&self, addr: Addr, txn: TxnIdx) -> MvRead;
+
+    /// Record a finished incarnation's read and write sets. Stale
+    /// entries from the previous incarnation (addresses no longer
+    /// written) are removed. Returns `true` when the incarnation wrote
+    /// to an address its predecessor did not — the scheduler then
+    /// forces higher transactions to revalidate.
+    fn record(&self, version: Version, reads: Vec<ReadDesc>, writes: &[(Addr, u64)]) -> bool;
+
+    /// Mark every write of `txn`'s last incarnation as an ESTIMATE
+    /// (called right after a validation abort wins, before the
+    /// re-execution is scheduled).
+    fn convert_writes_to_estimates(&self, txn: TxnIdx);
+
+    /// Re-read `txn`'s recorded read set and check every observed
+    /// version still matches. ESTIMATEs and changed versions fail.
+    fn validate_read_set(&self, txn: TxnIdx) -> bool;
+
+    /// After the batch completes: flush the winning (highest-index)
+    /// version of every address into the heap. Equivalent to committing
+    /// the transactions one by one in index order.
+    fn write_back(&self, heap: &TxHeap);
+}
+
+// --------------------------------------------------------------------
+// Lock-free implementation
+// --------------------------------------------------------------------
+
+/// Shard count for the address index (power of two). Sized so typical
+/// per-block footprints (thousands of distinct addresses) keep chains
+/// a couple of nodes long.
+const SHARD_BITS: u32 = 12;
+const SHARDS: usize = 1 << SHARD_BITS;
+
+/// Version slots per segment of an address's version vector. Most
+/// addresses have a single writer; hubs chain additional segments.
+const SLOTS_PER_SEG: usize = 8;
+
+/// Slot meta word: `(incarnation + 1) << 3 | flags`; `0` = never
+/// written. The `+ 1` keeps a published meta distinct from the empty
+/// word. Meta values are strictly monotonic per slot (incarnations only
+/// grow, ESTIMATE/TOMBSTONE each fire once per incarnation), which is
+/// what makes the seqlock's stable double-read conclusive.
+const FLAG_WRITING: u64 = 1;
+const FLAG_ESTIMATE: u64 = 2;
+const FLAG_TOMBSTONE: u64 = 4;
+const META_EMPTY: u64 = 0;
+
+#[inline]
+fn meta_pack(incarnation: Incarnation, flags: u64) -> u64 {
+    ((incarnation as u64 + 1) << 3) | flags
+}
+
+#[inline]
+fn meta_incarnation(meta: u64) -> Incarnation {
+    ((meta >> 3) - 1) as Incarnation
+}
+
+/// One `(address, writing transaction)` cell. Claimed once (owner CAS),
+/// then republished across incarnations by its single serialized
+/// writer through the seqlock protocol.
+struct VersionSlot {
+    /// Writing transaction's index + 1; 0 = unclaimed.
+    owner: AtomicUsize,
+    meta: AtomicU64,
+    value: AtomicU64,
+}
+
+impl VersionSlot {
+    fn empty() -> Self {
+        Self {
+            owner: AtomicUsize::new(0),
+            meta: AtomicU64::new(META_EMPTY),
+            value: AtomicU64::new(0),
+        }
+    }
+
+    /// Seqlock read: a stable, non-WRITING meta word sampled on both
+    /// sides of the value load is conclusive (meta monotonicity rules
+    /// out ABA). The WRITING window is two stores wide, so the spin is
+    /// normally a handful of iterations; the bounded-spin-then-yield
+    /// keeps a reader from livelocking against a preempted writer on
+    /// an oversubscribed core.
+    fn read_consistent(&self) -> (u64, u64) {
+        let mut spins = 0u32;
+        loop {
+            let m1 = self.meta.load(SeqCst);
+            if m1 & FLAG_WRITING != 0 {
+                spins += 1;
+                if spins < 64 {
+                    std::hint::spin_loop();
+                } else {
+                    std::thread::yield_now();
+                }
+                continue;
+            }
+            let v = self.value.load(SeqCst);
+            let m2 = self.meta.load(SeqCst);
+            if m1 == m2 {
+                return (m1, v);
+            }
+        }
+    }
+
+    /// Publish `(incarnation, value)`. Only the slot's serialized owner
+    /// calls this; the WRITING pre-phase keeps concurrent readers from
+    /// pairing the new value with the old meta.
+    fn publish(&self, incarnation: Incarnation, value: u64) {
+        self.meta.store(meta_pack(incarnation, FLAG_WRITING), SeqCst);
+        self.value.store(value, SeqCst);
+        self.meta.store(meta_pack(incarnation, 0), SeqCst);
+    }
+
+    /// Retract the slot (the new incarnation no longer writes this
+    /// address). `incarnation` is the retracting incarnation, keeping
+    /// the meta word monotonic.
+    fn tombstone(&self, incarnation: Incarnation) {
+        self.meta.store(meta_pack(incarnation, FLAG_TOMBSTONE), SeqCst);
+    }
+
+    /// Flag the current publication as an aborted incarnation's write.
+    fn mark_estimate(&self) {
+        self.meta.fetch_or(FLAG_ESTIMATE, SeqCst);
+    }
+}
+
+/// A grow-only block of version slots.
+struct Segment {
+    slots: [VersionSlot; SLOTS_PER_SEG],
+    next: AtomicPtr<Segment>,
+}
+
+impl Segment {
+    fn new() -> Self {
+        Self {
+            slots: std::array::from_fn(|_| VersionSlot::empty()),
+            next: AtomicPtr::new(std::ptr::null_mut()),
+        }
+    }
+}
+
+/// One address's version vector plus its link in the shard chain.
+/// Append-only: never freed before the store drops, so readers may
+/// traverse raw pointers without a reclamation protocol.
+struct AddrEntry {
+    addr: Addr,
+    first: Segment,
+    chain: AtomicPtr<AddrEntry>,
+}
+
+impl AddrEntry {
+    /// Scan the claimed slots for the best (highest) writer strictly
+    /// below `txn`: `(writer, incarnation, estimate, value)`. The scan
+    /// is linear over the address's writers (bounded per block by the
+    /// controller; only hub addresses grow long), but it short-circuits
+    /// the moment the immediate predecessor `txn - 1` is found — on
+    /// hub-dense batches, where every index writes the hub, that is
+    /// almost always the first claimed slot or two.
+    fn best_below(&self, txn: TxnIdx) -> Option<(TxnIdx, Incarnation, bool, u64)> {
+        let mut best: Option<(TxnIdx, Incarnation, bool, u64)> = None;
+        let mut seg: &Segment = &self.first;
+        loop {
+            for slot in &seg.slots {
+                let o = slot.owner.load(SeqCst);
+                if o == 0 {
+                    continue;
+                }
+                let writer = o - 1;
+                if writer >= txn {
+                    continue;
+                }
+                if matches!(best, Some((b, ..)) if writer <= b) {
+                    continue;
+                }
+                let (meta, value) = slot.read_consistent();
+                if meta == META_EMPTY || meta & FLAG_TOMBSTONE != 0 {
+                    continue;
+                }
+                best = Some((
+                    writer,
+                    meta_incarnation(meta),
+                    meta & FLAG_ESTIMATE != 0,
+                    value,
+                ));
+                if writer + 1 == txn {
+                    // No lower writer can beat the immediate
+                    // predecessor: stop scanning.
+                    return best;
+                }
+            }
+            let next = seg.next.load(SeqCst);
+            if next.is_null() {
+                return best;
+            }
+            seg = unsafe { &*next };
+        }
+    }
+
+    /// The slot already claimed by `txn`, if any.
+    fn slot_of(&self, txn: TxnIdx) -> Option<&VersionSlot> {
+        let want = txn + 1;
+        let mut seg: &Segment = &self.first;
+        loop {
+            for slot in &seg.slots {
+                if slot.owner.load(SeqCst) == want {
+                    return Some(slot);
+                }
+            }
+            let next = seg.next.load(SeqCst);
+            if next.is_null() {
+                return None;
+            }
+            seg = unsafe { &*next };
+        }
+    }
+
+    /// Find-or-claim the slot for `txn`, appending a segment when the
+    /// vector is full. Claims are one CAS; they never release.
+    fn claim_slot(&self, txn: TxnIdx) -> &VersionSlot {
+        let want = txn + 1;
+        let mut seg: &Segment = &self.first;
+        loop {
+            for slot in &seg.slots {
+                let o = slot.owner.load(SeqCst);
+                if o == want {
+                    return slot;
+                }
+                if o == 0
+                    && slot
+                        .owner
+                        .compare_exchange(0, want, SeqCst, SeqCst)
+                        .is_ok()
+                {
+                    return slot;
+                }
+            }
+            let next = seg.next.load(SeqCst);
+            if !next.is_null() {
+                seg = unsafe { &*next };
+                continue;
+            }
+            let fresh = Box::into_raw(Box::new(Segment::new()));
+            match seg
+                .next
+                .compare_exchange(std::ptr::null_mut(), fresh, SeqCst, SeqCst)
+            {
+                Ok(_) => seg = unsafe { &*fresh },
+                Err(existing) => {
+                    // Another writer appended first: free ours, use theirs.
+                    drop(unsafe { Box::from_raw(fresh) });
+                    seg = unsafe { &*existing };
+                }
+            }
+        }
+    }
+}
+
+/// A finished incarnation's read/write sets: immutable once published.
+/// `prev` chains every superseded publication — a stale validator may
+/// still be reading one, so nothing is freed before the store drops.
+struct RecordedSets {
+    reads: Vec<ReadDesc>,
+    write_addrs: Vec<Addr>,
+    prev: *mut RecordedSets,
+}
+
+/// Single-owner handoff cell for one transaction's recorded sets.
+struct TxnSets {
+    sets: AtomicPtr<RecordedSets>,
+}
+
+/// The lock-free multi-version store (see the module docs for the
+/// layout and the seqlock protocol).
 pub struct MvMemory {
-    shards: Vec<Mutex<HashMap<Addr, BTreeMap<TxnIdx, Cell>>>>,
-    /// Read set of each transaction's last *completed* incarnation.
-    reads: Vec<Mutex<Vec<ReadDesc>>>,
-    /// Write-set addresses of each transaction's last incarnation.
-    writes: Vec<Mutex<Vec<Addr>>>,
+    shards: Box<[AtomicPtr<AddrEntry>]>,
+    txns: Box<[TxnSets]>,
 }
 
 impl MvMemory {
-    pub fn new(n: usize) -> Self {
+    #[inline]
+    fn shard_of(addr: Addr) -> usize {
+        (((addr as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)) >> (64 - SHARD_BITS)) as usize
+    }
+
+    fn find_entry(&self, addr: Addr) -> Option<&AddrEntry> {
+        let mut cur = self.shards[Self::shard_of(addr)].load(SeqCst);
+        while !cur.is_null() {
+            let e = unsafe { &*cur };
+            if e.addr == addr {
+                return Some(e);
+            }
+            cur = e.chain.load(SeqCst);
+        }
+        None
+    }
+
+    /// Find the entry for `addr`, CAS-inserting a fresh one at the
+    /// shard head if absent. A losing CAS always rescans from the new
+    /// head, so two racers for the same address converge on one entry.
+    fn entry_or_insert(&self, addr: Addr) -> &AddrEntry {
+        let head = &self.shards[Self::shard_of(addr)];
+        let mut fresh: *mut AddrEntry = std::ptr::null_mut();
+        loop {
+            let first = head.load(SeqCst);
+            let mut cur = first;
+            while !cur.is_null() {
+                let e = unsafe { &*cur };
+                if e.addr == addr {
+                    if !fresh.is_null() {
+                        drop(unsafe { Box::from_raw(fresh) });
+                    }
+                    return e;
+                }
+                cur = e.chain.load(SeqCst);
+            }
+            if fresh.is_null() {
+                fresh = Box::into_raw(Box::new(AddrEntry {
+                    addr,
+                    first: Segment::new(),
+                    chain: AtomicPtr::new(first),
+                }));
+            } else {
+                unsafe { (*fresh).chain.store(first, SeqCst) };
+            }
+            if head.compare_exchange(first, fresh, SeqCst, SeqCst).is_ok() {
+                return unsafe { &*fresh };
+            }
+        }
+    }
+
+    fn current_sets(&self, txn: TxnIdx) -> Option<&RecordedSets> {
+        let p = self.txns[txn].sets.load(SeqCst);
+        if p.is_null() {
+            None
+        } else {
+            Some(unsafe { &*p })
+        }
+    }
+}
+
+impl MvStore for MvMemory {
+    fn new(n: usize) -> Self {
         Self {
-            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            shards: (0..SHARDS)
+                .map(|_| AtomicPtr::new(std::ptr::null_mut()))
+                .collect(),
+            txns: (0..n)
+                .map(|_| TxnSets {
+                    sets: AtomicPtr::new(std::ptr::null_mut()),
+                })
+                .collect(),
+        }
+    }
+
+    fn read(&self, addr: Addr, txn: TxnIdx) -> MvRead {
+        match self.find_entry(addr).and_then(|e| e.best_below(txn)) {
+            None => MvRead::Base,
+            Some((writer, incarnation, estimate, value)) => {
+                if estimate {
+                    MvRead::Estimate(writer)
+                } else {
+                    MvRead::Value((writer, incarnation), value)
+                }
+            }
+        }
+    }
+
+    fn record(&self, version: Version, reads: Vec<ReadDesc>, writes: &[(Addr, u64)]) -> bool {
+        let (txn, incarnation) = version;
+        for &(addr, value) in writes {
+            self.entry_or_insert(addr)
+                .claim_slot(txn)
+                .publish(incarnation, value);
+        }
+        let prev_ptr = self.txns[txn].sets.load(SeqCst);
+        let prev_writes: &[Addr] = if prev_ptr.is_null() {
+            &[]
+        } else {
+            unsafe { &(*prev_ptr).write_addrs }
+        };
+        let wrote_new = writes.iter().any(|&(a, _)| !prev_writes.contains(&a));
+        for &addr in prev_writes {
+            if !writes.iter().any(|&(a, _)| a == addr) {
+                if let Some(slot) = self.find_entry(addr).and_then(|e| e.slot_of(txn)) {
+                    slot.tombstone(incarnation);
+                }
+            }
+        }
+        let fresh = Box::new(RecordedSets {
+            reads,
+            write_addrs: writes.iter().map(|&(a, _)| a).collect(),
+            prev: prev_ptr,
+        });
+        self.txns[txn].sets.store(Box::into_raw(fresh), SeqCst);
+        wrote_new
+    }
+
+    fn convert_writes_to_estimates(&self, txn: TxnIdx) {
+        let Some(sets) = self.current_sets(txn) else {
+            return;
+        };
+        for &addr in &sets.write_addrs {
+            if let Some(slot) = self.find_entry(addr).and_then(|e| e.slot_of(txn)) {
+                slot.mark_estimate();
+            }
+        }
+    }
+
+    fn validate_read_set(&self, txn: TxnIdx) -> bool {
+        let Some(sets) = self.current_sets(txn) else {
+            return true;
+        };
+        sets.reads
+            .iter()
+            .all(|r| match (self.read(r.addr, txn), r.origin) {
+                (MvRead::Base, ReadOrigin::Base) => true,
+                (MvRead::Value(now, _), ReadOrigin::Version(then)) => now == then,
+                _ => false,
+            })
+    }
+
+    fn write_back(&self, heap: &TxHeap) {
+        for head in self.shards.iter() {
+            let mut cur = head.load(SeqCst);
+            while !cur.is_null() {
+                let e = unsafe { &*cur };
+                if let Some((_, _, estimate, value)) = e.best_below(usize::MAX) {
+                    debug_assert!(
+                        !estimate,
+                        "ESTIMATE survived to write-back at addr {}",
+                        e.addr
+                    );
+                    heap.store_release(e.addr, value);
+                }
+                cur = e.chain.load(SeqCst);
+            }
+        }
+    }
+}
+
+impl Drop for MvMemory {
+    fn drop(&mut self) {
+        for head in self.shards.iter_mut() {
+            let mut cur = *head.get_mut();
+            while !cur.is_null() {
+                let mut entry = unsafe { Box::from_raw(cur) };
+                cur = *entry.chain.get_mut();
+                let mut seg = *entry.first.next.get_mut();
+                while !seg.is_null() {
+                    let mut s = unsafe { Box::from_raw(seg) };
+                    seg = *s.next.get_mut();
+                }
+            }
+        }
+        for t in self.txns.iter_mut() {
+            let mut p = *t.sets.get_mut();
+            while !p.is_null() {
+                let sets = unsafe { Box::from_raw(p) };
+                p = sets.prev;
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------------
+// Sharded-mutex baseline (the PR-1 layout), kept for the benchmark
+// --------------------------------------------------------------------
+
+/// Shard count of the baseline store.
+const MUTEX_SHARDS: usize = 64;
+
+#[derive(Clone, Copy, Debug)]
+struct Cell {
+    incarnation: Incarnation,
+    estimate: bool,
+    value: u64,
+}
+
+/// The original `Vec<Mutex<HashMap<..>>>` multi-version store: every
+/// read takes a shard lock, read/write sets live behind per-txn
+/// mutexes. Selected by `BatchSystem::run_baseline_mutex`; exists so
+/// `benches/batch_throughput` can price the lock traffic the lock-free
+/// store removes.
+pub struct MutexMvMemory {
+    shards: Vec<Mutex<HashMap<Addr, BTreeMap<TxnIdx, Cell>>>>,
+    reads: Vec<Mutex<Vec<ReadDesc>>>,
+    writes: Vec<Mutex<Vec<Addr>>>,
+}
+
+impl MutexMvMemory {
+    #[inline]
+    fn shard(&self, addr: Addr) -> &Mutex<HashMap<Addr, BTreeMap<TxnIdx, Cell>>> {
+        &self.shards[addr % MUTEX_SHARDS]
+    }
+}
+
+impl MvStore for MutexMvMemory {
+    fn new(n: usize) -> Self {
+        Self {
+            shards: (0..MUTEX_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             reads: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
             writes: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
         }
     }
 
-    #[inline]
-    fn shard(&self, addr: Addr) -> &Mutex<HashMap<Addr, BTreeMap<TxnIdx, Cell>>> {
-        &self.shards[addr % SHARDS]
-    }
-
-    /// Read `addr` as transaction `txn`: the highest writer below `txn`,
-    /// or the heap when none exists.
-    pub fn read(&self, addr: Addr, txn: TxnIdx) -> MvRead {
+    fn read(&self, addr: Addr, txn: TxnIdx) -> MvRead {
         let shard = self.shard(addr).lock().unwrap();
         match shard.get(&addr).and_then(|m| m.range(..txn).next_back()) {
             None => MvRead::Base,
@@ -102,12 +615,7 @@ impl MvMemory {
         }
     }
 
-    /// Record a finished incarnation's read and write sets. Stale
-    /// entries from the previous incarnation (addresses no longer
-    /// written) are removed. Returns `true` when the incarnation wrote
-    /// to an address its predecessor did not — the scheduler then
-    /// forces higher transactions to revalidate.
-    pub fn record(&self, version: Version, reads: Vec<ReadDesc>, writes: &[(Addr, u64)]) -> bool {
+    fn record(&self, version: Version, reads: Vec<ReadDesc>, writes: &[(Addr, u64)]) -> bool {
         let (txn, incarnation) = version;
         for &(addr, value) in writes {
             let mut shard = self.shard(addr).lock().unwrap();
@@ -143,10 +651,7 @@ impl MvMemory {
         wrote_new
     }
 
-    /// Mark every write of `txn`'s last incarnation as an ESTIMATE
-    /// (called right after a validation abort wins, before the
-    /// re-execution is scheduled).
-    pub fn convert_writes_to_estimates(&self, txn: TxnIdx) {
+    fn convert_writes_to_estimates(&self, txn: TxnIdx) {
         let prev = self.writes[txn].lock().unwrap();
         for &addr in prev.iter() {
             let mut shard = self.shard(addr).lock().unwrap();
@@ -156,9 +661,7 @@ impl MvMemory {
         }
     }
 
-    /// Re-read `txn`'s recorded read set and check every observed
-    /// version still matches. ESTIMATEs and changed versions fail.
-    pub fn validate_read_set(&self, txn: TxnIdx) -> bool {
+    fn validate_read_set(&self, txn: TxnIdx) -> bool {
         let snapshot = self.reads[txn].lock().unwrap().clone();
         snapshot.iter().all(|r| match (self.read(r.addr, txn), r.origin) {
             (MvRead::Base, ReadOrigin::Base) => true,
@@ -167,10 +670,7 @@ impl MvMemory {
         })
     }
 
-    /// After the batch completes: flush the winning (highest-index)
-    /// version of every address into the heap. Equivalent to committing
-    /// the transactions one by one in index order.
-    pub fn write_back(&self, heap: &TxHeap) {
+    fn write_back(&self, heap: &TxHeap) {
         for shard in &self.shards {
             let shard = shard.lock().unwrap();
             for (&addr, versions) in shard.iter() {
@@ -190,9 +690,8 @@ impl MvMemory {
 mod tests {
     use super::*;
 
-    #[test]
-    fn read_falls_through_to_base_then_sees_writers() {
-        let mv = MvMemory::new(4);
+    fn check_read_falls_through_to_base_then_sees_writers<M: MvStore>() {
+        let mv = M::new(4);
         assert_eq!(mv.read(100, 2), MvRead::Base);
         mv.record((1, 0), Vec::new(), &[(100, 7)]);
         assert_eq!(mv.read(100, 2), MvRead::Value((1, 0), 7));
@@ -201,9 +700,8 @@ mod tests {
         assert_eq!(mv.read(100, 0), MvRead::Base);
     }
 
-    #[test]
-    fn highest_lower_writer_wins() {
-        let mv = MvMemory::new(5);
+    fn check_highest_lower_writer_wins<M: MvStore>() {
+        let mv = M::new(5);
         mv.record((0, 0), Vec::new(), &[(8, 10)]);
         mv.record((2, 0), Vec::new(), &[(8, 20)]);
         assert_eq!(mv.read(8, 1), MvRead::Value((0, 0), 10));
@@ -211,9 +709,8 @@ mod tests {
         assert_eq!(mv.read(8, 4), MvRead::Value((2, 0), 20));
     }
 
-    #[test]
-    fn estimates_surface_the_blocking_txn() {
-        let mv = MvMemory::new(3);
+    fn check_estimates_surface_the_blocking_txn<M: MvStore>() {
+        let mv = M::new(3);
         mv.record((1, 0), Vec::new(), &[(64, 5)]);
         mv.convert_writes_to_estimates(1);
         assert_eq!(mv.read(64, 2), MvRead::Estimate(1));
@@ -222,9 +719,8 @@ mod tests {
         assert_eq!(mv.read(64, 2), MvRead::Value((1, 1), 6));
     }
 
-    #[test]
-    fn record_removes_stale_addresses_and_reports_new_ones() {
-        let mv = MvMemory::new(3);
+    fn check_record_removes_stale_addresses_and_reports_new_ones<M: MvStore>() {
+        let mv = M::new(3);
         assert!(mv.record((1, 0), Vec::new(), &[(8, 1), (16, 2)]));
         // Same footprint: not new.
         assert!(!mv.record((1, 1), Vec::new(), &[(8, 3), (16, 4)]));
@@ -234,9 +730,8 @@ mod tests {
         assert_eq!(mv.read(24, 2), MvRead::Value((1, 2), 6));
     }
 
-    #[test]
-    fn validation_tracks_version_changes() {
-        let mv = MvMemory::new(4);
+    fn check_validation_tracks_version_changes<M: MvStore>() {
+        let mv = M::new(4);
         mv.record((0, 0), Vec::new(), &[(8, 1)]);
         // txn 2 read (0,0) at addr 8 and base at addr 16.
         mv.record(
@@ -253,15 +748,119 @@ mod tests {
         assert!(!mv.validate_read_set(2));
     }
 
-    #[test]
-    fn write_back_commits_highest_version() {
+    fn check_write_back_commits_highest_version<M: MvStore>() {
         let heap = TxHeap::new(256);
         let a = heap.alloc(1);
         heap.store(a, 1);
-        let mv = MvMemory::new(3);
+        let mv = M::new(3);
         mv.record((0, 0), Vec::new(), &[(a, 10)]);
         mv.record((2, 1), Vec::new(), &[(a, 30)]);
         mv.write_back(&heap);
         assert_eq!(heap.load(a), 30);
+    }
+
+    macro_rules! store_suite {
+        ($modname:ident, $store:ty) => {
+            mod $modname {
+                use super::*;
+
+                #[test]
+                fn read_falls_through_to_base_then_sees_writers() {
+                    check_read_falls_through_to_base_then_sees_writers::<$store>();
+                }
+                #[test]
+                fn highest_lower_writer_wins() {
+                    check_highest_lower_writer_wins::<$store>();
+                }
+                #[test]
+                fn estimates_surface_the_blocking_txn() {
+                    check_estimates_surface_the_blocking_txn::<$store>();
+                }
+                #[test]
+                fn record_removes_stale_addresses_and_reports_new_ones() {
+                    check_record_removes_stale_addresses_and_reports_new_ones::<$store>();
+                }
+                #[test]
+                fn validation_tracks_version_changes() {
+                    check_validation_tracks_version_changes::<$store>();
+                }
+                #[test]
+                fn write_back_commits_highest_version() {
+                    check_write_back_commits_highest_version::<$store>();
+                }
+            }
+        };
+    }
+
+    store_suite!(lockfree, MvMemory);
+    store_suite!(mutex_baseline, MutexMvMemory);
+
+    #[test]
+    fn lockfree_many_writers_chain_segments() {
+        // More writers on one address than a single segment holds:
+        // segment append + full-scan read must still pick the highest.
+        let mv = MvMemory::new(64);
+        for t in 0..40usize {
+            mv.record((t, 0), Vec::new(), &[(72, 1000 + t as u64)]);
+        }
+        assert_eq!(mv.read(72, 40), MvRead::Value((39, 0), 1039));
+        assert_eq!(mv.read(72, 17), MvRead::Value((16, 0), 1016));
+        assert_eq!(mv.read(72, 0), MvRead::Base);
+    }
+
+    #[test]
+    fn lockfree_concurrent_readers_see_only_published_values() {
+        // Hammer one address with serialized republications of txn 1
+        // while reader threads poll: every observed value must be one
+        // that was actually published (seqlock consistency), never a
+        // torn pair.
+        use std::sync::atomic::AtomicBool;
+        let mv = MvMemory::new(4);
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    while !stop.load(SeqCst) {
+                        match mv.read(88, 2) {
+                            MvRead::Base => {}
+                            MvRead::Estimate(t) => assert_eq!(t, 1),
+                            MvRead::Value((t, inc), v) => {
+                                assert_eq!(t, 1);
+                                assert_eq!(
+                                    v,
+                                    7000 + inc as u64,
+                                    "value must match its incarnation"
+                                );
+                            }
+                        }
+                    }
+                });
+            }
+            for inc in 0..600u32 {
+                mv.record((1, inc), Vec::new(), &[(88, 7000 + inc as u64)]);
+                if inc % 3 == 0 {
+                    mv.convert_writes_to_estimates(1);
+                }
+            }
+            stop.store(true, SeqCst);
+        });
+    }
+
+    #[test]
+    fn lockfree_dense_addresses_spread_and_resolve() {
+        // Neighbouring word addresses (the dense SSCA-2 pattern) land
+        // in distinct chains but all resolve correctly.
+        let mv = MvMemory::new(8);
+        for addr in 0..512usize {
+            mv.record((1, 0), Vec::new(), &[(addr, addr as u64 * 3)]);
+        }
+        for addr in 0..512usize {
+            assert_eq!(mv.read(addr, 5), MvRead::Value((1, 0), addr as u64 * 3));
+        }
+        let heap = TxHeap::new(1 << 10);
+        mv.write_back(&heap);
+        for addr in 0..512usize {
+            assert_eq!(heap.load(addr), addr as u64 * 3);
+        }
     }
 }

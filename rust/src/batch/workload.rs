@@ -12,15 +12,22 @@
 //!   multi-source BFS where each level's vertex claims (`read mark; if
 //!   unmarked, write level`) are admitted as deterministic blocks — the
 //!   claimed ball and every per-vertex level are bit-identical to the
-//!   serial oracle in [`crate::graph::subgraph::verify_subgraph`].
+//!   serial oracle in [`crate::graph::subgraph::verify_subgraph`]. The
+//!   per-level candidate list is *streamed* from the frontier's
+//!   adjacency (two lazy passes), never materialized whole, so peak
+//!   memory stays O(block × chunk) even on hub-dense levels.
 //! * **Descriptor bodies**: turn the simulator's
 //!   [`TxnDesc`](crate::sim::workload::TxnDesc) cache-line footprints
 //!   into executable read/modify/write bodies on a scratch heap — the
 //!   substrate of the `batch_determinism` property tests.
 //!
-//! The streaming pipeline (`crate::runtime::pipeline`) reuses
-//! [`edge_insert_block`] to drain its bounded channel in blocks under
-//! `--policy batch`.
+//! Every adapter sizes its admission blocks through a
+//! [`BlockSizeController`] — pinned for `--policy batch=N`, the AIMD
+//! law for `--policy batch=adaptive` — and folds the controller's
+//! decisions into the run's [`crate::stats::TxStats`]
+//! (`block_grows`/`block_shrinks`/`final_block`). The streaming
+//! pipeline (`crate::runtime::pipeline`) reuses [`edge_insert_block`]
+//! to drain its bounded channel in controller-sized blocks.
 
 use std::time::{Duration, Instant};
 
@@ -34,6 +41,7 @@ use crate::sim::workload::TxnDesc;
 use crate::stats::StatsTable;
 use crate::tm::access::{DirectAccess, TxAccess, TxResult};
 
+use super::adaptive::BlockSizeController;
 use super::{BatchReport, BatchSystem, BatchTxn};
 
 /// Scanned edges folded into one gmax-probe transaction (phase 1 of
@@ -102,28 +110,53 @@ pub fn edge_insert_txns<'g>(
     edge_insert_block(g, tuples, 0, chunk)
 }
 
-/// Generation kernel through [`BatchSystem`]: blocks of `block`
-/// transactions, `concurrency` workers each. Mirrors the signature of
+/// Run an already-materialized transaction list through
+/// [`BatchSystem`] in controller-sized blocks, feeding each block's
+/// outcome back into the controller. The final state is bit-identical
+/// to sequential execution for *every* controller trajectory (blocks
+/// preserve index order). Shared by the benches and the
+/// fixed-vs-adaptive determinism properties.
+pub fn run_blocks(
+    heap: &TxHeap,
+    txns: &[BatchTxn<'_>],
+    concurrency: usize,
+    ctl: &mut BlockSizeController,
+) -> BatchReport {
+    let mut report = BatchReport::default();
+    let mut j0 = 0;
+    while j0 < txns.len() {
+        let j1 = (j0 + ctl.current().max(1)).min(txns.len());
+        let r = BatchSystem::run(heap, &txns[j0..j1], concurrency);
+        ctl.observe(r.executions, r.txns as u64);
+        report.merge(&r);
+        j0 = j1;
+    }
+    report
+}
+
+/// Generation kernel through [`BatchSystem`]: controller-sized blocks,
+/// `concurrency` workers each. Mirrors the signature of
 /// [`crate::graph::generation::run`]. Blocks are constructed lazily so
 /// peak memory is O(block), not O(edges).
 pub fn run_generation(
     g: &Graph,
     tuples: &[EdgeTuple],
     concurrency: usize,
-    block: usize,
+    mut ctl: BlockSizeController,
 ) -> (Duration, StatsTable) {
     let t0 = Instant::now();
     let chunk = g.cfg.batch.max(1);
-    let block = block.max(1);
     let n_txns = tuples.len().div_ceil(chunk);
     let mut report = BatchReport::default();
     let mut j0 = 0;
     while j0 < n_txns {
-        let j1 = (j0 + block).min(n_txns);
+        let j1 = (j0 + ctl.current()).min(n_txns);
         let blk: Vec<BatchTxn> = (j0..j1)
             .map(|j| edge_insert_txn(g, tuples, chunk, j))
             .collect();
-        report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
+        let r = BatchSystem::run(&g.heap, &blk, concurrency);
+        ctl.observe(r.executions, r.txns as u64);
+        report.merge(&r);
         j0 = j1;
     }
     // The transactional paths advance the pool cursor as they reserve
@@ -133,6 +166,7 @@ pub fn run_generation(
     let elapsed = t0.elapsed();
     let mut table = StatsTable::new();
     let mut stats = report.to_stats();
+    ctl.apply_to(&mut stats);
     stats.time_ns = elapsed.as_nanos() as u64;
     table.push(0, stats);
     (elapsed, table)
@@ -146,11 +180,16 @@ fn append_txn(g: &Graph, cells: Vec<u64>) -> BatchTxn<'_> {
 
 /// Computation kernel through [`BatchSystem`]. Mirrors
 /// [`crate::graph::computation::run`]: phase 1 finds the max weight
-/// (chunked probes), phase 2 appends the top band in cell order.
-pub fn run_computation(g: &Graph, concurrency: usize, block: usize) -> ComputationResult {
+/// (chunked probes), phase 2 appends the top band in cell order. One
+/// controller spans both phases, so what phase 1 learns about the
+/// conflict regime carries into phase 2's sizing.
+pub fn run_computation(
+    g: &Graph,
+    concurrency: usize,
+    mut ctl: BlockSizeController,
+) -> ComputationResult {
     let t0 = Instant::now();
     let total_cells = g.cells_allocated();
-    let block = block.max(1);
 
     // Phase 1: gmax probes. Weights are immutable after generation, so
     // each body scans its cell range non-transactionally (exactly as
@@ -163,7 +202,7 @@ pub fn run_computation(g: &Graph, concurrency: usize, block: usize) -> Computati
     let n_probes = total_cells.div_ceil(PROBE_CHUNK);
     let mut j0 = 0;
     while j0 < n_probes {
-        let j1 = (j0 + block).min(n_probes);
+        let j1 = (j0 + ctl.current()).min(n_probes);
         let blk: Vec<BatchTxn> = (j0..j1)
             .map(|j| {
                 let lo = j * PROBE_CHUNK;
@@ -181,7 +220,9 @@ pub fn run_computation(g: &Graph, concurrency: usize, block: usize) -> Computati
                 })
             })
             .collect();
-        report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
+        let r = BatchSystem::run(&g.heap, &blk, concurrency);
+        ctl.observe(r.executions, r.txns as u64);
+        report.merge(&r);
         j0 = j1;
     }
 
@@ -200,8 +241,10 @@ pub fn run_computation(g: &Graph, concurrency: usize, block: usize) -> Computati
             pending.push(cell as u64);
             if pending.len() == flush {
                 blk.push(append_txn(g, std::mem::take(&mut pending)));
-                if blk.len() == block {
-                    report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
+                if blk.len() >= ctl.current() {
+                    let r = BatchSystem::run(&g.heap, &blk, concurrency);
+                    ctl.observe(r.executions, r.txns as u64);
+                    report.merge(&r);
                     blk.clear();
                 }
             }
@@ -211,13 +254,16 @@ pub fn run_computation(g: &Graph, concurrency: usize, block: usize) -> Computati
         blk.push(append_txn(g, pending));
     }
     if !blk.is_empty() {
-        report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
+        let r = BatchSystem::run(&g.heap, &blk, concurrency);
+        ctl.observe(r.executions, r.txns as u64);
+        report.merge(&r);
     }
 
     let selected = g.heap.load(g.result_count) as usize;
     let elapsed = t0.elapsed();
     let mut table = StatsTable::new();
     let mut stats = report.to_stats();
+    ctl.apply_to(&mut stats);
     stats.time_ns = elapsed.as_nanos() as u64;
     table.push(0, stats);
     ComputationResult {
@@ -229,54 +275,74 @@ pub fn run_computation(g: &Graph, concurrency: usize, block: usize) -> Computati
     }
 }
 
-/// Claim every vertex of `candidates` at `mark_val` through
-/// [`BatchSystem`] — `chunk` claims per transaction, `block`
-/// transactions per speculative run — then return the newly claimed
-/// vertices in first-candidate order, which is exactly the order the
-/// serial BFS oracle discovers them in. `seen` dedups within the level
-/// (a vertex reachable through two frontier members is claimed once).
+/// Claim every vertex of the `candidates` stream at `mark_val` through
+/// [`BatchSystem`] — `chunk` claims per transaction, controller-sized
+/// speculative runs — then return the newly claimed vertices in
+/// first-candidate order, which is exactly the order the serial BFS
+/// oracle discovers them in. The stream is consumed twice (claims,
+/// then the next-frontier scan), so peak memory is O(block × chunk)
+/// instead of the whole level's candidate list. `seen` dedups within
+/// the level (a vertex reachable through two frontier members is
+/// claimed once).
 #[allow(clippy::too_many_arguments)]
-fn claim_level(
+fn claim_level<I>(
     g: &Graph,
     marks_base: crate::mem::Addr,
-    candidates: &[u32],
+    candidates: I,
     mark_val: u64,
     concurrency: usize,
-    block: usize,
+    ctl: &mut BlockSizeController,
     chunk: usize,
     report: &mut BatchReport,
     seen: &mut [bool],
-) -> Vec<u32> {
-    let n_txns = candidates.len().div_ceil(chunk);
-    let mut j0 = 0;
-    while j0 < n_txns {
-        let j1 = (j0 + block).min(n_txns);
-        let blk: Vec<BatchTxn> = (j0..j1)
-            .map(|j| {
-                let lo = j * chunk;
-                let hi = (lo + chunk).min(candidates.len());
-                let slice = &candidates[lo..hi];
-                BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
-                    for &v in slice {
-                        // The same `read mark; if unmarked, write level`
-                        // critical section the policy executors run.
-                        let addr = marks_base + v as usize;
-                        if t.read(addr)? == 0 {
-                            t.write(addr, mark_val)?;
-                        }
-                    }
-                    Ok(())
-                })
-            })
-            .collect();
-        report.merge(&BatchSystem::run(&g.heap, &blk, concurrency));
-        j0 = j1;
+) -> Vec<u32>
+where
+    I: Iterator<Item = u32> + Clone,
+{
+    let mk_txn = |slice: Vec<u32>| {
+        BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
+            for &v in &slice {
+                // The same `read mark; if unmarked, write level`
+                // critical section the policy executors run.
+                let addr = marks_base + v as usize;
+                if t.read(addr)? == 0 {
+                    t.write(addr, mark_val)?;
+                }
+            }
+            Ok(())
+        })
+    };
+
+    // Pass 1: stream the candidates into claim transactions, running
+    // each block as soon as it fills.
+    let mut blk: Vec<BatchTxn> = Vec::new();
+    let mut buf: Vec<u32> = Vec::new();
+    for v in candidates.clone() {
+        buf.push(v);
+        if buf.len() == chunk {
+            blk.push(mk_txn(std::mem::take(&mut buf)));
+            if blk.len() >= ctl.current() {
+                let r = BatchSystem::run(&g.heap, &blk, concurrency);
+                ctl.observe(r.executions, r.txns as u64);
+                report.merge(&r);
+                blk.clear();
+            }
+        }
     }
-    // The committed marks decide the next frontier: a candidate whose
-    // mark equals `mark_val` was claimed this level; first occurrence
-    // wins, matching the serial discovery order.
+    if !buf.is_empty() {
+        blk.push(mk_txn(buf));
+    }
+    if !blk.is_empty() {
+        let r = BatchSystem::run(&g.heap, &blk, concurrency);
+        ctl.observe(r.executions, r.txns as u64);
+        report.merge(&r);
+    }
+
+    // Pass 2: the committed marks decide the next frontier. A
+    // candidate whose mark equals `mark_val` was claimed this level;
+    // first occurrence wins, matching the serial discovery order.
     let mut next = Vec::new();
-    for &v in candidates {
+    for v in candidates {
         if !seen[v as usize] && g.heap.load(marks_base + v as usize) == mark_val {
             seen[v as usize] = true;
             next.push(v);
@@ -292,27 +358,35 @@ fn claim_level(
 /// claimed ball and every per-vertex level are bit-identical to the
 /// serial oracle regardless of `concurrency`. Power-law hubs make the
 /// early levels conflict-dense — the multi-version store absorbs the
-/// races the per-transaction executors fight over.
+/// races the per-transaction executors fight over, and the adaptive
+/// controller shrinks blocks exactly there.
 pub fn run_subgraph(
     g: &Graph,
     roots: &[u32],
     depth: usize,
     concurrency: usize,
-    block: usize,
+    mut ctl: BlockSizeController,
 ) -> SubgraphResult {
     let t0 = Instant::now();
     let n = g.cfg.vertices();
     // Mark region: one word per vertex, level+1 when claimed (the same
     // layout the threaded kernel allocates).
     let marks_base = g.heap.alloc_lines(n.div_ceil(WORDS_PER_LINE));
-    let block = block.max(1);
     let chunk = g.cfg.batch.max(1);
     let mut report = BatchReport::default();
     let mut seen = vec![false; n];
 
     // Level 0: claim the roots.
     let mut frontier = claim_level(
-        g, marks_base, roots, 1, concurrency, block, chunk, &mut report, &mut seen,
+        g,
+        marks_base,
+        roots.iter().copied(),
+        1,
+        concurrency,
+        &mut ctl,
+        chunk,
+        &mut report,
+        &mut seen,
     );
     let mut level_sizes = vec![frontier.len()];
 
@@ -321,32 +395,32 @@ pub fn run_subgraph(
             break;
         }
         // Candidate order = (frontier order, adjacency order): the
-        // serial oracle's discovery order. The adjacency walk is
-        // non-transactional — the graph is frozen after kernel 1.
-        let mut candidates: Vec<u32> = Vec::new();
-        for &v in &frontier {
-            for (dst, _, _) in g.adjacency(v) {
-                candidates.push(dst);
-            }
-        }
-        frontier = claim_level(
+        // serial oracle's discovery order, streamed lazily — the
+        // adjacency walk is non-transactional (the graph is frozen
+        // after kernel 1) and cheap enough to run twice.
+        let candidates = frontier
+            .iter()
+            .flat_map(|&v| g.adjacency(v).into_iter().map(|(dst, _, _)| dst));
+        let next = claim_level(
             g,
             marks_base,
-            &candidates,
+            candidates,
             (level + 1) as u64,
             concurrency,
-            block,
+            &mut ctl,
             chunk,
             &mut report,
             &mut seen,
         );
-        level_sizes.push(frontier.len());
+        level_sizes.push(next.len());
+        frontier = next;
     }
 
     let total_marked = level_sizes.iter().sum();
     let elapsed = t0.elapsed();
     let mut table = StatsTable::new();
     let mut stats = report.to_stats();
+    ctl.apply_to(&mut stats);
     stats.time_ns = elapsed.as_nanos() as u64;
     table.push(0, stats);
     SubgraphResult {
@@ -411,7 +485,8 @@ mod tests {
         // Batch backend, several worker counts.
         for workers in [1usize, 2, 4] {
             let gb = Graph::alloc(cfg);
-            let (_, table) = run_generation(&gb, &tuples, workers, 256);
+            let (_, table) =
+                run_generation(&gb, &tuples, workers, BlockSizeController::fixed(256));
             verify::check_graph(&gb, &tuples).unwrap();
             assert_eq!(
                 table.total().total_commits(),
@@ -435,12 +510,37 @@ mod tests {
         cfg.batch = 8;
         let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
         let g = Graph::alloc(cfg);
-        let (_, table) = run_generation(&g, &tuples, 3, 64);
+        let (_, table) = run_generation(&g, &tuples, 3, BlockSizeController::fixed(64));
         verify::check_graph(&g, &tuples).unwrap();
         assert_eq!(
             table.total().total_commits(),
             (tuples.len() as u64).div_ceil(8)
         );
+    }
+
+    #[test]
+    fn adaptive_generation_matches_fixed_bitwise() {
+        // The controller's trajectory must not leak into the output.
+        let cfg = Ssca2Config::new(7);
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        let ga = Graph::alloc(cfg);
+        let (_, ta) = run_generation(&ga, &tuples, 3, BlockSizeController::fixed(128));
+        let gb = Graph::alloc(cfg);
+        let (_, tb) = run_generation(
+            &gb,
+            &tuples,
+            3,
+            BlockSizeController::with_bounds(32, 8, 512, 32),
+        );
+        verify::check_graph(&gb, &tuples).unwrap();
+        assert_eq!(ta.total().total_commits(), tb.total().total_commits());
+        assert!(
+            tb.total().final_block > 0,
+            "adaptive run must report its converged block"
+        );
+        for addr in 0..ga.heap.allocated() {
+            assert_eq!(ga.heap.load(addr), gb.heap.load(addr), "word {addr}");
+        }
     }
 
     #[test]
@@ -451,7 +551,7 @@ mod tests {
         run_sequential(&g.heap, &edge_insert_txns(&g, &tuples, 1));
         g.heap.store(g.pool_cursor, tuples.len() as u64);
 
-        let r = run_computation(&g, 4, 128);
+        let r = run_computation(&g, 4, BlockSizeController::fixed(128));
         let true_max = tuples.iter().map(|e| e.weight).max().unwrap();
         assert_eq!(r.max_weight, true_max);
         verify::check_results(&g, &tuples).unwrap();
@@ -469,10 +569,10 @@ mod tests {
             let g = Graph::alloc(cfg);
             run_sequential(&g.heap, &edge_insert_txns(&g, &tuples, 1));
             g.heap.store(g.pool_cursor, tuples.len() as u64);
-            let _ = run_computation(&g, 2, 64);
+            let _ = run_computation(&g, 2, BlockSizeController::fixed(64));
             let roots = subgraph::roots_from_results(&g);
             assert!(!roots.is_empty());
-            let r = run_subgraph(&g, &roots, 3, workers, 32);
+            let r = run_subgraph(&g, &roots, 3, workers, BlockSizeController::fixed(32));
             subgraph::verify_subgraph(&g, &roots, 3, &r)
                 .unwrap_or_else(|e| panic!("workers={workers}: {e}"));
             assert!(
@@ -488,15 +588,47 @@ mod tests {
     }
 
     #[test]
+    fn batch_subgraph_adaptive_sizing_matches_fixed() {
+        use crate::graph::subgraph;
+
+        let cfg = Ssca2Config::new(7);
+        let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+        let g = Graph::alloc(cfg);
+        run_sequential(&g.heap, &edge_insert_txns(&g, &tuples, 1));
+        g.heap.store(g.pool_cursor, tuples.len() as u64);
+        let _ = run_computation(&g, 2, BlockSizeController::fixed(64));
+        let roots = subgraph::roots_from_results(&g);
+
+        let fixed = run_subgraph(&g, &roots, 3, 3, BlockSizeController::fixed(32));
+        subgraph::verify_subgraph(&g, &roots, 3, &fixed).unwrap();
+
+        // Fresh graph for the adaptive run (marks regions allocate).
+        let g2 = Graph::alloc(cfg);
+        run_sequential(&g2.heap, &edge_insert_txns(&g2, &tuples, 1));
+        g2.heap.store(g2.pool_cursor, tuples.len() as u64);
+        let _ = run_computation(&g2, 2, BlockSizeController::fixed(64));
+        let adaptive = run_subgraph(
+            &g2,
+            &roots,
+            3,
+            3,
+            BlockSizeController::with_bounds(8, 2, 128, 8),
+        );
+        subgraph::verify_subgraph(&g2, &roots, 3, &adaptive).unwrap();
+        assert_eq!(fixed.level_sizes, adaptive.level_sizes);
+        assert_eq!(fixed.total_marked, adaptive.total_marked);
+    }
+
+    #[test]
     fn batch_subgraph_depth_zero_claims_only_roots() {
         let cfg = Ssca2Config::new(6);
         let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
         let g = Graph::alloc(cfg);
         run_sequential(&g.heap, &edge_insert_txns(&g, &tuples, 1));
         g.heap.store(g.pool_cursor, tuples.len() as u64);
-        let _ = run_computation(&g, 2, 64);
+        let _ = run_computation(&g, 2, BlockSizeController::fixed(64));
         let roots = crate::graph::subgraph::roots_from_results(&g);
-        let r = run_subgraph(&g, &roots, 0, 3, 16);
+        let r = run_subgraph(&g, &roots, 0, 3, BlockSizeController::fixed(16));
         assert_eq!(r.total_marked, roots.len());
         crate::graph::subgraph::verify_subgraph(&g, &roots, 0, &r).unwrap();
     }

@@ -38,6 +38,24 @@ pub fn thread_axis() -> Vec<usize> {
     vec![4, 8, 12, 14, 16, 20, 24, 28]
 }
 
+/// Every scheme on one axis: the six Figure-2 policies, the remaining
+/// Figure-3 HyTM variants, and the batch backend in both its fixed and
+/// runtime-adaptive block-sizing forms — the one table that places
+/// `batch` next to the paper's policies.
+pub fn combined_set() -> Vec<PolicySpec> {
+    let mut v = PolicySpec::fig2_set();
+    for p in PolicySpec::fig3_set() {
+        if !v.contains(&p) {
+            v.push(p);
+        }
+    }
+    v.push(PolicySpec::Batch {
+        block: crate::batch::DEFAULT_BLOCK,
+    });
+    v.push(PolicySpec::BatchAdaptive);
+    v
+}
+
 /// Look up a figure by CLI name ("2a".."2f", "3a".."3c", "4a".."4c",
 /// "t0").
 pub fn fig_by_name(name: &str) -> Option<FigureSpec> {
@@ -79,6 +97,14 @@ pub fn fig_by_name(name: &str) -> Option<FigureSpec> {
             policies: PolicySpec::fig3_set(),
             threads: thread_axis(),
         },
+        "combined" => FigureSpec {
+            id: "combined",
+            paper_ref: "Combined scaling: fig2/fig3 policies + batch (fixed & adaptive), both kernels",
+            scale: 15,
+            kernel: Kernel::Both,
+            policies: combined_set(),
+            threads: thread_axis(),
+        },
         "t0" => FigureSpec {
             id: "t0",
             paper_ref: "§4 in-text: lock total time at 1/14/28 threads (2016.71/321.50/250.52 s at scale 27)",
@@ -93,7 +119,10 @@ pub fn fig_by_name(name: &str) -> Option<FigureSpec> {
 
 /// All figure ids, in paper order.
 pub fn all_figures() -> Vec<&'static str> {
-    vec!["t0", "2a", "2b", "2c", "2d", "2e", "2f", "3a", "3b", "3c", "4a", "4b", "4c"]
+    vec![
+        "t0", "2a", "2b", "2c", "2d", "2e", "2f", "3a", "3b", "3c", "4a", "4b", "4c",
+        "combined",
+    ]
 }
 
 /// Simulate one (policy, threads) cell of a figure. Returns
@@ -284,6 +313,39 @@ mod tests {
         let (c, _) = sim_cell(PolicySpec::CoarseLock, 1, 12, Kernel::Computation, 1, 1);
         let ratio = g / c;
         assert!((4.0..20.0).contains(&ratio), "gen/comp ratio {ratio}");
+    }
+
+    #[test]
+    fn combined_figure_places_batch_next_to_the_policies() {
+        let fig = fig_by_name("combined").unwrap();
+        let names: Vec<&str> = fig.policies.iter().map(|p| p.name()).collect();
+        for expected in ["lock", "stm", "dyad-hytm", "rnd-hytm", "batch", "batch-adaptive"] {
+            assert!(names.contains(&expected), "missing {expected}: {names:?}");
+        }
+        // No duplicates: dyad appears in both source sets but once here.
+        let mut dedup = names.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), names.len(), "duplicate rows: {names:?}");
+    }
+
+    #[test]
+    fn combined_figure_renders_batch_rows_small() {
+        let fig = FigureSpec {
+            id: "combined",
+            paper_ref: "test",
+            scale: 9,
+            kernel: Kernel::Generation,
+            policies: vec![
+                PolicySpec::CoarseLock,
+                PolicySpec::Batch { block: 512 },
+                PolicySpec::BatchAdaptive,
+            ],
+            threads: vec![2, 4],
+        };
+        let md = render_figure(&fig, 1);
+        assert!(md.contains("| batch |"));
+        assert!(md.contains("| batch-adaptive |"));
     }
 
     #[test]

@@ -167,10 +167,28 @@ pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
 
     // Label from the observed stats: a batch run that degraded to the
     // per-transaction NOrec fallback anywhere is reported as
-    // `batch(fallback:norec)`, never as plain `batch`.
+    // `batch(fallback:norec)`, never as plain `batch`; an adaptive run
+    // reports the block size it converged to.
     let mut merged = gen_stats.total();
     merged.merge(&comp.stats.total());
     let policy_label = cfg.policy.label(&merged);
+
+    if matches!(cfg.policy, PolicySpec::BatchAdaptive) {
+        // Surface the controller's decisions per kernel: the converged
+        // block plus how it got there.
+        let g = gen_stats.total();
+        let c = comp.stats.total();
+        eprintln!(
+            "[batch-adaptive] generation: block -> {} ({} grows, {} shrinks); \
+             computation: block -> {} ({} grows, {} shrinks)",
+            g.final_block,
+            g.block_grows,
+            g.block_shrinks,
+            c.final_block,
+            c.block_grows,
+            c.block_shrinks,
+        );
+    }
 
     Ok(LiveReport {
         cfg_label: format!(
@@ -221,6 +239,22 @@ mod tests {
             "live kernels must route through BatchSystem, not the NOrec fallback"
         );
         assert!(r.cfg_label.starts_with("batch "), "label: {}", r.cfg_label);
+    }
+
+    #[test]
+    fn live_adaptive_batch_run_converges_and_labels() {
+        let cfg = RunConfig::new(7, PolicySpec::BatchAdaptive, 3);
+        let r = run_live(&cfg).unwrap();
+        assert!(r.verified);
+        let mut merged = r.gen_stats.total();
+        merged.merge(&r.comp_stats.total());
+        assert_eq!(merged.norec_fallback, 0);
+        assert!(merged.final_block > 0, "controller state must reach stats");
+        assert!(
+            r.cfg_label.starts_with("batch(adaptive:block="),
+            "label: {}",
+            r.cfg_label
+        );
     }
 
     #[test]

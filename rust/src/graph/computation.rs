@@ -122,10 +122,10 @@ pub fn run(
     seed: u64,
 ) -> ComputationResult {
     assert!(threads >= 1);
-    if let PolicySpec::Batch { block } = spec {
+    if let Some(ctl) = spec.batch_sizing() {
         // Speculative batch backend: same two phases, admitted as
-        // blocks of deterministic-order transactions.
-        return crate::batch::workload::run_computation(g, threads, block);
+        // controller-sized blocks of deterministic-order transactions.
+        return crate::batch::workload::run_computation(g, threads, ctl);
     }
     let total_cells = g.cells_allocated();
     let t0 = Instant::now();

@@ -108,10 +108,12 @@ pub fn run(
     seed: u64,
 ) -> (Duration, StatsTable) {
     assert!(threads >= 1);
-    if let PolicySpec::Batch { block } = spec {
+    if let Some(ctl) = spec.batch_sizing() {
         // The batch backend owns its own worker pool and serialization
-        // order; `threads` becomes its concurrency level.
-        return crate::batch::workload::run_generation(g, tuples, threads, block);
+        // order; `threads` becomes its concurrency level. The
+        // controller pins the block (`batch=N`) or adapts it from the
+        // observed conflict rate (`batch=adaptive`).
+        return crate::batch::workload::run_generation(g, tuples, threads, ctl);
     }
     let t0 = Instant::now();
     let mut table = StatsTable::new();
@@ -178,6 +180,7 @@ mod tests {
             PolicySpec::HtmSpin { retries: 8 },
             PolicySpec::DyAd { n: 43 },
             PolicySpec::Batch { block: 256 },
+            PolicySpec::BatchAdaptive,
         ] {
             let (sys, g, tuples) = setup(7);
             let (_, table) = run(&sys, &g, &tuples, spec, 4, 99);

@@ -63,11 +63,11 @@ pub fn run(
     seed: u64,
 ) -> SubgraphResult {
     assert!(threads >= 1);
-    if let PolicySpec::Batch { block } = spec {
+    if let Some(ctl) = spec.batch_sizing() {
         // The batch backend owns its worker pool and serialization
         // order; `threads` becomes its concurrency level. No silent
         // NOrec fallback: the claims run through `BatchSystem`.
-        return crate::batch::workload::run_subgraph(g, roots, depth, threads, block);
+        return crate::batch::workload::run_subgraph(g, roots, depth, threads, ctl);
     }
     let n = g.cfg.vertices();
     // Mark region: one word per vertex, level+1 when claimed.

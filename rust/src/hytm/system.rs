@@ -55,6 +55,14 @@ pub enum PolicySpec {
     /// one optimistic NOrec attempt — loudly warned and accounted as
     /// `norec_fallback`, and reported as `batch(fallback:norec)`.
     Batch { block: usize },
+    /// The batch backend with runtime-adaptive block sizing
+    /// (`--policy batch=adaptive`): a
+    /// [`crate::batch::adaptive::BlockSizeController`] resizes every
+    /// admitted block from the observed re-incarnation rate (AIMD —
+    /// the DyAdHyTM adapt-at-runtime loop applied to the batch knob).
+    /// Routed exactly like [`PolicySpec::Batch`]; `label` reports the
+    /// converged block size.
+    BatchAdaptive,
 }
 
 impl PolicySpec {
@@ -103,6 +111,7 @@ impl PolicySpec {
             PolicySpec::DyAdTl2 { .. } => "dyad-tl2",
             PolicySpec::PhTm { .. } => "phtm",
             PolicySpec::Batch { .. } => "batch",
+            PolicySpec::BatchAdaptive => "batch-adaptive",
         }
     }
 
@@ -144,25 +153,52 @@ impl PolicySpec {
                 retries: n_or(8),
                 sw_quantum: 64,
             },
-            "batch" => PolicySpec::Batch {
-                block: arg
-                    .and_then(|a| a.parse().ok())
-                    .unwrap_or(crate::batch::DEFAULT_BLOCK),
+            "batch" => match arg {
+                Some("adaptive") => PolicySpec::BatchAdaptive,
+                _ => PolicySpec::Batch {
+                    block: arg
+                        .and_then(|a| a.parse().ok())
+                        .unwrap_or(crate::batch::DEFAULT_BLOCK),
+                },
             },
+            // `batch=adaptive` is the CLI spelling; the round-trip name
+            // is accepted too.
+            "batch-adaptive" => PolicySpec::BatchAdaptive,
             _ => return None,
         })
     }
 
     /// Reporting label for a finished run: stats produced under a
-    /// `Batch` spec that contain NOrec-fallback transactions are
-    /// labeled `batch(fallback:norec)` so a degraded run can't
-    /// masquerade as batch speculation. Every other (spec, stats) pair
-    /// is just [`PolicySpec::name`].
-    pub fn label(&self, stats: &TxStats) -> &'static str {
-        if matches!(self, PolicySpec::Batch { .. }) && stats.norec_fallback > 0 {
-            "batch(fallback:norec)"
-        } else {
-            self.name()
+    /// batch spec that contain NOrec-fallback transactions are labeled
+    /// `batch(fallback:norec)` so a degraded run can't masquerade as
+    /// batch speculation, and an adaptive run reports the block size
+    /// its controller converged to. Every other (spec, stats) pair is
+    /// just [`PolicySpec::name`].
+    pub fn label(&self, stats: &TxStats) -> String {
+        match self {
+            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive
+                if stats.norec_fallback > 0 =>
+            {
+                "batch(fallback:norec)".into()
+            }
+            PolicySpec::BatchAdaptive if stats.final_block > 0 => {
+                format!("batch(adaptive:block={})", stats.final_block)
+            }
+            _ => self.name().into(),
+        }
+    }
+
+    /// The block-size controller a batch dispatch runs with, or `None`
+    /// for the per-transaction policies. This is the single seam the
+    /// kernels, the pipeline, and the simulator all go through, so
+    /// `--policy batch=N` and `--policy batch=adaptive` are priced and
+    /// executed by the same state machine everywhere.
+    pub fn batch_sizing(&self) -> Option<crate::batch::adaptive::BlockSizeController> {
+        use crate::batch::adaptive::BlockSizeController;
+        match *self {
+            PolicySpec::Batch { block } => Some(BlockSizeController::fixed(block)),
+            PolicySpec::BatchAdaptive => Some(BlockSizeController::adaptive()),
+            _ => None,
         }
     }
 
@@ -290,7 +326,7 @@ impl<'s> ThreadExecutor<'s> {
             // make it loud and account it separately so the stats can't
             // masquerade as batch commits (`PolicySpec::label` reports
             // the run as `batch(fallback:norec)`).
-            PolicySpec::Batch { .. } => {
+            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive => {
                 warn_batch_fallback_once();
                 self.stats.norec_fallback += 1;
                 self.run_stm_norec(body)
@@ -526,6 +562,7 @@ mod tests {
             PolicySpec::Batch {
                 block: crate::batch::DEFAULT_BLOCK,
             },
+            PolicySpec::BatchAdaptive,
         ]
     }
 
@@ -560,6 +597,7 @@ mod tests {
         specs.push(PolicySpec::Batch {
             block: crate::batch::DEFAULT_BLOCK,
         });
+        specs.push(PolicySpec::BatchAdaptive);
         for spec in specs {
             assert_eq!(
                 PolicySpec::parse(spec.name()),
@@ -577,6 +615,15 @@ mod tests {
             Some(PolicySpec::Batch {
                 block: crate::batch::DEFAULT_BLOCK
             })
+        );
+        // The adaptive variant round-trips through both spellings.
+        assert_eq!(
+            PolicySpec::parse("batch=adaptive"),
+            Some(PolicySpec::BatchAdaptive)
+        );
+        assert_eq!(
+            PolicySpec::parse("batch-adaptive"),
+            Some(PolicySpec::BatchAdaptive)
         );
     }
 
@@ -648,9 +695,36 @@ mod tests {
         assert_eq!(ex.stats.norec_fallback, 5);
         assert_eq!(ex.stats.sw_commits, 5);
         assert_eq!(spec.label(&ex.stats), "batch(fallback:norec)");
+        assert_eq!(
+            PolicySpec::BatchAdaptive.label(&ex.stats),
+            "batch(fallback:norec)"
+        );
         // Other specs and clean batch stats keep their plain names.
         assert_eq!(PolicySpec::StmNorec.label(&ex.stats), "stm");
         assert_eq!(spec.label(&TxStats::new()), "batch");
+    }
+
+    #[test]
+    fn adaptive_label_reports_converged_block() {
+        let mut stats = TxStats::new();
+        assert_eq!(PolicySpec::BatchAdaptive.label(&stats), "batch-adaptive");
+        stats.final_block = 1536;
+        assert_eq!(
+            PolicySpec::BatchAdaptive.label(&stats),
+            "batch(adaptive:block=1536)"
+        );
+        // A fixed batch run never claims adaptivity.
+        assert_eq!(PolicySpec::Batch { block: 64 }.label(&stats), "batch");
+    }
+
+    #[test]
+    fn batch_sizing_matches_the_spec() {
+        let fixed = PolicySpec::Batch { block: 96 }.batch_sizing().unwrap();
+        assert_eq!(fixed.current(), 96);
+        assert!(!fixed.is_adaptive());
+        let adaptive = PolicySpec::BatchAdaptive.batch_sizing().unwrap();
+        assert!(adaptive.is_adaptive());
+        assert!(PolicySpec::StmNorec.batch_sizing().is_none());
     }
 
     #[test]

@@ -24,24 +24,35 @@
 //! synchronization backend: [`batch`], a Block-STM-style speculative
 //! batch executor. Instead of admitting transactions one at a time,
 //! it admits a *block* with a fixed serialization order (batch index)
-//! and executes the block optimistically over multi-version memory —
-//! execution/validation task streams, ESTIMATE markers, and
-//! abort/re-incarnate recovery. Its output is guaranteed bit-identical
-//! to sequential execution of the block, which makes it directly
-//! comparable against the paper's policies on the same SSCA-2 kernels:
-//! select it with `--policy batch[=BLOCK]` from the CLI, or
-//! `PolicySpec::Batch` programmatically. The spec routes *every*
+//! and executes the block optimistically over **lock-free multi-version
+//! memory** — reads of committed versions take zero locks (CAS-published
+//! address chains, seqlock'd version cells, `AtomicPtr`-handoff
+//! read/write sets), the scheduler packs each transaction's lifecycle
+//! into one atomic `incarnation|state` word, and recovery runs through
+//! ESTIMATE markers and abort/re-incarnate. Its output is guaranteed
+//! bit-identical to sequential execution of the block, which makes it
+//! directly comparable against the paper's policies on the same SSCA-2
+//! kernels: select it with `--policy batch[=BLOCK]` from the CLI, or
+//! `--policy batch=adaptive` to let a `BlockSizeController`
+//! (`batch::adaptive`) resize each block at runtime from the observed
+//! re-incarnation rate — the same adapt-from-abort-behaviour loop as
+//! DyAdHyTM itself, applied to the batch knob. The spec routes *every*
 //! end-to-end path through `BatchSystem`: the generation and
 //! computation kernels, kernel-3 subgraph extraction (a
-//! level-synchronous batch BFS, `batch::workload::run_subgraph`), and
-//! the streaming pipeline (`runtime::pipeline`, which drains its
-//! bounded channel in blocks). A `Batch` spec that reaches a
+//! level-synchronous batch BFS with a streamed per-level candidate
+//! list, `batch::workload::run_subgraph`), and the streaming pipeline
+//! (`runtime::pipeline`, which drains its bounded channel in
+//! controller-sized blocks). A batch spec that reaches a
 //! per-transaction executor instead is loudly warned and reported as
 //! `batch(fallback:norec)`. In the simulator the backend is priced by
-//! a dedicated multi-version cost mode (estimate-wait, validation, and
-//! re-incarnation charges), not approximated as a plain STM. See
-//! `benches/batch_throughput` for the head-to-head measurement and the
-//! block-size × conflict-rate sweep.
+//! a dedicated multi-version cost mode (estimate-wait, validation,
+//! re-incarnation charges, block-admission barriers) driven by the
+//! *same* controller as the live runs, and `dyadhytm sim --fig
+//! combined` places batch (fixed and adaptive) next to the fig2/fig3
+//! policies in one table. See `benches/batch_throughput` for the
+//! lock-free vs mutex-store head-to-head, the block-size ×
+//! conflict-rate sweep, and the `BENCH_batch.json` perf trajectory it
+//! writes at the repo root.
 //!
 //! System inventory and the paper-vs-measured record live in
 //! `ROADMAP.md` (north star, open items) and `PAPER.md` (source

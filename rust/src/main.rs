@@ -7,8 +7,10 @@
 //! dyadhytm run    [--policy P] [--scale S] [--threads T] [--batch B]
 //!                 [--seed N] [--artifacts] [--tiny-htm] [--no-verify]
 //!                 one live SSCA-2 experiment (real threads, verified).
-//!                 `--policy batch[=BLOCK]` selects the Block-STM-style
-//!                 speculative batch backend (threads = workers)
+//!                 `--policy batch[=BLOCK|adaptive]` selects the
+//!                 Block-STM-style speculative batch backend (threads =
+//!                 workers; `adaptive` resizes blocks at runtime from
+//!                 the observed conflict rate)
 //! dyadhytm sim    --fig <t0|2a..2f|3a..3c|4a..4c|all> [--seed N]
 //!                 regenerate a paper figure on the simulated 28-HT node
 //! dyadhytm sim    --policy P --scale S --threads T [--kernel g|c|b]
@@ -312,7 +314,7 @@ fn main() -> ExitCode {
             for s in [
                 "lock", "stm", "stm-tl2", "htm-alock[=R]", "htm-spin[=R]", "hle",
                 "rnd[=LO-HI]", "fx[=N]", "stad[=N]", "dyad[=N]", "dyad-tl2[=N]",
-                "phtm[=R]", "batch[=BLOCK]",
+                "phtm[=R]", "batch[=BLOCK]", "batch=adaptive",
             ] {
                 println!("{s}");
             }

@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::batch::adaptive::BlockSizeController;
 use crate::batch::workload::edge_insert_block;
 use crate::batch::{BatchReport, BatchSystem};
 use crate::graph::rmat::EdgeTuple;
@@ -177,10 +178,11 @@ pub fn run(
             cfg.edge_factor
         )
     })?;
-    if let PolicySpec::Batch { block } = cfg.policy {
-        // No silent NOrec fallback: the batch spec drains the channel
-        // in blocks through BatchSystem.
-        return run_batch(g, source, cfg, total, block);
+    if let Some(ctl) = cfg.policy.batch_sizing() {
+        // No silent NOrec fallback: a batch spec drains the channel in
+        // controller-sized blocks through BatchSystem (`batch=N` pins
+        // the block, `batch=adaptive` resizes it per observed block).
+        return run_batch(g, source, cfg, total, ctl);
     }
     let (tx, rx) = sync_channel::<Vec<EdgeTuple>>(cfg.queue_depth);
     let rx = std::sync::Mutex::new(rx);
@@ -229,24 +231,24 @@ pub fn run(
     })
 }
 
-/// The `--policy batch` consumer side: a single drainer thread pulls
-/// tuple batches, accumulates them into blocks of `block`
+/// The batch-policy consumer side: a single drainer thread pulls tuple
+/// batches, accumulates them into controller-sized blocks of
 /// insert-transactions (`g.cfg.batch` edges each, cells assigned by
 /// global stream index), and runs each block through [`BatchSystem`]
-/// with `cfg.workers` speculation workers. Determinism: the built
-/// graph equals a sequential insert of the streamed tuple order, bit
-/// for bit.
+/// with `cfg.workers` speculation workers. Each block's outcome feeds
+/// the controller, so an adaptive run resizes while the stream flows.
+/// Determinism: the built graph equals a sequential insert of the
+/// streamed tuple order, bit for bit, for every controller trajectory.
 fn run_batch(
     g: &Graph,
     mut source: TupleSource,
     cfg: &PipelineConfig,
     total: usize,
-    block: usize,
+    mut ctl: BlockSizeController,
 ) -> Result<PipelineReport> {
     let (tx, rx) = sync_channel::<Vec<EdgeTuple>>(cfg.queue_depth);
     let t0 = Instant::now();
     let chunk = g.cfg.batch.max(1);
-    let block = block.max(1);
     let workers = cfg.workers.max(1);
     let mut table = StatsTable::new();
     let mut producer_blocked = Duration::ZERO;
@@ -270,12 +272,14 @@ fn run_batch(
                         // buffer stays O(block), not O(edges). The block
                         // runs straight off the buffer (no copy); the
                         // consumed prefix is drained afterwards.
-                        while buf.len() >= block * chunk {
-                            let take = block * chunk;
+                        while buf.len() >= ctl.current() * chunk {
+                            let take = ctl.current() * chunk;
                             let ti = Instant::now();
                             let txns =
                                 edge_insert_block(g, &buf[..take], inserted, chunk);
-                            report.merge(&BatchSystem::run(&g.heap, &txns, workers));
+                            let r = BatchSystem::run(&g.heap, &txns, workers);
+                            ctl.observe(r.executions, r.txns as u64);
+                            report.merge(&r);
                             insert_time += ti.elapsed();
                             drop(txns);
                             buf.drain(..take);
@@ -288,14 +292,16 @@ fn run_batch(
             if !buf.is_empty() {
                 let ti = Instant::now();
                 let txns = edge_insert_block(g, &buf, inserted, chunk);
-                report.merge(&BatchSystem::run(&g.heap, &txns, workers));
+                let r = BatchSystem::run(&g.heap, &txns, workers);
+                ctl.observe(r.executions, r.txns as u64);
+                report.merge(&r);
                 insert_time += ti.elapsed();
                 inserted += buf.len();
             }
-            (inserted, report, insert_time, queue_wait)
+            (inserted, report, insert_time, queue_wait, ctl)
         });
         producer_blocked = produce(&mut source, cfg, total, tx)?;
-        let (inserted, report, insert_time, queue_wait) =
+        let (inserted, report, insert_time, queue_wait, ctl) =
             drainer.join().expect("drainer panicked");
         consumer_blocked = queue_wait;
         anyhow::ensure!(
@@ -307,6 +313,7 @@ fn run_batch(
         // paths reach.
         g.heap.store(g.pool_cursor, total as u64);
         let mut stats = report.to_stats();
+        ctl.apply_to(&mut stats);
         stats.time_ns = insert_time.as_nanos() as u64;
         table.push(0, stats);
         Ok(())
@@ -436,6 +443,31 @@ mod tests {
                 g2.heap.load(addr),
                 "heap divergence at word {addr}"
             );
+        }
+    }
+
+    #[test]
+    fn adaptive_batch_pipeline_matches_serial_build_bitwise() {
+        // `--policy batch=adaptive`: whatever trajectory the controller
+        // takes over the streamed blocks, the graph equals the serial
+        // oracle and the report carries the converged block size.
+        let (sys, g) = setup(8);
+        let mut cfg = PipelineConfig::new(8, PolicySpec::BatchAdaptive, 3);
+        cfg.native_batch = 128;
+        let seed = cfg.seed;
+        let report = run(&sys, &g, TupleSource::Native { seed }, &cfg).unwrap();
+        assert_eq!(report.edges, 8 << 8);
+        let total = report.stats.total();
+        assert_eq!(total.norec_fallback, 0);
+        assert!(total.final_block > 0, "controller state must reach the stats");
+
+        let tuples = streamed_tuples(seed, 128, 8, report.edges);
+        verify::check_graph(&g, &tuples).unwrap();
+        let g2 = Graph::alloc(Ssca2Config::new(8));
+        workload::run_sequential(&g2.heap, &workload::edge_insert_txns(&g2, &tuples, 1));
+        g2.heap.store(g2.pool_cursor, tuples.len() as u64);
+        for addr in 0..g.heap.allocated() {
+            assert_eq!(g.heap.load(addr), g2.heap.load(addr), "word {addr}");
         }
     }
 

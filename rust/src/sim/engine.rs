@@ -26,6 +26,7 @@
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 
+use crate::batch::adaptive::BlockSizeController;
 use crate::hytm::policies::{Decision, DyAdPolicy, FxPolicy, RetryPolicy, RndPolicy, StAdPolicy};
 use crate::hytm::PolicySpec;
 use crate::stats::{StatsTable, TxStats};
@@ -57,12 +58,17 @@ enum Mode {
     /// PhTM: phase-global HW/SW switching (ablation A5).
     Phased { sw_quantum: u32 },
     /// Block-STM-style multi-version batch execution
-    /// (`PolicySpec::Batch`): transactions take a global serialization
-    /// index; only *lower-index* writers can invalidate an execution,
-    /// and commits never serialize through NOrec's sequence lock. Failed
+    /// (`PolicySpec::Batch` / `PolicySpec::BatchAdaptive`):
+    /// transactions take a global serialization index; only
+    /// *lower-index* writers can invalidate an execution, and commits
+    /// never serialize through NOrec's sequence lock. Failed
     /// validations charge re-incarnation (and, for repeat offenders,
     /// ESTIMATE-wait) costs — the virtual-time analogue of the live
-    /// `BatchReport` counters.
+    /// `BatchReport` counters. Admission is block-bounded: once a
+    /// block's quota is admitted, threads park until its last commit,
+    /// and the *same* `BlockSizeController` the live executors run
+    /// (pinned for `Batch`, AIMD for `BatchAdaptive`) sizes the next
+    /// block from the block's observed waste.
     MultiVersion,
 }
 
@@ -168,12 +174,18 @@ impl Simulator {
             PolicySpec::Hle => Mode::HtmLock { retries: 0 },
             PolicySpec::PhTm { sw_quantum, .. } => Mode::Phased { sw_quantum },
             // The batch backend is priced as what it is: multi-version
-            // speculative execution with a fixed serialization order
-            // (block admission is a live-executor concern; the cost
-            // model amortizes the block write-back per transaction).
-            PolicySpec::Batch { .. } => Mode::MultiVersion,
+            // speculative execution with a fixed serialization order,
+            // block-bounded admission, and the live controller sizing
+            // each block (the cost model amortizes the block
+            // write-back per transaction).
+            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive => Mode::MultiVersion,
             _ => Mode::Hybrid,
         };
+        // The block-size controller shared with the live executors
+        // (Mode::MultiVersion only; a non-batch spec never consults it).
+        let mut mv_ctl = spec
+            .batch_sizing()
+            .unwrap_or_else(|| BlockSizeController::fixed(usize::MAX));
         // Test-and-set fallback (HTMALock) pays an extra RMW storm per
         // acquisition vs the test-and-test-and-set spinlock.
         let lock_extra: u64 = match spec {
@@ -222,6 +234,17 @@ impl Simulator {
         let mut mv_commits: HashMap<u64, std::collections::VecDeque<(u64, u64)>> =
             HashMap::new();
         let mut mv_max_window: u64 = 0;
+        // Block-bounded admission: [mv_block_lo, mv_block_hi) is the
+        // open block. A thread whose next admission would cross
+        // mv_block_hi parks until the block's last commit, which
+        // consults the controller and reopens admission — the
+        // virtual-time analogue of BatchSystem finishing one block
+        // before the driver admits the next.
+        let mut mv_block_lo: u64 = 0;
+        let mut mv_block_hi: u64 = mv_ctl.current() as u64;
+        let mut mv_block_execs: u64 = 0;
+        let mut mv_block_commits: u64 = 0;
+        let mut mv_parked: Vec<usize> = Vec::new();
         // RNDHyTM's per-transaction rand() goes through libc's internal
         // lock: draws from all threads serialize (the paper: "overhead
         // due to random number generation which is quite significant").
@@ -248,6 +271,15 @@ impl Simulator {
             match th.state {
                 // ---------------------------------------------- Ready
                 TState::Ready => {
+                    if mode == Mode::MultiVersion && mv_next_idx >= mv_block_hi {
+                        // Block quota admitted but not yet fully
+                        // committed: park; the closing commit re-queues
+                        // us. (All in-flight txns are owned by
+                        // non-parked threads, so the closing commit
+                        // always arrives.)
+                        mv_parked.push(tid);
+                        continue;
+                    }
                     let Some(desc) = th.stream.next() else {
                         th.done = true;
                         th.clock = now;
@@ -297,6 +329,7 @@ impl Simulator {
                             th.mv_idx = mv_next_idx;
                             mv_next_idx += 1;
                             th.mv_retries = 0;
+                            mv_block_execs += 1;
                             let d = scale(self.cost.mv_txn_cycles(
                                 desc.n_reads as u64,
                                 desc.n_writes as u64,
@@ -496,6 +529,7 @@ impl Simulator {
                             // sw_aborts exactly as BatchReport::to_stats
                             // does.
                             th.stats.sw_aborts += 1;
+                            mv_block_execs += 1;
                             let mut penalty = self.cost.mv_validate_per_read
                                 * desc.n_reads as u64
                                 + self.cost.mv_abort;
@@ -518,6 +552,23 @@ impl Simulator {
                                 mv_commits.entry(l).or_default().push_back((now, my_idx));
                             }
                             th.stats.sw_commits += 1;
+                            mv_block_commits += 1;
+                            if mv_next_idx >= mv_block_hi
+                                && mv_block_commits == mv_block_hi - mv_block_lo
+                            {
+                                // The block's last commit: feed the
+                                // controller and reopen admission for
+                                // everyone parked on the barrier.
+                                mv_ctl.observe(mv_block_execs, mv_block_commits);
+                                mv_block_lo = mv_block_hi;
+                                mv_block_hi = mv_block_lo
+                                    .saturating_add(mv_ctl.current() as u64);
+                                mv_block_execs = 0;
+                                mv_block_commits = 0;
+                                for p in mv_parked.drain(..) {
+                                    queue.push(Reverse((now, p)));
+                                }
+                            }
                             th.cur = None;
                             th.state = TState::Ready;
                             queue.push(Reverse((now, tid)));
@@ -579,6 +630,13 @@ impl Simulator {
             }
         }
 
+        if mode == Mode::MultiVersion {
+            if let Some(th0) = threads_sim.first_mut() {
+                // Controller outcome on the report row (thread 0):
+                // what `PolicySpec::label` and the figure tables read.
+                mv_ctl.apply_to(&mut th0.stats);
+            }
+        }
         let mut table = StatsTable::new();
         let mut makespan = 0u64;
         for (tid, th) in threads_sim.into_iter().enumerate() {
@@ -613,7 +671,8 @@ fn make_policy(spec: &PolicySpec) -> Option<Box<dyn RetryPolicy>> {
         PolicySpec::CoarseLock
         | PolicySpec::StmNorec
         | PolicySpec::StmTl2
-        | PolicySpec::Batch { .. } => None,
+        | PolicySpec::Batch { .. }
+        | PolicySpec::BatchAdaptive => None,
     }
 }
 
@@ -656,6 +715,7 @@ mod tests {
             PolicySpec::DyAd { n: 43 },
             PolicySpec::Rnd { lo: 1, hi: 50 },
             PolicySpec::Batch { block: 2048 },
+            PolicySpec::BatchAdaptive,
         ] {
             let out = run_gen(spec, 4, 10);
             let m = SimWorkload::new(10).edges();
@@ -712,6 +772,51 @@ mod tests {
         assert_ne!(
             batch.cycles, stm.cycles,
             "batch must not alias the plain-STM cost model"
+        );
+    }
+
+    #[test]
+    fn adaptive_batch_is_deterministic_and_reports_controller_state() {
+        let a = run_gen(PolicySpec::BatchAdaptive, 4, 10);
+        let b = run_gen(PolicySpec::BatchAdaptive, 4, 10);
+        assert_eq!(a.cycles, b.cycles, "same seed, same trajectory");
+        let t = a.stats.total();
+        assert_eq!(t.total_commits(), SimWorkload::new(10).edges());
+        assert!(t.final_block > 0, "controller state must reach the stats");
+    }
+
+    #[test]
+    fn adaptive_grows_blocks_on_a_clean_single_thread() {
+        // One thread = serial admission = zero conflict: every block is
+        // clean, so the additive-increase law must raise the block size
+        // above its starting point.
+        let out = run_gen(PolicySpec::BatchAdaptive, 1, 12);
+        let t = out.stats.total();
+        assert_eq!(t.sw_aborts, 0, "serial admission cannot conflict");
+        assert_eq!(t.total_commits(), SimWorkload::new(12).edges());
+        assert!(
+            t.final_block as usize > BlockSizeController::ADAPTIVE_INITIAL,
+            "clean blocks must grow: final {}",
+            t.final_block
+        );
+        assert!(t.block_grows > 0);
+    }
+
+    #[test]
+    fn block_barrier_costs_show_up_at_small_fixed_blocks() {
+        // Tiny blocks mean frequent admission barriers: makespan must
+        // not beat a comfortably large block at the same conflict load.
+        let small = run_gen(PolicySpec::Batch { block: 8 }, 4, 10);
+        let large = run_gen(PolicySpec::Batch { block: 2048 }, 4, 10);
+        assert_eq!(
+            small.stats.total().total_commits(),
+            large.stats.total().total_commits()
+        );
+        assert!(
+            small.cycles >= large.cycles,
+            "8-txn blocks ({}) should not outrun 2048-txn blocks ({})",
+            small.cycles,
+            large.cycles
         );
     }
 

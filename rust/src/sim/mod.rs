@@ -16,10 +16,12 @@
 //!   windows `[start, commit)`; it aborts if any line it touched was
 //!   committed to inside its window, if a subscribed lock moved, or if
 //!   its footprint trips the capacity model — except under
-//!   `PolicySpec::Batch`, which runs as a multi-version mode: only
-//!   lower-serialization-index commits invalidate a window, and failed
-//!   validations charge re-incarnation/ESTIMATE-wait costs instead of
-//!   NOrec's serial write-back;
+//!   `PolicySpec::Batch` / `PolicySpec::BatchAdaptive`, which run as a
+//!   multi-version mode: only lower-serialization-index commits
+//!   invalidate a window, failed validations charge
+//!   re-incarnation/ESTIMATE-wait costs instead of NOrec's serial
+//!   write-back, and admission is block-bounded by the same
+//!   `BlockSizeController` the live executors drive;
 //! * hyperthread derating beyond 14 threads (shared execution ports →
 //!   per-thread IPC drops; [`cost::CostModel::derate`]).
 //!

@@ -36,6 +36,15 @@ pub struct TxStats {
     /// NOrec, and the run is reported as `batch(fallback:norec)` (see
     /// `PolicySpec::label`).
     pub norec_fallback: u64,
+    /// Adaptive batch sizing (`--policy batch=adaptive`):
+    /// additive-increase decisions the `BlockSizeController` took.
+    pub block_grows: u64,
+    /// Adaptive batch sizing: multiplicative-decrease decisions.
+    pub block_shrinks: u64,
+    /// Block size the batch run finished on (0 when no batch
+    /// controller ran). `PolicySpec::label` reports this for
+    /// `batch=adaptive` runs.
+    pub final_block: u64,
     /// Wall-clock or virtual nanoseconds attributed to this thread.
     pub time_ns: u64,
 }
@@ -74,6 +83,12 @@ impl TxStats {
         self.sw_aborts += other.sw_aborts;
         self.lock_commits += other.lock_commits;
         self.norec_fallback += other.norec_fallback;
+        self.block_grows += other.block_grows;
+        self.block_shrinks += other.block_shrinks;
+        if other.final_block != 0 {
+            // Later merges carry the most recent controller state.
+            self.final_block = other.final_block;
+        }
         self.time_ns = self.time_ns.max(other.time_ns);
     }
 }

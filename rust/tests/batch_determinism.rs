@@ -5,7 +5,8 @@
 //! `TxnDesc`-shaped batches (uniform and Zipf-skewed high-conflict
 //! footprints), random worker counts, and random initial heap states.
 
-use dyadhytm::batch::workload::{desc_txn, run_sequential};
+use dyadhytm::batch::adaptive::BlockSizeController;
+use dyadhytm::batch::workload::{desc_txn, run_blocks, run_sequential};
 use dyadhytm::batch::{BatchSystem, BatchTxn};
 use dyadhytm::graph::{computation, generation, rmat, subgraph, verify, Graph, Ssca2Config};
 use dyadhytm::htm::HtmConfig;
@@ -138,6 +139,93 @@ fn pathological_single_hub_line() {
     }
 }
 
+/// Build the same deterministic batch twice (rebuilt from the seed —
+/// `BatchTxn` is not `Clone`), run it once under a pinned block size
+/// and once under the adaptive controller, and compare the heaps word
+/// by word. Any partition of the stream into blocks preserves index
+/// order, so every controller trajectory must commit the same state.
+fn check_fixed_vs_adaptive(
+    seed: u64,
+    zipf_s: f64,
+    n_txns: usize,
+    workers: usize,
+    fixed_block: usize,
+) -> Result<(), String> {
+    let build = || -> Vec<BatchTxn<'static>> {
+        let mut rng = Rng::new(seed);
+        let zipf = Zipf::new(LINES - 1, zipf_s);
+        (0..n_txns)
+            .map(|_| {
+                let d = random_desc(&mut rng, &zipf);
+                desc_txn(d, rng.next_u64())
+            })
+            .collect()
+    };
+    let words = LINES * WORDS_PER_LINE;
+    let heap_fixed = TxHeap::new(words);
+    let heap_adaptive = TxHeap::new(words);
+    let mut init = Rng::new(seed ^ 0xADA9);
+    for addr in 0..words {
+        let v = init.next_u64();
+        heap_fixed.store(addr, v);
+        heap_adaptive.store(addr, v);
+    }
+
+    let mut fixed = BlockSizeController::fixed(fixed_block);
+    let rf = run_blocks(&heap_fixed, &build(), workers, &mut fixed);
+    // Tight bounds relative to the batch size so the law actually
+    // fires mid-run.
+    let mut adaptive = BlockSizeController::with_bounds(8, 2, n_txns.max(4), 4);
+    let ra = run_blocks(&heap_adaptive, &build(), workers, &mut adaptive);
+    if rf.txns != n_txns || ra.txns != n_txns {
+        return Err(format!("committed {}/{} of {n_txns}", rf.txns, ra.txns));
+    }
+    for addr in 0..words {
+        let (a, b) = (heap_fixed.load(addr), heap_adaptive.load(addr));
+        if a != b {
+            return Err(format!(
+                "divergence at word {addr}: fixed({fixed_block}) {a:#x} vs adaptive \
+                 (block {} after {} grows/{} shrinks) {b:#x} \
+                 (zipf_s={zipf_s}, n={n_txns}, workers={workers})",
+                adaptive.current(),
+                adaptive.grows,
+                adaptive.shrinks,
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_adaptive_sizing_is_bit_identical_to_fixed() {
+    // The ISSUE-3 controller property: output is invariant across
+    // fixed vs adaptive block sizing at several Zipf skews and worker
+    // counts.
+    for (round, &zipf_s) in [0.0f64, 1.2, 2.0].iter().enumerate() {
+        qcheck_res(
+            "fixed block == adaptive block (bitwise)",
+            8,
+            |rng| {
+                (
+                    rng.next_u64(),
+                    8 + rng.below(56) as usize,
+                    1 + rng.below(6) as usize,
+                    [1usize, 16, 64][rng.below(3) as usize],
+                )
+            },
+            |&(seed, n, workers, fixed_block)| {
+                check_fixed_vs_adaptive(
+                    seed ^ ((round as u64) << 32),
+                    zipf_s,
+                    n,
+                    workers,
+                    fixed_block,
+                )
+            },
+        );
+    }
+}
+
 /// Build a graph + kernel-2 results for the subgraph tests: the RMAT
 /// edge distribution is the Zipf-skewed (power-law hub) regime the
 /// paper's kernel-3 dynamics live in.
@@ -200,6 +288,7 @@ fn batch_subgraph_agrees_with_every_other_policy() {
         PolicySpec::CoarseLock,
         PolicySpec::DyAd { n: 43 },
         PolicySpec::Batch { block: 32 },
+        PolicySpec::BatchAdaptive,
     ] {
         let (sys, g) = built_graph(7, 0x5EED);
         let roots = subgraph::roots_from_results(&g);
