@@ -2,8 +2,10 @@
 //! on the SSCA-2 edge-insertion (generation) workload, plus a
 //! block-size × conflict-rate sweep on the descriptor substrate that
 //! A/Bs the **lock-free multi-version store against the sharded-mutex
-//! baseline** and measures where the **adaptive block controller**
-//! converges relative to the best fixed block.
+//! baseline**, the **admission barrier against the cross-block
+//! pipelined session** (per cell: `steal_rate` and `overlap_ratio`),
+//! and measures where the **adaptive block controller** converges
+//! relative to the best fixed block.
 //!
 //! Prints markdown tables plus one machine-readable `BENCH_JSON` line
 //! per cell (the same flat-JSON record shape the other `BENCH_*`
@@ -14,11 +16,13 @@
 //!
 //! The sweep additionally writes the stable perf-trajectory file
 //! **`BENCH_batch.json`** at the repository root: a JSON array of
-//! `{policy, block, conflict, txns_per_sec, ...}` records (`policy` is
-//! `batch` for the lock-free store, `batch-mutex` for the baseline,
-//! `batch-adaptive` for the controller run, whose `block` is the
-//! converged size). CI runs the bench in smoke mode (`BENCH_SMOKE=1`,
-//! smaller sizes) and uploads the file as an artifact.
+//! `{policy, block, conflict, txns_per_sec, steal_rate, overlap_ratio,
+//! ...}` records (`policy` is `batch` for the barrier lock-free store,
+//! `batch-mutex` for the sharded-mutex baseline, `batch-pipelined` for
+//! the cross-block-overlapping session, `batch-adaptive` for the
+//! controller run, whose `block` is the converged size). CI runs the
+//! bench in smoke mode (`BENCH_SMOKE=1`, smaller sizes) and uploads
+//! the file as an artifact.
 //!
 //! ```sh
 //! cargo bench --bench batch_throughput          # full sizes
@@ -29,7 +33,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use dyadhytm::batch::adaptive::BlockSizeController;
-use dyadhytm::batch::workload::run_blocks;
+use dyadhytm::batch::workload::run_txns_pipelined;
 use dyadhytm::batch::{BatchReport, BatchSystem, BatchTxn};
 use dyadhytm::graph::{generation, rmat, verify, Graph, Ssca2Config};
 use dyadhytm::htm::HtmConfig;
@@ -51,15 +55,48 @@ struct SweepRec {
     workers: usize,
     conflict: f64,
     txns_per_sec: f64,
+    /// Deque steals per execution (worker-runtime load balance).
+    steal_rate: f64,
+    /// Overlapped executions per execution (cross-block pipelining;
+    /// 0 for barrier cells by construction).
+    overlap_ratio: f64,
 }
 
 impl SweepRec {
+    fn from_report(
+        policy: &'static str,
+        block: usize,
+        zipf_s: f64,
+        workers: usize,
+        report: &BatchReport,
+        txns_per_sec: f64,
+    ) -> Self {
+        let execs = report.executions.max(1) as f64;
+        Self {
+            policy,
+            block,
+            zipf_s,
+            workers,
+            conflict: report.validation_aborts as f64 / execs,
+            txns_per_sec,
+            steal_rate: report.steals as f64 / execs,
+            overlap_ratio: report.overlapped_txns as f64 / execs,
+        }
+    }
+
     fn to_json(&self) -> String {
         format!(
             "{{\"policy\":\"{}\",\"block\":{},\"conflict\":{:.4},\
-             \"txns_per_sec\":{:.0},\"zipf_s\":{},\"workers\":{}}}",
-            self.policy, self.block, self.conflict, self.txns_per_sec, self.zipf_s,
+             \"txns_per_sec\":{:.0},\"zipf_s\":{},\"workers\":{},\
+             \"steal_rate\":{:.4},\"overlap_ratio\":{:.4}}}",
+            self.policy,
+            self.block,
+            self.conflict,
+            self.txns_per_sec,
+            self.zipf_s,
             self.workers,
+            self.steal_rate,
+            self.overlap_ratio,
         )
     }
 }
@@ -115,9 +152,11 @@ fn run_fixed(
 
 /// Sweep the admission block size against the workload's conflict
 /// skew: Zipf-s 0 spreads RMWs uniformly over the lines, s = 1.5
-/// concentrates them on a few hubs. Each (block, skew) cell runs on
-/// both stores; each skew additionally runs the adaptive controller.
-/// Returns the records for `BENCH_batch.json`.
+/// concentrates them on a few hubs. Each (block, skew) cell runs the
+/// barrier executor on both stores **and** the cross-block pipelined
+/// session (the barrier-vs-pipelined A/B), emitting `steal_rate` and
+/// `overlap_ratio` per cell; each skew additionally runs the adaptive
+/// controller. Returns the records for `BENCH_batch.json`.
 fn block_conflict_sweep() -> Vec<SweepRec> {
     let sweep_txn_count: usize = if smoke() { 4096 } else { 16384 };
     const LINES: usize = 64;
@@ -127,11 +166,45 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
     let skews = [0.0f64, 0.8, 1.5];
 
     println!(
-        "\n### batch_throughput — block size vs conflict rate \
+        "\n### batch_throughput — block size vs conflict rate, barrier vs pipelined \
          (Zipf RMW substrate, {WORKERS} workers, {sweep_txn_count} txns)\n"
     );
-    println!("| store | block | zipf_s | txns/s | executions | validation_aborts | dependencies | conflict_rate |");
-    println!("|---|---|---|---|---|---|---|---|");
+    println!("| store | block | zipf_s | txns/s | executions | validation_aborts | dependencies | conflict_rate | steal_rate | overlap_ratio |");
+    println!("|---|---|---|---|---|---|---|---|---|---|");
+
+    let emit = |policy: &'static str,
+                    block: usize,
+                    zipf_s: f64,
+                    report: &BatchReport,
+                    tps: f64,
+                    records: &mut Vec<SweepRec>| {
+        let rec = SweepRec::from_report(policy, block, zipf_s, WORKERS, report, tps);
+        println!(
+            "| {policy} | {block} | {zipf_s} | {tps:.0} | {} | {} | {} | {:.4} | {:.4} | {:.4} |",
+            report.executions,
+            report.validation_aborts,
+            report.dependencies,
+            rec.conflict,
+            rec.steal_rate,
+            rec.overlap_ratio,
+        );
+        println!(
+            "BENCH_JSON {{\"bench\":\"batch_block_sweep\",\"store\":\"{policy}\",\
+             \"block\":{block},\"zipf_s\":{zipf_s},\"workers\":{WORKERS},\
+             \"txns\":{sweep_txn_count},\"txns_per_sec\":{tps:.0},\
+             \"executions\":{},\"validations\":{},\"validation_aborts\":{},\
+             \"dependencies\":{},\"conflict_rate\":{:.4},\"steal_rate\":{:.4},\
+             \"overlap_ratio\":{:.4}}}",
+            report.executions,
+            report.validations,
+            report.validation_aborts,
+            report.dependencies,
+            rec.conflict,
+            rec.steal_rate,
+            rec.overlap_ratio,
+        );
+        records.push(rec);
+    };
 
     let mut records = Vec::new();
     for &zipf_s in &skews {
@@ -141,41 +214,32 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
             for (policy, mutex_baseline) in [("batch", false), ("batch-mutex", true)] {
                 let (report, tps) =
                     run_fixed(&txns, heap_words, block, WORKERS, mutex_baseline);
-                let conflict =
-                    report.validation_aborts as f64 / report.executions.max(1) as f64;
-                println!(
-                    "| {policy} | {block} | {zipf_s} | {tps:.0} | {} | {} | {} | {conflict:.4} |",
-                    report.executions, report.validation_aborts, report.dependencies,
-                );
-                println!(
-                    "BENCH_JSON {{\"bench\":\"batch_block_sweep\",\"store\":\"{policy}\",\
-                     \"block\":{block},\"zipf_s\":{zipf_s},\"workers\":{WORKERS},\
-                     \"txns\":{sweep_txn_count},\"txns_per_sec\":{tps:.0},\
-                     \"executions\":{},\"validations\":{},\"validation_aborts\":{},\
-                     \"dependencies\":{},\"conflict_rate\":{conflict:.4}}}",
-                    report.executions,
-                    report.validations,
-                    report.validation_aborts,
-                    report.dependencies,
-                );
                 if !mutex_baseline
                     && best_fixed.map_or(true, |(_, best_tps)| tps > best_tps)
                 {
                     best_fixed = Some((block, tps));
                 }
-                records.push(SweepRec {
-                    policy,
-                    block,
-                    zipf_s,
-                    workers: WORKERS,
-                    conflict,
-                    txns_per_sec: tps,
-                });
+                emit(policy, block, zipf_s, &report, tps, &mut records);
             }
+
+            // The pipelined A/B on the same substrate and block grid:
+            // cross-block overlap replaces the admission barrier.
+            // Transaction construction happens before the clock starts,
+            // exactly as run_fixed's prebuilt slice does.
+            let pipe_txns = sweep_txns(zipf_s, sweep_txn_count, LINES);
+            let heap = TxHeap::new(heap_words);
+            let mut ctl = BlockSizeController::fixed(block);
+            let t0 = Instant::now();
+            let report = run_txns_pipelined(&heap, pipe_txns, WORKERS, &mut ctl);
+            let tps = sweep_txn_count as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+            emit("batch-pipelined", block, zipf_s, &report, tps, &mut records);
         }
 
-        // The adaptive controller on the same substrate, bounded by the
-        // sweep's own grid so "converged" is comparable to "best fixed".
+        // The adaptive controller on the same substrate (pipelined —
+        // the shipped configuration), bounded by the sweep's own grid
+        // so "converged" is comparable to "best fixed". Construction
+        // again stays outside the timed region.
+        let adaptive_txns = sweep_txns(zipf_s, sweep_txn_count, LINES);
         let heap = TxHeap::new(heap_words);
         let mut ctl = BlockSizeController::with_bounds(
             blocks[1],
@@ -184,40 +248,24 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
             BlockSizeController::GROW_STEP,
         );
         let t0 = Instant::now();
-        let report = run_blocks(&heap, &txns, WORKERS, &mut ctl);
+        let report = run_txns_pipelined(&heap, adaptive_txns, WORKERS, &mut ctl);
         let tps = sweep_txn_count as f64 / t0.elapsed().as_secs_f64().max(1e-9);
-        let conflict = report.validation_aborts as f64 / report.executions.max(1) as f64;
         let converged = ctl.current();
+        emit("batch-adaptive", converged, zipf_s, &report, tps, &mut records);
         println!(
-            "| batch-adaptive | {converged} | {zipf_s} | {tps:.0} | {} | {} | {} | {conflict:.4} |",
-            report.executions, report.validation_aborts, report.dependencies,
+            "> zipf {zipf_s}: adaptive converged to block {converged} \
+             ({} grows, {} shrinks{})",
+            ctl.grows,
+            ctl.shrinks,
+            best_fixed
+                .map(|(b, _)| format!("; best fixed lock-free block: {b}"))
+                .unwrap_or_default()
         );
-        println!(
-            "BENCH_JSON {{\"bench\":\"batch_block_sweep\",\"store\":\"batch-adaptive\",\
-             \"block\":{converged},\"zipf_s\":{zipf_s},\"workers\":{WORKERS},\
-             \"txns\":{sweep_txn_count},\"txns_per_sec\":{tps:.0},\
-             \"grows\":{},\"shrinks\":{},\"conflict_rate\":{conflict:.4}}}",
-            ctl.grows, ctl.shrinks,
-        );
-        records.push(SweepRec {
-            policy: "batch-adaptive",
-            block: converged,
-            zipf_s,
-            workers: WORKERS,
-            conflict,
-            txns_per_sec: tps,
-        });
-        if let Some((best_block, _)) = best_fixed {
-            println!(
-                "> zipf {zipf_s}: adaptive converged to block {converged} \
-                 (best fixed lock-free block: {best_block})"
-            );
-        }
     }
 
-    // Headline of the sweep: what the lock-free hot path buys over the
-    // mutex store, per conflict regime (acceptance: >= 1.3x at low
-    // conflict on >= 4 workers).
+    // Headlines of the sweep: what the lock-free hot path buys over the
+    // mutex store, and what cross-block pipelining buys over the
+    // admission barrier, per conflict regime.
     for &zipf_s in &skews {
         let speedup = |policy: &str| {
             records
@@ -228,11 +276,25 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
         };
         let lockfree = speedup("batch");
         let mutex = speedup("batch-mutex");
+        let pipelined = speedup("batch-pipelined");
         if mutex > 0.0 {
             println!(
                 "> zipf {zipf_s}: lock-free store {:.2}x vs mutex baseline \
                  (best-block txns/s {lockfree:.0} vs {mutex:.0})",
                 lockfree / mutex
+            );
+        }
+        if lockfree > 0.0 {
+            let max_overlap = records
+                .iter()
+                .filter(|r| r.policy == "batch-pipelined" && r.zipf_s == zipf_s)
+                .map(|r| r.overlap_ratio)
+                .fold(0.0f64, f64::max);
+            println!(
+                "> zipf {zipf_s}: pipelined {:.2}x vs barrier \
+                 (best-block txns/s {pipelined:.0} vs {lockfree:.0}, \
+                 max overlap_ratio {max_overlap:.4})",
+                pipelined / lockfree
             );
         }
     }
@@ -257,7 +319,7 @@ fn main() {
     let t0 = std::time::Instant::now();
     let variants = [
         PolicySpec::Batch { block: 2048 },
-        PolicySpec::BatchAdaptive,
+        PolicySpec::batch_adaptive(),
         PolicySpec::DyAd { n: 43 },
         PolicySpec::CoarseLock,
     ];

@@ -32,12 +32,24 @@
 //! state bit for bit (enforced by the `batch_determinism` qcheck
 //! property comparing fixed against adaptive sizing).
 
+use std::time::Duration;
+
 use crate::stats::TxStats;
 
 /// AIMD block-size controller. [`BlockSizeController::fixed`] pins the
 /// block (the `--policy batch=N` behaviour: `observe` never moves it),
 /// [`BlockSizeController::adaptive`] enables the law above
 /// (`--policy batch=adaptive`).
+///
+/// An adaptive controller can additionally carry a **latency target**
+/// ([`BlockSizeController::with_latency_target`], the CLI's `--policy
+/// batch=adaptive:latency=MS`): when a completed block's observed wall
+/// time exceeds the deadline the block halves *even at low conflict
+/// rate* — blocks sized by deadline, not only by waste, which is what
+/// the streaming pipeline needs to bound end-to-end latency. While a
+/// target is set, additive increase is additionally gated on the block
+/// finishing within half the deadline (headroom guard), so the
+/// controller doesn't oscillate across the deadline every other block.
 #[derive(Clone, Debug)]
 pub struct BlockSizeController {
     block: usize,
@@ -46,10 +58,14 @@ pub struct BlockSizeController {
     grow: usize,
     hi: f64,
     lo: f64,
+    /// Shrink when a block's wall time exceeds this deadline.
+    latency_target: Option<Duration>,
     /// Additive-increase decisions taken.
     pub grows: u64,
-    /// Multiplicative-decrease decisions taken.
+    /// Multiplicative-decrease decisions taken (conflict + latency).
     pub shrinks: u64,
+    /// The subset of `shrinks` forced by the latency target.
+    pub latency_shrinks: u64,
     /// Blocks observed.
     pub samples: u64,
 }
@@ -79,8 +95,10 @@ impl BlockSizeController {
             grow: 0,
             hi: Self::HI_CONFLICT,
             lo: Self::LO_CONFLICT,
+            latency_target: None,
             grows: 0,
             shrinks: 0,
+            latency_shrinks: 0,
             samples: 0,
         }
     }
@@ -107,10 +125,27 @@ impl BlockSizeController {
             grow: grow.max(1),
             hi: Self::HI_CONFLICT,
             lo: Self::LO_CONFLICT,
+            latency_target: None,
             grows: 0,
             shrinks: 0,
+            latency_shrinks: 0,
             samples: 0,
         }
+    }
+
+    /// Attach a latency deadline (see the type docs): a completed
+    /// block whose wall time exceeds `target` halves the next block
+    /// even when its conflict rate was clean. Only meaningful for an
+    /// adaptive controller; a fixed block ignores it.
+    pub fn with_latency_target(mut self, target: Duration) -> Self {
+        self.latency_target = Some(target);
+        self
+    }
+
+    /// The configured latency deadline, if any.
+    #[inline]
+    pub fn latency_target(&self) -> Option<Duration> {
+        self.latency_target
     }
 
     /// The block size the next admission should use.
@@ -125,14 +160,36 @@ impl BlockSizeController {
         self.min != self.max
     }
 
+    /// Feed one completed block's outcome without timing information:
+    /// the conflict-rate AIMD law only (the latency target never fires
+    /// on a zero wall time). Kept for callers that have no meaningful
+    /// block wall-clock; the execution paths call
+    /// [`BlockSizeController::observe_block`].
+    pub fn observe(&mut self, executions: u64, committed: u64) {
+        self.observe_block(executions, committed, Duration::ZERO);
+    }
+
     /// Feed one completed block's outcome: `executions` incarnation
     /// starts against `committed` transactions (`executions >=
-    /// committed`; the excess is wasted speculation). Applies the AIMD
-    /// law to pick the next block size.
-    pub fn observe(&mut self, executions: u64, committed: u64) {
+    /// committed`; the excess is wasted speculation), and the block's
+    /// observed wall time. The latency deadline is checked first —
+    /// an overrun halves the block even at a clean conflict rate —
+    /// then the AIMD law picks the next block size.
+    pub fn observe_block(&mut self, executions: u64, committed: u64, wall: Duration) {
         self.samples += 1;
         if !self.is_adaptive() || committed == 0 {
             return;
+        }
+        if let Some(target) = self.latency_target {
+            if wall > target {
+                let next = (self.block / 2).max(self.min);
+                if next != self.block {
+                    self.block = next;
+                    self.shrinks += 1;
+                    self.latency_shrinks += 1;
+                }
+                return;
+            }
         }
         let executions = executions.max(committed);
         let conflict = 1.0 - committed as f64 / executions as f64;
@@ -143,10 +200,17 @@ impl BlockSizeController {
                 self.shrinks += 1;
             }
         } else if conflict < self.lo {
-            let next = (self.block + self.grow).min(self.max);
-            if next != self.block {
-                self.block = next;
-                self.grows += 1;
+            // Headroom guard: with a deadline set, only grow while the
+            // block finishes within half of it.
+            if self
+                .latency_target
+                .map_or(true, |target| wall <= target / 2)
+            {
+                let next = (self.block + self.grow).min(self.max);
+                if next != self.block {
+                    self.block = next;
+                    self.grows += 1;
+                }
             }
         }
     }
@@ -236,6 +300,54 @@ mod tests {
         assert_eq!(c.current(), b0);
         c.observe(10, 20); // executions < committed: clamped, clean
         assert_eq!(c.current(), b0 + BlockSizeController::GROW_STEP);
+    }
+
+    #[test]
+    fn latency_overrun_shrinks_even_when_clean() {
+        let mut c = BlockSizeController::with_bounds(400, 50, 400, 100)
+            .with_latency_target(Duration::from_millis(10));
+        assert_eq!(c.latency_target(), Some(Duration::from_millis(10)));
+        // Perfectly clean block, but 3x over deadline: halve.
+        c.observe_block(1000, 1000, Duration::from_millis(30));
+        assert_eq!(c.current(), 200, "deadline overrun must shrink");
+        c.observe_block(1000, 1000, Duration::from_millis(11));
+        assert_eq!(c.current(), 100);
+        assert_eq!(c.latency_shrinks, 2);
+        assert_eq!(c.shrinks, 2, "latency shrinks count as shrinks");
+        assert_eq!(c.grows, 0);
+    }
+
+    #[test]
+    fn latency_headroom_gates_growth() {
+        let mut c = BlockSizeController::with_bounds(100, 50, 400, 100)
+            .with_latency_target(Duration::from_millis(10));
+        // Clean and within deadline, but past the half-deadline
+        // headroom: hold, don't grow.
+        c.observe_block(1000, 1000, Duration::from_millis(8));
+        assert_eq!(c.current(), 100, "no growth without headroom");
+        // Clean and fast: grow as usual.
+        c.observe_block(1000, 1000, Duration::from_millis(2));
+        assert_eq!(c.current(), 200);
+        assert_eq!(c.grows, 1);
+    }
+
+    #[test]
+    fn untimed_observe_never_trips_the_deadline() {
+        // Callers without wall-clock data (Duration::ZERO) keep the
+        // pure conflict law even with a target configured.
+        let mut c = BlockSizeController::with_bounds(100, 50, 400, 100)
+            .with_latency_target(Duration::from_millis(1));
+        c.observe(1000, 1000);
+        assert_eq!(c.current(), 200, "zero wall time is always within deadline");
+        assert_eq!(c.latency_shrinks, 0);
+    }
+
+    #[test]
+    fn fixed_controller_ignores_latency_target() {
+        let mut c = BlockSizeController::fixed(128).with_latency_target(Duration::from_nanos(1));
+        c.observe_block(100, 100, Duration::from_secs(5));
+        assert_eq!(c.current(), 128);
+        assert_eq!((c.shrinks, c.latency_shrinks), (0, 0));
     }
 
     #[test]

@@ -1,18 +1,28 @@
 //! The batch worker loop: execute → record → validate → abort/re-incarnate.
 //!
-//! Each worker pulls [`Task`]s from the shared [`Scheduler`]. Execution
-//! runs the transaction body against an [`MvView`] — a
-//! [`crate::tm::access::TxAccess`] implementation that reads through
-//! the multi-version store (recording the observed version per read)
-//! and buffers writes locally. Validation re-reads the recorded read
-//! set; on mismatch the incarnation's writes become ESTIMATEs and the
-//! transaction re-executes with a bumped incarnation number.
+//! Each worker pulls [`Task`]s from the shared [`Scheduler`] (its own
+//! deque first, then a chunked stream refill, then steals from peers —
+//! see the scheduler docs). Execution runs the transaction body against
+//! an [`MvView`] — a [`crate::tm::access::TxAccess`] implementation
+//! that reads through the multi-version store (recording the observed
+//! version per read) and buffers writes locally. Validation re-reads
+//! the recorded read set; on mismatch the incarnation's writes become
+//! ESTIMATEs and the transaction re-executes with a bumped incarnation
+//! number.
+//!
+//! Reads that find no lower in-block writer resolve through a
+//! [`BaseSource`]: the heap for a barrier run, or — under cross-block
+//! pipelining — the still-draining previous block's winning versions
+//! (falling back to the heap). A read that hits a predecessor ESTIMATE
+//! parks the transaction on the previous block via [`CrossBlockPark`]
+//! until that block completes.
 //!
 //! The worker is generic over the [`MvStore`] implementation so the
 //! same loop drives both the lock-free production store and the
 //! sharded-mutex baseline the benchmark compares it against.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use crate::mem::{Addr, TxHeap};
 use crate::tm::access::{Abort, TxAccess, TxResult};
@@ -34,6 +44,73 @@ pub struct BatchCounters {
     pub validation_aborts: AtomicU64,
     /// Executions suspended on an ESTIMATE of a lower transaction.
     pub dependencies: AtomicU64,
+    /// Execution attempts started while the *previous block* was still
+    /// draining (cross-block pipelining overlap).
+    pub overlapped: AtomicU64,
+}
+
+/// Where a read with no lower in-block writer resolves.
+pub(super) enum BaseSource<'r, M: MvStore> {
+    /// The pre-batch heap snapshot (barrier runs, and the head block of
+    /// a pipelined run).
+    Heap,
+    /// The previous block of a pipelined run: peek its winning version
+    /// while it drains (`done` false), fall through to the heap once it
+    /// has written back (`done` true). `None` = the predecessor's value
+    /// is an ESTIMATE — unresolved, park on it.
+    Prev { mv: &'r M, done: &'r AtomicBool },
+}
+
+impl<M: MvStore> BaseSource<'_, M> {
+    fn value(&self, heap: &TxHeap, addr: Addr) -> Option<u64> {
+        match self {
+            BaseSource::Heap => Some(heap.load_acquire(addr)),
+            BaseSource::Prev { mv, done } => {
+                if done.load(Ordering::SeqCst) {
+                    return Some(heap.load_acquire(addr));
+                }
+                match mv.read(addr, usize::MAX) {
+                    MvRead::Value(_, v) => Some(v),
+                    MvRead::Base => Some(heap.load_acquire(addr)),
+                    MvRead::Estimate(_) => None,
+                }
+            }
+        }
+    }
+
+    /// Is this block still overlapping a live predecessor?
+    fn overlapping(&self) -> bool {
+        match self {
+            BaseSource::Heap => false,
+            BaseSource::Prev { done, .. } => !done.load(Ordering::SeqCst),
+        }
+    }
+}
+
+/// Cross-block parking state shared with `BatchSystem::run_pipelined`:
+/// the list of this block's transactions suspended on the previous
+/// block. The mutex serializes parking against the promotion path
+/// (which flips `prev_done` and drains the list under the same lock),
+/// closing the lost-wakeup window exactly like the in-block dependency
+/// protocol does.
+pub(super) struct CrossBlockPark<'r> {
+    pub prev_done: &'r AtomicBool,
+    pub parked: &'r Mutex<Vec<TxnIdx>>,
+}
+
+impl CrossBlockPark<'_> {
+    /// Suspend `txn` (currently Executing) until the previous block
+    /// completes. Returns `false` when the predecessor already
+    /// finished — the caller simply re-executes in place.
+    fn park(&self, txn: TxnIdx, scheduler: &Scheduler) -> bool {
+        let mut list = self.parked.lock().unwrap();
+        if self.prev_done.load(Ordering::SeqCst) {
+            return false;
+        }
+        scheduler.suspend_external(txn);
+        list.push(txn);
+        true
+    }
 }
 
 /// Speculative memory view of one executing incarnation. The read and
@@ -42,10 +119,12 @@ pub struct BatchCounters {
 struct MvView<'r, M: MvStore> {
     heap: &'r TxHeap,
     mv: &'r M,
+    base: &'r BaseSource<'r, M>,
     txn: TxnIdx,
     reads: Vec<ReadDesc>,
     writes: Vec<(Addr, u64)>,
     blocked_on: Option<TxnIdx>,
+    blocked_on_prev: bool,
 }
 
 impl<M: MvStore> TxAccess for MvView<'_, M> {
@@ -62,13 +141,21 @@ impl<M: MvStore> TxAccess for MvView<'_, M> {
                 });
                 Ok(v)
             }
-            MvRead::Base => {
-                self.reads.push(ReadDesc {
-                    addr,
-                    origin: ReadOrigin::Base,
-                });
-                Ok(self.heap.load_acquire(addr))
-            }
+            MvRead::Base => match self.base.value(self.heap, addr) {
+                Some(v) => {
+                    self.reads.push(ReadDesc {
+                        addr,
+                        origin: ReadOrigin::Base(v),
+                    });
+                    Ok(v)
+                }
+                None => {
+                    // The previous block is about to rewrite this value:
+                    // abort the attempt and park on that block.
+                    self.blocked_on_prev = true;
+                    Err(Abort(AbortCause::Conflict))
+                }
+            },
             MvRead::Estimate(blocking) => {
                 // A lower transaction is about to rewrite this value:
                 // abort the attempt and suspend on it.
@@ -95,23 +182,35 @@ pub(super) struct Worker<'r, 'b, M: MvStore> {
     pub mv: &'r M,
     pub scheduler: &'r Scheduler,
     pub counters: &'r BatchCounters,
+    /// Where base reads (no lower in-block writer) resolve.
+    pub base: BaseSource<'r, M>,
+    /// Cross-block parking (pipelined runs only).
+    pub park: Option<CrossBlockPark<'r>>,
 }
 
 impl<M: MvStore> Worker<'_, '_, M> {
-    /// Pull and run tasks until the whole batch is executed+validated.
-    pub fn run(&self) {
-        let mut task: Option<Task> = None;
+    /// Barrier-mode driver for pool worker `w`: pull and run tasks
+    /// until the whole batch is executed+validated.
+    pub fn run(&self, w: usize) {
         loop {
-            task = match task {
-                Some(Task::Execution(v)) => self.try_execute(v),
-                Some(Task::Validation(v)) => self.try_validate(v),
-                None => {
-                    if self.scheduler.done() {
-                        return;
-                    }
-                    std::hint::spin_loop();
-                    self.scheduler.next_task()
-                }
+            if self.scheduler.done() {
+                return;
+            }
+            match self.scheduler.next_task(w) {
+                Some(task) => self.step(task),
+                None => std::hint::spin_loop(),
+            }
+        }
+    }
+
+    /// Run one claimed task and every follow-up task the scheduler
+    /// chains onto it (in-place validation, in-place re-execution).
+    pub fn step(&self, task: Task) {
+        let mut task = Some(task);
+        while let Some(t) = task {
+            task = match t {
+                Task::Execution(v) => self.try_execute(v),
+                Task::Validation(v) => self.try_validate(v),
             };
         }
     }
@@ -120,13 +219,18 @@ impl<M: MvStore> Worker<'_, '_, M> {
         let (txn, incarnation) = version;
         loop {
             self.counters.executions.fetch_add(1, Ordering::Relaxed);
+            if self.base.overlapping() {
+                self.counters.overlapped.fetch_add(1, Ordering::Relaxed);
+            }
             let mut view = MvView {
                 heap: self.heap,
                 mv: self.mv,
+                base: &self.base,
                 txn,
                 reads: Vec::new(),
                 writes: Vec::new(),
                 blocked_on: None,
+                blocked_on_prev: false,
             };
             match (self.txns[txn].body)(&mut view) {
                 Ok(()) => {
@@ -134,6 +238,20 @@ impl<M: MvStore> Worker<'_, '_, M> {
                     return self.scheduler.finish_execution(txn, incarnation, wrote_new);
                 }
                 Err(_) => {
+                    if view.blocked_on_prev {
+                        let park = self.park.as_ref().expect(
+                            "cross-block base read outside a pipelined run",
+                        );
+                        self.counters.dependencies.fetch_add(1, Ordering::Relaxed);
+                        if park.park(txn, self.scheduler) {
+                            // Parked; the promotion path re-readies it
+                            // with the next incarnation number.
+                            return None;
+                        }
+                        // The previous block completed in the window
+                        // between our read and now: re-run in place.
+                        continue;
+                    }
                     let blocking = view.blocked_on.expect(
                         "batch transaction bodies must be infallible apart from \
                          ESTIMATE dependencies raised by the view itself",
@@ -154,7 +272,8 @@ impl<M: MvStore> Worker<'_, '_, M> {
     fn try_validate(&self, version: Version) -> Option<Task> {
         let (txn, incarnation) = version;
         self.counters.validations.fetch_add(1, Ordering::Relaxed);
-        let valid = self.mv.validate_read_set(txn);
+        let base = |addr: Addr| self.base.value(self.heap, addr);
+        let valid = self.mv.validate_read_set(txn, &base);
         let aborted = !valid && self.scheduler.try_validation_abort(txn, incarnation);
         if aborted {
             self.counters.validation_aborts.fetch_add(1, Ordering::Relaxed);

@@ -18,47 +18,73 @@
 //!   as `MutexMvMemory` behind the same `MvStore` trait, purely so the
 //!   benchmark can price what the locks cost;
 //! * [`scheduler`] — execution/validation task streams over atomic
-//!   index counters, with each transaction's lifecycle packed into a
-//!   single `incarnation << 2 | state` atomic status word (CAS
-//!   transitions; the only mutex left guards the rare
-//!   ESTIMATE-dependency lists);
+//!   index counters, fronted by **per-worker work-stealing deques**
+//!   ([`crate::runtime::workers`]): a worker drains its own deque,
+//!   refills a whole chunk of indices in one `fetch_add`, and steals
+//!   candidates from its peers when both streams are drained. Each
+//!   transaction's lifecycle stays packed in a single
+//!   `incarnation << 2 | state` atomic status word (CAS transitions;
+//!   the only mutex left guards the rare ESTIMATE-dependency lists);
 //! * [`executor`] — the worker loop: execute against a recording
 //!   [`crate::tm::access::TxAccess`] view → record read/write sets →
 //!   validate → abort/re-incarnate;
 //! * [`adaptive`] — the [`adaptive::BlockSizeController`]: AIMD block
-//!   sizing from each block's observed re-incarnation rate
-//!   (multiplicative decrease on conflict spikes, additive increase
-//!   when clean — DyAdHyTM's adapt-at-runtime loop applied to the
-//!   batch knob). `--policy batch=adaptive` runs it live and in the
-//!   simulator; `--policy batch=N` pins the block through the same
-//!   controller;
+//!   sizing from each block's observed re-incarnation rate, plus an
+//!   optional **latency target** (`--policy
+//!   batch=adaptive:latency=MS`) that shrinks the block whenever its
+//!   wall time overruns the deadline even at low conflict — the knob
+//!   the streaming pipeline sizes by;
 //! * [`workload`] — adapters feeding the SSCA-2 kernels (generation,
 //!   computation, and kernel-3 subgraph extraction as a
 //!   level-synchronous batch BFS whose per-level candidate stream is
 //!   consumed lazily, never materialized whole) and the simulator's
 //!   [`crate::sim::workload::TxnDesc`] shapes through the batch API.
 //!
-//! **Determinism guarantee.** Whatever interleaving the workers take —
-//! and whatever block sizes the controller picks — the final heap
-//! state equals executing the batch *sequentially in index order* —
-//! bit for bit. That is what makes the backend measurable head-to-head
-//! against the paper's policies: same inputs, same outputs, different
-//! concurrency control. The guarantee is enforced by tests in this
-//! module and the `batch_determinism` property suite (including a
-//! fixed-vs-adaptive sizing property).
+//! # Cross-block pipelining
 //!
-//! **Full routing.** Select it end-to-end with `--policy batch[=N]` or
-//! `--policy batch=adaptive` ([`crate::hytm::PolicySpec::Batch`] /
-//! `PolicySpec::BatchAdaptive`): all three SSCA-2 kernels and the
-//! streaming pipeline ([`crate::runtime::pipeline`]) run through
-//! [`BatchSystem`]. No path silently degrades to per-transaction
-//! NOrec: a batch spec reaching `ThreadExecutor::execute` is loudly
-//! warned, accounted under the `norec_fallback` stats counter, and
-//! reported as `batch(fallback:norec)`. The simulator prices the
-//! backend with its own multi-version cost mode (`sim::engine`'s
-//! `Mode::MultiVersion`): estimate-wait, validation, re-incarnation
-//! charges and per-block admission barriers driven by the *same*
-//! `BlockSizeController` as the live runs.
+//! [`BatchSystem::run`] executes one block to a full barrier — the
+//! benchmark baseline. The shipped paths instead stream blocks through
+//! [`BatchSystem::run_pipelined`], which keeps **one persistent pinned
+//! worker pool** for the whole stream and overlaps adjacent blocks:
+//! while block *N*'s validation tail drains, workers already execute
+//! block *N+1*'s transactions. Block *N+1*'s base reads (no lower
+//! in-block writer) peek block *N*'s winning versions (recording the
+//! *value*, [`mvmemory::ReadOrigin::Base`]); a read that hits a block-N
+//! ESTIMATE parks the transaction until block *N* completes. The moment
+//! block *N* writes back, block *N+1* is promoted: parked transactions
+//! resume and its scheduler is forced through a **full revalidation
+//! pass** against the now-final heap — any speculative read that
+//! guessed wrong re-executes, which is what keeps the final state
+//! bit-identical to sequential execution across the whole stream. The
+//! window is two blocks deep (head + one overlap), and block *N+1* is
+//! only admitted once block *N*'s execution stream has drained, so the
+//! overlap targets exactly the validation tail the admission barrier
+//! used to waste.
+//!
+//! **Determinism guarantee.** Whatever interleaving the workers take —
+//! whatever block sizes the controller picks, and whether blocks run to
+//! a barrier or pipelined — the final heap state equals executing the
+//! stream *sequentially in index order* — bit for bit. That is what
+//! makes the backend measurable head-to-head against the paper's
+//! policies: same inputs, same outputs, different concurrency control.
+//! The guarantee is enforced by tests in this module and the
+//! `batch_determinism` property suite (including pipelined-vs-oracle
+//! and fixed-vs-adaptive sizing properties).
+//!
+//! **Full routing.** Select it end-to-end with `--policy batch[=N]`,
+//! `--policy batch=adaptive`, or `--policy batch=adaptive:latency=MS`
+//! ([`crate::hytm::PolicySpec::Batch`] / `PolicySpec::BatchAdaptive`):
+//! all three SSCA-2 kernels and the streaming pipeline
+//! ([`crate::runtime::pipeline`]) run through the pipelined session. No
+//! path silently degrades to per-transaction NOrec: a batch spec
+//! reaching `ThreadExecutor::execute` is loudly warned, accounted under
+//! the `norec_fallback` stats counter, and reported as
+//! `batch(fallback:norec)`. The simulator prices the backend with its
+//! own multi-version cost mode (`sim::engine`'s `Mode::MultiVersion`):
+//! estimate-wait, validation, re-incarnation charges and an
+//! **overlapped block drain** (one block of admission lookahead, the
+//! model of `run_pipelined`) driven by the *same* `BlockSizeController`
+//! as the live runs.
 
 pub mod adaptive;
 pub mod executor;
@@ -66,16 +92,20 @@ pub mod mvmemory;
 pub mod scheduler;
 pub mod workload;
 
-use std::sync::atomic::Ordering;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::mem::TxHeap;
+use crate::runtime::workers::{run_pool, run_pool_with, PoolConfig};
 use crate::stats::TxStats;
 use crate::tm::access::{TxAccess, TxResult};
 
-use executor::{BatchCounters, Worker};
+use adaptive::BlockSizeController;
+use executor::{BaseSource, BatchCounters, CrossBlockPark, Worker};
 use mvmemory::{MutexMvMemory, MvMemory, MvStore};
-use scheduler::Scheduler;
+use scheduler::{Scheduler, TxnIdx};
 
 /// Default number of transactions admitted per speculative block
 /// (`--policy batch=N` overrides it; `--policy batch=adaptive` lets
@@ -112,8 +142,16 @@ pub struct BatchReport {
     pub validations: u64,
     /// Validation aborts (re-incarnations forced by a read-set change).
     pub validation_aborts: u64,
-    /// Executions suspended on a lower transaction's ESTIMATE.
+    /// Executions suspended on a lower transaction's ESTIMATE (in-block
+    /// dependencies plus cross-block parks).
     pub dependencies: u64,
+    /// Candidates taken from a peer worker's deque.
+    pub steals: u64,
+    /// Execution attempts started while the previous block was still
+    /// draining (cross-block pipelining overlap; 0 for barrier runs).
+    pub overlapped_txns: u64,
+    /// Pool workers whose core pin was applied.
+    pub pinned_workers: u64,
     pub elapsed: Duration,
 }
 
@@ -125,18 +163,75 @@ impl BatchReport {
         self.validations += other.validations;
         self.validation_aborts += other.validation_aborts;
         self.dependencies += other.dependencies;
+        self.steals += other.steals;
+        self.overlapped_txns += other.overlapped_txns;
+        self.pinned_workers = self.pinned_workers.max(other.pinned_workers);
         self.elapsed += other.elapsed;
     }
 
     /// Fold into the stats-plane shape: batch commits are software
     /// commits (speculation in software, like an STM), re-executions
-    /// count as software aborts.
+    /// count as software aborts; the worker-runtime counters ride
+    /// along.
     pub fn to_stats(&self) -> TxStats {
         let mut s = TxStats::new();
         s.sw_commits = self.txns as u64;
         s.sw_aborts = self.validation_aborts + self.dependencies;
+        s.steals = self.steals;
+        s.overlapped_txns = self.overlapped_txns;
+        s.pinned_workers = self.pinned_workers;
         s.time_ns = self.elapsed.as_nanos() as u64;
         s
+    }
+}
+
+/// One admitted block of a pipelined run: its transactions plus the
+/// per-block scheduler, store, and counters.
+struct BlockRun<'b, M: MvStore> {
+    txns: Vec<BatchTxn<'b>>,
+    scheduler: Scheduler,
+    mv: M,
+    counters: BatchCounters,
+    /// The predecessor block has completed (written back). The first
+    /// block of a stream starts true.
+    prev_done: AtomicBool,
+    /// Transactions parked on the predecessor (see
+    /// [`executor::CrossBlockPark`]).
+    parked: Mutex<Vec<TxnIdx>>,
+    /// Write-back claimed (exactly one worker completes a block).
+    completed: AtomicBool,
+    admitted: Instant,
+}
+
+impl<'b, M: MvStore> BlockRun<'b, M> {
+    fn new(txns: Vec<BatchTxn<'b>>, workers: usize) -> Self {
+        let n = txns.len();
+        Self {
+            txns,
+            scheduler: Scheduler::new(n, workers),
+            mv: M::new(n),
+            counters: BatchCounters::default(),
+            prev_done: AtomicBool::new(false),
+            parked: Mutex::new(Vec::new()),
+            completed: AtomicBool::new(false),
+            admitted: Instant::now(),
+        }
+    }
+
+    /// This block's contribution to the stream report (elapsed and
+    /// pin counts are session-level and filled in by the caller).
+    fn report(&self) -> BatchReport {
+        BatchReport {
+            txns: self.txns.len(),
+            executions: self.counters.executions.load(Ordering::Relaxed),
+            validations: self.counters.validations.load(Ordering::Relaxed),
+            validation_aborts: self.counters.validation_aborts.load(Ordering::Relaxed),
+            dependencies: self.counters.dependencies.load(Ordering::Relaxed),
+            steals: self.scheduler.steals(),
+            overlapped_txns: self.counters.overlapped.load(Ordering::Relaxed),
+            pinned_workers: 0,
+            elapsed: Duration::ZERO,
+        }
     }
 }
 
@@ -144,11 +239,14 @@ impl BatchReport {
 pub struct BatchSystem;
 
 impl BatchSystem {
-    /// Execute `txns` with `concurrency` workers over the lock-free
-    /// multi-version store. Blocks until every transaction has
-    /// committed, then flushes the winning versions to `heap`. The
-    /// final heap state is bit-identical to running the batch
-    /// sequentially in index order.
+    /// Execute `txns` as ONE block with `concurrency` workers over the
+    /// lock-free multi-version store, to a full barrier. Blocks until
+    /// every transaction has committed, then flushes the winning
+    /// versions to `heap`. The final heap state is bit-identical to
+    /// running the batch sequentially in index order. (The streamed,
+    /// cross-block-overlapping variant is [`BatchSystem::run_pipelined`];
+    /// this barrier form is the benchmark baseline and the single-block
+    /// primitive.)
     pub fn run(heap: &TxHeap, txns: &[BatchTxn<'_>], concurrency: usize) -> BatchReport {
         Self::run_with::<MvMemory>(heap, txns, concurrency)
     }
@@ -178,7 +276,7 @@ impl BatchSystem {
             };
         }
         let workers = concurrency.max(1).min(txns.len());
-        let scheduler = Scheduler::new(txns.len());
+        let scheduler = Scheduler::new(txns.len(), workers);
         let mv = M::new(txns.len());
         let counters = BatchCounters::default();
         // If a worker panics (a body violating the infallibility
@@ -186,7 +284,7 @@ impl BatchSystem {
         // `num_active` still elevated and the done-check could never
         // fire — stranding its peers in the polling loop and hanging
         // the join below. This guard halts the scheduler on the way
-        // out of a panicking worker; scope then joins everyone and
+        // out of a panicking worker; the pool then joins everyone and
         // re-raises the original panic.
         struct HaltOnPanic<'a>(&'a Scheduler);
         impl Drop for HaltOnPanic<'_> {
@@ -196,20 +294,19 @@ impl BatchSystem {
                 }
             }
         }
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                let w = Worker {
-                    heap,
-                    txns,
-                    mv: &mv,
-                    scheduler: &scheduler,
-                    counters: &counters,
-                };
-                s.spawn(move || {
-                    let _guard = HaltOnPanic(w.scheduler);
-                    w.run()
-                });
-            }
+        let pins = run_pool(&PoolConfig::pinned(workers), |w, pinned| {
+            let _guard = HaltOnPanic(&scheduler);
+            let worker = Worker {
+                heap,
+                txns,
+                mv: &mv,
+                scheduler: &scheduler,
+                counters: &counters,
+                base: BaseSource::Heap,
+                park: None,
+            };
+            worker.run(w);
+            pinned
         });
         mv.write_back(heap);
         BatchReport {
@@ -218,8 +315,248 @@ impl BatchSystem {
             validations: counters.validations.load(Ordering::Relaxed),
             validation_aborts: counters.validation_aborts.load(Ordering::Relaxed),
             dependencies: counters.dependencies.load(Ordering::Relaxed),
+            steals: scheduler.steals(),
+            overlapped_txns: 0,
+            pinned_workers: pins.iter().filter(|&&p| p).count() as u64,
             elapsed: t0.elapsed(),
         }
+    }
+
+    /// Stream blocks through one persistent pinned worker pool with
+    /// cross-block pipelining (see the module docs). `source` is called
+    /// with the controller's current block size and returns the next
+    /// block of transactions — `None` (or an empty block) ends the
+    /// stream. Each completed block feeds the controller (conflict rate
+    /// *and* wall time, for the latency target). The final heap state
+    /// is bit-identical to sequential execution of the concatenated
+    /// stream.
+    pub fn run_pipelined<'b, M, S>(
+        heap: &TxHeap,
+        source: S,
+        concurrency: usize,
+        ctl: &mut BlockSizeController,
+    ) -> BatchReport
+    where
+        M: MvStore,
+        S: FnMut(usize) -> Option<Vec<BatchTxn<'b>>> + Send,
+    {
+        Self::run_pipelined_with::<M, S, (), _>(heap, source, concurrency, ctl, || ()).0
+    }
+
+    /// [`BatchSystem::run_pipelined`] plus a `main` job that runs on
+    /// the *calling thread* while the pool works — the streaming
+    /// pipeline's producer side (which may be thread-pinned, e.g. the
+    /// PJRT client) runs there.
+    pub fn run_pipelined_with<'b, M, S, R, F>(
+        heap: &TxHeap,
+        source: S,
+        concurrency: usize,
+        ctl: &mut BlockSizeController,
+        main: F,
+    ) -> (BatchReport, R)
+    where
+        M: MvStore,
+        S: FnMut(usize) -> Option<Vec<BatchTxn<'b>>> + Send,
+        F: FnOnce() -> R,
+    {
+        let t0 = Instant::now();
+        let workers = concurrency.max(1);
+        let source = Mutex::new(source);
+        let ctl = Mutex::new(ctl);
+        let report = Mutex::new(BatchReport::default());
+        let window: Mutex<VecDeque<Arc<BlockRun<'b, M>>>> = Mutex::new(VecDeque::new());
+        let exhausted = AtomicBool::new(false);
+        let halted = AtomicBool::new(false);
+        let pinned = AtomicU64::new(0);
+
+        // Pull the next block from the source and admit it. Single
+        // puller at a time (try_lock); the source may block (e.g. a
+        // channel recv) without holding up head completion, which only
+        // needs the window lock.
+        let admit = |_w: usize| {
+            let Ok(mut src) = source.try_lock() else {
+                std::thread::yield_now();
+                return;
+            };
+            if exhausted.load(Ordering::SeqCst) {
+                return;
+            }
+            {
+                let win = window.lock().unwrap();
+                match win.len() {
+                    0 => {}
+                    // Overlap admission waits for the head's execution
+                    // stream to drain: the overlap targets the
+                    // validation tail, not the whole block.
+                    1 => {
+                        if !win[0].scheduler.execution_drained() {
+                            return;
+                        }
+                    }
+                    _ => return,
+                }
+            }
+            let size = { ctl.lock().unwrap().current().max(1) };
+            match (*src)(size) {
+                Some(txns) if !txns.is_empty() => {
+                    let run = Arc::new(BlockRun::new(txns, workers));
+                    let mut win = window.lock().unwrap();
+                    if win.is_empty() {
+                        run.prev_done.store(true, Ordering::SeqCst);
+                    }
+                    win.push_back(run);
+                }
+                _ => exhausted.store(true, Ordering::SeqCst),
+            }
+        };
+
+        // Complete the head block: exactly one worker claims the
+        // write-back (under the window lock, so admission and the next
+        // completion are ordered after it), feeds the controller, and
+        // promotes the overlap block — resume its parked transactions
+        // and force a full revalidation pass against the now-final
+        // heap.
+        let complete_head = |head: &Arc<BlockRun<'b, M>>| {
+            let mut win = window.lock().unwrap();
+            match win.front() {
+                Some(front) if Arc::ptr_eq(front, head) => {}
+                _ => return, // someone else already completed it
+            }
+            if !head.scheduler.done() || head.completed.swap(true, Ordering::SeqCst) {
+                return;
+            }
+            head.mv.write_back(heap);
+            ctl.lock().unwrap().observe_block(
+                head.counters.executions.load(Ordering::Relaxed),
+                head.txns.len() as u64,
+                head.admitted.elapsed(),
+            );
+            report.lock().unwrap().merge(&head.report());
+            win.pop_front();
+            if let Some(next) = win.front() {
+                let mut parked = next.parked.lock().unwrap();
+                next.prev_done.store(true, Ordering::SeqCst);
+                let resume = std::mem::take(&mut *parked);
+                drop(parked);
+                next.scheduler.resume_external(&resume);
+                next.scheduler.reopen_validation();
+            }
+        };
+
+        let (_, r) = run_pool_with(
+            &PoolConfig::pinned(workers),
+            |w, is_pinned| {
+                if is_pinned {
+                    pinned.fetch_add(1, Ordering::SeqCst);
+                }
+                // A panicking worker must not strand its peers: flag the
+                // session halted and halt every admitted scheduler.
+                struct Guard<'a, 'b, M: MvStore> {
+                    halted: &'a AtomicBool,
+                    window: &'a Mutex<VecDeque<Arc<BlockRun<'b, M>>>>,
+                }
+                impl<M: MvStore> Drop for Guard<'_, '_, M> {
+                    fn drop(&mut self) {
+                        if std::thread::panicking() {
+                            self.halted.store(true, Ordering::SeqCst);
+                            if let Ok(win) = self.window.lock() {
+                                for b in win.iter() {
+                                    b.scheduler.halt();
+                                }
+                            }
+                        }
+                    }
+                }
+                let _guard = Guard {
+                    halted: &halted,
+                    window: &window,
+                };
+                loop {
+                    if halted.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    let (head, overlap) = {
+                        let win = window.lock().unwrap();
+                        (win.front().cloned(), win.get(1).cloned())
+                    };
+                    let Some(head) = head else {
+                        if exhausted.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        admit(w);
+                        continue;
+                    };
+                    // 1) Head work first: it gates everything behind
+                    // it. Drain the head scheduler in place — one
+                    // window-lock snapshot amortizes over a whole run
+                    // of tasks, keeping the mutex off the per-task hot
+                    // path. (A snapshot can go stale while we drain;
+                    // that's fine: a completed-elsewhere head's
+                    // scheduler just hands out no more tasks.)
+                    let mut did_work = false;
+                    {
+                        let worker = Worker {
+                            heap,
+                            txns: head.txns.as_slice(),
+                            mv: &head.mv,
+                            scheduler: &head.scheduler,
+                            counters: &head.counters,
+                            base: BaseSource::Heap,
+                            park: None,
+                        };
+                        while let Some(task) = head.scheduler.next_task(w) {
+                            worker.step(task);
+                            did_work = true;
+                        }
+                    }
+                    if did_work {
+                        continue;
+                    }
+                    if head.scheduler.done() {
+                        complete_head(&head);
+                        continue;
+                    }
+                    // 2) Head is draining its validation tail: overlap
+                    // into the next block (same in-place drain).
+                    if let Some(ov) = overlap.as_ref() {
+                        let worker = Worker {
+                            heap,
+                            txns: ov.txns.as_slice(),
+                            mv: &ov.mv,
+                            scheduler: &ov.scheduler,
+                            counters: &ov.counters,
+                            base: BaseSource::Prev {
+                                mv: &head.mv,
+                                done: &ov.prev_done,
+                            },
+                            park: Some(CrossBlockPark {
+                                prev_done: &ov.prev_done,
+                                parked: &ov.parked,
+                            }),
+                        };
+                        while let Some(task) = ov.scheduler.next_task(w) {
+                            worker.step(task);
+                            did_work = true;
+                        }
+                        if did_work {
+                            continue;
+                        }
+                    } else if head.scheduler.execution_drained()
+                        && !exhausted.load(Ordering::SeqCst)
+                    {
+                        admit(w);
+                        continue;
+                    }
+                    std::hint::spin_loop();
+                }
+            },
+            main,
+        );
+
+        let mut rep = { report.lock().unwrap().clone() };
+        rep.elapsed = t0.elapsed();
+        rep.pinned_workers = pinned.load(Ordering::SeqCst);
+        (rep, r)
     }
 }
 
@@ -237,6 +574,18 @@ mod tests {
                 })
             })
             .collect()
+    }
+
+    /// Drain `txns` into `block`-sized chunks through the pipelined
+    /// session (the same shipped source the workloads use).
+    fn run_pipelined_chunks(
+        heap: &TxHeap,
+        txns: Vec<BatchTxn<'_>>,
+        block: usize,
+        workers: usize,
+    ) -> BatchReport {
+        let mut ctl = BlockSizeController::fixed(block);
+        workload::run_txns_pipelined(heap, txns, workers, &mut ctl)
     }
 
     #[test]
@@ -368,6 +717,101 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_counter_chain_is_exact_across_blocks() {
+        // The worst case for cross-block speculation: every transaction
+        // RMWs the same word, so every block-N+1 base read guesses a
+        // value the block-N tail is still changing. The forced
+        // revalidation at promotion must repair all of it.
+        for (workers, block) in [(1usize, 8usize), (2, 16), (4, 8), (3, 64)] {
+            let heap = TxHeap::new(64);
+            let a = heap.alloc(1);
+            heap.store(a, 500);
+            let r = run_pipelined_chunks(&heap, counter_txns(a, 200), block, workers);
+            assert_eq!(r.txns, 200, "workers={workers} block={block}");
+            assert_eq!(
+                heap.load(a),
+                700,
+                "workers={workers} block={block}: pipelined chain must be exact"
+            );
+        }
+    }
+
+    #[test]
+    fn pipelined_read_chain_matches_sequential_across_blocks() {
+        const N: usize = 48;
+        let mk = |base: usize| -> Vec<BatchTxn<'static>> {
+            (0..N)
+                .map(|i| {
+                    BatchTxn::new(move |t: &mut dyn TxAccess| {
+                        let v = t.read(base + i)?;
+                        t.write(base + i + 1, v + 1)
+                    })
+                })
+                .collect()
+        };
+        for workers in [1usize, 2, 4] {
+            let heap = TxHeap::new(1 << 10);
+            let base = heap.alloc(N + 1);
+            heap.store(base, 3);
+            run_pipelined_chunks(&heap, mk(base), 8, workers);
+            for i in 0..=N {
+                assert_eq!(heap.load(base + i), 3 + i as u64, "slot {i}, workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_disjoint_stream_reports_no_aborts() {
+        let heap = TxHeap::new(1 << 12);
+        let base = heap.alloc(256);
+        let txns: Vec<BatchTxn> = (0..128)
+            .map(|i| {
+                BatchTxn::new(move |t: &mut dyn TxAccess| {
+                    let v = t.read(base + i)?;
+                    t.write(base + i, v + 1 + i as u64)
+                })
+            })
+            .collect();
+        let r = run_pipelined_chunks(&heap, txns, 16, 3);
+        assert_eq!(r.txns, 128);
+        assert_eq!(r.validation_aborts, 0, "disjoint stream must not abort");
+        for i in 0..128usize {
+            assert_eq!(heap.load(base + i), 1 + i as u64);
+        }
+    }
+
+    #[test]
+    fn pipelined_empty_source_is_a_noop() {
+        let heap = TxHeap::new(64);
+        let mut ctl = BlockSizeController::fixed(8);
+        let r = BatchSystem::run_pipelined::<MvMemory, _>(&heap, |_| None, 3, &mut ctl);
+        assert_eq!(r.txns, 0);
+        assert_eq!(r.executions, 0);
+    }
+
+    #[test]
+    fn pipelined_session_feeds_the_controller_per_block() {
+        let heap = TxHeap::new(1 << 10);
+        let base = heap.alloc(64);
+        let txns: Vec<BatchTxn> = (0..64)
+            .map(|i| {
+                BatchTxn::new(move |t: &mut dyn TxAccess| {
+                    let v = t.read(base + i)?;
+                    t.write(base + i, v + 1)
+                })
+            })
+            .collect();
+        let mut ctl = BlockSizeController::with_bounds(8, 4, 64, 8);
+        let r = workload::run_txns_pipelined(&heap, txns, 2, &mut ctl);
+        assert_eq!(r.txns, 64);
+        assert!(ctl.samples >= 2, "every completed block must be observed");
+        assert!(
+            ctl.current() > 8,
+            "a clean disjoint stream must grow the block"
+        );
+    }
+
+    #[test]
     fn report_merge_accumulates() {
         let mut a = BatchReport {
             txns: 10,
@@ -375,16 +819,24 @@ mod tests {
             validations: 11,
             validation_aborts: 2,
             dependencies: 1,
+            steals: 3,
+            overlapped_txns: 4,
+            pinned_workers: 2,
             elapsed: Duration::from_millis(5),
         };
         let b = a;
         a.merge(&b);
         assert_eq!(a.txns, 20);
         assert_eq!(a.executions, 24);
+        assert_eq!(a.steals, 6);
+        assert_eq!(a.overlapped_txns, 8);
+        assert_eq!(a.pinned_workers, 2, "pin count is a run property: max, not sum");
         assert_eq!(a.elapsed, Duration::from_millis(10));
         let s = a.to_stats();
         assert_eq!(s.sw_commits, 20);
         assert_eq!(s.sw_aborts, 6);
+        assert_eq!(s.steals, 6);
+        assert_eq!(s.overlapped_txns, 8);
         assert_eq!(s.total_commits(), 20);
     }
 }

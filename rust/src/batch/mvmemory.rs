@@ -62,8 +62,13 @@ use super::scheduler::{Incarnation, TxnIdx, Version};
 /// validates against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReadOrigin {
-    /// Fell through to the (pre-batch) heap snapshot.
-    Base,
+    /// Fell through to the base state below this block (the heap, or —
+    /// under cross-block pipelining — the still-draining previous
+    /// block's winning version). Carries the *observed value*:
+    /// validation compares values, which is what makes reads taken
+    /// while the predecessor block was still committing safe — the
+    /// post-write-back revalidation catches any divergence.
+    Base(u64),
     /// Served by a lower transaction's recorded write.
     Version(Version),
 }
@@ -89,8 +94,10 @@ pub enum MvRead {
 /// The multi-version store contract the batch executor runs against.
 /// `MvMemory` is the lock-free production implementation;
 /// `MutexMvMemory` is the sharded-mutex baseline kept for the
-/// head-to-head benchmark.
-pub trait MvStore: Sync {
+/// head-to-head benchmark. (`Send + Sync` because the pipelined
+/// session shares per-block stores across the worker pool behind
+/// `Arc`s.)
+pub trait MvStore: Send + Sync {
     /// Fresh store for a batch of `n` transactions.
     fn new(n: usize) -> Self;
 
@@ -112,7 +119,13 @@ pub trait MvStore: Sync {
 
     /// Re-read `txn`'s recorded read set and check every observed
     /// version still matches. ESTIMATEs and changed versions fail.
-    fn validate_read_set(&self, txn: TxnIdx) -> bool;
+    /// `base` resolves the value *below* this block for addresses with
+    /// no lower in-block writer (the heap for a barrier run; the
+    /// previous block's winning version under cross-block pipelining);
+    /// `None` means the base is itself unresolved (a predecessor
+    /// ESTIMATE), which fails the validation so the transaction
+    /// re-executes and parks.
+    fn validate_read_set(&self, txn: TxnIdx, base: &dyn Fn(Addr) -> Option<u64>) -> bool;
 
     /// After the batch completes: flush the winning (highest-index)
     /// version of every address into the heap. Equivalent to committing
@@ -504,14 +517,14 @@ impl MvStore for MvMemory {
         }
     }
 
-    fn validate_read_set(&self, txn: TxnIdx) -> bool {
+    fn validate_read_set(&self, txn: TxnIdx, base: &dyn Fn(Addr) -> Option<u64>) -> bool {
         let Some(sets) = self.current_sets(txn) else {
             return true;
         };
         sets.reads
             .iter()
             .all(|r| match (self.read(r.addr, txn), r.origin) {
-                (MvRead::Base, ReadOrigin::Base) => true,
+                (MvRead::Base, ReadOrigin::Base(v)) => base(r.addr) == Some(v),
                 (MvRead::Value(now, _), ReadOrigin::Version(then)) => now == then,
                 _ => false,
             })
@@ -661,10 +674,10 @@ impl MvStore for MutexMvMemory {
         }
     }
 
-    fn validate_read_set(&self, txn: TxnIdx) -> bool {
+    fn validate_read_set(&self, txn: TxnIdx, base: &dyn Fn(Addr) -> Option<u64>) -> bool {
         let snapshot = self.reads[txn].lock().unwrap().clone();
         snapshot.iter().all(|r| match (self.read(r.addr, txn), r.origin) {
-            (MvRead::Base, ReadOrigin::Base) => true,
+            (MvRead::Base, ReadOrigin::Base(v)) => base(r.addr) == Some(v),
             (MvRead::Value(now, _), ReadOrigin::Version(then)) => now == then,
             _ => false,
         })
@@ -732,20 +745,27 @@ mod tests {
 
     fn check_validation_tracks_version_changes<M: MvStore>() {
         let mv = M::new(4);
+        let base = |_addr: Addr| Some(7u64);
         mv.record((0, 0), Vec::new(), &[(8, 1)]);
-        // txn 2 read (0,0) at addr 8 and base at addr 16.
+        // txn 2 read (0,0) at addr 8 and the base value 7 at addr 16.
         mv.record(
             (2, 0),
             vec![
                 ReadDesc { addr: 8, origin: ReadOrigin::Version((0, 0)) },
-                ReadDesc { addr: 16, origin: ReadOrigin::Base },
+                ReadDesc { addr: 16, origin: ReadOrigin::Base(7) },
             ],
             &[],
         );
-        assert!(mv.validate_read_set(2));
-        // txn 1 writes addr 16: txn 2's base read is now stale.
+        assert!(mv.validate_read_set(2, &base));
+        // The base itself moving (a previous block's write-back landing
+        // at addr 16) fails the value comparison.
+        assert!(!mv.validate_read_set(2, &|_| Some(8u64)));
+        // An unresolved base (predecessor ESTIMATE) fails too.
+        assert!(!mv.validate_read_set(2, &|_| None));
+        // txn 1 writes addr 16: txn 2's base read is now stale even
+        // with the base value unchanged.
         mv.record((1, 0), Vec::new(), &[(16, 9)]);
-        assert!(!mv.validate_read_set(2));
+        assert!(!mv.validate_read_set(2, &base));
     }
 
     fn check_write_back_commits_highest_version<M: MvStore>() {

@@ -1,10 +1,15 @@
-//! The Block-STM collaborative scheduler.
+//! The Block-STM collaborative scheduler, on the shared work-stealing
+//! worker runtime.
 //!
-//! Two logical task streams — execution and validation — are driven by
-//! two atomic counters over the batch's transaction indices. Workers
-//! pull whichever stream is further behind, preferring validations
-//! (they are cheap and unblock the commit prefix). A transaction's
-//! lifecycle is tracked per index:
+//! Two logical task streams — execution and validation — are still
+//! anchored by two atomic counters over the batch's transaction
+//! indices, but workers no longer fight over the counters one index at
+//! a time. Each worker owns a [`StealDeque`] of *candidates*; when it
+//! runs dry it refills a whole chunk of indices from whichever stream
+//! is further behind (one `fetch_add` per [`REFILL_CHUNK`] candidates
+//! instead of one per task), and when both streams are drained it
+//! steals candidates from its peers' deques. A transaction's lifecycle
+//! is tracked per index:
 //!
 //! ```text
 //! ReadyToExecute --try_incarnate--> Executing --finish_execution--> Executed
@@ -14,25 +19,45 @@
 //!       +---------------------------- Aborting <-----------------------+
 //! ```
 //!
+//! A buffered candidate is only a *hint*: the claim happens at pop/steal
+//! time (`try_incarnate` CAS for executions, an `Executed` status load
+//! for validations), so duplicated or stale candidates — e.g. re-added
+//! by a counter decrease while an older copy still sits in a deque —
+//! resolve to at most one claim. Every buffered candidate is counted in
+//! `num_active` *before* its stream counter advances (the same order
+//! the old per-index dispatch used), so the done-check can never
+//! observe "counters past `n` and nobody active" while claimable work
+//! is still parked in a deque.
+//!
 //! The lifecycle lives in one **packed atomic status word per
 //! transaction** — `incarnation << 2 | state` in an `AtomicU64`, every
-//! transition a single store or CAS (the Block-STM scheduler shape the
-//! SNIPPETS exemplars quote) — so claiming an execution, publishing
-//! `Executed`, and winning a validation abort never take a lock. The
-//! only mutex left is the per-transaction *dependency list* (the rare
-//! ESTIMATE-suspension path): `finish_execution` publishes `Executed`
-//! *before* draining the list while `add_dependency` re-checks the
-//! status word under the list lock, which closes the lost-wakeup
-//! window.
+//! transition a single store or CAS — so claiming an execution,
+//! publishing `Executed`, and winning a validation abort never take a
+//! lock. The only mutex left is the per-transaction *dependency list*
+//! (the rare ESTIMATE-suspension path): `finish_execution` publishes
+//! `Executed` *before* draining the list while `add_dependency`
+//! re-checks the status word under the list lock, which closes the
+//! lost-wakeup window.
 //!
 //! The counters only ever move *down* through `fetch_min` when work is
 //! invalidated (a lower transaction re-executed or aborted), and a
 //! `decrease_cnt` generation counter makes the done-check safe against
 //! racing decreases — the same protocol as the Block-STM paper's
 //! Algorithm 4.
+//!
+//! Cross-block pipelining (`BatchSystem::run_pipelined`) adds three
+//! hooks: [`Scheduler::suspend_external`] parks an executing
+//! transaction on the *previous block* (its ESTIMATE lives in the
+//! predecessor's store, not this one), [`Scheduler::resume_external`]
+//! re-readies the parked set once the predecessor completes, and
+//! [`Scheduler::reopen_validation`] forces a full revalidation pass —
+//! the step that makes speculative reads taken while the predecessor
+//! was still draining safe to commit.
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+use crate::runtime::workers::{steal_from_peers, StealDeque};
 
 /// Index of a transaction inside one batch.
 pub type TxnIdx = usize;
@@ -50,6 +75,30 @@ pub enum Task {
     Execution(Version),
     /// Re-read the recorded read set and compare observed versions.
     Validation(Version),
+}
+
+/// Candidates refilled per stream grab (one counter `fetch_add` covers
+/// this many tasks). The per-worker deques are sized to hold exactly
+/// one chunk — refills only happen into an empty deque.
+pub const REFILL_CHUNK: usize = 8;
+
+// Candidate encoding in the deques: `idx << 1 | kind`.
+const CAND_EXECUTION: u64 = 0;
+const CAND_VALIDATION: u64 = 1;
+
+#[inline]
+fn pack_candidate(idx: TxnIdx, kind: u64) -> u64 {
+    ((idx as u64) << 1) | kind
+}
+
+#[inline]
+fn candidate_idx(c: u64) -> TxnIdx {
+    (c >> 1) as TxnIdx
+}
+
+#[inline]
+fn candidate_kind(c: u64) -> u64 {
+    c & 1
 }
 
 // Status-word state encoding (low two bits).
@@ -89,34 +138,66 @@ pub struct Scheduler {
     /// decrease racing its reads of the two indices.
     decrease_cnt: AtomicUsize,
     num_active: AtomicUsize,
-    done_marker: AtomicBool,
+    /// Done marker with a reopen generation: `generation << 1 |
+    /// done_bit`. `check_done` publishes done via a CAS against the
+    /// word it observed *before* checking the counters, so a
+    /// `reopen_validation` (which bumps the generation) between the
+    /// check and the store fails the CAS instead of being silently
+    /// overwritten by a stale "done" — the race that would let a
+    /// cross-block promotion's forced revalidation be skipped.
+    done_word: AtomicU64,
     /// Packed per-transaction lifecycle words (see module docs).
     status: Box<[StatusWord]>,
     /// Transactions suspended waiting on each index (cold path: only
     /// the ESTIMATE-dependency protocol touches these locks).
     deps: Box<[Mutex<Vec<TxnIdx>>]>,
+    /// Per-worker candidate deques (worker `w` owns `deques[w]`; any
+    /// worker may steal from any other).
+    deques: Box<[StealDeque]>,
+    /// Candidates taken from a peer's deque.
+    steal_cnt: AtomicU64,
 }
 
 impl Scheduler {
-    pub fn new(n: usize) -> Self {
+    /// Scheduler for a batch of `n` transactions driven by `workers`
+    /// pool workers (worker indices `0..workers` passed to
+    /// [`Scheduler::next_task`]).
+    pub fn new(n: usize, workers: usize) -> Self {
+        let workers = workers.max(1);
         Self {
             n,
             execution_idx: AtomicUsize::new(0),
             validation_idx: AtomicUsize::new(0),
             decrease_cnt: AtomicUsize::new(0),
             num_active: AtomicUsize::new(0),
-            done_marker: AtomicBool::new(n == 0),
+            done_word: AtomicU64::new(if n == 0 { 1 } else { 0 }),
             status: (0..n)
                 .map(|_| StatusWord(AtomicU64::new(pack(0, ST_READY))))
                 .collect(),
             deps: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
+            deques: (0..workers).map(|_| StealDeque::new(REFILL_CHUNK)).collect(),
+            steal_cnt: AtomicU64::new(0),
         }
     }
 
     /// Has every transaction been executed and validated?
     #[inline]
     pub fn done(&self) -> bool {
-        self.done_marker.load(Ordering::SeqCst)
+        self.done_word.load(Ordering::SeqCst) & 1 == 1
+    }
+
+    /// Candidates taken from a peer's deque so far.
+    pub fn steals(&self) -> u64 {
+        self.steal_cnt.load(Ordering::SeqCst)
+    }
+
+    /// Has the execution stream handed out every index at least once?
+    /// (A decrease can drag it back down; this is the admission
+    /// heuristic cross-block pipelining gates on, not a completion
+    /// proof — completion is [`Scheduler::done`].)
+    #[inline]
+    pub fn execution_drained(&self) -> bool {
+        self.execution_idx.load(Ordering::SeqCst) >= self.n
     }
 
     /// Emergency stop: flips the done marker so every worker drops out
@@ -126,7 +207,7 @@ impl Scheduler {
     /// peers spinning forever on a `num_active` count that can no
     /// longer reach zero.
     pub fn halt(&self) {
-        self.done_marker.store(true, Ordering::SeqCst);
+        self.done_word.fetch_or(1, Ordering::SeqCst);
     }
 
     fn decrease_execution_idx(&self, t: TxnIdx) {
@@ -140,13 +221,28 @@ impl Scheduler {
     }
 
     fn check_done(&self) {
+        // Snapshot the done word FIRST: the publishing CAS below then
+        // fails if a reopen_validation bumped the generation anywhere
+        // between this read and the store — a plain store here could
+        // land arbitrarily late and clobber the reopen.
+        let w0 = self.done_word.load(Ordering::SeqCst);
+        if w0 & 1 == 1 {
+            return;
+        }
         let observed = self.decrease_cnt.load(Ordering::SeqCst);
         if self.execution_idx.load(Ordering::SeqCst) >= self.n
             && self.validation_idx.load(Ordering::SeqCst) >= self.n
             && self.num_active.load(Ordering::SeqCst) == 0
             && observed == self.decrease_cnt.load(Ordering::SeqCst)
         {
-            self.done_marker.store(true, Ordering::SeqCst);
+            // A failed CAS means a racing reopen (or another checker's
+            // done): either way, dropping this verdict is correct.
+            let _ = self.done_word.compare_exchange(
+                w0,
+                w0 | 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            );
         }
     }
 
@@ -168,56 +264,101 @@ impl Scheduler {
         None
     }
 
-    fn next_version_to_execute(&self) -> Option<Version> {
-        if self.execution_idx.load(Ordering::SeqCst) >= self.n {
-            // Counted-active workers never sit in this branch, so the
-            // done-check can observe num_active == 0.
-            self.check_done();
-            return None;
+    /// Grab up to [`REFILL_CHUNK`] indices from `counter` into worker
+    /// `w`'s deque. Candidates are pushed highest-first so the owner's
+    /// LIFO pop hands them out in ascending index order (stealers take
+    /// the top — the highest index — which is exactly the work most
+    /// likely to still be claimable).
+    fn refill_stream(&self, counter: &AtomicUsize, w: usize, kind: u64) -> bool {
+        // Count the chunk active BEFORE advancing the stream counter:
+        // the done-check must never observe "counters past n, nobody
+        // active" while claimable candidates sit in a deque.
+        self.num_active.fetch_add(REFILL_CHUNK, Ordering::SeqCst);
+        let base = counter.fetch_add(REFILL_CHUNK, Ordering::SeqCst);
+        if base >= self.n {
+            self.num_active.fetch_sub(REFILL_CHUNK, Ordering::SeqCst);
+            return false;
         }
-        self.num_active.fetch_add(1, Ordering::SeqCst);
-        let idx = self.execution_idx.fetch_add(1, Ordering::SeqCst);
-        if idx < self.n {
-            if let Some(v) = self.try_incarnate(idx) {
-                return Some(v);
-            }
+        let take = REFILL_CHUNK.min(self.n - base);
+        if take < REFILL_CHUNK {
+            self.num_active
+                .fetch_sub(REFILL_CHUNK - take, Ordering::SeqCst);
         }
-        self.num_active.fetch_sub(1, Ordering::SeqCst);
-        None
+        for i in (base..base + take).rev() {
+            let pushed = self.deques[w].push(pack_candidate(i, kind));
+            debug_assert!(pushed, "refill must target an empty deque");
+        }
+        true
     }
 
-    fn next_version_to_validate(&self) -> Option<Version> {
-        if self.validation_idx.load(Ordering::SeqCst) >= self.n {
-            self.check_done();
-            return None;
+    /// Refill worker `w`'s deque from whichever stream is further
+    /// behind, preferring validations (they are cheap and unblock the
+    /// commit prefix).
+    fn refill(&self, w: usize) -> bool {
+        let vi = self.validation_idx.load(Ordering::SeqCst);
+        let ei = self.execution_idx.load(Ordering::SeqCst);
+        if vi < self.n && vi < ei {
+            if self.refill_stream(&self.validation_idx, w, CAND_VALIDATION) {
+                return true;
+            }
         }
-        self.num_active.fetch_add(1, Ordering::SeqCst);
-        let idx = self.validation_idx.fetch_add(1, Ordering::SeqCst);
-        if idx < self.n {
-            // One atomic load snapshots (state, incarnation) together —
-            // what the old per-txn mutex existed to make atomic.
+        if ei < self.n && self.refill_stream(&self.execution_idx, w, CAND_EXECUTION) {
+            return true;
+        }
+        if vi < self.n && self.refill_stream(&self.validation_idx, w, CAND_VALIDATION) {
+            return true;
+        }
+        false
+    }
+
+    /// Claim a buffered candidate, releasing its `num_active` count if
+    /// the claim fails (someone else already ran or invalidated it).
+    fn resolve(&self, c: u64) -> Option<Task> {
+        let idx = candidate_idx(c);
+        if candidate_kind(c) == CAND_EXECUTION {
+            if let Some(v) = self.try_incarnate(idx) {
+                return Some(Task::Execution(v));
+            }
+        } else {
+            // One atomic load snapshots (state, incarnation) together.
             let word = self.status[idx].0.load(Ordering::SeqCst);
             if state_of(word) == ST_EXECUTED {
-                return Some((idx, incarnation_of(word)));
+                return Some(Task::Validation((idx, incarnation_of(word))));
             }
         }
         self.num_active.fetch_sub(1, Ordering::SeqCst);
         None
     }
 
-    /// Pull the next task, preferring the stream that is further
-    /// behind. Returns `None` when no task was available *right now*
-    /// (the caller re-polls until [`Scheduler::done`]).
-    pub fn next_task(&self) -> Option<Task> {
-        if self.done() {
+    /// Pull the next task for pool worker `w`: drain the worker's own
+    /// deque, refill it from the lagging stream, steal from peers.
+    /// Returns `None` when no task is claimable *right now* (the
+    /// caller re-polls until [`Scheduler::done`]).
+    pub fn next_task(&self, w: usize) -> Option<Task> {
+        loop {
+            if self.done() {
+                return None;
+            }
+            if let Some(c) = self.deques[w].pop() {
+                match self.resolve(c) {
+                    Some(t) => return Some(t),
+                    None => continue,
+                }
+            }
+            if self.refill(w) {
+                continue;
+            }
+            if let Some(c) = steal_from_peers(&self.deques, w, &self.steal_cnt) {
+                match self.resolve(c) {
+                    Some(t) => return Some(t),
+                    None => continue,
+                }
+            }
+            // No buffered, refillable, or stealable work: workers that
+            // reach this point hold no active count, so the done-check
+            // can observe num_active == 0.
+            self.check_done();
             return None;
-        }
-        if self.validation_idx.load(Ordering::SeqCst)
-            < self.execution_idx.load(Ordering::SeqCst)
-        {
-            self.next_version_to_validate().map(Task::Validation)
-        } else {
-            self.next_version_to_execute().map(Task::Execution)
         }
     }
 
@@ -247,6 +388,46 @@ impl Scheduler {
         // re-dispatches it.
         self.num_active.fetch_sub(1, Ordering::SeqCst);
         true
+    }
+
+    /// Cross-block suspension: `txn` (currently Executing) read an
+    /// ESTIMATE from the *previous block's* store. The caller holds the
+    /// park-list lock that serializes against
+    /// [`Scheduler::resume_external`], so the suspend cannot race the
+    /// resume.
+    pub(crate) fn suspend_external(&self, txn: TxnIdx) {
+        let s = &self.status[txn].0;
+        let cur = s.load(Ordering::SeqCst);
+        debug_assert_eq!(state_of(cur), ST_EXECUTING);
+        s.store(pack(incarnation_of(cur), ST_ABORTING), Ordering::SeqCst);
+        self.num_active.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Re-ready a batch of externally suspended transactions (the
+    /// previous block completed) and drag the execution stream back to
+    /// the lowest of them.
+    pub(crate) fn resume_external(&self, txns: &[TxnIdx]) {
+        if let Some(&min_t) = txns.iter().min() {
+            for &t in txns {
+                self.set_ready(t);
+            }
+            self.decrease_execution_idx(min_t);
+        }
+    }
+
+    /// Force a full revalidation pass: every transaction revalidates
+    /// against the now-final base state (the cross-block promotion
+    /// step; single caller, serialized under the session's window
+    /// lock). Drags the validation stream to 0 *first*, then bumps the
+    /// done word's reopen generation and clears its done bit — any
+    /// in-flight `check_done` that based its verdict on the old
+    /// generation now fails its publishing CAS instead of resurrecting
+    /// a stale done.
+    pub(crate) fn reopen_validation(&self) {
+        self.decrease_validation_idx(0);
+        let w = self.done_word.load(Ordering::SeqCst);
+        self.done_word
+            .store(((w >> 1) + 1) << 1, Ordering::SeqCst);
     }
 
     fn set_ready(&self, t: TxnIdx) {
@@ -335,25 +516,25 @@ mod tests {
 
     #[test]
     fn empty_batch_is_done_immediately() {
-        let s = Scheduler::new(0);
+        let s = Scheduler::new(0, 1);
         assert!(s.done());
-        assert_eq!(s.next_task(), None);
+        assert_eq!(s.next_task(0), None);
     }
 
     #[test]
     fn single_txn_execute_then_validate_then_done() {
-        let s = Scheduler::new(1);
-        let t = s.next_task().unwrap();
+        let s = Scheduler::new(1, 1);
+        let t = s.next_task(0).unwrap();
         assert_eq!(t, Task::Execution((0, 0)));
         // First incarnation wrote new locations but nothing is above
         // it; validation_idx == 0 is not > 0, so no inline validation.
         assert_eq!(s.finish_execution(0, 0, true), None);
-        let t = s.next_task().unwrap();
+        let t = s.next_task(0).unwrap();
         assert_eq!(t, Task::Validation((0, 0)));
         assert_eq!(s.finish_validation(0, false), None);
         // Drain the counters past n; the done marker flips.
         for _ in 0..4 {
-            if s.next_task().is_some() {
+            if s.next_task(0).is_some() {
                 panic!("no tasks should remain");
             }
             if s.done() {
@@ -364,21 +545,27 @@ mod tests {
     }
 
     #[test]
+    fn chunked_refill_hands_out_ascending_executions() {
+        // One refill buffers the whole batch; the owner's pop order is
+        // ascending index (candidates are pushed highest-first).
+        let s = Scheduler::new(3, 1);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(0), Some(Task::Execution((1, 0))));
+        assert_eq!(s.next_task(0), Some(Task::Execution((2, 0))));
+    }
+
+    #[test]
     fn validation_abort_reincarnates() {
-        let s = Scheduler::new(2);
-        assert_eq!(s.next_task(), Some(Task::Execution((0, 0))));
-        // Validation is preferred once the execution stream is ahead,
-        // but txn 0 is still executing: the pull is consumed and yields
-        // nothing (its eventual finish_execution drags validation_idx
-        // back down). Workers absorb the None by re-polling.
-        assert_eq!(s.next_task(), None);
-        assert_eq!(s.next_task(), Some(Task::Execution((1, 0))));
+        let s = Scheduler::new(2, 1);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        // The refill buffered txn 1's execution candidate too.
+        assert_eq!(s.next_task(0), Some(Task::Execution((1, 0))));
         assert_eq!(s.finish_execution(0, 0, true), None);
         assert_eq!(s.finish_execution(1, 0, true), None);
         // Validate 0 fine, abort 1.
-        assert_eq!(s.next_task(), Some(Task::Validation((0, 0))));
+        assert_eq!(s.next_task(0), Some(Task::Validation((0, 0))));
         assert_eq!(s.finish_validation(0, false), None);
-        assert_eq!(s.next_task(), Some(Task::Validation((1, 0))));
+        assert_eq!(s.next_task(0), Some(Task::Validation((1, 0))));
         assert!(s.try_validation_abort(1, 0));
         // Second claimant loses.
         assert!(!s.try_validation_abort(1, 0));
@@ -387,24 +574,22 @@ mod tests {
         assert_eq!(s.finish_execution(1, 1, false), Some(Task::Validation((1, 1))));
         assert_eq!(s.finish_validation(1, false), None);
         while !s.done() {
-            assert_eq!(s.next_task(), None);
+            assert_eq!(s.next_task(0), None);
         }
     }
 
     #[test]
     fn dependency_suspends_and_resumes() {
-        let s = Scheduler::new(2);
-        assert_eq!(s.next_task(), Some(Task::Execution((0, 0))));
-        // Preferred-but-premature validation pull (see above).
-        assert_eq!(s.next_task(), None);
-        assert_eq!(s.next_task(), Some(Task::Execution((1, 0))));
+        let s = Scheduler::new(2, 1);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(0), Some(Task::Execution((1, 0))));
         // txn 1 reads an ESTIMATE from txn 0: suspend.
         assert!(s.add_dependency(1, 0));
         // txn 0 finishing must resume txn 1 with incarnation 1.
         assert_eq!(s.finish_execution(0, 0, true), None);
         let mut saw_exec1 = false;
-        for _ in 0..8 {
-            match s.next_task() {
+        for _ in 0..16 {
+            match s.next_task(0) {
                 Some(Task::Execution((1, 1))) => {
                     saw_exec1 = true;
                     break;
@@ -421,13 +606,70 @@ mod tests {
 
     #[test]
     fn add_dependency_fails_after_blocking_executed() {
-        let s = Scheduler::new(2);
-        assert_eq!(s.next_task(), Some(Task::Execution((0, 0))));
-        // Preferred-but-premature validation pull (see above).
-        assert_eq!(s.next_task(), None);
-        assert_eq!(s.next_task(), Some(Task::Execution((1, 0))));
+        let s = Scheduler::new(2, 1);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(0), Some(Task::Execution((1, 0))));
         assert_eq!(s.finish_execution(0, 0, true), None);
         assert!(!s.add_dependency(1, 0), "blocking txn already executed");
+    }
+
+    #[test]
+    fn idle_worker_steals_buffered_candidates() {
+        // Worker 0's refill buffers both execution candidates but only
+        // claims the first; worker 1 finds its own streams drained and
+        // must steal the second from worker 0's deque.
+        let s = Scheduler::new(2, 2);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(1), Some(Task::Execution((1, 0))));
+        assert_eq!(s.steals(), 1, "worker 1's task came from worker 0's deque");
+    }
+
+    #[test]
+    fn suspend_and_resume_external_round_trip() {
+        // The cross-block parking path: an executing txn suspends on
+        // the previous block, then resumes with a bumped incarnation.
+        let s = Scheduler::new(2, 1);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(0), Some(Task::Execution((1, 0))));
+        s.suspend_external(1);
+        assert_eq!(s.finish_execution(0, 0, true), None);
+        s.resume_external(&[1]);
+        let mut saw = false;
+        for _ in 0..16 {
+            match s.next_task(0) {
+                Some(Task::Execution((1, 1))) => {
+                    saw = true;
+                    break;
+                }
+                Some(Task::Validation((0, 0))) => {
+                    s.finish_validation(0, false);
+                }
+                Some(other) => panic!("unexpected task {other:?}"),
+                None => {}
+            }
+        }
+        assert!(saw, "externally parked txn was never re-dispatched");
+    }
+
+    #[test]
+    fn reopen_validation_revalidates_a_done_scheduler() {
+        // Drive a 1-txn batch to done, then reopen: the validation
+        // stream must hand the transaction out again.
+        let s = Scheduler::new(1, 1);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.finish_execution(0, 0, true), None);
+        assert_eq!(s.next_task(0), Some(Task::Validation((0, 0))));
+        assert_eq!(s.finish_validation(0, false), None);
+        while !s.done() {
+            assert_eq!(s.next_task(0), None);
+        }
+        s.reopen_validation();
+        assert!(!s.done());
+        assert_eq!(s.next_task(0), Some(Task::Validation((0, 0))));
+        assert_eq!(s.finish_validation(0, false), None);
+        while !s.done() {
+            assert_eq!(s.next_task(0), None);
+        }
     }
 
     #[test]
@@ -445,7 +687,7 @@ mod tests {
     fn concurrent_claims_admit_each_incarnation_once() {
         // Many threads race try_incarnate over a fresh scheduler: each
         // transaction's incarnation 0 must be claimed exactly once.
-        let s = Scheduler::new(64);
+        let s = Scheduler::new(64, 4);
         let claimed: Vec<AtomicUsize> = (0..64).map(|_| AtomicUsize::new(0)).collect();
         std::thread::scope(|scope| {
             for _ in 0..4 {
@@ -461,5 +703,53 @@ mod tests {
         for (t, c) in claimed.iter().enumerate() {
             assert_eq!(c.load(Ordering::SeqCst), 1, "txn {t} claimed wrong count");
         }
+    }
+
+    #[test]
+    fn concurrent_workers_drain_a_batch_through_the_deques() {
+        // End-to-end scheduler stress without an executor: four threads
+        // pull tasks and complete them immediately; every txn must be
+        // executed and validated exactly once and the batch must reach
+        // done.
+        let s = Scheduler::new(128, 4);
+        let executed: Vec<AtomicUsize> = (0..128).map(|_| AtomicUsize::new(0)).collect();
+        let validated: Vec<AtomicUsize> = (0..128).map(|_| AtomicUsize::new(0)).collect();
+        std::thread::scope(|scope| {
+            for w in 0..4 {
+                let s = &s;
+                let executed = &executed;
+                let validated = &validated;
+                scope.spawn(move || {
+                    let mut task = None;
+                    loop {
+                        task = match task {
+                            Some(Task::Execution((t, inc))) => {
+                                executed[t].fetch_add(1, Ordering::SeqCst);
+                                s.finish_execution(t, inc, false)
+                            }
+                            Some(Task::Validation((t, _inc))) => {
+                                validated[t].fetch_add(1, Ordering::SeqCst);
+                                s.finish_validation(t, false)
+                            }
+                            None => {
+                                if s.done() {
+                                    return;
+                                }
+                                std::hint::spin_loop();
+                                s.next_task(w)
+                            }
+                        };
+                    }
+                });
+            }
+        });
+        for t in 0..128 {
+            assert_eq!(executed[t].load(Ordering::SeqCst), 1, "txn {t} exec count");
+            assert!(
+                validated[t].load(Ordering::SeqCst) >= 1,
+                "txn {t} never validated"
+            );
+        }
+        assert!(s.done());
     }
 }

@@ -21,13 +21,17 @@
 //!   into executable read/modify/write bodies on a scratch heap — the
 //!   substrate of the `batch_determinism` property tests.
 //!
-//! Every adapter sizes its admission blocks through a
+//! Every adapter streams its blocks through the cross-block-pipelined
+//! session ([`BatchSystem::run_pipelined`]) sized by a
 //! [`BlockSizeController`] — pinned for `--policy batch=N`, the AIMD
-//! law for `--policy batch=adaptive` — and folds the controller's
-//! decisions into the run's [`crate::stats::TxStats`]
+//! law (plus the optional latency deadline) for `--policy
+//! batch=adaptive[...]` — and folds the controller's decisions into
+//! the run's [`crate::stats::TxStats`]
 //! (`block_grows`/`block_shrinks`/`final_block`). The streaming
-//! pipeline (`crate::runtime::pipeline`) reuses [`edge_insert_block`]
-//! to drain its bounded channel in controller-sized blocks.
+//! pipeline (`crate::runtime::pipeline`) drains its bounded channel in
+//! controller-sized blocks built by [`edge_insert_block_owned`]: each
+//! transaction owns its tuple chunk, because under cross-block
+//! pipelining a block outlives the drain buffer it was cut from.
 
 use std::time::{Duration, Instant};
 
@@ -42,6 +46,7 @@ use crate::stats::StatsTable;
 use crate::tm::access::{DirectAccess, TxAccess, TxResult};
 
 use super::adaptive::BlockSizeController;
+use super::mvmemory::MvMemory;
 use super::{BatchReport, BatchSystem, BatchTxn};
 
 /// Scanned edges folded into one gmax-probe transaction (phase 1 of
@@ -99,6 +104,35 @@ pub fn edge_insert_block<'g>(
         .collect()
 }
 
+/// Like [`edge_insert_block`], but each transaction *owns* its tuple
+/// chunk (copied out of `tuples`), so the block only borrows the
+/// graph. This is what the streaming pipeline's drain source needs:
+/// under cross-block pipelining a block stays live while the next one
+/// is built from freshly received tuples, so blocks cannot borrow the
+/// drain buffer.
+pub fn edge_insert_block_owned<'g>(
+    g: &'g Graph,
+    tuples: &[EdgeTuple],
+    first_cell: usize,
+    chunk: usize,
+) -> Vec<BatchTxn<'g>> {
+    let chunk = chunk.max(1);
+    (0..tuples.len().div_ceil(chunk))
+        .map(|j| {
+            let lo = j * chunk;
+            let hi = (lo + chunk).min(tuples.len());
+            let slice: Vec<EdgeTuple> = tuples[lo..hi].to_vec();
+            let cell0 = first_cell + lo;
+            BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
+                for (k, e) in slice.iter().enumerate() {
+                    insert_edge(t, g, cell0 + k, e)?;
+                }
+                Ok(())
+            })
+        })
+        .collect()
+}
+
 /// All edge-insertion transactions for `tuples`, `chunk` edges per
 /// transaction. Convenience for tests/examples; the streaming
 /// [`run_generation`] below builds one block at a time instead.
@@ -111,11 +145,11 @@ pub fn edge_insert_txns<'g>(
 }
 
 /// Run an already-materialized transaction list through
-/// [`BatchSystem`] in controller-sized blocks, feeding each block's
-/// outcome back into the controller. The final state is bit-identical
-/// to sequential execution for *every* controller trajectory (blocks
-/// preserve index order). Shared by the benches and the
-/// fixed-vs-adaptive determinism properties.
+/// [`BatchSystem::run`] in controller-sized blocks **to a barrier per
+/// block** — the admission-barrier baseline the bench A/Bs the
+/// pipelined session against. The final state is bit-identical to
+/// sequential execution for *every* controller trajectory (blocks
+/// preserve index order).
 pub fn run_blocks(
     heap: &TxHeap,
     txns: &[BatchTxn<'_>],
@@ -126,18 +160,48 @@ pub fn run_blocks(
     let mut j0 = 0;
     while j0 < txns.len() {
         let j1 = (j0 + ctl.current().max(1)).min(txns.len());
+        let t0 = Instant::now();
         let r = BatchSystem::run(heap, &txns[j0..j1], concurrency);
-        ctl.observe(r.executions, r.txns as u64);
+        ctl.observe_block(r.executions, r.txns as u64, t0.elapsed());
         report.merge(&r);
         j0 = j1;
     }
     report
 }
 
-/// Generation kernel through [`BatchSystem`]: controller-sized blocks,
-/// `concurrency` workers each. Mirrors the signature of
-/// [`crate::graph::generation::run`]. Blocks are constructed lazily so
-/// peak memory is O(block), not O(edges).
+/// The same contract as [`run_blocks`], but streamed through the
+/// cross-block-pipelined session ([`BatchSystem::run_pipelined`]):
+/// block N+1 executes while block N's validation tail drains. Output
+/// is still bit-identical to sequential index order — the
+/// `batch_determinism` suite proves barrier, pipelined, and the serial
+/// oracle agree word for word.
+pub fn run_txns_pipelined(
+    heap: &TxHeap,
+    txns: Vec<BatchTxn<'_>>,
+    concurrency: usize,
+    ctl: &mut BlockSizeController,
+) -> BatchReport {
+    let mut iter = txns.into_iter();
+    BatchSystem::run_pipelined::<MvMemory, _>(
+        heap,
+        move |block| {
+            let blk: Vec<BatchTxn> = iter.by_ref().take(block.max(1)).collect();
+            if blk.is_empty() {
+                None
+            } else {
+                Some(blk)
+            }
+        },
+        concurrency,
+        ctl,
+    )
+}
+
+/// Generation kernel through the pipelined batch session:
+/// controller-sized blocks, `concurrency` pinned workers, block N+1
+/// executing while block N's validation tail drains. Mirrors the
+/// signature of [`crate::graph::generation::run`]. Blocks are
+/// constructed lazily so peak memory is O(block), not O(edges).
 pub fn run_generation(
     g: &Graph,
     tuples: &[EdgeTuple],
@@ -147,18 +211,23 @@ pub fn run_generation(
     let t0 = Instant::now();
     let chunk = g.cfg.batch.max(1);
     let n_txns = tuples.len().div_ceil(chunk);
-    let mut report = BatchReport::default();
-    let mut j0 = 0;
-    while j0 < n_txns {
-        let j1 = (j0 + ctl.current()).min(n_txns);
-        let blk: Vec<BatchTxn> = (j0..j1)
-            .map(|j| edge_insert_txn(g, tuples, chunk, j))
-            .collect();
-        let r = BatchSystem::run(&g.heap, &blk, concurrency);
-        ctl.observe(r.executions, r.txns as u64);
-        report.merge(&r);
-        j0 = j1;
-    }
+    let mut j0 = 0usize;
+    let report = BatchSystem::run_pipelined::<MvMemory, _>(
+        &g.heap,
+        move |block| {
+            if j0 >= n_txns {
+                return None;
+            }
+            let j1 = (j0 + block.max(1)).min(n_txns);
+            let blk: Vec<BatchTxn> = (j0..j1)
+                .map(|j| edge_insert_txn(g, tuples, chunk, j))
+                .collect();
+            j0 = j1;
+            Some(blk)
+        },
+        concurrency,
+        &mut ctl,
+    );
     // The transactional paths advance the pool cursor as they reserve
     // cells; the batch path assigns cells by index, so it settles the
     // cursor once at the end — same final value.
@@ -178,11 +247,13 @@ fn append_txn(g: &Graph, cells: Vec<u64>) -> BatchTxn<'_> {
     })
 }
 
-/// Computation kernel through [`BatchSystem`]. Mirrors
+/// Computation kernel through the pipelined batch session. Mirrors
 /// [`crate::graph::computation::run`]: phase 1 finds the max weight
 /// (chunked probes), phase 2 appends the top band in cell order. One
 /// controller spans both phases, so what phase 1 learns about the
-/// conflict regime carries into phase 2's sizing.
+/// conflict regime carries into phase 2's sizing. The phase boundary
+/// is a real barrier (the cutoff depends on every probe), so each
+/// phase is its own pipelined stream.
 pub fn run_computation(
     g: &Graph,
     concurrency: usize,
@@ -200,64 +271,84 @@ pub fn run_computation(
     let gmax_addr = g.gmax;
     let mut report = BatchReport::default();
     let n_probes = total_cells.div_ceil(PROBE_CHUNK);
-    let mut j0 = 0;
-    while j0 < n_probes {
-        let j1 = (j0 + ctl.current()).min(n_probes);
-        let blk: Vec<BatchTxn> = (j0..j1)
-            .map(|j| {
-                let lo = j * PROBE_CHUNK;
-                let hi = (lo + PROBE_CHUNK).min(total_cells);
-                BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
-                    let mut cur = t.read(gmax_addr)?;
-                    for i in lo..hi {
-                        let w = g.heap.load(g.cell(i) + Graph::CELL_WEIGHT);
-                        if w > cur {
-                            t.write(gmax_addr, w)?;
-                            cur = w;
+    let mut j0 = 0usize;
+    let r1 = BatchSystem::run_pipelined::<MvMemory, _>(
+        &g.heap,
+        move |block| {
+            if j0 >= n_probes {
+                return None;
+            }
+            let j1 = (j0 + block.max(1)).min(n_probes);
+            let blk: Vec<BatchTxn> = (j0..j1)
+                .map(|j| {
+                    let lo = j * PROBE_CHUNK;
+                    let hi = (lo + PROBE_CHUNK).min(total_cells);
+                    BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
+                        let mut cur = t.read(gmax_addr)?;
+                        for i in lo..hi {
+                            let w = g.heap.load(g.cell(i) + Graph::CELL_WEIGHT);
+                            if w > cur {
+                                t.write(gmax_addr, w)?;
+                                cur = w;
+                            }
                         }
-                    }
-                    Ok(())
+                        Ok(())
+                    })
                 })
-            })
-            .collect();
-        let r = BatchSystem::run(&g.heap, &blk, concurrency);
-        ctl.observe(r.executions, r.txns as u64);
-        report.merge(&r);
-        j0 = j1;
-    }
+                .collect();
+            j0 = j1;
+            Some(blk)
+        },
+        concurrency,
+        &mut ctl,
+    );
+    report.merge(&r1);
 
     let max_weight = g.heap.load(g.gmax) as u32;
     let cutoff = g.weight_cutoff() as u64;
 
     // Phase 2: collect the band, `flush` hits per append transaction,
-    // in cell order — the deterministic sequential order. Blocks are
-    // flushed to the executor as they fill, keeping memory O(block).
+    // in cell order — the deterministic sequential order. The source
+    // streams the cell scan, so memory stays O(block).
     let flush = g.cfg.batch.max(COLLECT_FLUSH);
-    let mut blk: Vec<BatchTxn> = Vec::new();
+    let mut i = 0usize;
     let mut pending: Vec<u64> = Vec::new();
-    for i in 0..total_cells {
-        let cell = g.cell(i);
-        if g.heap.load(cell + Graph::CELL_WEIGHT) > cutoff {
-            pending.push(cell as u64);
-            if pending.len() == flush {
-                blk.push(append_txn(g, std::mem::take(&mut pending)));
-                if blk.len() >= ctl.current() {
-                    let r = BatchSystem::run(&g.heap, &blk, concurrency);
-                    ctl.observe(r.executions, r.txns as u64);
-                    report.merge(&r);
-                    blk.clear();
-                }
+    let mut drained = false;
+    let r2 = BatchSystem::run_pipelined::<MvMemory, _>(
+        &g.heap,
+        move |block| {
+            if drained {
+                return None;
             }
-        }
-    }
-    if !pending.is_empty() {
-        blk.push(append_txn(g, pending));
-    }
-    if !blk.is_empty() {
-        let r = BatchSystem::run(&g.heap, &blk, concurrency);
-        ctl.observe(r.executions, r.txns as u64);
-        report.merge(&r);
-    }
+            let want = block.max(1);
+            let mut blk: Vec<BatchTxn> = Vec::new();
+            while blk.len() < want {
+                if i >= total_cells {
+                    if !pending.is_empty() {
+                        blk.push(append_txn(g, std::mem::take(&mut pending)));
+                    }
+                    drained = true;
+                    break;
+                }
+                let cell = g.cell(i);
+                if g.heap.load(cell + Graph::CELL_WEIGHT) > cutoff {
+                    pending.push(cell as u64);
+                    if pending.len() == flush {
+                        blk.push(append_txn(g, std::mem::take(&mut pending)));
+                    }
+                }
+                i += 1;
+            }
+            if blk.is_empty() {
+                None
+            } else {
+                Some(blk)
+            }
+        },
+        concurrency,
+        &mut ctl,
+    );
+    report.merge(&r2);
 
     let selected = g.heap.load(g.result_count) as usize;
     let elapsed = t0.elapsed();
@@ -276,14 +367,14 @@ pub fn run_computation(
 }
 
 /// Claim every vertex of the `candidates` stream at `mark_val` through
-/// [`BatchSystem`] — `chunk` claims per transaction, controller-sized
-/// speculative runs — then return the newly claimed vertices in
-/// first-candidate order, which is exactly the order the serial BFS
-/// oracle discovers them in. The stream is consumed twice (claims,
-/// then the next-frontier scan), so peak memory is O(block × chunk)
-/// instead of the whole level's candidate list. `seen` dedups within
-/// the level (a vertex reachable through two frontier members is
-/// claimed once).
+/// the pipelined batch session — `chunk` claims per transaction,
+/// controller-sized blocks with cross-block overlap — then return the
+/// newly claimed vertices in first-candidate order, which is exactly
+/// the order the serial BFS oracle discovers them in. The stream is
+/// consumed twice (claims, then the next-frontier scan), so peak
+/// memory is O(block × chunk) instead of the whole level's candidate
+/// list. `seen` dedups within the level (a vertex reachable through
+/// two frontier members is claimed once).
 #[allow(clippy::too_many_arguments)]
 fn claim_level<I>(
     g: &Graph,
@@ -297,7 +388,7 @@ fn claim_level<I>(
     seen: &mut [bool],
 ) -> Vec<u32>
 where
-    I: Iterator<Item = u32> + Clone,
+    I: Iterator<Item = u32> + Clone + Send,
 {
     let mk_txn = |slice: Vec<u32>| {
         BatchTxn::new(move |t: &mut dyn TxAccess| -> TxResult<()> {
@@ -313,28 +404,46 @@ where
         })
     };
 
-    // Pass 1: stream the candidates into claim transactions, running
-    // each block as soon as it fills.
-    let mut blk: Vec<BatchTxn> = Vec::new();
-    let mut buf: Vec<u32> = Vec::new();
-    for v in candidates.clone() {
-        buf.push(v);
-        if buf.len() == chunk {
-            blk.push(mk_txn(std::mem::take(&mut buf)));
-            if blk.len() >= ctl.current() {
-                let r = BatchSystem::run(&g.heap, &blk, concurrency);
-                ctl.observe(r.executions, r.txns as u64);
-                report.merge(&r);
-                blk.clear();
-            }
-        }
-    }
-    if !buf.is_empty() {
-        blk.push(mk_txn(buf));
-    }
-    if !blk.is_empty() {
-        let r = BatchSystem::run(&g.heap, &blk, concurrency);
-        ctl.observe(r.executions, r.txns as u64);
+    // Pass 1: stream the candidates into claim transactions; the
+    // session overlaps each block's execution with the previous
+    // block's validation tail. The level boundary itself stays a real
+    // barrier (run_pipelined returns only when every claim committed).
+    {
+        let mut cand = candidates.clone();
+        let mut drained = false;
+        let r = BatchSystem::run_pipelined::<MvMemory, _>(
+            &g.heap,
+            move |block| {
+                if drained {
+                    return None;
+                }
+                let want = block.max(1);
+                let mut blk: Vec<BatchTxn> = Vec::new();
+                while blk.len() < want && !drained {
+                    let mut buf: Vec<u32> = Vec::with_capacity(chunk);
+                    while buf.len() < chunk {
+                        match cand.next() {
+                            Some(v) => buf.push(v),
+                            None => {
+                                drained = true;
+                                break;
+                            }
+                        }
+                    }
+                    if buf.is_empty() {
+                        break;
+                    }
+                    blk.push(mk_txn(buf));
+                }
+                if blk.is_empty() {
+                    None
+                } else {
+                    Some(blk)
+                }
+            },
+            concurrency,
+            ctl,
+        );
         report.merge(&r);
     }
 

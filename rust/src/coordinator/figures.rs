@@ -52,7 +52,7 @@ pub fn combined_set() -> Vec<PolicySpec> {
     v.push(PolicySpec::Batch {
         block: crate::batch::DEFAULT_BLOCK,
     });
-    v.push(PolicySpec::BatchAdaptive);
+    v.push(PolicySpec::batch_adaptive());
     v
 }
 
@@ -339,7 +339,7 @@ mod tests {
             policies: vec![
                 PolicySpec::CoarseLock,
                 PolicySpec::Batch { block: 512 },
-                PolicySpec::BatchAdaptive,
+                PolicySpec::batch_adaptive(),
             ],
             threads: vec![2, 4],
         };

@@ -173,7 +173,7 @@ pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
     merged.merge(&comp.stats.total());
     let policy_label = cfg.policy.label(&merged);
 
-    if matches!(cfg.policy, PolicySpec::BatchAdaptive) {
+    if matches!(cfg.policy, PolicySpec::BatchAdaptive { .. }) {
         // Surface the controller's decisions per kernel: the converged
         // block plus how it got there.
         let g = gen_stats.total();
@@ -187,6 +187,18 @@ pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
             c.final_block,
             c.block_grows,
             c.block_shrinks,
+        );
+    }
+    if matches!(
+        cfg.policy,
+        PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive { .. }
+    ) {
+        // Worker-runtime view of the run: cross-block overlap, deque
+        // steals, and how many workers the affinity plan actually
+        // pinned.
+        eprintln!(
+            "[worker-runtime] overlapped_txns={} steals={} pinned_workers={}",
+            merged.overlapped_txns, merged.steals, merged.pinned_workers,
         );
     }
 
@@ -238,12 +250,19 @@ mod tests {
             merged.norec_fallback, 0,
             "live kernels must route through BatchSystem, not the NOrec fallback"
         );
-        assert!(r.cfg_label.starts_with("batch "), "label: {}", r.cfg_label);
+        // The label may carry worker-runtime annotations
+        // (`batch(overlap=..,steals=..)`), but never the fallback tag.
+        assert!(r.cfg_label.starts_with("batch"), "label: {}", r.cfg_label);
+        assert!(
+            !r.cfg_label.contains("fallback"),
+            "label: {}",
+            r.cfg_label
+        );
     }
 
     #[test]
     fn live_adaptive_batch_run_converges_and_labels() {
-        let cfg = RunConfig::new(7, PolicySpec::BatchAdaptive, 3);
+        let cfg = RunConfig::new(7, PolicySpec::batch_adaptive(), 3);
         let r = run_live(&cfg).unwrap();
         assert!(r.verified);
         let mut merged = r.gen_stats.total();

@@ -20,9 +20,11 @@
 use std::time::{Duration, Instant};
 
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use crate::runtime::workers::{run_sharded, PoolConfig};
 use crate::stats::StatsTable;
 use crate::tm::access::{TxAccess, TxResult};
 
+use super::generation::kernel_grain;
 use super::layout::Graph;
 
 /// Outcome of the computation kernel.
@@ -33,13 +35,6 @@ pub struct ComputationResult {
     pub selected: usize,
     pub elapsed: Duration,
     pub stats: StatsTable,
-}
-
-/// Per-thread share of the cell region: `[lo_cell, hi_cell)`.
-fn shard(total_cells: usize, threads: usize, tid: usize) -> (usize, usize) {
-    let per = total_cells.div_ceil(threads);
-    let lo = tid * per;
-    (lo.min(total_cells), ((tid + 1) * per).min(total_cells))
 }
 
 /// How many band hits the collect phase buffers before one append
@@ -114,6 +109,13 @@ fn collect_band(
 }
 
 /// Run the computation kernel with `threads` workers under `spec`.
+///
+/// Both phases run on the shared worker runtime
+/// ([`crate::runtime::workers::run_sharded`]): the cell region is cut
+/// into grain-sized scan ranges dealt to pinned workers, and an idle
+/// worker steals ranges from its peers instead of idling at the phase
+/// barrier (the phase boundary itself is semantic — the cutoff depends
+/// on every probe — and stays).
 pub fn run(
     sys: &TmSystem,
     g: &Graph,
@@ -130,53 +132,59 @@ pub fn run(
     let total_cells = g.cells_allocated();
     let t0 = Instant::now();
     let mut table = StatsTable::new();
+    let grain = kernel_grain(total_cells, threads, g.cfg.batch.max(COLLECT_FLUSH));
 
     // Phase 1: global max.
-    let mut phase1_stats = Vec::with_capacity(threads);
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for tid in 0..threads {
-            let (lo, hi) = shard(total_cells, threads, tid);
-            handles.push(s.spawn(move || {
-                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
-                let t = Instant::now();
+    let (phase1_stats, pool1) = run_sharded(
+        &PoolConfig::pinned(threads),
+        total_cells,
+        grain,
+        |tid, feed, _| {
+            let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
+            let t = Instant::now();
+            while let Some((lo, hi)) = feed.next() {
                 scan_and_merge_max(g, &mut ex, lo, hi);
-                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
-                ex.stats
-            }));
-        }
-        for h in handles {
-            phase1_stats.push(h.join().unwrap());
-        }
-    });
+            }
+            ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+            ex.stats
+        },
+    );
 
     let max_weight = g.heap.load(g.gmax) as u32;
     let cutoff = g.weight_cutoff() as u64;
 
     // Phase 2: collect the band.
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for tid in 0..threads {
-            let (lo, hi) = shard(total_cells, threads, tid);
-            handles.push(s.spawn(move || {
-                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed ^ 0xC0);
-                let t = Instant::now();
+    let (phase2_stats, pool2) = run_sharded(
+        &PoolConfig::pinned(threads),
+        total_cells,
+        grain,
+        |tid, feed, _| {
+            let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed ^ 0xC0);
+            let t = Instant::now();
+            while let Some((lo, hi)) = feed.next() {
                 collect_band(g, &mut ex, lo, hi, cutoff);
-                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
-                ex.stats
-            }));
+            }
+            ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+            ex.stats
+        },
+    );
+
+    for (tid, (mut s, p1)) in phase2_stats
+        .into_iter()
+        .zip(phase1_stats.into_iter())
+        .enumerate()
+    {
+        // Fold the phase-1 merge transactions into the thread's row
+        // (times add: the phases are sequential).
+        let t2 = s.time_ns;
+        s.merge(&p1);
+        s.time_ns = t2 + p1.time_ns;
+        if tid == 0 {
+            s.steals += pool1.steals + pool2.steals;
+            s.pinned_workers = pool1.pinned_workers.max(pool2.pinned_workers);
         }
-        for (tid, h) in handles.into_iter().enumerate() {
-            let mut s = h.join().unwrap();
-            // Fold the phase-1 merge transaction into the thread's row
-            // (times add: the phases are sequential).
-            let p1 = &phase1_stats[tid];
-            let t2 = s.time_ns;
-            s.merge(p1);
-            s.time_ns = t2 + p1.time_ns;
-            table.push(tid, s);
-        }
-    });
+        table.push(tid, s);
+    }
 
     let selected = g.heap.load(g.result_count) as usize;
     ComputationResult {
@@ -259,14 +267,13 @@ mod tests {
     }
 
     #[test]
-    fn shards_partition_exactly() {
-        for (cells, threads) in [(100, 3), (7, 8), (0, 2), (64, 1)] {
-            let mut covered = 0;
-            for tid in 0..threads {
-                let (lo, hi) = shard(cells, threads, tid);
-                covered += hi - lo;
-            }
-            assert_eq!(covered, cells);
+    fn kernel_grain_aligns_to_the_task_size() {
+        use crate::graph::generation::kernel_grain;
+        for (total, threads, align) in [(1000usize, 3usize, 16usize), (7, 8, 8), (0, 2, 4), (64, 1, 1)]
+        {
+            let g = kernel_grain(total, threads, align);
+            assert!(g >= 1);
+            assert_eq!(g % align.max(1), 0, "grain must align to the batch knob");
         }
     }
 }

@@ -22,6 +22,7 @@
 use std::time::{Duration, Instant};
 
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use crate::runtime::workers::{run_sharded, PoolConfig};
 use crate::stats::{StatsTable, TxStats};
 use crate::tm::access::{TxAccess, TxResult};
 
@@ -97,8 +98,26 @@ pub fn insert_slice(
     inserted
 }
 
+/// Steal-grain for the kernel drivers: big enough that a range is real
+/// work (amortizing the deque traffic), small enough that a lagging
+/// worker's share can be picked clean by its peers. Rounded up to a
+/// multiple of `align` (the task-size batch knob) so range boundaries
+/// coincide with transaction boundaries — stolen ranges then produce
+/// exactly the same transaction count as a static sharding.
+pub(crate) fn kernel_grain(total: usize, threads: usize, align: usize) -> usize {
+    let align = align.max(1);
+    let base = (total / (threads.max(1) * 8)).max(align);
+    base.next_multiple_of(align)
+}
+
 /// Run the generation kernel with `threads` workers under `spec`.
 /// Returns (wall time, per-thread stats).
+///
+/// Non-batch policies run on the shared worker runtime
+/// ([`crate::runtime::workers::run_sharded`]): the tuple range is cut
+/// into grain-sized chunks dealt contiguously to pinned workers, and an
+/// idle worker steals chunks from its peers instead of waiting at the
+/// join barrier — steal and pin counts land in the stats table.
 pub fn run(
     sys: &TmSystem,
     g: &Graph,
@@ -117,26 +136,29 @@ pub fn run(
     }
     let t0 = Instant::now();
     let mut table = StatsTable::new();
-    let shard = tuples.len().div_ceil(threads);
+    let grain = kernel_grain(tuples.len(), threads, g.cfg.batch.max(1));
 
-    std::thread::scope(|s| {
-        let mut handles = Vec::new();
-        for tid in 0..threads {
-            let lo = tid * shard;
-            let hi = ((tid + 1) * shard).min(tuples.len());
-            let slice = &tuples[lo..hi.max(lo)];
-            handles.push(s.spawn(move || {
-                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
-                let t = Instant::now();
-                insert_slice(g, &mut ex, slice);
-                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
-                ex.stats
-            }));
+    let (rows, pool) = run_sharded(
+        &PoolConfig::pinned(threads),
+        tuples.len(),
+        grain,
+        |tid, feed, _pinned| {
+            let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
+            let t = Instant::now();
+            while let Some((lo, hi)) = feed.next() {
+                insert_slice(g, &mut ex, &tuples[lo..hi]);
+            }
+            ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+            ex.stats
+        },
+    );
+    for (tid, mut stats) in rows.into_iter().enumerate() {
+        if tid == 0 {
+            stats.steals += pool.steals;
+            stats.pinned_workers = pool.pinned_workers;
         }
-        for (tid, h) in handles.into_iter().enumerate() {
-            table.push(tid, h.join().unwrap());
-        }
-    });
+        table.push(tid, stats);
+    }
 
     (t0.elapsed(), table)
 }
@@ -180,7 +202,7 @@ mod tests {
             PolicySpec::HtmSpin { retries: 8 },
             PolicySpec::DyAd { n: 43 },
             PolicySpec::Batch { block: 256 },
-            PolicySpec::BatchAdaptive,
+            PolicySpec::batch_adaptive(),
         ] {
             let (sys, g, tuples) = setup(7);
             let (_, table) = run(&sys, &g, &tuples, spec, 4, 99);

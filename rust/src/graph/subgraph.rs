@@ -23,9 +23,11 @@ use std::time::{Duration, Instant};
 
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
 use crate::mem::{Addr, WORDS_PER_LINE};
+use crate::runtime::workers::{run_sharded, PoolConfig};
 use crate::stats::StatsTable;
 use crate::tm::access::{TxAccess, TxResult};
 
+use super::generation::kernel_grain;
 use super::layout::Graph;
 
 /// Kernel-3 outcome.
@@ -107,21 +109,21 @@ pub fn run(
             break;
         }
         let next = Mutex::new(Vec::<u32>::new());
-        let shard = frontier.len().div_ceil(threads);
         let mark_val = (level + 1) as u64;
-        std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for tid in 0..threads {
-                let lo = (tid * shard).min(frontier.len());
-                let hi = ((tid + 1) * shard).min(frontier.len());
-                let slice = &frontier[lo..hi];
-                let next = &next;
-                handles.push(s.spawn(move || {
-                    let mut ex =
-                        ThreadExecutor::new(sys, spec, tid as u32, seed ^ level as u64);
-                    let t = Instant::now();
-                    let mut local_next = Vec::new();
-                    for &v in slice {
+        // Frontier ranges on the shared worker runtime: hub-heavy
+        // frontier entries make shares wildly uneven, which is exactly
+        // what the stealing deques absorb.
+        let grain = kernel_grain(frontier.len(), threads, 1).min(frontier.len().max(1));
+        let (rows, pool) = run_sharded(
+            &PoolConfig::pinned(threads),
+            frontier.len(),
+            grain,
+            |tid, feed, _| {
+                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed ^ level as u64);
+                let t = Instant::now();
+                let mut local_next = Vec::new();
+                while let Some((lo, hi)) = feed.next() {
+                    for &v in &frontier[lo..hi] {
                         // Non-transactional adjacency walk (the graph is
                         // frozen after kernel 1); claiming is the
                         // critical section.
@@ -142,18 +144,21 @@ pub fn run(
                             }
                         }
                     }
-                    ex.stats.time_ns = t.elapsed().as_nanos() as u64;
-                    next.lock().unwrap().extend_from_slice(&local_next);
-                    ex.stats
-                }));
+                }
+                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+                next.lock().unwrap().extend_from_slice(&local_next);
+                ex.stats
+            },
+        );
+        for (tid, mut s2) in rows.into_iter().enumerate() {
+            if tid == 0 {
+                s2.steals += pool.steals;
+                s2.pinned_workers = pool.pinned_workers;
             }
-            for (tid, h) in handles.into_iter().enumerate() {
-                let s2 = h.join().unwrap();
-                let keep = table.rows[tid].stats.time_ns + s2.time_ns;
-                table.rows[tid].stats.merge(&s2);
-                table.rows[tid].stats.time_ns = keep;
-            }
-        });
+            let keep = table.rows[tid].stats.time_ns + s2.time_ns;
+            table.rows[tid].stats.merge(&s2);
+            table.rows[tid].stats.time_ns = keep;
+        }
         frontier = next.into_inner().unwrap();
         level_sizes.push(frontier.len());
     }

@@ -60,12 +60,25 @@ pub enum PolicySpec {
     /// [`crate::batch::adaptive::BlockSizeController`] resizes every
     /// admitted block from the observed re-incarnation rate (AIMD —
     /// the DyAdHyTM adapt-at-runtime loop applied to the batch knob).
-    /// Routed exactly like [`PolicySpec::Batch`]; `label` reports the
-    /// converged block size.
-    BatchAdaptive,
+    /// `latency_ms > 0` (`--policy batch=adaptive:latency=MS`) adds a
+    /// block deadline: a block whose wall time overruns it halves even
+    /// at a clean conflict rate — the streaming pipeline's
+    /// blocks-sized-by-deadline mode. Routed exactly like
+    /// [`PolicySpec::Batch`]; `label` reports the converged block size
+    /// (and the deadline, when set).
+    BatchAdaptive {
+        /// Block wall-time deadline in milliseconds; 0 = none.
+        latency_ms: u32,
+    },
 }
 
 impl PolicySpec {
+    /// The adaptive batch backend without a latency deadline — the
+    /// `--policy batch=adaptive` default.
+    pub const fn batch_adaptive() -> PolicySpec {
+        PolicySpec::BatchAdaptive { latency_ms: 0 }
+    }
+
     /// The six Figure-2 policies with the paper's defaults.
     pub fn fig2_set() -> Vec<PolicySpec> {
         vec![
@@ -96,6 +109,12 @@ impl PolicySpec {
         ]
     }
 
+    /// The policy's *family* name. Parameters are not part of it —
+    /// `Fx { n: 20 }` and `Fx { n: 43 }` are both `"fx-hytm"`, and
+    /// `BatchAdaptive { latency_ms: 40 }` is `"batch-adaptive"` — so
+    /// `parse(name())` reconstructs the family with its *default*
+    /// parameters. Use the original CLI spelling (or
+    /// [`PolicySpec::label`]) when a round-trip must preserve them.
     pub fn name(&self) -> &'static str {
         match self {
             PolicySpec::CoarseLock => "lock",
@@ -111,7 +130,7 @@ impl PolicySpec {
             PolicySpec::DyAdTl2 { .. } => "dyad-tl2",
             PolicySpec::PhTm { .. } => "phtm",
             PolicySpec::Batch { .. } => "batch",
-            PolicySpec::BatchAdaptive => "batch-adaptive",
+            PolicySpec::BatchAdaptive { .. } => "batch-adaptive",
         }
     }
 
@@ -154,7 +173,13 @@ impl PolicySpec {
                 sw_quantum: 64,
             },
             "batch" => match arg {
-                Some("adaptive") => PolicySpec::BatchAdaptive,
+                Some("adaptive") => PolicySpec::batch_adaptive(),
+                // `batch=adaptive:latency=MS`: adaptive sizing with a
+                // block wall-time deadline.
+                Some(a) if a.starts_with("adaptive:latency=") => {
+                    let ms: u32 = a["adaptive:latency=".len()..].parse().ok()?;
+                    PolicySpec::BatchAdaptive { latency_ms: ms }
+                }
                 _ => PolicySpec::Batch {
                     block: arg
                         .and_then(|a| a.parse().ok())
@@ -163,7 +188,7 @@ impl PolicySpec {
             },
             // `batch=adaptive` is the CLI spelling; the round-trip name
             // is accepted too.
-            "batch-adaptive" => PolicySpec::BatchAdaptive,
+            "batch-adaptive" => PolicySpec::batch_adaptive(),
             _ => return None,
         })
     }
@@ -171,18 +196,43 @@ impl PolicySpec {
     /// Reporting label for a finished run: stats produced under a
     /// batch spec that contain NOrec-fallback transactions are labeled
     /// `batch(fallback:norec)` so a degraded run can't masquerade as
-    /// batch speculation, and an adaptive run reports the block size
-    /// its controller converged to. Every other (spec, stats) pair is
-    /// just [`PolicySpec::name`].
+    /// batch speculation; an adaptive run reports the block size its
+    /// controller converged to (plus the latency deadline, when set);
+    /// and batch runs surface the worker-runtime counters — cross-block
+    /// overlap and deque steals — when they occurred. Every other
+    /// (spec, stats) pair is just [`PolicySpec::name`].
     pub fn label(&self, stats: &TxStats) -> String {
-        match self {
-            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive
+        // Worker-runtime annotations shared by the batch labels.
+        let runtime_parts = |parts: &mut Vec<String>| {
+            if stats.overlapped_txns > 0 {
+                parts.push(format!("overlap={}", stats.overlapped_txns));
+            }
+            if stats.steals > 0 {
+                parts.push(format!("steals={}", stats.steals));
+            }
+        };
+        match *self {
+            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive { .. }
                 if stats.norec_fallback > 0 =>
             {
                 "batch(fallback:norec)".into()
             }
-            PolicySpec::BatchAdaptive if stats.final_block > 0 => {
-                format!("batch(adaptive:block={})", stats.final_block)
+            PolicySpec::BatchAdaptive { latency_ms } if stats.final_block > 0 => {
+                let mut parts = vec![format!("block={}", stats.final_block)];
+                if latency_ms > 0 {
+                    parts.push(format!("latency={latency_ms}ms"));
+                }
+                runtime_parts(&mut parts);
+                format!("batch(adaptive:{})", parts.join(","))
+            }
+            PolicySpec::Batch { .. } => {
+                let mut parts = Vec::new();
+                runtime_parts(&mut parts);
+                if parts.is_empty() {
+                    "batch".into()
+                } else {
+                    format!("batch({})", parts.join(","))
+                }
             }
             _ => self.name().into(),
         }
@@ -197,7 +247,16 @@ impl PolicySpec {
         use crate::batch::adaptive::BlockSizeController;
         match *self {
             PolicySpec::Batch { block } => Some(BlockSizeController::fixed(block)),
-            PolicySpec::BatchAdaptive => Some(BlockSizeController::adaptive()),
+            PolicySpec::BatchAdaptive { latency_ms } => {
+                let ctl = BlockSizeController::adaptive();
+                Some(if latency_ms > 0 {
+                    ctl.with_latency_target(std::time::Duration::from_millis(
+                        latency_ms as u64,
+                    ))
+                } else {
+                    ctl
+                })
+            }
             _ => None,
         }
     }
@@ -326,7 +385,7 @@ impl<'s> ThreadExecutor<'s> {
             // make it loud and account it separately so the stats can't
             // masquerade as batch commits (`PolicySpec::label` reports
             // the run as `batch(fallback:norec)`).
-            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive => {
+            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive { .. } => {
                 warn_batch_fallback_once();
                 self.stats.norec_fallback += 1;
                 self.run_stm_norec(body)
@@ -562,7 +621,7 @@ mod tests {
             PolicySpec::Batch {
                 block: crate::batch::DEFAULT_BLOCK,
             },
-            PolicySpec::BatchAdaptive,
+            PolicySpec::batch_adaptive(),
         ]
     }
 
@@ -597,7 +656,7 @@ mod tests {
         specs.push(PolicySpec::Batch {
             block: crate::batch::DEFAULT_BLOCK,
         });
-        specs.push(PolicySpec::BatchAdaptive);
+        specs.push(PolicySpec::batch_adaptive());
         for spec in specs {
             assert_eq!(
                 PolicySpec::parse(spec.name()),
@@ -619,12 +678,19 @@ mod tests {
         // The adaptive variant round-trips through both spellings.
         assert_eq!(
             PolicySpec::parse("batch=adaptive"),
-            Some(PolicySpec::BatchAdaptive)
+            Some(PolicySpec::batch_adaptive())
         );
         assert_eq!(
             PolicySpec::parse("batch-adaptive"),
-            Some(PolicySpec::BatchAdaptive)
+            Some(PolicySpec::batch_adaptive())
         );
+        // The latency-target spelling parses the deadline; garbage
+        // after the `=` is rejected, not silently defaulted.
+        assert_eq!(
+            PolicySpec::parse("batch=adaptive:latency=40"),
+            Some(PolicySpec::BatchAdaptive { latency_ms: 40 })
+        );
+        assert_eq!(PolicySpec::parse("batch=adaptive:latency=oops"), None);
     }
 
     #[test]
@@ -696,7 +762,7 @@ mod tests {
         assert_eq!(ex.stats.sw_commits, 5);
         assert_eq!(spec.label(&ex.stats), "batch(fallback:norec)");
         assert_eq!(
-            PolicySpec::BatchAdaptive.label(&ex.stats),
+            PolicySpec::batch_adaptive().label(&ex.stats),
             "batch(fallback:norec)"
         );
         // Other specs and clean batch stats keep their plain names.
@@ -707,14 +773,40 @@ mod tests {
     #[test]
     fn adaptive_label_reports_converged_block() {
         let mut stats = TxStats::new();
-        assert_eq!(PolicySpec::BatchAdaptive.label(&stats), "batch-adaptive");
+        assert_eq!(
+            PolicySpec::batch_adaptive().label(&stats),
+            "batch-adaptive"
+        );
         stats.final_block = 1536;
         assert_eq!(
-            PolicySpec::BatchAdaptive.label(&stats),
+            PolicySpec::batch_adaptive().label(&stats),
             "batch(adaptive:block=1536)"
+        );
+        // A latency deadline is part of the label.
+        assert_eq!(
+            PolicySpec::BatchAdaptive { latency_ms: 25 }.label(&stats),
+            "batch(adaptive:block=1536,latency=25ms)"
         );
         // A fixed batch run never claims adaptivity.
         assert_eq!(PolicySpec::Batch { block: 64 }.label(&stats), "batch");
+    }
+
+    #[test]
+    fn labels_surface_worker_runtime_counters() {
+        let mut stats = TxStats::new();
+        stats.overlapped_txns = 7;
+        stats.steals = 3;
+        assert_eq!(
+            PolicySpec::Batch { block: 64 }.label(&stats),
+            "batch(overlap=7,steals=3)"
+        );
+        stats.final_block = 512;
+        assert_eq!(
+            PolicySpec::batch_adaptive().label(&stats),
+            "batch(adaptive:block=512,overlap=7,steals=3)"
+        );
+        // Non-batch specs never grow annotations.
+        assert_eq!(PolicySpec::StmNorec.label(&stats), "stm");
     }
 
     #[test]
@@ -722,8 +814,16 @@ mod tests {
         let fixed = PolicySpec::Batch { block: 96 }.batch_sizing().unwrap();
         assert_eq!(fixed.current(), 96);
         assert!(!fixed.is_adaptive());
-        let adaptive = PolicySpec::BatchAdaptive.batch_sizing().unwrap();
+        let adaptive = PolicySpec::batch_adaptive().batch_sizing().unwrap();
         assert!(adaptive.is_adaptive());
+        assert_eq!(adaptive.latency_target(), None);
+        let deadline = PolicySpec::BatchAdaptive { latency_ms: 15 }
+            .batch_sizing()
+            .unwrap();
+        assert_eq!(
+            deadline.latency_target(),
+            Some(std::time::Duration::from_millis(15))
+        );
         assert!(PolicySpec::StmNorec.batch_sizing().is_none());
     }
 

@@ -18,6 +18,21 @@
 //!   Rust via the PJRT CPU client ([`runtime`]). Python never runs on the
 //!   request path.
 //!
+//! ## The worker runtime
+//!
+//! Everything that runs threads goes through one shared subsystem,
+//! [`runtime::workers`]: a **pinned worker pool** (best-effort
+//! round-robin `sched_setaffinity` placement) with per-worker
+//! Chase–Lev-style **work-stealing deques** (single-owner push/pop at
+//! the bottom, CAS-steal at the top, `SeqCst` throughout — the module
+//! docs carry the ordering argument). The batch scheduler refills
+//! whole candidate chunks into its deque and steals from peers; the
+//! fig2/fig3 kernel drivers deal batch-aligned index ranges onto the
+//! deques instead of static shards; the streaming pipeline's consumers
+//! drain the bounded channel from the same pool. Steal, pin, and
+//! overlap counters flow into the stats plane (`TxStats::{steals,
+//! pinned_workers, overlapped_txns}`) and batch run labels.
+//!
 //! ## The batch backend
 //!
 //! Beyond the paper's four retry policies, the crate carries a fifth
@@ -29,30 +44,39 @@
 //! address chains, seqlock'd version cells, `AtomicPtr`-handoff
 //! read/write sets), the scheduler packs each transaction's lifecycle
 //! into one atomic `incarnation|state` word, and recovery runs through
-//! ESTIMATE markers and abort/re-incarnate. Its output is guaranteed
-//! bit-identical to sequential execution of the block, which makes it
-//! directly comparable against the paper's policies on the same SSCA-2
-//! kernels: select it with `--policy batch[=BLOCK]` from the CLI, or
-//! `--policy batch=adaptive` to let a `BlockSizeController`
-//! (`batch::adaptive`) resize each block at runtime from the observed
-//! re-incarnation rate — the same adapt-from-abort-behaviour loop as
-//! DyAdHyTM itself, applied to the batch knob. The spec routes *every*
-//! end-to-end path through `BatchSystem`: the generation and
-//! computation kernels, kernel-3 subgraph extraction (a
-//! level-synchronous batch BFS with a streamed per-level candidate
-//! list, `batch::workload::run_subgraph`), and the streaming pipeline
-//! (`runtime::pipeline`, which drains its bounded channel in
-//! controller-sized blocks). A batch spec that reaches a
-//! per-transaction executor instead is loudly warned and reported as
+//! ESTIMATE markers and abort/re-incarnate. Blocks stream through a
+//! persistent pool with **cross-block pipelining**
+//! (`BatchSystem::run_pipelined`): while block N's validation tail
+//! drains, workers already execute block N+1 — speculative base reads
+//! peek block N's winning versions, reads of still-aborting addresses
+//! park, and a forced revalidation pass at block promotion keeps the
+//! final state bit-identical to sequential execution of the whole
+//! stream. That determinism is what makes the backend directly
+//! comparable against the paper's policies on the same SSCA-2 kernels:
+//! select it with `--policy batch[=BLOCK]` from the CLI, `--policy
+//! batch=adaptive` to let a `BlockSizeController` (`batch::adaptive`)
+//! resize each block at runtime from the observed re-incarnation rate
+//! — the same adapt-from-abort-behaviour loop as DyAdHyTM itself,
+//! applied to the batch knob — or `--policy batch=adaptive:latency=MS`
+//! to additionally size blocks by a wall-time deadline (the streaming
+//! pipeline's latency mode). The spec routes *every* end-to-end path
+//! through the pipelined session: the generation and computation
+//! kernels, kernel-3 subgraph extraction (a level-synchronous batch
+//! BFS with a streamed per-level candidate list,
+//! `batch::workload::run_subgraph`), and the streaming pipeline
+//! (`runtime::pipeline`, which drains its bounded channel at the
+//! worker-runtime seam). A batch spec that reaches a per-transaction
+//! executor instead is loudly warned and reported as
 //! `batch(fallback:norec)`. In the simulator the backend is priced by
 //! a dedicated multi-version cost mode (estimate-wait, validation,
-//! re-incarnation charges, block-admission barriers) driven by the
-//! *same* controller as the live runs, and `dyadhytm sim --fig
-//! combined` places batch (fixed and adaptive) next to the fig2/fig3
-//! policies in one table. See `benches/batch_throughput` for the
-//! lock-free vs mutex-store head-to-head, the block-size ×
-//! conflict-rate sweep, and the `BENCH_batch.json` perf trajectory it
-//! writes at the repo root.
+//! re-incarnation charges, and an overlapped block drain with one
+//! block of admission lookahead) driven by the *same* controller as
+//! the live runs, and `dyadhytm sim --fig combined` places batch
+//! (fixed and adaptive) next to the fig2/fig3 policies in one table.
+//! See `benches/batch_throughput` for the lock-free vs mutex-store and
+//! barrier vs pipelined head-to-heads, the block-size × conflict-rate
+//! sweep with `steal_rate`/`overlap_ratio` per cell, and the
+//! `BENCH_batch.json` perf trajectory it writes at the repo root.
 //!
 //! System inventory and the paper-vs-measured record live in
 //! `ROADMAP.md` (north star, open items) and `PAPER.md` (source

@@ -315,6 +315,7 @@ fn main() -> ExitCode {
                 "lock", "stm", "stm-tl2", "htm-alock[=R]", "htm-spin[=R]", "hle",
                 "rnd[=LO-HI]", "fx[=N]", "stad[=N]", "dyad[=N]", "dyad-tl2[=N]",
                 "phtm[=R]", "batch[=BLOCK]", "batch=adaptive",
+                "batch=adaptive:latency=MS",
             ] {
                 println!("{s}");
             }

@@ -1,13 +1,22 @@
-//! PJRT artifact runtime (DESIGN.md S13): load the AOT-compiled Layer-2
-//! computations and execute them from the Rust request path.
+//! Request-path runtime: the PJRT artifact executor, the streaming
+//! pipeline, and the shared worker runtime.
 //!
-//! `make artifacts` runs `python -m compile.aot` ONCE at build time; the
-//! HLO-text files it drops in `artifacts/` are compiled here with the
-//! PJRT CPU client and executed with concrete inputs. Python never runs
-//! at serve time — the binary is self-contained after artifacts exist.
+//! * [`artifacts`] — PJRT artifact runtime (DESIGN.md S13): `make
+//!   artifacts` runs `python -m compile.aot` ONCE at build time; the
+//!   HLO-text files it drops in `artifacts/` are compiled here with
+//!   the PJRT CPU client and executed with concrete inputs. Python
+//!   never runs at serve time — the binary is self-contained after
+//!   artifacts exist.
+//! * [`pipeline`] — the streaming generation pipeline (producer +
+//!   bounded channel + consumers).
+//! * [`workers`] — the shared worker runtime every execution loop in
+//!   the crate spawns through: pinned pool, work-stealing deques,
+//!   stealing parallel-for.
 
 pub mod artifacts;
 pub mod pipeline;
+pub mod workers;
 
 pub use artifacts::{ArtifactRuntime, Manifest};
 pub use pipeline::{PipelineConfig, PipelineReport, TupleSource};
+pub use workers::{PoolConfig, PoolStats};

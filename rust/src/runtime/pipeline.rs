@@ -10,32 +10,47 @@
 //! the deployment-shaped path a downstream user would actually run.
 //!
 //! Under `--policy batch` the consumer side is the speculative batch
-//! backend instead of per-transaction executors: a drainer thread pulls
-//! tuple batches off the same bounded channel, folds them into blocks
-//! of insert-transactions with globally sequential cell indices, and
-//! hands each block to [`BatchSystem`] (`cfg.workers` speculation
-//! workers). The built graph is bit-identical to a sequential insert of
-//! the streamed tuple order, and the bounded channel still applies
-//! backpressure between the producer and the drainer.
+//! backend instead of per-transaction executors: the bounded channel
+//! is drained at the **worker-runtime seam** — the pipelined batch
+//! session's block source ([`BatchSystem::run_pipelined_with`]) pulls
+//! tuple batches, folds them into controller-sized blocks of
+//! insert-transactions with globally sequential cell indices, and the
+//! session's pinned workers execute block N+1 while block N's
+//! validation tail drains. The built graph is bit-identical to a
+//! sequential insert of the streamed tuple order, and the bounded
+//! channel still applies backpressure between the producer and the
+//! drain seam.
 //!
-//! Accounting: worker `time_ns` covers only the insertion critical
-//! path; time spent blocked on the queue is surfaced separately as
+//! Accounting: time the consumer side spends blocked waiting for
+//! tuples is measured **at the worker-runtime seam** (the pool's
+//! channel refill for the per-transaction policies; the block source's
+//! `recv` for the batch backend) and surfaced as
 //! [`PipelineReport::consumer_blocked`], mirroring `producer_blocked`.
+//! For the per-transaction policies each worker's `time_ns` is its
+//! insertion time with the seam wait excluded; for the pipelined batch
+//! backend the seam wait runs *concurrently* with insertion on the
+//! other pool workers, so the batch row's `time_ns` is the drain
+//! session's wall clock and `consumer_blocked` is the (overlapping)
+//! seam blocking time reported next to it.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::batch::adaptive::BlockSizeController;
-use crate::batch::workload::edge_insert_block;
-use crate::batch::{BatchReport, BatchSystem};
+use crate::batch::mvmemory::MvMemory;
+use crate::batch::workload::edge_insert_block_owned;
+use crate::batch::{BatchSystem, BatchTxn};
 use crate::graph::rmat::EdgeTuple;
 use crate::graph::{generation, Graph};
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
 use crate::stats::StatsTable;
 
 use super::artifacts::ArtifactRuntime;
+use super::workers::{run_pool_with, PoolConfig};
 
 /// Where tuples come from.
 pub enum TupleSource {
@@ -89,10 +104,11 @@ pub struct PipelineReport {
     pub elapsed: Duration,
     /// Time the producer spent blocked on the full queue (backpressure).
     pub producer_blocked: Duration,
-    /// Time the consumer side spent blocked waiting for tuples (summed
-    /// across workers; for the batch backend, the drainer's wait). Kept
-    /// out of the per-worker `time_ns` so stats time only the insertion
-    /// critical path.
+    /// Time the consumer side spent blocked waiting for tuples,
+    /// measured at the worker-runtime seam (summed across workers; for
+    /// the batch backend, the pipelined session's block-source wait,
+    /// which overlaps execution on the other workers rather than
+    /// adding to it).
     pub consumer_blocked: Duration,
     pub edges_per_sec: f64,
     pub stats: StatsTable,
@@ -138,15 +154,16 @@ fn produce(
 
 fn consume(
     g: &Graph,
-    rx: &std::sync::Mutex<Receiver<Vec<EdgeTuple>>>,
+    rx: &Mutex<Receiver<Vec<EdgeTuple>>>,
     ex: &mut ThreadExecutor<'_>,
 ) -> (u64, Duration, Duration) {
     let mut inserted = 0;
     let mut insert_time = Duration::ZERO;
     let mut queue_wait = Duration::ZERO;
     loop {
-        // One worker holds the lock only long enough to take a batch;
-        // the recv wait is queue time, not insertion time.
+        // The worker-runtime seam: one worker holds the lock only long
+        // enough to take a batch; the recv wait is queue time, not
+        // insertion time.
         let t0 = Instant::now();
         let batch = rx.lock().unwrap().recv();
         queue_wait += t0.elapsed();
@@ -185,40 +202,43 @@ pub fn run(
         return run_batch(g, source, cfg, total, ctl);
     }
     let (tx, rx) = sync_channel::<Vec<EdgeTuple>>(cfg.queue_depth);
-    let rx = std::sync::Mutex::new(rx);
+    let rx = Mutex::new(rx);
     let t0 = Instant::now();
     let mut table = StatsTable::new();
-    let mut producer_blocked = Duration::ZERO;
     let mut consumer_blocked = Duration::ZERO;
 
-    std::thread::scope(|s| -> Result<()> {
-        let mut handles = Vec::new();
-        for tid in 0..cfg.workers {
-            let rx = &rx;
+    // Consumers run on the shared worker runtime (pinned pool); the
+    // PJRT client is thread-pinned (!Send), so the caller thread IS the
+    // producer — run_pool_with runs it while the pool drains the
+    // channel.
+    let (rows, produced) = run_pool_with(
+        &PoolConfig::pinned(cfg.workers),
+        |tid, pinned| {
             let mut ex = ThreadExecutor::new(sys, cfg.policy, tid as u32, cfg.seed);
-            handles.push(s.spawn(move || {
-                let (inserted, insert_time, queue_wait) = consume(g, rx, &mut ex);
-                ex.stats.time_ns = insert_time.as_nanos() as u64;
-                (inserted, queue_wait, ex.stats)
-            }));
-        }
-        // The PJRT client is thread-pinned (!Send): the caller thread IS
-        // the producer; workers overlap with it through the channel.
-        producer_blocked = produce(&mut source, cfg, total, tx)?;
-        // The sender is dropped; workers drain the queue and exit.
-        let mut inserted_total = 0;
-        for (tid, h) in handles.into_iter().enumerate() {
-            let (inserted, queue_wait, stats) = h.join().expect("worker panicked");
-            inserted_total += inserted;
-            consumer_blocked += queue_wait;
-            table.push(tid, stats);
-        }
-        anyhow::ensure!(
-            inserted_total == total as u64,
-            "inserted {inserted_total} != expected {total}"
-        );
-        Ok(())
-    })?;
+            let (inserted, insert_time, queue_wait) = consume(g, &rx, &mut ex);
+            ex.stats.time_ns = insert_time.as_nanos() as u64;
+            (inserted, queue_wait, ex.stats, pinned)
+        },
+        || produce(&mut source, cfg, total, tx),
+    );
+    // The sender is dropped (by produce, on success or error); workers
+    // drained the queue and exited before run_pool_with returned.
+    let producer_blocked = produced?;
+    let mut inserted_total = 0;
+    let mut pinned_workers = 0u64;
+    for (tid, (inserted, queue_wait, stats, pinned)) in rows.into_iter().enumerate() {
+        inserted_total += inserted;
+        consumer_blocked += queue_wait;
+        pinned_workers += pinned as u64;
+        table.push(tid, stats);
+    }
+    if let Some(row0) = table.rows.first_mut() {
+        row0.stats.pinned_workers = pinned_workers;
+    }
+    anyhow::ensure!(
+        inserted_total == total as u64,
+        "inserted {inserted_total} != expected {total}"
+    );
 
     let elapsed = t0.elapsed();
     Ok(PipelineReport {
@@ -231,14 +251,18 @@ pub fn run(
     })
 }
 
-/// The batch-policy consumer side: a single drainer thread pulls tuple
-/// batches, accumulates them into controller-sized blocks of
-/// insert-transactions (`g.cfg.batch` edges each, cells assigned by
-/// global stream index), and runs each block through [`BatchSystem`]
-/// with `cfg.workers` speculation workers. Each block's outcome feeds
-/// the controller, so an adaptive run resizes while the stream flows.
-/// Determinism: the built graph equals a sequential insert of the
-/// streamed tuple order, bit for bit, for every controller trajectory.
+/// The batch-policy consumer side: the bounded channel is drained by
+/// the pipelined batch session's *block source* — the worker-runtime
+/// seam. The source accumulates tuple batches into controller-sized
+/// blocks of insert-transactions (`g.cfg.batch` edges each, cells
+/// assigned by global stream index, each transaction owning its tuple
+/// chunk), and the session's `cfg.workers` pinned workers execute
+/// block N+1 while block N's validation tail drains. Each completed
+/// block feeds the controller — conflict rate *and* wall time, so
+/// `--policy batch=adaptive:latency=MS` sizes blocks by deadline while
+/// the stream flows. Determinism: the built graph equals a sequential
+/// insert of the streamed tuple order, bit for bit, for every
+/// controller trajectory.
 fn run_batch(
     g: &Graph,
     mut source: TupleSource,
@@ -251,73 +275,69 @@ fn run_batch(
     let chunk = g.cfg.batch.max(1);
     let workers = cfg.workers.max(1);
     let mut table = StatsTable::new();
-    let mut producer_blocked = Duration::ZERO;
-    let mut consumer_blocked = Duration::ZERO;
+    // Seam counters, written by the block source (a session worker),
+    // read after the session ends.
+    let queue_wait_ns = AtomicU64::new(0);
+    let inserted_ctr = AtomicU64::new(0);
+    let qw = &queue_wait_ns;
+    let ins = &inserted_ctr;
 
-    std::thread::scope(|s| -> Result<()> {
-        let drainer = s.spawn(move || {
-            let mut report = BatchReport::default();
-            let mut inserted = 0usize;
-            let mut insert_time = Duration::ZERO;
-            let mut queue_wait = Duration::ZERO;
-            let mut buf: Vec<EdgeTuple> = Vec::new();
-            loop {
-                let tw = Instant::now();
-                let msg = rx.recv();
-                queue_wait += tw.elapsed();
-                match msg {
-                    Ok(batch) => {
-                        buf.extend(batch);
-                        // Flush whole blocks as soon as they fill so the
-                        // buffer stays O(block), not O(edges). The block
-                        // runs straight off the buffer (no copy); the
-                        // consumed prefix is drained afterwards.
-                        while buf.len() >= ctl.current() * chunk {
-                            let take = ctl.current() * chunk;
-                            let ti = Instant::now();
-                            let txns =
-                                edge_insert_block(g, &buf[..take], inserted, chunk);
-                            let r = BatchSystem::run(&g.heap, &txns, workers);
-                            ctl.observe(r.executions, r.txns as u64);
-                            report.merge(&r);
-                            insert_time += ti.elapsed();
-                            drop(txns);
-                            buf.drain(..take);
-                            inserted += take;
-                        }
-                    }
-                    Err(_) => break, // producer done and queue drained
+    // The block source: recv at the seam, fold whole blocks.
+    let mut buf: Vec<EdgeTuple> = Vec::new();
+    let mut first_cell = 0usize;
+    let mut closed = false;
+    let block_source = move |block: usize| {
+        let want = block.max(1) * chunk;
+        while buf.len() < want && !closed {
+            let tw = Instant::now();
+            match rx.recv() {
+                Ok(batch) => {
+                    qw.fetch_add(tw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    buf.extend(batch);
+                }
+                Err(_) => {
+                    // Producer done and queue drained.
+                    qw.fetch_add(tw.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    closed = true;
                 }
             }
-            if !buf.is_empty() {
-                let ti = Instant::now();
-                let txns = edge_insert_block(g, &buf, inserted, chunk);
-                let r = BatchSystem::run(&g.heap, &txns, workers);
-                ctl.observe(r.executions, r.txns as u64);
-                report.merge(&r);
-                insert_time += ti.elapsed();
-                inserted += buf.len();
-            }
-            (inserted, report, insert_time, queue_wait, ctl)
-        });
-        producer_blocked = produce(&mut source, cfg, total, tx)?;
-        let (inserted, report, insert_time, queue_wait, ctl) =
-            drainer.join().expect("drainer panicked");
-        consumer_blocked = queue_wait;
-        anyhow::ensure!(
-            inserted == total,
-            "inserted {inserted} != expected {total}"
-        );
-        // The batch path assigns cells by stream index; settle the
-        // shared pool cursor to the same final value the transactional
-        // paths reach.
-        g.heap.store(g.pool_cursor, total as u64);
-        let mut stats = report.to_stats();
-        ctl.apply_to(&mut stats);
-        stats.time_ns = insert_time.as_nanos() as u64;
-        table.push(0, stats);
-        Ok(())
-    })?;
+        }
+        if buf.is_empty() {
+            return None::<Vec<BatchTxn<'_>>>;
+        }
+        let take = want.min(buf.len());
+        let txns = edge_insert_block_owned(g, &buf[..take], first_cell, chunk);
+        buf.drain(..take);
+        first_cell += take;
+        ins.store(first_cell as u64, Ordering::Relaxed);
+        Some(txns)
+    };
+
+    let (report, produced) = BatchSystem::run_pipelined_with::<MvMemory, _, _, _>(
+        &g.heap,
+        block_source,
+        workers,
+        &mut ctl,
+        || produce(&mut source, cfg, total, tx),
+    );
+    let producer_blocked = produced?;
+    let consumer_blocked = Duration::from_nanos(queue_wait_ns.load(Ordering::Relaxed));
+    let inserted = inserted_ctr.load(Ordering::Relaxed) as usize;
+    anyhow::ensure!(inserted == total, "inserted {inserted} != expected {total}");
+    // The batch path assigns cells by stream index; settle the shared
+    // pool cursor to the same final value the transactional paths
+    // reach.
+    g.heap.store(g.pool_cursor, total as u64);
+    let mut stats = report.to_stats();
+    ctl.apply_to(&mut stats);
+    // `to_stats` left time_ns = the whole pipelined-session wall clock.
+    // Under cross-block overlap the seam's recv wait runs CONCURRENTLY
+    // with insertion on the other workers, so "insertion-only" time is
+    // not separable at the session level — the session wall IS the
+    // consumer critical path, and the seam's blocking time is reported
+    // alongside it as `consumer_blocked` (it overlaps, so the two do
+    // not sum to anything meaningful).
+    table.push(0, stats);
 
     let elapsed = t0.elapsed();
     Ok(PipelineReport {
@@ -413,9 +433,9 @@ mod tests {
 
     #[test]
     fn batch_pipeline_matches_serial_build_bitwise() {
-        // `--policy batch`: the pipeline must route through BatchSystem
-        // and build the exact graph a sequential insert of the streamed
-        // tuple order builds.
+        // `--policy batch`: the pipeline must route through the
+        // pipelined batch session and build the exact graph a
+        // sequential insert of the streamed tuple order builds.
         let (sys, g) = setup(8);
         let mut cfg = PipelineConfig::new(8, PolicySpec::Batch { block: 32 }, 3);
         cfg.native_batch = 128;
@@ -427,6 +447,13 @@ mod tests {
             report.stats.total().sw_commits,
             (8 << 8) as u64,
             "one commit per insert transaction at chunk=1"
+        );
+        // Queue wait is measured at the worker-runtime seam (the block
+        // source's recv): the source always waits at least once for the
+        // producer's first batch.
+        assert!(
+            report.consumer_blocked > Duration::ZERO,
+            "seam queue-wait must be measured"
         );
 
         let tuples = streamed_tuples(seed, 128, 8, report.edges);
@@ -452,7 +479,7 @@ mod tests {
         // takes over the streamed blocks, the graph equals the serial
         // oracle and the report carries the converged block size.
         let (sys, g) = setup(8);
-        let mut cfg = PipelineConfig::new(8, PolicySpec::BatchAdaptive, 3);
+        let mut cfg = PipelineConfig::new(8, PolicySpec::batch_adaptive(), 3);
         cfg.native_batch = 128;
         let seed = cfg.seed;
         let report = run(&sys, &g, TupleSource::Native { seed }, &cfg).unwrap();

@@ -1,0 +1,723 @@
+//! The shared worker runtime: a pinned worker pool with per-worker
+//! work-stealing deques.
+//!
+//! Before this module existed the crate carried five hand-rolled
+//! spawn/join loops (one per execution backend plus the pipeline
+//! consumer), each with its own blocking barrier and stats plumbing.
+//! Everything that runs threads now goes through here:
+//!
+//! * [`run_pool`] / [`run_pool_with`] — the one spawn/join
+//!   implementation: scoped threads, best-effort core pinning
+//!   (round-robin over the process's allowed CPUs via
+//!   `sched_setaffinity`), panic propagation after all workers joined.
+//! * [`StealDeque`] — a fixed-capacity Chase–Lev-style work-stealing
+//!   deque of packed `u64` tasks: single-owner `push`/`pop` at the
+//!   bottom, CAS-steal at the top. The batch scheduler
+//!   (`crate::batch::scheduler`) feeds one per worker; [`run_sharded`]
+//!   preloads them with index ranges for the fig2/fig3 kernel loops.
+//! * [`run_sharded`] — stealing parallel-for over `[0, total)`: the
+//!   range is cut into `grain`-sized chunks dealt contiguously to the
+//!   workers' deques; an idle worker drains its own deque bottom-up
+//!   and then steals chunks from its peers' tops.
+//!
+//! # Memory-ordering argument
+//!
+//! Every atomic in [`StealDeque`] uses `SeqCst`, deliberately matching
+//! the discipline of `batch/mvmemory.rs`'s seqlock rather than the
+//! minimal acquire/release/fence choreography of the weak-memory
+//! Chase–Lev paper (Lê et al., PPoPP'13). Under `SeqCst` the argument
+//! is the strong one: all `top`/`bottom`/cell operations lie on one
+//! total order, so
+//!
+//! * `push` publishes the cell store before the `bottom` increment that
+//!   makes it visible, hence a `steal` that reads the new `bottom`
+//!   also reads the filled cell;
+//! * the owner's `pop` claims the bottom slot by decrementing `bottom`
+//!   *before* re-reading `top`; a concurrent `steal` claims the top
+//!   slot by CAS on `top`. For the last remaining item both racers
+//!   target the same slot and the `top` CAS decides exactly one winner
+//!   (the owner also CASes `top` in that case);
+//! * a stolen cell cannot be overwritten before the steal's CAS
+//!   resolves: `push` writes slot `b & mask`, and `b` can only reach
+//!   `t + capacity` (the aliasing index) after `top` has moved past
+//!   `t` — which is the very CAS the stealer is attempting.
+//!
+//! The deque is fixed-capacity (`push` returns `false` when full) so
+//! there is no grow path and no reclamation protocol; callers size the
+//! deque to their refill chunk ([`crate::batch::scheduler`]) or their
+//! preloaded share ([`run_sharded`]).
+//!
+//! NUMA note: pinning is round-robin over the allowed-CPU mask, which
+//! on a single-socket node is the whole story. On multi-socket nodes
+//! the ROADMAP's NUMA follow-on can slot a topology-aware [`PinPlan`]
+//! in here without touching any call site.
+
+use std::sync::atomic::{AtomicIsize, AtomicU64, Ordering::SeqCst};
+
+// ----------------------------------------------------------------
+// Core pinning (best-effort, Linux)
+// ----------------------------------------------------------------
+
+#[cfg(target_os = "linux")]
+mod affinity {
+    /// `cpu_set_t` is 1024 bits on glibc.
+    const CPU_SET_WORDS: usize = 16;
+
+    #[repr(C)]
+    pub struct CpuSet {
+        bits: [u64; CPU_SET_WORDS],
+    }
+
+    impl CpuSet {
+        pub fn empty() -> Self {
+            Self {
+                bits: [0; CPU_SET_WORDS],
+            }
+        }
+
+        pub fn set(&mut self, cpu: usize) {
+            if cpu < CPU_SET_WORDS * 64 {
+                self.bits[cpu / 64] |= 1u64 << (cpu % 64);
+            }
+        }
+
+        pub fn is_set(&self, cpu: usize) -> bool {
+            cpu < CPU_SET_WORDS * 64 && self.bits[cpu / 64] & (1u64 << (cpu % 64)) != 0
+        }
+
+        pub fn cpus(&self) -> Vec<usize> {
+            (0..CPU_SET_WORDS * 64).filter(|&c| self.is_set(c)).collect()
+        }
+    }
+
+    // glibc is already linked by std; declaring the prototypes locally
+    // avoids a libc crate dependency (the container has no registry).
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+        fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut CpuSet) -> i32;
+    }
+
+    /// The calling thread's allowed-CPU mask, or `None` on failure.
+    pub fn current_mask() -> Option<CpuSet> {
+        let mut set = CpuSet::empty();
+        let rc = unsafe { sched_getaffinity(0, std::mem::size_of::<CpuSet>(), &mut set) };
+        if rc == 0 {
+            Some(set)
+        } else {
+            None
+        }
+    }
+
+    /// Apply `mask` to the calling thread.
+    pub fn set_mask(mask: &CpuSet) -> bool {
+        unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), mask) == 0 }
+    }
+
+    /// Pin the calling thread to a single CPU.
+    pub fn pin_to(cpu: usize) -> bool {
+        let mut set = CpuSet::empty();
+        set.set(cpu);
+        set_mask(&set)
+    }
+}
+
+/// The CPUs this process may run on (empty on non-Linux platforms or
+/// when the mask cannot be read).
+pub fn allowed_cpus() -> Vec<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        affinity::current_mask().map(|m| m.cpus()).unwrap_or_default()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        Vec::new()
+    }
+}
+
+/// Pin the calling thread to `cpu`. Best-effort: returns `false` when
+/// unsupported (non-Linux) or denied.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        affinity::pin_to(cpu)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+        false
+    }
+}
+
+/// Restore the calling thread's affinity to `cpus` (used by tests to
+/// undo a pin). Best-effort.
+pub fn set_thread_affinity(cpus: &[usize]) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        let mut set = affinity::CpuSet::empty();
+        for &c in cpus {
+            set.set(c);
+        }
+        affinity::set_mask(&set)
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpus;
+        false
+    }
+}
+
+/// Worker-to-core placement: worker `i` pins to
+/// `allowed[i % allowed.len()]`. [`PinPlan::none`] disables pinning.
+pub struct PinPlan {
+    cores: Vec<usize>,
+}
+
+impl PinPlan {
+    /// Detect the allowed-CPU set of the current process.
+    pub fn detect() -> Self {
+        Self {
+            cores: allowed_cpus(),
+        }
+    }
+
+    /// A plan that never pins.
+    pub fn none() -> Self {
+        Self { cores: Vec::new() }
+    }
+
+    /// The core worker `w` should pin to, if any.
+    pub fn core_for(&self, w: usize) -> Option<usize> {
+        if self.cores.is_empty() {
+            None
+        } else {
+            Some(self.cores[w % self.cores.len()])
+        }
+    }
+
+    /// Pin the calling thread for worker `w`; returns whether a pin
+    /// was applied.
+    pub fn pin(&self, w: usize) -> bool {
+        match self.core_for(w) {
+            Some(c) => pin_current_thread(c),
+            None => false,
+        }
+    }
+}
+
+// ----------------------------------------------------------------
+// Work-stealing deque
+// ----------------------------------------------------------------
+
+/// Fixed-capacity Chase–Lev-style work-stealing deque of `u64` tasks.
+///
+/// Single-owner contract: exactly one thread (the owner) may call
+/// [`StealDeque::push`] / [`StealDeque::pop`]; any thread may call
+/// [`StealDeque::steal`]. Ownership may be handed between threads only
+/// across a happens-before edge (e.g. preloading before `spawn`, as
+/// [`run_sharded`] does). See the module docs for the ordering
+/// argument.
+pub struct StealDeque {
+    /// Next index to steal (monotonic; stealers CAS it forward).
+    top: AtomicIsize,
+    /// Next index to push (owner-only writes, except the empty-restore
+    /// in `pop`).
+    bottom: AtomicIsize,
+    cells: Box<[AtomicU64]>,
+    mask: usize,
+}
+
+impl StealDeque {
+    /// A deque holding at most `capacity` tasks (rounded up to a power
+    /// of two).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        Self {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            cells: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            mask: cap - 1,
+        }
+    }
+
+    /// Tasks currently queued (approximate under concurrency).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(SeqCst);
+        let t = self.top.load(SeqCst);
+        if b > t {
+            (b - t) as usize
+        } else {
+            0
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Owner-only: append a task at the bottom. Returns `false` when
+    /// the deque is full (the caller stops refilling and retries after
+    /// draining).
+    pub fn push(&self, task: u64) -> bool {
+        let b = self.bottom.load(SeqCst);
+        let t = self.top.load(SeqCst);
+        if (b - t) as usize >= self.cells.len() {
+            return false;
+        }
+        self.cells[(b as usize) & self.mask].store(task, SeqCst);
+        self.bottom.store(b + 1, SeqCst);
+        true
+    }
+
+    /// Owner-only: take the most recently pushed task.
+    pub fn pop(&self) -> Option<u64> {
+        let b = self.bottom.load(SeqCst) - 1;
+        self.bottom.store(b, SeqCst);
+        let t = self.top.load(SeqCst);
+        if t > b {
+            // Already empty: restore the canonical empty state.
+            self.bottom.store(t, SeqCst);
+            return None;
+        }
+        let task = self.cells[(b as usize) & self.mask].load(SeqCst);
+        if t == b {
+            // Last item: race the stealers for it via the top CAS.
+            let won = self.top.compare_exchange(t, t + 1, SeqCst, SeqCst).is_ok();
+            self.bottom.store(t + 1, SeqCst);
+            return if won { Some(task) } else { None };
+        }
+        Some(task)
+    }
+
+    /// Any thread: take the oldest task. Loops internally on a lost
+    /// CAS race (the loser re-reads; some other thread made progress).
+    pub fn steal(&self) -> Option<u64> {
+        loop {
+            let t = self.top.load(SeqCst);
+            let b = self.bottom.load(SeqCst);
+            if t >= b {
+                return None;
+            }
+            let task = self.cells[(t as usize) & self.mask].load(SeqCst);
+            if self.top.compare_exchange(t, t + 1, SeqCst, SeqCst).is_ok() {
+                return Some(task);
+            }
+        }
+    }
+}
+
+/// Round-robin steal scan over a set of per-worker deques on behalf of
+/// worker `me`: try each peer once, starting at the next neighbour,
+/// counting a success into `steal_counter`. Shared by [`RangeFeed`] and
+/// the batch scheduler's candidate deques.
+pub fn steal_from_peers(
+    deques: &[StealDeque],
+    me: usize,
+    steal_counter: &AtomicU64,
+) -> Option<u64> {
+    let k = deques.len();
+    for i in 1..k {
+        let p = (me + i) % k;
+        if let Some(v) = deques[p].steal() {
+            steal_counter.fetch_add(1, SeqCst);
+            return Some(v);
+        }
+    }
+    None
+}
+
+// ----------------------------------------------------------------
+// The pool
+// ----------------------------------------------------------------
+
+/// How a pool run is shaped.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Worker count (clamped to at least 1).
+    pub workers: usize,
+    /// Pin workers round-robin over the allowed-CPU mask.
+    pub pin: bool,
+}
+
+impl PoolConfig {
+    /// The default shape every execution loop uses: `workers` threads,
+    /// pinned.
+    pub fn pinned(workers: usize) -> Self {
+        Self {
+            workers: workers.max(1),
+            pin: true,
+        }
+    }
+}
+
+/// Counters a pool run reports back into the stats plane.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Tasks taken from a peer's deque.
+    pub steals: u64,
+    /// Workers whose core pin was applied successfully.
+    pub pinned_workers: u64,
+}
+
+/// Spawn `cfg.workers` scoped workers running `worker(index, pinned)`,
+/// run `main` on the calling thread while they work, then join. A
+/// worker panic is re-raised on the caller after every worker joined.
+///
+/// This is the crate's single spawn/join implementation — the batch
+/// executor, the fig2/fig3 kernel drivers, and the pipeline consumer
+/// all run their threads through here.
+pub fn run_pool_with<T, R>(
+    cfg: &PoolConfig,
+    worker: impl Fn(usize, bool) -> T + Sync,
+    main: impl FnOnce() -> R,
+) -> (Vec<T>, R)
+where
+    T: Send,
+{
+    let workers = cfg.workers.max(1);
+    let plan = if cfg.pin {
+        PinPlan::detect()
+    } else {
+        PinPlan::none()
+    };
+    std::thread::scope(|s| {
+        let worker = &worker;
+        let plan = &plan;
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                s.spawn(move || {
+                    let pinned = plan.pin(w);
+                    worker(w, pinned)
+                })
+            })
+            .collect();
+        let r = main();
+        let results = handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            })
+            .collect();
+        (results, r)
+    })
+}
+
+/// [`run_pool_with`] without a main-thread job.
+pub fn run_pool<T: Send>(cfg: &PoolConfig, worker: impl Fn(usize, bool) -> T + Sync) -> Vec<T> {
+    run_pool_with(cfg, worker, || ()).0
+}
+
+// ----------------------------------------------------------------
+// Stealing parallel-for over an index range
+// ----------------------------------------------------------------
+
+#[inline]
+fn pack_range(lo: usize, hi: usize) -> u64 {
+    debug_assert!(lo <= u32::MAX as usize && hi <= u32::MAX as usize);
+    ((lo as u64) << 32) | hi as u64
+}
+
+#[inline]
+fn unpack_range(v: u64) -> (usize, usize) {
+    ((v >> 32) as usize, (v & 0xFFFF_FFFF) as usize)
+}
+
+/// One worker's view of the shared range deques: drain your own, then
+/// steal from peers.
+pub struct RangeFeed<'p> {
+    me: usize,
+    deques: &'p [StealDeque],
+    steals: &'p AtomicU64,
+}
+
+impl RangeFeed<'_> {
+    /// The next `[lo, hi)` chunk to process, or `None` when every
+    /// deque has drained (ranges are never re-added, so `None` is
+    /// final).
+    pub fn next(&self) -> Option<(usize, usize)> {
+        if let Some(v) = self.deques[self.me].pop() {
+            return Some(unpack_range(v));
+        }
+        steal_from_peers(self.deques, self.me, self.steals).map(unpack_range)
+    }
+}
+
+/// Stealing parallel-for: cut `[0, total)` into `grain`-sized chunks,
+/// deal them contiguously onto per-worker deques, and run
+/// `worker(index, feed, pinned)` on the pool; each worker drains its
+/// own share and then steals from peers. Returns the per-worker
+/// results (in worker order) and the pool counters.
+pub fn run_sharded<T: Send>(
+    cfg: &PoolConfig,
+    total: usize,
+    grain: usize,
+    worker: impl Fn(usize, &RangeFeed<'_>, bool) -> T + Sync,
+) -> (Vec<T>, PoolStats) {
+    let workers = cfg.workers.max(1);
+    let grain = grain.max(1);
+    assert!(total <= u32::MAX as usize, "range pool packs u32 bounds");
+    let n_ranges = total.div_ceil(grain);
+    let share = n_ranges.div_ceil(workers).max(1);
+    let deques: Vec<StealDeque> = (0..workers).map(|_| StealDeque::new(share)).collect();
+    // Contiguous deal: worker w owns ranges [w*share, (w+1)*share) —
+    // the same per-thread locality the old static sharding had, now
+    // merely a starting assignment.
+    for r in 0..n_ranges {
+        let lo = r * grain;
+        let hi = ((r + 1) * grain).min(total);
+        let ok = deques[(r / share).min(workers - 1)].push(pack_range(lo, hi));
+        debug_assert!(ok, "preload exceeded deque capacity");
+    }
+    let steals = AtomicU64::new(0);
+    let pinned = AtomicU64::new(0);
+    let results = run_pool(cfg, |w, is_pinned| {
+        if is_pinned {
+            pinned.fetch_add(1, SeqCst);
+        }
+        let feed = RangeFeed {
+            me: w,
+            deques: &deques,
+            steals: &steals,
+        };
+        worker(w, &feed, is_pinned)
+    });
+    (
+        results,
+        PoolStats {
+            steals: steals.load(SeqCst),
+            pinned_workers: pinned.load(SeqCst),
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Mutex;
+
+    #[test]
+    fn deque_fifo_for_steal_lifo_for_pop() {
+        let d = StealDeque::new(8);
+        assert!(d.push(1) && d.push(2) && d.push(3));
+        assert_eq!(d.steal(), Some(1), "steal takes the oldest");
+        assert_eq!(d.pop(), Some(3), "pop takes the newest");
+        assert_eq!(d.pop(), Some(2));
+        assert_eq!(d.pop(), None);
+        assert_eq!(d.steal(), None);
+    }
+
+    #[test]
+    fn deque_reports_full_at_capacity() {
+        let d = StealDeque::new(2);
+        assert!(d.push(1));
+        assert!(d.push(2));
+        assert!(!d.push(3), "capacity 2 must refuse a third task");
+        assert_eq!(d.steal(), Some(1));
+        assert!(d.push(3), "space reopens after a steal");
+    }
+
+    #[test]
+    fn empty_deque_shutdown_is_clean() {
+        // The shutdown path every consumer takes: pop and steal on an
+        // empty (and never-used) deque return None and leave the
+        // indices canonical so later pushes still work.
+        let d = StealDeque::new(4);
+        for _ in 0..3 {
+            assert_eq!(d.pop(), None);
+            assert_eq!(d.steal(), None);
+        }
+        assert!(d.is_empty());
+        assert!(d.push(9));
+        assert_eq!(d.pop(), Some(9));
+        assert_eq!(d.pop(), None);
+    }
+
+    #[test]
+    fn steal_under_contention_delivers_each_task_once() {
+        // Owner pushes and pops while stealer threads hammer the top:
+        // every task must be delivered exactly once overall.
+        const TASKS: u64 = 20_000;
+        const STEALERS: usize = 3;
+        let d = StealDeque::new(64);
+        let seen: Vec<Mutex<Vec<u64>>> =
+            (0..STEALERS + 1).map(|_| Mutex::new(Vec::new())).collect();
+        let done = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for st in 0..STEALERS {
+                let d = &d;
+                let seen = &seen;
+                let done = &done;
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    while done.load(SeqCst) == 0 || !d.is_empty() {
+                        if let Some(v) = d.steal() {
+                            local.push(v);
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                    seen[st].lock().unwrap().extend(local);
+                });
+            }
+            // Owner: push everything (backing off when full), popping
+            // a bit along the way to exercise the bottom race.
+            let mut local = Vec::new();
+            let mut next = 1u64;
+            while next <= TASKS {
+                if d.push(next) {
+                    next += 1;
+                } else if let Some(v) = d.pop() {
+                    local.push(v);
+                }
+            }
+            while let Some(v) = d.pop() {
+                local.push(v);
+            }
+            done.store(1, SeqCst);
+            seen[STEALERS].lock().unwrap().extend(local);
+        });
+        let mut all: Vec<u64> = Vec::new();
+        for s in &seen {
+            all.extend(s.lock().unwrap().iter().copied());
+        }
+        assert_eq!(all.len() as u64, TASKS, "every task delivered");
+        let set: HashSet<u64> = all.iter().copied().collect();
+        assert_eq!(set.len() as u64, TASKS, "no task delivered twice");
+        assert_eq!(set.iter().max(), Some(&TASKS));
+    }
+
+    #[test]
+    fn pin_mask_round_trip() {
+        // Pin to the first allowed core, read the mask back, restore.
+        let original = allowed_cpus();
+        if original.is_empty() {
+            // Non-Linux or unreadable mask: the API must still be a
+            // well-behaved no-op.
+            assert!(!pin_current_thread(0));
+            return;
+        }
+        let target = original[0];
+        if pin_current_thread(target) {
+            let now = allowed_cpus();
+            assert_eq!(now, vec![target], "mask must round-trip through a pin");
+            assert!(set_thread_affinity(&original), "restore must succeed");
+            assert_eq!(allowed_cpus(), original);
+        }
+    }
+
+    #[test]
+    fn pin_plan_round_robins_allowed_cores() {
+        let plan = PinPlan {
+            cores: vec![2, 5, 7],
+        };
+        assert_eq!(plan.core_for(0), Some(2));
+        assert_eq!(plan.core_for(1), Some(5));
+        assert_eq!(plan.core_for(2), Some(7));
+        assert_eq!(plan.core_for(3), Some(2));
+        assert_eq!(PinPlan::none().core_for(0), None);
+    }
+
+    #[test]
+    fn run_pool_with_overlaps_main_and_workers() {
+        // main produces, workers consume: completion proves overlap
+        // (workers block until main sends).
+        let (tx, rx) = std::sync::mpsc::sync_channel::<u64>(1);
+        let rx = Mutex::new(rx);
+        let cfg = PoolConfig {
+            workers: 2,
+            pin: false,
+        };
+        let (sums, sent) = run_pool_with(
+            &cfg,
+            |_, _| {
+                let mut sum = 0u64;
+                loop {
+                    let v = rx.lock().unwrap().recv();
+                    match v {
+                        Ok(v) => sum += v,
+                        Err(_) => return sum,
+                    }
+                }
+            },
+            move || {
+                let mut sent = 0u64;
+                for v in 1..=100u64 {
+                    tx.send(v).unwrap();
+                    sent += v;
+                }
+                sent
+            },
+        );
+        assert_eq!(sums.iter().sum::<u64>(), sent);
+    }
+
+    #[test]
+    fn run_sharded_covers_the_whole_range_exactly_once() {
+        for (total, grain, workers) in [(1000usize, 7usize, 4usize), (16, 16, 3), (0, 4, 2), (5, 100, 2)] {
+            let hits: Vec<AtomicUsize> = (0..total).map(|_| AtomicUsize::new(0)).collect();
+            let cfg = PoolConfig {
+                workers,
+                pin: false,
+            };
+            let (counts, stats) = run_sharded(&cfg, total, grain, |_, feed, _| {
+                let mut n = 0usize;
+                while let Some((lo, hi)) = feed.next() {
+                    assert!(lo < hi && hi <= total);
+                    for i in lo..hi {
+                        hits[i].fetch_add(1, SeqCst);
+                    }
+                    n += hi - lo;
+                }
+                n
+            });
+            assert_eq!(counts.iter().sum::<usize>(), total);
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(SeqCst), 1, "index {i} covered once");
+            }
+            let _ = stats.steals; // scheduling-dependent; just must not panic
+        }
+    }
+
+    #[test]
+    fn run_sharded_stealing_balances_a_skewed_load() {
+        // Worker 0's share is artificially slow; the others must steal
+        // from it so the range still completes (and usually records
+        // steals — asserted only as "no range lost").
+        let total = 64usize;
+        let done = AtomicUsize::new(0);
+        let cfg = PoolConfig {
+            workers: 4,
+            pin: false,
+        };
+        run_sharded(&cfg, total, 1, |w, feed, _| {
+            while let Some((lo, hi)) = feed.next() {
+                if w == 0 {
+                    std::thread::yield_now();
+                }
+                done.fetch_add(hi - lo, SeqCst);
+            }
+        });
+        assert_eq!(done.load(SeqCst), total);
+    }
+
+    #[test]
+    fn pool_propagates_worker_panics_after_join() {
+        let result = std::panic::catch_unwind(|| {
+            run_pool(
+                &PoolConfig {
+                    workers: 2,
+                    pin: false,
+                },
+                |w, _| {
+                    if w == 1 {
+                        panic!("worker 1 exploded");
+                    }
+                    w
+                },
+            )
+        });
+        assert!(result.is_err(), "worker panic must surface on the caller");
+    }
+}

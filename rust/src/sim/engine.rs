@@ -64,11 +64,15 @@ enum Mode {
     /// never serialize through NOrec's sequence lock. Failed
     /// validations charge re-incarnation (and, for repeat offenders,
     /// ESTIMATE-wait) costs — the virtual-time analogue of the live
-    /// `BatchReport` counters. Admission is block-bounded: once a
-    /// block's quota is admitted, threads park until its last commit,
-    /// and the *same* `BlockSizeController` the live executors run
-    /// (pinned for `Batch`, AIMD for `BatchAdaptive`) sizes the next
-    /// block from the block's observed waste.
+    /// `BatchReport` counters. Admission models the live
+    /// `BatchSystem::run_pipelined` session's **overlapped drain**: up
+    /// to two blocks are open at once — block N+1's transactions admit
+    /// while block N's tail drains (counted as `overlapped_txns`), and
+    /// a thread parks only when it would need a *third* block. Blocks
+    /// complete in order; each completion feeds the *same*
+    /// `BlockSizeController` the live executors run (pinned for
+    /// `Batch`, AIMD for `BatchAdaptive`, with the block's virtual wall
+    /// time driving the optional latency target).
     MultiVersion,
 }
 
@@ -178,7 +182,7 @@ impl Simulator {
             // block-bounded admission, and the live controller sizing
             // each block (the cost model amortizes the block
             // write-back per transaction).
-            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive => Mode::MultiVersion,
+            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive { .. } => Mode::MultiVersion,
             _ => Mode::Hybrid,
         };
         // The block-size controller shared with the live executors
@@ -234,16 +238,23 @@ impl Simulator {
         let mut mv_commits: HashMap<u64, std::collections::VecDeque<(u64, u64)>> =
             HashMap::new();
         let mut mv_max_window: u64 = 0;
-        // Block-bounded admission: [mv_block_lo, mv_block_hi) is the
-        // open block. A thread whose next admission would cross
-        // mv_block_hi parks until the block's last commit, which
-        // consults the controller and reopens admission — the
-        // virtual-time analogue of BatchSystem finishing one block
-        // before the driver admits the next.
-        let mut mv_block_lo: u64 = 0;
-        let mut mv_block_hi: u64 = mv_ctl.current() as u64;
-        let mut mv_block_execs: u64 = 0;
-        let mut mv_block_commits: u64 = 0;
+        // Overlapped block admission — the virtual-time analogue of
+        // `BatchSystem::run_pipelined`: at most two blocks are open at
+        // once (the draining head plus one lookahead). A transaction
+        // admitted into the lookahead while the head is still draining
+        // counts as overlapped; a thread whose admission would need a
+        // third block parks until the head's last commit, which feeds
+        // the controller (waste + virtual wall time) and pops the
+        // queue in admission order.
+        struct SimBlock {
+            lo: u64,
+            hi: u64,
+            execs: u64,
+            commits: u64,
+            admitted_at: u64,
+        }
+        let mut mv_blocks: std::collections::VecDeque<SimBlock> =
+            std::collections::VecDeque::new();
         let mut mv_parked: Vec<usize> = Vec::new();
         // RNDHyTM's per-transaction rand() goes through libc's internal
         // lock: draws from all threads serialize (the paper: "overhead
@@ -271,14 +282,33 @@ impl Simulator {
             match th.state {
                 // ---------------------------------------------- Ready
                 TState::Ready => {
-                    if mode == Mode::MultiVersion && mv_next_idx >= mv_block_hi {
-                        // Block quota admitted but not yet fully
-                        // committed: park; the closing commit re-queues
-                        // us. (All in-flight txns are owned by
-                        // non-parked threads, so the closing commit
-                        // always arrives.)
-                        mv_parked.push(tid);
-                        continue;
+                    if mode == Mode::MultiVersion {
+                        // With no open block (start of run, or all open
+                        // blocks just completed) the next block anchors
+                        // at the admission cursor, not 0 — re-covering
+                        // committed index space would leave a block
+                        // that can never fill.
+                        let frontier = mv_blocks.back().map_or(mv_next_idx, |b| b.hi);
+                        if mv_next_idx >= frontier {
+                            if mv_blocks.len() >= 2 {
+                                // Head + lookahead both fully admitted
+                                // but not fully committed: park; a
+                                // completing head re-queues us. (All
+                                // in-flight txns are owned by
+                                // non-parked threads, so the closing
+                                // commit always arrives.)
+                                mv_parked.push(tid);
+                                continue;
+                            }
+                            let quota = mv_ctl.current().max(1) as u64;
+                            mv_blocks.push_back(SimBlock {
+                                lo: frontier,
+                                hi: frontier + quota,
+                                execs: 0,
+                                commits: 0,
+                                admitted_at: now,
+                            });
+                        }
                     }
                     let Some(desc) = th.stream.next() else {
                         th.done = true;
@@ -329,7 +359,17 @@ impl Simulator {
                             th.mv_idx = mv_next_idx;
                             mv_next_idx += 1;
                             th.mv_retries = 0;
-                            mv_block_execs += 1;
+                            if let Some(b) = mv_blocks
+                                .iter_mut()
+                                .find(|b| b.lo <= th.mv_idx && th.mv_idx < b.hi)
+                            {
+                                b.execs += 1;
+                            }
+                            if mv_blocks.len() >= 2 && th.mv_idx >= mv_blocks[1].lo {
+                                // Executing the lookahead block while
+                                // the head still drains.
+                                th.stats.overlapped_txns += 1;
+                            }
                             let d = scale(self.cost.mv_txn_cycles(
                                 desc.n_reads as u64,
                                 desc.n_writes as u64,
@@ -529,7 +569,12 @@ impl Simulator {
                             // sw_aborts exactly as BatchReport::to_stats
                             // does.
                             th.stats.sw_aborts += 1;
-                            mv_block_execs += 1;
+                            if let Some(b) = mv_blocks
+                                .iter_mut()
+                                .find(|b| b.lo <= my_idx && my_idx < b.hi)
+                            {
+                                b.execs += 1;
+                            }
                             let mut penalty = self.cost.mv_validate_per_read
                                 * desc.n_reads as u64
                                 + self.cost.mv_abort;
@@ -552,19 +597,29 @@ impl Simulator {
                                 mv_commits.entry(l).or_default().push_back((now, my_idx));
                             }
                             th.stats.sw_commits += 1;
-                            mv_block_commits += 1;
-                            if mv_next_idx >= mv_block_hi
-                                && mv_block_commits == mv_block_hi - mv_block_lo
+                            if let Some(b) = mv_blocks
+                                .iter_mut()
+                                .find(|b| b.lo <= my_idx && my_idx < b.hi)
                             {
-                                // The block's last commit: feed the
-                                // controller and reopen admission for
-                                // everyone parked on the barrier.
-                                mv_ctl.observe(mv_block_execs, mv_block_commits);
-                                mv_block_lo = mv_block_hi;
-                                mv_block_hi = mv_block_lo
-                                    .saturating_add(mv_ctl.current() as u64);
-                                mv_block_execs = 0;
-                                mv_block_commits = 0;
+                                b.commits += 1;
+                            }
+                            // Complete finished blocks from the head —
+                            // in admission order, exactly as the live
+                            // pipelined session does — feeding the
+                            // controller the block's waste AND its
+                            // virtual wall time (the latency-target
+                            // signal), then unparking admission.
+                            while let Some(front) = mv_blocks.front() {
+                                if front.commits < front.hi - front.lo {
+                                    break;
+                                }
+                                let b = mv_blocks.pop_front().unwrap();
+                                let wall = std::time::Duration::from_secs_f64(
+                                    self.cost
+                                        .to_seconds(now.saturating_sub(b.admitted_at))
+                                        .max(0.0),
+                                );
+                                mv_ctl.observe_block(b.execs, b.commits, wall);
                                 for p in mv_parked.drain(..) {
                                     queue.push(Reverse((now, p)));
                                 }
@@ -631,6 +686,21 @@ impl Simulator {
         }
 
         if mode == Mode::MultiVersion {
+            // The stream usually ends mid-block: the live session's
+            // complete_head still observes that final partial block, so
+            // the model does too (controller parity — same samples,
+            // same converged size).
+            let end = threads_sim.iter().map(|t| t.clock).max().unwrap_or(0);
+            for b in mv_blocks.drain(..) {
+                if b.commits > 0 {
+                    let wall = std::time::Duration::from_secs_f64(
+                        self.cost
+                            .to_seconds(end.saturating_sub(b.admitted_at))
+                            .max(0.0),
+                    );
+                    mv_ctl.observe_block(b.execs, b.commits, wall);
+                }
+            }
             if let Some(th0) = threads_sim.first_mut() {
                 // Controller outcome on the report row (thread 0):
                 // what `PolicySpec::label` and the figure tables read.
@@ -672,7 +742,7 @@ fn make_policy(spec: &PolicySpec) -> Option<Box<dyn RetryPolicy>> {
         | PolicySpec::StmNorec
         | PolicySpec::StmTl2
         | PolicySpec::Batch { .. }
-        | PolicySpec::BatchAdaptive => None,
+        | PolicySpec::BatchAdaptive { .. } => None,
     }
 }
 
@@ -715,7 +785,7 @@ mod tests {
             PolicySpec::DyAd { n: 43 },
             PolicySpec::Rnd { lo: 1, hi: 50 },
             PolicySpec::Batch { block: 2048 },
-            PolicySpec::BatchAdaptive,
+            PolicySpec::batch_adaptive(),
         ] {
             let out = run_gen(spec, 4, 10);
             let m = SimWorkload::new(10).edges();
@@ -777,8 +847,8 @@ mod tests {
 
     #[test]
     fn adaptive_batch_is_deterministic_and_reports_controller_state() {
-        let a = run_gen(PolicySpec::BatchAdaptive, 4, 10);
-        let b = run_gen(PolicySpec::BatchAdaptive, 4, 10);
+        let a = run_gen(PolicySpec::batch_adaptive(), 4, 10);
+        let b = run_gen(PolicySpec::batch_adaptive(), 4, 10);
         assert_eq!(a.cycles, b.cycles, "same seed, same trajectory");
         let t = a.stats.total();
         assert_eq!(t.total_commits(), SimWorkload::new(10).edges());
@@ -790,7 +860,7 @@ mod tests {
         // One thread = serial admission = zero conflict: every block is
         // clean, so the additive-increase law must raise the block size
         // above its starting point.
-        let out = run_gen(PolicySpec::BatchAdaptive, 1, 12);
+        let out = run_gen(PolicySpec::batch_adaptive(), 1, 12);
         let t = out.stats.total();
         assert_eq!(t.sw_aborts, 0, "serial admission cannot conflict");
         assert_eq!(t.total_commits(), SimWorkload::new(12).edges());
@@ -803,9 +873,11 @@ mod tests {
     }
 
     #[test]
-    fn block_barrier_costs_show_up_at_small_fixed_blocks() {
-        // Tiny blocks mean frequent admission barriers: makespan must
-        // not beat a comfortably large block at the same conflict load.
+    fn overlapped_drain_admits_lookahead_blocks() {
+        // Small blocks at 4 threads: the model must overlap block N+1's
+        // admissions with block N's drain (the run_pipelined analogue)
+        // and report them, while committing every transaction exactly
+        // once.
         let small = run_gen(PolicySpec::Batch { block: 8 }, 4, 10);
         let large = run_gen(PolicySpec::Batch { block: 2048 }, 4, 10);
         assert_eq!(
@@ -813,11 +885,26 @@ mod tests {
             large.stats.total().total_commits()
         );
         assert!(
-            small.cycles >= large.cycles,
-            "8-txn blocks ({}) should not outrun 2048-txn blocks ({})",
+            small.stats.total().overlapped_txns > 0,
+            "8-txn blocks at 4 threads must overlap adjacent blocks"
+        );
+        // One block of lookahead still bounds the in-flight window, so
+        // tiny blocks cannot meaningfully OUTRUN large ones.
+        assert!(
+            small.cycles * 10 >= large.cycles * 9,
+            "8-txn blocks ({}) should not materially outrun 2048-txn blocks ({})",
             small.cycles,
             large.cycles
         );
+    }
+
+    #[test]
+    fn single_thread_never_overlaps_blocks() {
+        // Serial admission commits each txn before the next admission:
+        // the head block is always complete before the lookahead would
+        // start, so no overlap is ever recorded.
+        let out = run_gen(PolicySpec::Batch { block: 64 }, 1, 10);
+        assert_eq!(out.stats.total().overlapped_txns, 0);
     }
 
     #[test]

@@ -45,6 +45,15 @@ pub struct TxStats {
     /// controller ran). `PolicySpec::label` reports this for
     /// `batch=adaptive` runs.
     pub final_block: u64,
+    /// Worker-runtime counter (`runtime::workers`): tasks taken from a
+    /// peer worker's deque.
+    pub steals: u64,
+    /// Worker-runtime counter: pool workers whose core pin applied
+    /// (a property of the run — merges take the max, not the sum).
+    pub pinned_workers: u64,
+    /// Cross-block pipelining: execution attempts started while the
+    /// previous block's validation tail was still draining.
+    pub overlapped_txns: u64,
     /// Wall-clock or virtual nanoseconds attributed to this thread.
     pub time_ns: u64,
 }
@@ -89,6 +98,9 @@ impl TxStats {
             // Later merges carry the most recent controller state.
             self.final_block = other.final_block;
         }
+        self.steals += other.steals;
+        self.pinned_workers = self.pinned_workers.max(other.pinned_workers);
+        self.overlapped_txns += other.overlapped_txns;
         self.time_ns = self.time_ns.max(other.time_ns);
     }
 }

@@ -34,16 +34,11 @@ fn pipeline(policy: PolicySpec, scale: u32, threads: usize, batch: usize, htm: H
     let sys = TmSystem::new(Arc::clone(&g.heap), htm);
     let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
     let (_, gen_stats) = generation::run(&sys, &g, &tuples, policy, threads, seed);
-    // Batching is per-thread: expected txn count = sum over threads of
-    // ceil(share / batch).
-    let per = tuples.len().div_ceil(threads);
-    let expected_txns: u64 = (0..threads)
-        .map(|tid| {
-            let lo = (tid * per).min(tuples.len());
-            let hi = ((tid + 1) * per).min(tuples.len());
-            ((hi - lo) as u64).div_ceil(batch as u64)
-        })
-        .sum();
+    // The worker runtime deals batch-aligned ranges to the stealing
+    // deques, so chunk boundaries coincide with a single global
+    // chunking regardless of which worker ran which range: expected
+    // txn count = ceil(total / batch).
+    let expected_txns = (tuples.len() as u64).div_ceil(batch as u64);
     if gen_stats.total().total_commits() != expected_txns {
         return Err(format!(
             "{}: commit count {} != txn count {expected_txns}",
