@@ -1,28 +1,33 @@
 //! Bench: the speculative batch backend vs DyAdHyTM vs the coarse lock
 //! on the SSCA-2 edge-insertion (generation) workload, plus a
-//! block-size × conflict-rate sweep on the descriptor substrate that
+//! **window × block × skew** sweep on the descriptor substrate that
 //! A/Bs the **lock-free multi-version store against the sharded-mutex
-//! baseline**, the **admission barrier against the cross-block
-//! pipelined session** (per cell: `steal_rate` and `overlap_ratio`),
-//! and measures where the **adaptive block controller** converges
-//! relative to the best fixed block.
+//! baseline**, the **admission barrier against the W-deep pipelined
+//! session** (per cell: `steal_rate`, `overlap_ratio`,
+//! `locality_steal_ratio`, `window_occupancy`), and measures where the
+//! **adaptive block controller** (block size co-tuned with window
+//! depth) converges relative to the best fixed cell.
 //!
 //! Prints markdown tables plus one machine-readable `BENCH_JSON` line
 //! per cell (the same flat-JSON record shape the other `BENCH_*`
 //! outputs use), so sweeps can be scraped with `grep '^BENCH_JSON'`.
 //! Record kinds: `"bench":"batch_throughput"` (generation head-to-head)
-//! and `"bench":"batch_block_sweep"` (block vs conflict rate, one
-//! record per (store, block, skew) cell plus one per adaptive run).
+//! and `"bench":"batch_block_sweep"` (window × block vs conflict rate,
+//! one record per (store, window, block, skew) cell plus one per
+//! adaptive run).
 //!
 //! The sweep additionally writes the stable perf-trajectory file
 //! **`BENCH_batch.json`** at the repository root: a JSON array of
-//! `{policy, block, conflict, txns_per_sec, steal_rate, overlap_ratio,
-//! ...}` records (`policy` is `batch` for the barrier lock-free store,
+//! `{policy, window, block, conflict, txns_per_sec, steal_rate,
+//! overlap_ratio, locality_steal_ratio, window_occupancy, ...}`
+//! records (`policy` is `batch` for the barrier lock-free store,
 //! `batch-mutex` for the sharded-mutex baseline, `batch-pipelined` for
-//! the cross-block-overlapping session, `batch-adaptive` for the
-//! controller run, whose `block` is the converged size). CI runs the
-//! bench in smoke mode (`BENCH_SMOKE=1`, smaller sizes) and uploads
-//! the file as an artifact.
+//! the cross-block-overlapping session at each window depth,
+//! `batch-adaptive` for the controller run, whose `block`/`window` are
+//! the converged values). CI runs the bench in smoke mode
+//! (`BENCH_SMOKE=1`, smaller sizes), **fails the run if the sweep
+//! produced no records** (an empty `[]` would otherwise upload as a
+//! "successful" artifact), and uploads the file.
 //!
 //! ```sh
 //! cargo bench --bench batch_throughput          # full sizes
@@ -50,6 +55,8 @@ fn smoke() -> bool {
 /// One sweep cell's outcome, destined for `BENCH_batch.json`.
 struct SweepRec {
     policy: &'static str,
+    /// Pipelining window depth (1 for the barrier cells).
+    window: usize,
     block: usize,
     zipf_s: f64,
     workers: usize,
@@ -60,11 +67,18 @@ struct SweepRec {
     /// Overlapped executions per execution (cross-block pipelining;
     /// 0 for barrier cells by construction).
     overlap_ratio: f64,
+    /// Fraction of steals served by a same-locality-group victim
+    /// (1.0 on flat topologies / when nothing was stolen).
+    locality_steal_ratio: f64,
+    /// Mean blocks in flight at admission (the W-deep window's
+    /// utilization; 0 for barrier cells, which admit no window).
+    window_occupancy: f64,
 }
 
 impl SweepRec {
     fn from_report(
         policy: &'static str,
+        window: usize,
         block: usize,
         zipf_s: f64,
         workers: usize,
@@ -74,6 +88,7 @@ impl SweepRec {
         let execs = report.executions.max(1) as f64;
         Self {
             policy,
+            window,
             block,
             zipf_s,
             workers,
@@ -81,15 +96,19 @@ impl SweepRec {
             txns_per_sec,
             steal_rate: report.steals as f64 / execs,
             overlap_ratio: report.overlapped_txns as f64 / execs,
+            locality_steal_ratio: report.locality_steal_ratio(),
+            window_occupancy: report.window_occupancy(),
         }
     }
 
     fn to_json(&self) -> String {
         format!(
-            "{{\"policy\":\"{}\",\"block\":{},\"conflict\":{:.4},\
+            "{{\"policy\":\"{}\",\"window\":{},\"block\":{},\"conflict\":{:.4},\
              \"txns_per_sec\":{:.0},\"zipf_s\":{},\"workers\":{},\
-             \"steal_rate\":{:.4},\"overlap_ratio\":{:.4}}}",
+             \"steal_rate\":{:.4},\"overlap_ratio\":{:.4},\
+             \"locality_steal_ratio\":{:.4},\"window_occupancy\":{:.4}}}",
             self.policy,
+            self.window,
             self.block,
             self.conflict,
             self.txns_per_sec,
@@ -97,6 +116,8 @@ impl SweepRec {
             self.workers,
             self.steal_rate,
             self.overlap_ratio,
+            self.locality_steal_ratio,
+            self.window_occupancy,
         )
     }
 }
@@ -150,13 +171,15 @@ fn run_fixed(
     (report, tps)
 }
 
-/// Sweep the admission block size against the workload's conflict
-/// skew: Zipf-s 0 spreads RMWs uniformly over the lines, s = 1.5
-/// concentrates them on a few hubs. Each (block, skew) cell runs the
-/// barrier executor on both stores **and** the cross-block pipelined
-/// session (the barrier-vs-pipelined A/B), emitting `steal_rate` and
-/// `overlap_ratio` per cell; each skew additionally runs the adaptive
-/// controller. Returns the records for `BENCH_batch.json`.
+/// Sweep the pipelining window and admission block size against the
+/// workload's conflict skew: Zipf-s 0 spreads RMWs uniformly over the
+/// lines, s = 1.5 concentrates them on a few hubs. Each (block, skew)
+/// cell runs the barrier executor on both stores **and** the
+/// cross-block pipelined session at window depths {2, 3, 4} (the
+/// barrier-vs-W-deep A/B), emitting `steal_rate`, `overlap_ratio`,
+/// `locality_steal_ratio`, and `window_occupancy` per cell; each skew
+/// additionally runs the adaptive controller (block co-tuned with
+/// window). Returns the records for `BENCH_batch.json`.
 fn block_conflict_sweep() -> Vec<SweepRec> {
     let sweep_txn_count: usize = if smoke() { 4096 } else { 16384 };
     const LINES: usize = 64;
@@ -164,37 +187,43 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
     let heap_words = LINES * WORDS_PER_LINE;
     let blocks = [256usize, 1024, 4096];
     let skews = [0.0f64, 0.8, 1.5];
+    let windows = [2usize, 3, 4];
 
     println!(
-        "\n### batch_throughput — block size vs conflict rate, barrier vs pipelined \
+        "\n### batch_throughput — window x block vs conflict rate, barrier vs pipelined \
          (Zipf RMW substrate, {WORKERS} workers, {sweep_txn_count} txns)\n"
     );
-    println!("| store | block | zipf_s | txns/s | executions | validation_aborts | dependencies | conflict_rate | steal_rate | overlap_ratio |");
-    println!("|---|---|---|---|---|---|---|---|---|---|");
+    println!("| store | window | block | zipf_s | txns/s | executions | validation_aborts | dependencies | conflict_rate | steal_rate | overlap_ratio | locality_steal_ratio | window_occupancy |");
+    println!("|---|---|---|---|---|---|---|---|---|---|---|---|---|");
 
     let emit = |policy: &'static str,
+                    window: usize,
                     block: usize,
                     zipf_s: f64,
                     report: &BatchReport,
                     tps: f64,
                     records: &mut Vec<SweepRec>| {
-        let rec = SweepRec::from_report(policy, block, zipf_s, WORKERS, report, tps);
+        let rec = SweepRec::from_report(policy, window, block, zipf_s, WORKERS, report, tps);
         println!(
-            "| {policy} | {block} | {zipf_s} | {tps:.0} | {} | {} | {} | {:.4} | {:.4} | {:.4} |",
+            "| {policy} | {window} | {block} | {zipf_s} | {tps:.0} | {} | {} | {} | {:.4} | {:.4} | {:.4} | {:.4} | {:.4} |",
             report.executions,
             report.validation_aborts,
             report.dependencies,
             rec.conflict,
             rec.steal_rate,
             rec.overlap_ratio,
+            rec.locality_steal_ratio,
+            rec.window_occupancy,
         );
         println!(
             "BENCH_JSON {{\"bench\":\"batch_block_sweep\",\"store\":\"{policy}\",\
-             \"block\":{block},\"zipf_s\":{zipf_s},\"workers\":{WORKERS},\
-             \"txns\":{sweep_txn_count},\"txns_per_sec\":{tps:.0},\
+             \"window\":{window},\"block\":{block},\"zipf_s\":{zipf_s},\
+             \"workers\":{WORKERS},\"txns\":{sweep_txn_count},\
+             \"txns_per_sec\":{tps:.0},\
              \"executions\":{},\"validations\":{},\"validation_aborts\":{},\
              \"dependencies\":{},\"conflict_rate\":{:.4},\"steal_rate\":{:.4},\
-             \"overlap_ratio\":{:.4}}}",
+             \"overlap_ratio\":{:.4},\"locality_steal_ratio\":{:.4},\
+             \"window_occupancy\":{:.4}}}",
             report.executions,
             report.validations,
             report.validation_aborts,
@@ -202,6 +231,8 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
             rec.conflict,
             rec.steal_rate,
             rec.overlap_ratio,
+            rec.locality_steal_ratio,
+            rec.window_occupancy,
         );
         records.push(rec);
     };
@@ -219,26 +250,30 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
                 {
                     best_fixed = Some((block, tps));
                 }
-                emit(policy, block, zipf_s, &report, tps, &mut records);
+                emit(policy, 1, block, zipf_s, &report, tps, &mut records);
             }
 
-            // The pipelined A/B on the same substrate and block grid:
-            // cross-block overlap replaces the admission barrier.
-            // Transaction construction happens before the clock starts,
-            // exactly as run_fixed's prebuilt slice does.
-            let pipe_txns = sweep_txns(zipf_s, sweep_txn_count, LINES);
-            let heap = TxHeap::new(heap_words);
-            let mut ctl = BlockSizeController::fixed(block);
-            let t0 = Instant::now();
-            let report = run_txns_pipelined(&heap, pipe_txns, WORKERS, &mut ctl);
-            let tps = sweep_txn_count as f64 / t0.elapsed().as_secs_f64().max(1e-9);
-            emit("batch-pipelined", block, zipf_s, &report, tps, &mut records);
+            // The pipelined A/B on the same substrate and block grid,
+            // one cell per window depth: W-deep cross-block overlap
+            // replaces the admission barrier. Transaction construction
+            // happens before the clock starts, exactly as run_fixed's
+            // prebuilt slice does.
+            for &window in &windows {
+                let pipe_txns = sweep_txns(zipf_s, sweep_txn_count, LINES);
+                let heap = TxHeap::new(heap_words);
+                let mut ctl = BlockSizeController::fixed(block).with_window(window);
+                let t0 = Instant::now();
+                let report = run_txns_pipelined(&heap, pipe_txns, WORKERS, &mut ctl);
+                let tps = sweep_txn_count as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+                emit("batch-pipelined", window, block, zipf_s, &report, tps, &mut records);
+            }
         }
 
-        // The adaptive controller on the same substrate (pipelined —
-        // the shipped configuration), bounded by the sweep's own grid
-        // so "converged" is comparable to "best fixed". Construction
-        // again stays outside the timed region.
+        // The adaptive controller on the same substrate (pipelined at
+        // the deepest window ceiling — the shipped configuration for
+        // `--policy batch=adaptive:window=4`), bounded by the sweep's
+        // own grid so "converged" is comparable to "best fixed".
+        // Construction again stays outside the timed region.
         let adaptive_txns = sweep_txns(zipf_s, sweep_txn_count, LINES);
         let heap = TxHeap::new(heap_words);
         let mut ctl = BlockSizeController::with_bounds(
@@ -246,17 +281,29 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
             blocks[0],
             blocks[blocks.len() - 1],
             BlockSizeController::GROW_STEP,
-        );
+        )
+        .with_window(windows[windows.len() - 1]);
         let t0 = Instant::now();
         let report = run_txns_pipelined(&heap, adaptive_txns, WORKERS, &mut ctl);
         let tps = sweep_txn_count as f64 / t0.elapsed().as_secs_f64().max(1e-9);
         let converged = ctl.current();
-        emit("batch-adaptive", converged, zipf_s, &report, tps, &mut records);
+        emit(
+            "batch-adaptive",
+            ctl.current_window(),
+            converged,
+            zipf_s,
+            &report,
+            tps,
+            &mut records,
+        );
         println!(
-            "> zipf {zipf_s}: adaptive converged to block {converged} \
-             ({} grows, {} shrinks{})",
+            "> zipf {zipf_s}: adaptive converged to block {converged}, window {} \
+             ({} grows, {} shrinks; {} window grows, {} window shrinks{})",
+            ctl.current_window(),
             ctl.grows,
             ctl.shrinks,
+            ctl.window_grows,
+            ctl.window_shrinks,
             best_fixed
                 .map(|(b, _)| format!("; best fixed lock-free block: {b}"))
                 .unwrap_or_default()
@@ -292,10 +339,23 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
                 .fold(0.0f64, f64::max);
             println!(
                 "> zipf {zipf_s}: pipelined {:.2}x vs barrier \
-                 (best-block txns/s {pipelined:.0} vs {lockfree:.0}, \
+                 (best-cell txns/s {pipelined:.0} vs {lockfree:.0}, \
                  max overlap_ratio {max_overlap:.4})",
                 pipelined / lockfree
             );
+            // Which window depth won this skew, and how utilized it was.
+            if let Some(best) = records
+                .iter()
+                .filter(|r| r.policy == "batch-pipelined" && r.zipf_s == zipf_s)
+                .max_by(|a, b| a.txns_per_sec.total_cmp(&b.txns_per_sec))
+            {
+                println!(
+                    "> zipf {zipf_s}: best pipelined cell window={} block={} \
+                     (occupancy {:.2}, locality_steal_ratio {:.2})",
+                    best.window, best.block, best.window_occupancy,
+                    best.locality_steal_ratio
+                );
+            }
         }
     }
     records
@@ -303,13 +363,26 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
 
 /// Write the perf-trajectory file at the repo root (next to
 /// `Cargo.toml`): a stable JSON array, one object per sweep cell.
+/// An empty sweep is a bench bug, not a result — fail loudly instead
+/// of writing the `[]` CI would silently upload as a "successful"
+/// artifact.
 fn write_bench_json(records: &[SweepRec]) {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_batch.json");
+    if records.is_empty() {
+        eprintln!(
+            "batch_throughput: sweep produced ZERO records — refusing to write an \
+             empty {path}"
+        );
+        std::process::exit(1);
+    }
     let body: Vec<String> = records.iter().map(|r| format!("  {}", r.to_json())).collect();
     let json = format!("[\n{}\n]\n", body.join(",\n"));
-    match std::fs::write(path, json) {
+    match std::fs::write(path, &json) {
         Ok(()) => println!("\nwrote {} records to {path}", records.len()),
-        Err(e) => eprintln!("failed to write {path}: {e}"),
+        Err(e) => {
+            eprintln!("failed to write {path}: {e}");
+            std::process::exit(1);
+        }
     }
 }
 

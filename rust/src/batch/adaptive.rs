@@ -19,6 +19,17 @@
 //!   and write-back cost, the analogue of staying in hardware while
 //!   the abort flags stay quiet.
 //!
+//! The controller also owns the **pipelining window depth** — how many
+//! blocks `BatchSystem::run_pipelined` keeps in flight at once
+//! ([`BlockSizeController::current_window`], configured by
+//! [`BlockSizeController::with_window`] / `--policy
+//! batch=adaptive:window=W`). Depth is co-tuned with block size by the
+//! same AIMD signals: a conflict spike (or latency overrun) that
+//! halves the block also shallows the window one step (deep cross-block
+//! speculation is exactly the waste amplifier in a hot regime), and a
+//! clean block that grows the block also deepens the window back
+//! toward its configured ceiling. A fixed controller pins both knobs.
+//!
 //! Both the live executors (`batch::workload`, `runtime::pipeline`) and
 //! the discrete-event simulator (`sim::engine`'s `Mode::MultiVersion`)
 //! drive this same controller, so `--policy batch=adaptive` is priced
@@ -60,12 +71,20 @@ pub struct BlockSizeController {
     lo: f64,
     /// Shrink when a block's wall time exceeds this deadline.
     latency_target: Option<Duration>,
+    /// Configured pipelining-window ceiling (blocks in flight at once).
+    window_max: usize,
+    /// Current co-tuned window depth, in `[window_floor, window_max]`.
+    window: usize,
     /// Additive-increase decisions taken.
     pub grows: u64,
     /// Multiplicative-decrease decisions taken (conflict + latency).
     pub shrinks: u64,
     /// The subset of `shrinks` forced by the latency target.
     pub latency_shrinks: u64,
+    /// Window-deepening decisions taken.
+    pub window_grows: u64,
+    /// Window-shallowing decisions taken.
+    pub window_shrinks: u64,
     /// Blocks observed.
     pub samples: u64,
 }
@@ -84,6 +103,9 @@ impl BlockSizeController {
     pub const HI_CONFLICT: f64 = 0.10;
     /// Wasted-execution fraction below which the block grows.
     pub const LO_CONFLICT: f64 = 0.02;
+    /// Default pipelining window: head + one overlap block (the PR-4
+    /// behaviour).
+    pub const DEFAULT_WINDOW: usize = 2;
 
     /// A pinned block size: `observe` is a no-op (modulo counters).
     pub fn fixed(block: usize) -> Self {
@@ -96,9 +118,13 @@ impl BlockSizeController {
             hi: Self::HI_CONFLICT,
             lo: Self::LO_CONFLICT,
             latency_target: None,
+            window_max: Self::DEFAULT_WINDOW,
+            window: Self::DEFAULT_WINDOW,
             grows: 0,
             shrinks: 0,
             latency_shrinks: 0,
+            window_grows: 0,
+            window_shrinks: 0,
             samples: 0,
         }
     }
@@ -126,10 +152,60 @@ impl BlockSizeController {
             hi: Self::HI_CONFLICT,
             lo: Self::LO_CONFLICT,
             latency_target: None,
+            window_max: Self::DEFAULT_WINDOW,
+            window: Self::DEFAULT_WINDOW,
             grows: 0,
             shrinks: 0,
             latency_shrinks: 0,
+            window_grows: 0,
+            window_shrinks: 0,
             samples: 0,
+        }
+    }
+
+    /// Configure the pipelining window depth `w` (blocks in flight at
+    /// once; `--policy batch=adaptive:window=W`). The window starts at
+    /// `w` and — for an adaptive controller — is co-tuned downward to
+    /// the floor (2, or 1 when `w == 1`) under conflict/latency
+    /// pressure and back up to `w` on clean blocks. A fixed controller
+    /// pins it at `w`. `w == 1` disables cross-block overlap entirely
+    /// (a pure per-block barrier stream).
+    pub fn with_window(mut self, w: usize) -> Self {
+        let w = w.max(1);
+        self.window_max = w;
+        self.window = w;
+        self
+    }
+
+    /// The pipelining window depth the session should run with now.
+    #[inline]
+    pub fn current_window(&self) -> usize {
+        self.window
+    }
+
+    /// The configured window ceiling.
+    #[inline]
+    pub fn window_max(&self) -> usize {
+        self.window_max
+    }
+
+    fn window_floor(&self) -> usize {
+        self.window_max.min(Self::DEFAULT_WINDOW).max(1)
+    }
+
+    fn shallow_window(&mut self) {
+        let next = self.window.saturating_sub(1).max(self.window_floor());
+        if next != self.window {
+            self.window = next;
+            self.window_shrinks += 1;
+        }
+    }
+
+    fn deepen_window(&mut self) {
+        let next = (self.window + 1).min(self.window_max);
+        if next != self.window {
+            self.window = next;
+            self.window_grows += 1;
         }
     }
 
@@ -188,6 +264,10 @@ impl BlockSizeController {
                     self.shrinks += 1;
                     self.latency_shrinks += 1;
                 }
+                // A deadline overrun also shallows the window: deep
+                // lookahead extends the in-flight tail the deadline is
+                // trying to bound.
+                self.shallow_window();
                 return;
             }
         }
@@ -199,6 +279,9 @@ impl BlockSizeController {
                 self.block = next;
                 self.shrinks += 1;
             }
+            // Co-tune: a hot regime makes cross-block speculation the
+            // waste amplifier — shallow the window with the block.
+            self.shallow_window();
         } else if conflict < self.lo {
             // Headroom guard: with a deadline set, only grow while the
             // block finishes within half of it.
@@ -211,17 +294,21 @@ impl BlockSizeController {
                     self.block = next;
                     self.grows += 1;
                 }
+                // Co-tune: clean blocks re-deepen the window toward
+                // its configured ceiling.
+                self.deepen_window();
             }
         }
     }
 
     /// Fold the controller's outcome into the stats plane: decision
-    /// counts plus the block size the run converged to (what
-    /// `PolicySpec::label` reports for `batch=adaptive`).
+    /// counts plus the block size and window depth the run converged
+    /// to (what `PolicySpec::label` reports for `batch=adaptive`).
     pub fn apply_to(&self, stats: &mut TxStats) {
         stats.block_grows += self.grows;
         stats.block_shrinks += self.shrinks;
         stats.final_block = self.block as u64;
+        stats.final_window = self.window as u64;
     }
 }
 
@@ -360,5 +447,62 @@ mod tests {
         assert_eq!(s.block_grows, 1);
         assert_eq!(s.block_shrinks, 1);
         assert_eq!(s.final_block, c.current() as u64);
+        assert_eq!(s.final_window, c.current_window() as u64);
+    }
+
+    #[test]
+    fn default_window_is_two_and_with_window_overrides() {
+        let c = BlockSizeController::adaptive();
+        assert_eq!(c.current_window(), BlockSizeController::DEFAULT_WINDOW);
+        let c = BlockSizeController::adaptive().with_window(4);
+        assert_eq!((c.current_window(), c.window_max()), (4, 4));
+        // w=0 clamps to 1 (barrier stream), never 0.
+        assert_eq!(BlockSizeController::fixed(8).with_window(0).current_window(), 1);
+    }
+
+    #[test]
+    fn conflict_pressure_shallows_the_window_to_the_floor() {
+        let mut c = BlockSizeController::with_bounds(400, 60, 400, 100).with_window(4);
+        c.observe(1000, 800); // 20% waste
+        assert_eq!(c.current_window(), 3, "shrink co-tunes the window");
+        c.observe(1000, 800);
+        assert_eq!(c.current_window(), 2);
+        c.observe(1000, 800);
+        assert_eq!(c.current_window(), 2, "floor is 2 (head + one overlap)");
+        assert_eq!(c.window_shrinks, 2);
+        // Clean blocks deepen back toward the ceiling.
+        c.observe(1000, 1000);
+        c.observe(1000, 1000);
+        assert_eq!(c.current_window(), 4);
+        assert_eq!(c.window_grows, 2);
+    }
+
+    #[test]
+    fn window_one_stays_a_barrier_stream() {
+        // w=1 floors at 1: no co-tuning can re-enable overlap.
+        let mut c = BlockSizeController::with_bounds(400, 60, 400, 100).with_window(1);
+        c.observe(1000, 800);
+        c.observe(1000, 1000);
+        assert_eq!(c.current_window(), 1);
+        assert_eq!((c.window_grows, c.window_shrinks), (0, 0));
+    }
+
+    #[test]
+    fn fixed_controller_pins_the_window() {
+        let mut c = BlockSizeController::fixed(128).with_window(3);
+        c.observe(1000, 500); // would shallow if adaptive
+        c.observe(1000, 1000); // would deepen if adaptive
+        assert_eq!(c.current_window(), 3);
+        assert_eq!((c.window_grows, c.window_shrinks), (0, 0));
+    }
+
+    #[test]
+    fn latency_overrun_shallows_the_window_too() {
+        let mut c = BlockSizeController::with_bounds(400, 50, 400, 100)
+            .with_latency_target(Duration::from_millis(10))
+            .with_window(3);
+        c.observe_block(1000, 1000, Duration::from_millis(30));
+        assert_eq!(c.current_window(), 2, "deadline overrun shallows lookahead");
+        assert_eq!(c.window_shrinks, 1);
     }
 }

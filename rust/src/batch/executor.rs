@@ -11,11 +11,15 @@
 //! number.
 //!
 //! Reads that find no lower in-block writer resolve through a
-//! [`BaseSource`]: the heap for a barrier run, or — under cross-block
-//! pipelining — the still-draining previous block's winning versions
-//! (falling back to the heap). A read that hits a predecessor ESTIMATE
-//! parks the transaction on the previous block via [`CrossBlockPark`]
-//! until that block completes.
+//! [`BaseSource`]: the heap for a barrier run (and for the head block
+//! of a pipelined stream), or — under W-deep cross-block pipelining —
+//! a **chain of draining predecessors**, nearest first: block N+k
+//! peeks block N+k-1's winning versions, falls through to N+k-2's, and
+//! so on down to the heap. A written-back link short-circuits to the
+//! heap (blocks complete in admission order, so everything older is
+//! already flushed), and a read that hits *any* live predecessor's
+//! ESTIMATE parks the transaction on its immediate predecessor via
+//! [`CrossBlockPark`] until that block completes.
 //!
 //! The worker is generic over the [`MvStore`] implementation so the
 //! same loop drives both the lock-free production store and the
@@ -49,31 +53,45 @@ pub struct BatchCounters {
     pub overlapped: AtomicU64,
 }
 
+/// One link of the predecessor chain a pipelined block resolves its
+/// base reads through: a draining predecessor's store plus its
+/// written-back flag.
+pub(super) struct PrevLink<'r, M: MvStore> {
+    pub mv: &'r M,
+    pub done: &'r AtomicBool,
+}
+
 /// Where a read with no lower in-block writer resolves.
 pub(super) enum BaseSource<'r, M: MvStore> {
     /// The pre-batch heap snapshot (barrier runs, and the head block of
     /// a pipelined run).
     Heap,
-    /// The previous block of a pipelined run: peek its winning version
-    /// while it drains (`done` false), fall through to the heap once it
-    /// has written back (`done` true). `None` = the predecessor's value
-    /// is an ESTIMATE — unresolved, park on it.
-    Prev { mv: &'r M, done: &'r AtomicBool },
+    /// The chain of draining predecessors of a W-deep pipelined run,
+    /// **nearest predecessor first** (block N+k-1, then N+k-2, …).
+    /// A link that reports `Base` defers to the next-older link; a
+    /// written-back link (`done`) short-circuits to the heap — blocks
+    /// complete strictly in admission order, so a flushed link implies
+    /// every older link is flushed too. `None` = some live link's value
+    /// is an ESTIMATE — unresolved, park.
+    Chain { links: Vec<PrevLink<'r, M>> },
 }
 
 impl<M: MvStore> BaseSource<'_, M> {
     fn value(&self, heap: &TxHeap, addr: Addr) -> Option<u64> {
         match self {
             BaseSource::Heap => Some(heap.load_acquire(addr)),
-            BaseSource::Prev { mv, done } => {
-                if done.load(Ordering::SeqCst) {
-                    return Some(heap.load_acquire(addr));
+            BaseSource::Chain { links } => {
+                for link in links {
+                    if link.done.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    match link.mv.read(addr, usize::MAX) {
+                        MvRead::Value(_, v) => return Some(v),
+                        MvRead::Base => continue,
+                        MvRead::Estimate(_) => return None,
+                    }
                 }
-                match mv.read(addr, usize::MAX) {
-                    MvRead::Value(_, v) => Some(v),
-                    MvRead::Base => Some(heap.load_acquire(addr)),
-                    MvRead::Estimate(_) => None,
-                }
+                Some(heap.load_acquire(addr))
             }
         }
     }
@@ -82,7 +100,9 @@ impl<M: MvStore> BaseSource<'_, M> {
     fn overlapping(&self) -> bool {
         match self {
             BaseSource::Heap => false,
-            BaseSource::Prev { done, .. } => !done.load(Ordering::SeqCst),
+            BaseSource::Chain { links } => links
+                .first()
+                .is_some_and(|l| !l.done.load(Ordering::SeqCst)),
         }
     }
 }

@@ -867,6 +867,73 @@ mod tests {
     }
 
     #[test]
+    fn seqlock_slot_reuse_across_incarnations_never_tears() {
+        // The ABA regression for the two-word seqlock: one slot is
+        // forced through publish → ESTIMATE → tombstone → re-publish
+        // cycles (the writing txn's footprint drops addr 96 and picks
+        // it back up across incarnations, so the SAME claimed slot is
+        // reused with strictly growing meta words). Readers double-read
+        // throughout; the value is derived from its incarnation, so any
+        // torn pairing of one incarnation's meta with another's value —
+        // the classic seqlock ABA — trips the assertion. Monotonic meta
+        // words are exactly what makes a stable double-read conclusive;
+        // this test is the executable form of that claim.
+        use std::sync::atomic::AtomicBool;
+        let mv = MvMemory::new(4);
+        let stop = AtomicBool::new(false);
+        const ADDR: Addr = 96;
+        let value_of = |inc: Incarnation| 0xA000 + inc as u64 * 3;
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    while !stop.load(SeqCst) {
+                        match mv.read(ADDR, 2) {
+                            // Tombstoned (or never-written) windows fall
+                            // through to base.
+                            MvRead::Base => {}
+                            MvRead::Estimate(t) => assert_eq!(t, 1),
+                            MvRead::Value((t, inc), v) => {
+                                assert_eq!(t, 1);
+                                assert_eq!(
+                                    v,
+                                    value_of(inc),
+                                    "torn (incarnation, value) pair after slot reuse"
+                                );
+                            }
+                        }
+                    }
+                });
+            }
+            // Writer: serialized incarnations of txn 1, cycling the
+            // footprint so the slot is retracted and reused, with
+            // ESTIMATE phases in between — every lifecycle transition
+            // the slot's meta word can take, each at a fresh
+            // incarnation.
+            for inc in 0..900u32 {
+                match inc % 3 {
+                    0 => {
+                        mv.record((1, inc), Vec::new(), &[(ADDR, value_of(inc))]);
+                        mv.convert_writes_to_estimates(1);
+                    }
+                    1 => {
+                        // Footprint drops ADDR: the claimed slot is
+                        // tombstoned at this incarnation...
+                        mv.record((1, inc), Vec::new(), &[(ADDR + 8, inc as u64)]);
+                    }
+                    _ => {
+                        // ...and republished by the next one — same
+                        // slot, higher meta.
+                        mv.record((1, inc), Vec::new(), &[(ADDR, value_of(inc))]);
+                    }
+                }
+            }
+            stop.store(true, SeqCst);
+        });
+        // The last cycle ends on a publish: the slot must be live.
+        assert_eq!(mv.read(ADDR, 2), MvRead::Value((1, 899), value_of(899)));
+    }
+
+    #[test]
     fn lockfree_dense_addresses_spread_and_resolve() {
         // Neighbouring word addresses (the dense SSCA-2 pattern) land
         // in distinct chains but all resolve correctly.

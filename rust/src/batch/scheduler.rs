@@ -8,8 +8,12 @@
 //! runs dry it refills a whole chunk of indices from whichever stream
 //! is further behind (one `fetch_add` per [`REFILL_CHUNK`] candidates
 //! instead of one per task), and when both streams are drained it
-//! steals candidates from its peers' deques. A transaction's lifecycle
-//! is tracked per index:
+//! steals candidates from its peers' deques — **same-locality-group
+//! peers first** ([`Scheduler::with_groups`] carries the topology the
+//! worker runtime's `PinPlan` detected, so candidate chunks migrate
+//! within an L3/socket domain before any cross-socket steal; the
+//! local/remote split is reported through [`Scheduler::local_steals`]).
+//! A transaction's lifecycle is tracked per index:
 //!
 //! ```text
 //! ReadyToExecute --try_incarnate--> Executing --finish_execution--> Executed
@@ -154,15 +158,30 @@ pub struct Scheduler {
     /// Per-worker candidate deques (worker `w` owns `deques[w]`; any
     /// worker may steal from any other).
     deques: Box<[StealDeque]>,
+    /// Locality-group id per worker (from the pool's `PinPlan`; all
+    /// zero under the flat fallback): the steal scan drains same-group
+    /// peers before crossing sockets.
+    groups: Box<[usize]>,
     /// Candidates taken from a peer's deque.
     steal_cnt: AtomicU64,
+    /// The subset of `steal_cnt` whose victim shared the thief's
+    /// locality group.
+    local_steal_cnt: AtomicU64,
 }
 
 impl Scheduler {
     /// Scheduler for a batch of `n` transactions driven by `workers`
     /// pool workers (worker indices `0..workers` passed to
-    /// [`Scheduler::next_task`]).
+    /// [`Scheduler::next_task`]) with a flat (single-group) topology.
     pub fn new(n: usize, workers: usize) -> Self {
+        Self::with_groups(n, workers, &[])
+    }
+
+    /// [`Scheduler::new`] with the pool's locality-group layout:
+    /// `groups[w]` is worker `w`'s socket/L3 group (missing entries
+    /// default to group 0, so a short or empty slice is the flat
+    /// topology).
+    pub fn with_groups(n: usize, workers: usize, groups: &[usize]) -> Self {
         let workers = workers.max(1);
         Self {
             n,
@@ -176,7 +195,11 @@ impl Scheduler {
                 .collect(),
             deps: (0..n).map(|_| Mutex::new(Vec::new())).collect(),
             deques: (0..workers).map(|_| StealDeque::new(REFILL_CHUNK)).collect(),
+            groups: (0..workers)
+                .map(|w| groups.get(w).copied().unwrap_or(0))
+                .collect(),
             steal_cnt: AtomicU64::new(0),
+            local_steal_cnt: AtomicU64::new(0),
         }
     }
 
@@ -189,6 +212,12 @@ impl Scheduler {
     /// Candidates taken from a peer's deque so far.
     pub fn steals(&self) -> u64 {
         self.steal_cnt.load(Ordering::SeqCst)
+    }
+
+    /// The subset of [`Scheduler::steals`] served by a same-group peer
+    /// (equals `steals()` under the flat topology).
+    pub fn local_steals(&self) -> u64 {
+        self.local_steal_cnt.load(Ordering::SeqCst)
     }
 
     /// Has the execution stream handed out every index at least once?
@@ -348,7 +377,13 @@ impl Scheduler {
             if self.refill(w) {
                 continue;
             }
-            if let Some(c) = steal_from_peers(&self.deques, w, &self.steal_cnt) {
+            if let Some(c) = steal_from_peers(
+                &self.deques,
+                w,
+                &self.groups,
+                &self.steal_cnt,
+                &self.local_steal_cnt,
+            ) {
                 match self.resolve(c) {
                     Some(t) => return Some(t),
                     None => continue,
@@ -622,6 +657,28 @@ mod tests {
         assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
         assert_eq!(s.next_task(1), Some(Task::Execution((1, 0))));
         assert_eq!(s.steals(), 1, "worker 1's task came from worker 0's deque");
+        assert_eq!(s.local_steals(), 1, "flat topology: every steal is local");
+    }
+
+    #[test]
+    fn grouped_scheduler_counts_same_group_steals_as_local() {
+        // Workers 0 and 1 share a locality group: worker 0's refill
+        // buffers both candidates, worker 1's steal is in-group.
+        let s = Scheduler::with_groups(2, 3, &[0, 0, 1]);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(1), Some(Task::Execution((1, 0))));
+        assert_eq!((s.steals(), s.local_steals()), (1, 1));
+    }
+
+    #[test]
+    fn grouped_scheduler_crosses_groups_only_when_local_is_dry() {
+        // Worker 1 sits alone against group 0: its steal must still
+        // succeed, but be accounted as remote.
+        let s = Scheduler::with_groups(2, 2, &[0, 1]);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(1), Some(Task::Execution((1, 0))));
+        assert_eq!(s.steals(), 1);
+        assert_eq!(s.local_steals(), 0, "cross-group steal is not local");
     }
 
     #[test]

@@ -41,6 +41,7 @@ use crate::graph::layout::Graph;
 use crate::graph::rmat::EdgeTuple;
 use crate::graph::subgraph::SubgraphResult;
 use crate::mem::{TxHeap, WORDS_PER_LINE};
+use crate::runtime::workers::PoolConfig;
 use crate::sim::workload::TxnDesc;
 use crate::stats::StatsTable;
 use crate::tm::access::{DirectAccess, TxAccess, TxResult};
@@ -181,8 +182,21 @@ pub fn run_txns_pipelined(
     concurrency: usize,
     ctl: &mut BlockSizeController,
 ) -> BatchReport {
+    run_txns_pipelined_with_pool(heap, txns, &PoolConfig::pinned(concurrency), ctl)
+}
+
+/// [`run_txns_pipelined`] with an explicit pool shape — `pin: false`
+/// exercises the topology-fallback path (flat groups, no affinity),
+/// which is what the determinism suite's pinning-unavailable case and
+/// hosted-CI runners hit.
+pub fn run_txns_pipelined_with_pool(
+    heap: &TxHeap,
+    txns: Vec<BatchTxn<'_>>,
+    pool: &PoolConfig,
+    ctl: &mut BlockSizeController,
+) -> BatchReport {
     let mut iter = txns.into_iter();
-    BatchSystem::run_pipelined::<MvMemory, _>(
+    BatchSystem::run_pipelined_pool::<MvMemory, _>(
         heap,
         move |block| {
             let blk: Vec<BatchTxn> = iter.by_ref().take(block.max(1)).collect();
@@ -192,7 +206,7 @@ pub fn run_txns_pipelined(
                 Some(blk)
             }
         },
-        concurrency,
+        pool,
         ctl,
     )
 }

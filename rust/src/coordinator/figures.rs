@@ -39,9 +39,10 @@ pub fn thread_axis() -> Vec<usize> {
 }
 
 /// Every scheme on one axis: the six Figure-2 policies, the remaining
-/// Figure-3 HyTM variants, and the batch backend in both its fixed and
-/// runtime-adaptive block-sizing forms — the one table that places
-/// `batch` next to the paper's policies.
+/// Figure-3 HyTM variants, and the batch backend in its fixed,
+/// runtime-adaptive, and deep-window (`window=4`) forms — the one
+/// table that places `batch` next to the paper's policies and prices
+/// the W-block pipelining lookahead.
 pub fn combined_set() -> Vec<PolicySpec> {
     let mut v = PolicySpec::fig2_set();
     for p in PolicySpec::fig3_set() {
@@ -53,7 +54,23 @@ pub fn combined_set() -> Vec<PolicySpec> {
         block: crate::batch::DEFAULT_BLOCK,
     });
     v.push(PolicySpec::batch_adaptive());
+    v.push(PolicySpec::BatchAdaptive {
+        latency_ms: 0,
+        window: 4,
+    });
     v
+}
+
+/// Row label for a figure table: the family name, plus the parameters
+/// that distinguish two rows of the same family (today: the adaptive
+/// batch window ceiling).
+fn row_label(p: &PolicySpec) -> String {
+    match *p {
+        PolicySpec::BatchAdaptive { window, .. } if window > 0 => {
+            format!("{}(window={window})", p.name())
+        }
+        _ => p.name().to_string(),
+    }
 }
 
 /// Look up a figure by CLI name ("2a".."2f", "3a".."3c", "4a".."4c",
@@ -222,14 +239,14 @@ pub fn render_figure(fig: &FigureSpec, seed: u64) -> String {
 
     for &policy in &fig.policies {
         if !counters {
-            out.push_str(&format!("| {} |", policy.name()));
+            out.push_str(&format!("| {} |", row_label(&policy)));
         }
         for &t in &fig.threads {
             let (secs, stats) = sim_cell(policy, t, fig.scale, fig.kernel, 1, seed);
             if counters {
                 out.push_str(&format!(
                     "| {} | {} | {:.0} | {:.0} | {:.1} |\n",
-                    policy.name(),
+                    row_label(&policy),
                     t,
                     stats.hw_attempts_per_thread(),
                     stats.hw_retries_per_thread(),
@@ -318,11 +335,24 @@ mod tests {
     #[test]
     fn combined_figure_places_batch_next_to_the_policies() {
         let fig = fig_by_name("combined").unwrap();
-        let names: Vec<&str> = fig.policies.iter().map(|p| p.name()).collect();
-        for expected in ["lock", "stm", "dyad-hytm", "rnd-hytm", "batch", "batch-adaptive"] {
-            assert!(names.contains(&expected), "missing {expected}: {names:?}");
+        let names: Vec<String> = fig.policies.iter().map(row_label).collect();
+        for expected in [
+            "lock",
+            "stm",
+            "dyad-hytm",
+            "rnd-hytm",
+            "batch",
+            "batch-adaptive",
+            "batch-adaptive(window=4)",
+        ] {
+            assert!(
+                names.iter().any(|n| n == expected),
+                "missing {expected}: {names:?}"
+            );
         }
-        // No duplicates: dyad appears in both source sets but once here.
+        // No duplicate rows: dyad appears in both source sets but once
+        // here, and the window variant is distinguishable from the
+        // default adaptive row.
         let mut dedup = names.clone();
         dedup.sort_unstable();
         dedup.dedup();

@@ -194,11 +194,17 @@ pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
         PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive { .. }
     ) {
         // Worker-runtime view of the run: cross-block overlap, deque
-        // steals, and how many workers the affinity plan actually
-        // pinned.
+        // steals (with the locality split from the topology-aware
+        // plan), how many workers the affinity plan actually pinned,
+        // and the pipelining window the controller finished on.
         eprintln!(
-            "[worker-runtime] overlapped_txns={} steals={} pinned_workers={}",
-            merged.overlapped_txns, merged.steals, merged.pinned_workers,
+            "[worker-runtime] overlapped_txns={} steals={} local_steals={} \
+             pinned_workers={} window={}",
+            merged.overlapped_txns,
+            merged.steals,
+            merged.local_steals,
+            merged.pinned_workers,
+            merged.final_window,
         );
     }
 

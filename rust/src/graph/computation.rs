@@ -181,6 +181,7 @@ pub fn run(
         s.time_ns = t2 + p1.time_ns;
         if tid == 0 {
             s.steals += pool1.steals + pool2.steals;
+            s.local_steals += pool1.local_steals + pool2.local_steals;
             s.pinned_workers = pool1.pinned_workers.max(pool2.pinned_workers);
         }
         table.push(tid, s);

@@ -155,6 +155,7 @@ pub fn run(
     for (tid, mut stats) in rows.into_iter().enumerate() {
         if tid == 0 {
             stats.steals += pool.steals;
+            stats.local_steals += pool.local_steals;
             stats.pinned_workers = pool.pinned_workers;
         }
         table.push(tid, stats);

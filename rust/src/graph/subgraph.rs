@@ -153,6 +153,7 @@ pub fn run(
         for (tid, mut s2) in rows.into_iter().enumerate() {
             if tid == 0 {
                 s2.steals += pool.steals;
+                s2.local_steals += pool.local_steals;
                 s2.pinned_workers = pool.pinned_workers;
             }
             let keep = table.rows[tid].stats.time_ns + s2.time_ns;

@@ -63,12 +63,18 @@ pub enum PolicySpec {
     /// `latency_ms > 0` (`--policy batch=adaptive:latency=MS`) adds a
     /// block deadline: a block whose wall time overruns it halves even
     /// at a clean conflict rate — the streaming pipeline's
-    /// blocks-sized-by-deadline mode. Routed exactly like
-    /// [`PolicySpec::Batch`]; `label` reports the converged block size
-    /// (and the deadline, when set).
+    /// blocks-sized-by-deadline mode. `window > 0`
+    /// (`--policy batch=adaptive:window=W`) sets the cross-block
+    /// pipelining window ceiling: up to W blocks in flight at once,
+    /// co-tuned downward with block size under conflict pressure
+    /// (0 = the default 2-deep head+overlap window). Routed exactly
+    /// like [`PolicySpec::Batch`]; `label` reports the converged block
+    /// size (and the deadline/window, when set).
     BatchAdaptive {
         /// Block wall-time deadline in milliseconds; 0 = none.
         latency_ms: u32,
+        /// Pipelining window ceiling in blocks; 0 = default (2).
+        window: u32,
     },
 }
 
@@ -76,7 +82,10 @@ impl PolicySpec {
     /// The adaptive batch backend without a latency deadline — the
     /// `--policy batch=adaptive` default.
     pub const fn batch_adaptive() -> PolicySpec {
-        PolicySpec::BatchAdaptive { latency_ms: 0 }
+        PolicySpec::BatchAdaptive {
+            latency_ms: 0,
+            window: 0,
+        }
     }
 
     /// The six Figure-2 policies with the paper's defaults.
@@ -111,7 +120,8 @@ impl PolicySpec {
 
     /// The policy's *family* name. Parameters are not part of it —
     /// `Fx { n: 20 }` and `Fx { n: 43 }` are both `"fx-hytm"`, and
-    /// `BatchAdaptive { latency_ms: 40 }` is `"batch-adaptive"` — so
+    /// `BatchAdaptive { latency_ms: 40, window: 4 }` is
+    /// `"batch-adaptive"` — so
     /// `parse(name())` reconstructs the family with its *default*
     /// parameters. Use the original CLI spelling (or
     /// [`PolicySpec::label`]) when a round-trip must preserve them.
@@ -173,12 +183,28 @@ impl PolicySpec {
                 sw_quantum: 64,
             },
             "batch" => match arg {
-                Some("adaptive") => PolicySpec::batch_adaptive(),
-                // `batch=adaptive:latency=MS`: adaptive sizing with a
-                // block wall-time deadline.
-                Some(a) if a.starts_with("adaptive:latency=") => {
-                    let ms: u32 = a["adaptive:latency=".len()..].parse().ok()?;
-                    PolicySpec::BatchAdaptive { latency_ms: ms }
+                // `batch=adaptive[:latency=MS][:window=W]`: adaptive
+                // sizing with optional colon-separated knobs — a block
+                // wall-time deadline and/or a pipelining window
+                // ceiling. Unknown keys and malformed values are
+                // rejected, not silently defaulted.
+                Some(a) if a == "adaptive" || a.starts_with("adaptive:") => {
+                    let mut latency_ms = 0u32;
+                    let mut window = 0u32;
+                    if let Some(opts) =
+                        a.strip_prefix("adaptive").and_then(|r| r.strip_prefix(':'))
+                    {
+                        for kv in opts.split(':') {
+                            match kv.split_once('=') {
+                                Some(("latency", v)) => latency_ms = v.parse().ok()?,
+                                Some(("window", v)) => {
+                                    window = v.parse().ok().filter(|&w| w > 0)?;
+                                }
+                                _ => return None,
+                            }
+                        }
+                    }
+                    PolicySpec::BatchAdaptive { latency_ms, window }
                 }
                 _ => PolicySpec::Batch {
                     block: arg
@@ -217,10 +243,20 @@ impl PolicySpec {
             {
                 "batch(fallback:norec)".into()
             }
-            PolicySpec::BatchAdaptive { latency_ms } if stats.final_block > 0 => {
+            PolicySpec::BatchAdaptive { latency_ms, window } if stats.final_block > 0 => {
                 let mut parts = vec![format!("block={}", stats.final_block)];
                 if latency_ms > 0 {
                     parts.push(format!("latency={latency_ms}ms"));
+                }
+                if window > 0 {
+                    // The depth the controller converged to, out of the
+                    // configured ceiling.
+                    let converged = if stats.final_window > 0 {
+                        stats.final_window
+                    } else {
+                        window as u64
+                    };
+                    parts.push(format!("window={converged}/{window}"));
                 }
                 runtime_parts(&mut parts);
                 format!("batch(adaptive:{})", parts.join(","))
@@ -247,15 +283,17 @@ impl PolicySpec {
         use crate::batch::adaptive::BlockSizeController;
         match *self {
             PolicySpec::Batch { block } => Some(BlockSizeController::fixed(block)),
-            PolicySpec::BatchAdaptive { latency_ms } => {
-                let ctl = BlockSizeController::adaptive();
-                Some(if latency_ms > 0 {
-                    ctl.with_latency_target(std::time::Duration::from_millis(
+            PolicySpec::BatchAdaptive { latency_ms, window } => {
+                let mut ctl = BlockSizeController::adaptive();
+                if latency_ms > 0 {
+                    ctl = ctl.with_latency_target(std::time::Duration::from_millis(
                         latency_ms as u64,
-                    ))
-                } else {
-                    ctl
-                })
+                    ));
+                }
+                if window > 0 {
+                    ctl = ctl.with_window(window as usize);
+                }
+                Some(ctl)
             }
             _ => None,
         }
@@ -688,9 +726,38 @@ mod tests {
         // after the `=` is rejected, not silently defaulted.
         assert_eq!(
             PolicySpec::parse("batch=adaptive:latency=40"),
-            Some(PolicySpec::BatchAdaptive { latency_ms: 40 })
+            Some(PolicySpec::BatchAdaptive {
+                latency_ms: 40,
+                window: 0
+            })
         );
         assert_eq!(PolicySpec::parse("batch=adaptive:latency=oops"), None);
+        // The window spelling, alone and combined (either order).
+        assert_eq!(
+            PolicySpec::parse("batch=adaptive:window=3"),
+            Some(PolicySpec::BatchAdaptive {
+                latency_ms: 0,
+                window: 3
+            })
+        );
+        assert_eq!(
+            PolicySpec::parse("batch=adaptive:latency=40:window=4"),
+            Some(PolicySpec::BatchAdaptive {
+                latency_ms: 40,
+                window: 4
+            })
+        );
+        assert_eq!(
+            PolicySpec::parse("batch=adaptive:window=4:latency=40"),
+            Some(PolicySpec::BatchAdaptive {
+                latency_ms: 40,
+                window: 4
+            })
+        );
+        // window=0, malformed values, and unknown keys are rejected.
+        assert_eq!(PolicySpec::parse("batch=adaptive:window=0"), None);
+        assert_eq!(PolicySpec::parse("batch=adaptive:window=x"), None);
+        assert_eq!(PolicySpec::parse("batch=adaptive:depth=3"), None);
     }
 
     #[test]
@@ -784,9 +851,34 @@ mod tests {
         );
         // A latency deadline is part of the label.
         assert_eq!(
-            PolicySpec::BatchAdaptive { latency_ms: 25 }.label(&stats),
+            PolicySpec::BatchAdaptive {
+                latency_ms: 25,
+                window: 0
+            }
+            .label(&stats),
             "batch(adaptive:block=1536,latency=25ms)"
         );
+        // A configured window reports converged/ceiling depth — the
+        // spec's ceiling when the controller state never reached the
+        // stats, the co-tuned depth when it did.
+        assert_eq!(
+            PolicySpec::BatchAdaptive {
+                latency_ms: 0,
+                window: 4
+            }
+            .label(&stats),
+            "batch(adaptive:block=1536,window=4/4)"
+        );
+        stats.final_window = 2;
+        assert_eq!(
+            PolicySpec::BatchAdaptive {
+                latency_ms: 0,
+                window: 4
+            }
+            .label(&stats),
+            "batch(adaptive:block=1536,window=2/4)"
+        );
+        stats.final_window = 0;
         // A fixed batch run never claims adaptivity.
         assert_eq!(PolicySpec::Batch { block: 64 }.label(&stats), "batch");
     }
@@ -817,13 +909,28 @@ mod tests {
         let adaptive = PolicySpec::batch_adaptive().batch_sizing().unwrap();
         assert!(adaptive.is_adaptive());
         assert_eq!(adaptive.latency_target(), None);
-        let deadline = PolicySpec::BatchAdaptive { latency_ms: 15 }
-            .batch_sizing()
-            .unwrap();
+        assert_eq!(
+            adaptive.current_window(),
+            crate::batch::adaptive::BlockSizeController::DEFAULT_WINDOW
+        );
+        let deadline = PolicySpec::BatchAdaptive {
+            latency_ms: 15,
+            window: 0,
+        }
+        .batch_sizing()
+        .unwrap();
         assert_eq!(
             deadline.latency_target(),
             Some(std::time::Duration::from_millis(15))
         );
+        let windowed = PolicySpec::BatchAdaptive {
+            latency_ms: 0,
+            window: 4,
+        }
+        .batch_sizing()
+        .unwrap();
+        assert_eq!(windowed.current_window(), 4);
+        assert_eq!(windowed.window_max(), 4);
         assert!(PolicySpec::StmNorec.batch_sizing().is_none());
     }
 

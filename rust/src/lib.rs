@@ -18,20 +18,42 @@
 //!   Rust via the PJRT CPU client ([`runtime`]). Python never runs on the
 //!   request path.
 //!
-//! ## The worker runtime
+//! ## The worker runtime: topology-aware placement
 //!
 //! Everything that runs threads goes through one shared subsystem,
-//! [`runtime::workers`]: a **pinned worker pool** (best-effort
-//! round-robin `sched_setaffinity` placement) with per-worker
+//! [`runtime::workers`]: a **pinned worker pool** with per-worker
 //! Chase–Lev-style **work-stealing deques** (single-owner push/pop at
 //! the bottom, CAS-steal at the top, `SeqCst` throughout — the module
-//! docs carry the ordering argument). The batch scheduler refills
-//! whole candidate chunks into its deque and steals from peers; the
-//! fig2/fig3 kernel drivers deal batch-aligned index ranges onto the
-//! deques instead of static shards; the streaming pipeline's consumers
-//! drain the bounded channel from the same pool. Steal, pin, and
-//! overlap counters flow into the stats plane (`TxStats::{steals,
+//! docs carry the ordering argument). Placement is **socket/L3
+//! topology-aware**: `PinPlan::detect` parses
+//! `/sys/devices/system/cpu` into locality groups, packs workers one
+//! L3 cluster at a time, and the steal scan drains same-group victims
+//! before ever crossing a socket (`TxStats::local_steals` reports the
+//! split; the flat fallback — unreadable sysfs, non-Linux, `NO_PIN=1`
+//! — collapses to one group and is exercised by CI). The batch
+//! scheduler refills whole candidate chunks into its deque and steals
+//! group-first from peers; the fig2/fig3 kernel drivers deal
+//! batch-aligned index ranges onto the deques instead of static
+//! shards; the streaming pipeline's consumers drain the bounded
+//! channel from the same pool. Steal, pin, and overlap counters flow
+//! into the stats plane (`TxStats::{steals, local_steals,
 //! pinned_workers, overlapped_txns}`) and batch run labels.
+//!
+//! ## The W-deep pipelined window
+//!
+//! The batch backend's pipelined session keeps up to **W blocks in
+//! flight** (`--policy batch=adaptive:window=W`; default 2): block
+//! N+k's base reads resolve through a chain of its k draining
+//! predecessors' winning versions, nearest first, falling through to
+//! the heap past any written-back link. Promotion stays strictly in
+//! admission order with a forced full revalidation as each block
+//! becomes head, so output remains bitwise-sequential at every depth
+//! (the `batch_determinism` suite proves depths 2–4 against the
+//! oracle, pinned and unpinned). The `BlockSizeController` co-tunes
+//! window depth with block size — conflict spikes shallow the window
+//! as they halve the block; clean blocks deepen it back — and the
+//! simulator models the same W-block lookahead, so `sim --fig
+//! combined` prices the deep window next to the paper's policies.
 //!
 //! ## The batch backend
 //!

@@ -10,7 +10,9 @@
 //!                 `--policy batch[=BLOCK|adaptive]` selects the
 //!                 Block-STM-style speculative batch backend (threads =
 //!                 workers; `adaptive` resizes blocks at runtime from
-//!                 the observed conflict rate)
+//!                 the observed conflict rate;
+//!                 `adaptive:window=W` deepens the cross-block
+//!                 pipelining window to W blocks, co-tuned with size)
 //! dyadhytm sim    --fig <t0|2a..2f|3a..3c|4a..4c|all> [--seed N]
 //!                 regenerate a paper figure on the simulated 28-HT node
 //! dyadhytm sim    --policy P --scale S --threads T [--kernel g|c|b]
@@ -315,7 +317,7 @@ fn main() -> ExitCode {
                 "lock", "stm", "stm-tl2", "htm-alock[=R]", "htm-spin[=R]", "hle",
                 "rnd[=LO-HI]", "fx[=N]", "stad[=N]", "dyad[=N]", "dyad-tl2[=N]",
                 "phtm[=R]", "batch[=BLOCK]", "batch=adaptive",
-                "batch=adaptive:latency=MS",
+                "batch=adaptive:latency=MS", "batch=adaptive:window=W",
             ] {
                 println!("{s}");
             }

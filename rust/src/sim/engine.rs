@@ -65,14 +65,17 @@ enum Mode {
     /// validations charge re-incarnation (and, for repeat offenders,
     /// ESTIMATE-wait) costs — the virtual-time analogue of the live
     /// `BatchReport` counters. Admission models the live
-    /// `BatchSystem::run_pipelined` session's **overlapped drain**: up
-    /// to two blocks are open at once — block N+1's transactions admit
-    /// while block N's tail drains (counted as `overlapped_txns`), and
-    /// a thread parks only when it would need a *third* block. Blocks
-    /// complete in order; each completion feeds the *same*
-    /// `BlockSizeController` the live executors run (pinned for
-    /// `Batch`, AIMD for `BatchAdaptive`, with the block's virtual wall
-    /// time driving the optional latency target).
+    /// `BatchSystem::run_pipelined` session's **W-deep overlapped
+    /// drain**: up to `BlockSizeController::current_window()` blocks
+    /// are open at once — lookahead blocks' transactions admit while
+    /// the head's tail drains (counted as `overlapped_txns`), and a
+    /// thread parks only when admission would need a block *beyond*
+    /// the window. Blocks complete in order; each completion feeds the
+    /// *same* `BlockSizeController` the live executors run (pinned for
+    /// `Batch`, AIMD with window co-tuning for `BatchAdaptive`, with
+    /// the block's virtual wall time driving the optional latency
+    /// target) — so `--policy batch=adaptive:window=W` is priced by
+    /// `sim --fig combined` exactly as the live session runs it.
     MultiVersion,
 }
 
@@ -239,13 +242,15 @@ impl Simulator {
             HashMap::new();
         let mut mv_max_window: u64 = 0;
         // Overlapped block admission — the virtual-time analogue of
-        // `BatchSystem::run_pipelined`: at most two blocks are open at
-        // once (the draining head plus one lookahead). A transaction
-        // admitted into the lookahead while the head is still draining
-        // counts as overlapped; a thread whose admission would need a
-        // third block parks until the head's last commit, which feeds
-        // the controller (waste + virtual wall time) and pops the
-        // queue in admission order.
+        // `BatchSystem::run_pipelined`: at most `current_window()`
+        // blocks are open at once (the draining head plus W-1
+        // lookahead blocks; the controller co-tunes the depth at
+        // runtime). A transaction admitted into a lookahead block
+        // while the head is still draining counts as overlapped; a
+        // thread whose admission would need a block beyond the window
+        // parks until the head's last commit, which feeds the
+        // controller (waste + virtual wall time) and pops the queue in
+        // admission order.
         struct SimBlock {
             lo: u64,
             hi: u64,
@@ -290,11 +295,11 @@ impl Simulator {
                         // that can never fill.
                         let frontier = mv_blocks.back().map_or(mv_next_idx, |b| b.hi);
                         if mv_next_idx >= frontier {
-                            if mv_blocks.len() >= 2 {
-                                // Head + lookahead both fully admitted
-                                // but not fully committed: park; a
-                                // completing head re-queues us. (All
-                                // in-flight txns are owned by
+                            if mv_blocks.len() >= mv_ctl.current_window().max(1) {
+                                // The whole W-deep window is fully
+                                // admitted but not fully committed:
+                                // park; a completing head re-queues
+                                // us. (All in-flight txns are owned by
                                 // non-parked threads, so the closing
                                 // commit always arrives.)
                                 mv_parked.push(tid);
@@ -905,6 +910,40 @@ mod tests {
         // start, so no overlap is ever recorded.
         let out = run_gen(PolicySpec::Batch { block: 64 }, 1, 10);
         assert_eq!(out.stats.total().overlapped_txns, 0);
+    }
+
+    #[test]
+    fn window_one_models_a_barrier_stream() {
+        // W=1 structurally removes the lookahead: mv_blocks can never
+        // hold a second block, so overlap is impossible — and every
+        // transaction still commits exactly once.
+        let spec = PolicySpec::BatchAdaptive {
+            latency_ms: 0,
+            window: 1,
+        };
+        let out = run_gen(spec, 4, 10);
+        let t = out.stats.total();
+        assert_eq!(t.total_commits(), SimWorkload::new(10).edges());
+        assert_eq!(t.overlapped_txns, 0, "W=1 admits no lookahead block");
+        assert_eq!(t.final_window, 1, "controller state reaches the stats");
+    }
+
+    #[test]
+    fn deep_window_is_deterministic_and_commits_everything() {
+        let spec = PolicySpec::BatchAdaptive {
+            latency_ms: 0,
+            window: 4,
+        };
+        let a = run_gen(spec, 4, 10);
+        let b = run_gen(spec, 4, 10);
+        assert_eq!(a.cycles, b.cycles, "same seed, same trajectory");
+        let t = a.stats.total();
+        assert_eq!(t.total_commits(), SimWorkload::new(10).edges());
+        assert!(
+            (1..=4).contains(&(t.final_window as usize)),
+            "converged window {} outside [floor, W]",
+            t.final_window
+        );
     }
 
     #[test]

@@ -21,9 +21,9 @@
 //!   invalidate a window, failed validations charge
 //!   re-incarnation/ESTIMATE-wait costs instead of NOrec's serial
 //!   write-back, and admission models the pipelined session's
-//!   overlapped drain (one block of lookahead, completion in admission
-//!   order) sized by the same `BlockSizeController` the live executors
-//!   drive;
+//!   overlapped drain (a W-deep window of admission lookahead —
+//!   `batch=adaptive:window=W` — completion in admission order) sized
+//!   by the same `BlockSizeController` the live executors drive;
 //! * hyperthread derating beyond 14 threads (shared execution ports →
 //!   per-thread IPC drops; [`cost::CostModel::derate`]).
 //!

@@ -48,12 +48,20 @@ pub struct TxStats {
     /// Worker-runtime counter (`runtime::workers`): tasks taken from a
     /// peer worker's deque.
     pub steals: u64,
+    /// The subset of `steals` whose victim shared the thief's
+    /// socket/L3 locality group (topology-aware `PinPlan`; equals
+    /// `steals` on flat/fallback topologies).
+    pub local_steals: u64,
     /// Worker-runtime counter: pool workers whose core pin applied
     /// (a property of the run — merges take the max, not the sum).
     pub pinned_workers: u64,
     /// Cross-block pipelining: execution attempts started while the
     /// previous block's validation tail was still draining.
     pub overlapped_txns: u64,
+    /// Pipelining window depth the batch controller finished on (0 when
+    /// no batch controller ran; 2 is the default head+overlap window,
+    /// `--policy batch=adaptive:window=W` raises the ceiling).
+    pub final_window: u64,
     /// Wall-clock or virtual nanoseconds attributed to this thread.
     pub time_ns: u64,
 }
@@ -99,8 +107,13 @@ impl TxStats {
             self.final_block = other.final_block;
         }
         self.steals += other.steals;
+        self.local_steals += other.local_steals;
         self.pinned_workers = self.pinned_workers.max(other.pinned_workers);
         self.overlapped_txns += other.overlapped_txns;
+        if other.final_window != 0 {
+            // Later merges carry the most recent controller state.
+            self.final_window = other.final_window;
+        }
         self.time_ns = self.time_ns.max(other.time_ns);
     }
 }

@@ -2,17 +2,22 @@
 //!
 //! `BatchSystem::run` (one block to a barrier) and the cross-block
 //! pipelined session (`BatchSystem::run_pipelined`, with per-worker
-//! stealing deques and block N+1 executing while block N drains) must
+//! stealing deques and up to W blocks in flight, deeper blocks
+//! resolving base reads through a chain of draining predecessors) must
 //! both leave the heap bit-identical to executing the same
 //! transactions sequentially in index order — for random
 //! `TxnDesc`-shaped batches (uniform and Zipf-skewed high-conflict
-//! footprints), random worker counts, random block sizes, and random
-//! initial heap states.
+//! footprints), random worker counts, random block sizes, window
+//! depths {2, 3, 4}, the topology-fallback (pinning-unavailable) pool,
+//! and random initial heap states.
 
 use std::time::Duration;
 
 use dyadhytm::batch::adaptive::BlockSizeController;
-use dyadhytm::batch::workload::{desc_txn, run_blocks, run_sequential, run_txns_pipelined};
+use dyadhytm::batch::workload::{
+    desc_txn, run_blocks, run_sequential, run_txns_pipelined_with_pool,
+};
+use dyadhytm::runtime::PoolConfig;
 use dyadhytm::batch::{BatchSystem, BatchTxn};
 use dyadhytm::graph::{computation, generation, rmat, subgraph, verify, Graph, Ssca2Config};
 use dyadhytm::htm::HtmConfig;
@@ -203,16 +208,20 @@ fn check_fixed_vs_adaptive(
 }
 
 /// Cross-block pipelining + stealing vs the sequential oracle, word by
-/// word: blocks overlap (block N+1 executes against block N's
-/// still-draining versions), workers steal candidates from each
-/// other's deques, and the final heap must still equal index-order
-/// execution.
-fn check_pipelined_case(
+/// word: up to `window` blocks overlap (deeper blocks execute against
+/// the chained still-draining versions of every predecessor), workers
+/// steal candidates from each other's deques (same locality group
+/// first), and the final heap must still equal index-order execution.
+/// `pin: false` additionally exercises the topology-fallback path
+/// (flat `PinPlan::none()` groups, no affinity calls).
+fn check_pipelined_case_pool(
     seed: u64,
     zipf_s: f64,
     n_txns: usize,
     workers: usize,
     block: usize,
+    window: usize,
+    pin: bool,
 ) -> Result<(), String> {
     let build = || -> Vec<BatchTxn<'static>> {
         let mut rng = Rng::new(seed);
@@ -235,8 +244,12 @@ fn check_pipelined_case(
     }
 
     run_sequential(&heap_seq, &build());
-    let mut ctl = BlockSizeController::fixed(block);
-    let report = run_txns_pipelined(&heap_pipe, build(), workers, &mut ctl);
+    let mut ctl = BlockSizeController::fixed(block).with_window(window);
+    let pool = PoolConfig {
+        workers: workers.max(1),
+        pin,
+    };
+    let report = run_txns_pipelined_with_pool(&heap_pipe, build(), &pool, &mut ctl);
     if report.txns != n_txns {
         return Err(format!("committed {} of {n_txns}", report.txns));
     }
@@ -246,12 +259,27 @@ fn check_pipelined_case(
             return Err(format!(
                 "divergence at word {addr}: sequential {a:#x} vs pipelined {b:#x} \
                  (zipf_s={zipf_s}, n={n_txns}, workers={workers}, block={block}, \
-                 overlapped={}, steals={})",
-                report.overlapped_txns, report.steals,
+                 window={window}, pin={pin}, overlapped={}, steals={}, \
+                 local_steals={}, occupancy={:.2})",
+                report.overlapped_txns,
+                report.steals,
+                report.local_steals,
+                report.window_occupancy(),
             ));
         }
     }
     Ok(())
+}
+
+/// [`check_pipelined_case_pool`] at the default 2-deep pinned window.
+fn check_pipelined_case(
+    seed: u64,
+    zipf_s: f64,
+    n_txns: usize,
+    workers: usize,
+    block: usize,
+) -> Result<(), String> {
+    check_pipelined_case_pool(seed, zipf_s, n_txns, workers, block, 2, true)
 }
 
 #[test]
@@ -288,13 +316,81 @@ fn prop_pipelined_equals_sequential_across_skews_and_workers() {
 #[test]
 fn pipelined_hub_line_overlaps_and_matches() {
     // Every transaction RMWs the same few hub lines across many tiny
-    // blocks: the worst case for cross-block speculation — block N+1's
-    // base reads keep guessing values block N's tail is still
-    // rewriting, so the promotion-time revalidation has to repair
-    // nearly everything. The result must still match the oracle.
-    for workers in [2usize, 4] {
-        check_pipelined_case(0xF00D ^ workers as u64, 8.0, 96, workers, 4).unwrap();
+    // blocks: the worst case for cross-block speculation — the deeper
+    // blocks' chained base reads keep guessing values their
+    // predecessors' tails are still rewriting, so the promotion-time
+    // revalidation has to repair nearly everything. The result must
+    // still match the oracle, at the default window and at W=4.
+    for window in [2usize, 4] {
+        for workers in [2usize, 4] {
+            check_pipelined_case_pool(
+                0xF00D ^ workers as u64 ^ ((window as u64) << 16),
+                8.0,
+                96,
+                workers,
+                4,
+                window,
+                true,
+            )
+            .unwrap();
+        }
     }
+}
+
+#[test]
+fn prop_windowed_pipeline_equals_sequential_across_depths() {
+    // The ISSUE-5 tentpole property: the W-deep pipelined session
+    // (chained base-peeking through up to W-1 draining predecessors)
+    // stays bitwise-identical to the sequential oracle across window
+    // depths {2, 3, 4} × Zipf skews × worker counts × block sizes.
+    for &window in &[2usize, 3, 4] {
+        for (round, &zipf_s) in [0.0f64, 1.2, 2.0].iter().enumerate() {
+            qcheck_res(
+                "W-deep pipelined == sequential (bitwise)",
+                4,
+                |rng| {
+                    (
+                        rng.next_u64(),
+                        8 + rng.below(56) as usize,
+                        1 + rng.below(6) as usize,
+                        [2usize, 8, 32][rng.below(3) as usize],
+                    )
+                },
+                |&(seed, n, workers, block)| {
+                    check_pipelined_case_pool(
+                        seed ^ ((round as u64) << 40) ^ ((window as u64) << 48),
+                        zipf_s,
+                        n,
+                        workers,
+                        block,
+                        window,
+                        true,
+                    )
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn windowed_pipeline_matches_oracle_when_pinning_unavailable() {
+    // The topology-fallback case: `pin: false` is exactly the path a
+    // host without affinity support (or `NO_PIN=1`) takes — flat
+    // `PinPlan::none()` locality groups, no `sched_setaffinity` calls.
+    // Deep-window determinism must not depend on pinning or topology.
+    for window in [2usize, 3, 4] {
+        check_pipelined_case_pool(0xFA11 ^ window as u64, 1.2, 72, 3, 8, window, false)
+            .unwrap();
+    }
+    // And the hub worst case, unpinned.
+    check_pipelined_case_pool(0xFA11BAC, 8.0, 96, 4, 4, 4, false).unwrap();
+}
+
+#[test]
+fn window_one_is_a_barrier_stream_and_matches() {
+    // W=1 degenerates to a per-block barrier stream: still exact. (The
+    // zero-overlap invariant of W=1 is asserted in batch::tests.)
+    check_pipelined_case_pool(0xBA44, 1.2, 64, 4, 8, 1, true).unwrap();
 }
 
 #[test]
