@@ -16,10 +16,15 @@
 //! one record per (store, window, block, skew) cell plus one per
 //! adaptive run).
 //!
+//! An `obs A/B` cell runs the same workload with telemetry fully off
+//! vs tracing + latency timing on, exercising the telemetry plane's
+//! overhead contract (`dyadhytm::obs`) end to end.
+//!
 //! The sweep additionally writes the stable perf-trajectory file
 //! **`BENCH_batch.json`** at the repository root: a JSON array of
 //! `{policy, window, block, conflict, txns_per_sec, steal_rate,
-//! overlap_ratio, locality_steal_ratio, window_occupancy, ...}`
+//! overlap_ratio, locality_steal_ratio, window_occupancy,
+//! lat_p50_ns, lat_p90_ns, lat_p99_ns, ...}`
 //! records (`policy` is `batch` for the barrier lock-free store,
 //! `batch-mutex` for the sharded-mutex baseline, `batch-pipelined` for
 //! the cross-block-overlapping session at each window depth,
@@ -73,6 +78,12 @@ struct SweepRec {
     /// Mean blocks in flight at admission (the W-deep window's
     /// utilization; 0 for barrier cells, which admit no window).
     window_occupancy: f64,
+    /// Winning execution-attempt latency percentiles (log2-bucket
+    /// upper bounds, ns) — the sweep runs with `obs::set_timing(true)`
+    /// so the per-worker histograms fill.
+    lat_p50_ns: u64,
+    lat_p90_ns: u64,
+    lat_p99_ns: u64,
 }
 
 impl SweepRec {
@@ -98,6 +109,9 @@ impl SweepRec {
             overlap_ratio: report.overlapped_txns as f64 / execs,
             locality_steal_ratio: report.locality_steal_ratio(),
             window_occupancy: report.window_occupancy(),
+            lat_p50_ns: report.txn_lat.p50(),
+            lat_p90_ns: report.txn_lat.p90(),
+            lat_p99_ns: report.txn_lat.p99(),
         }
     }
 
@@ -106,7 +120,8 @@ impl SweepRec {
             "{{\"policy\":\"{}\",\"window\":{},\"block\":{},\"conflict\":{:.4},\
              \"txns_per_sec\":{:.0},\"zipf_s\":{},\"workers\":{},\
              \"steal_rate\":{:.4},\"overlap_ratio\":{:.4},\
-             \"locality_steal_ratio\":{:.4},\"window_occupancy\":{:.4}}}",
+             \"locality_steal_ratio\":{:.4},\"window_occupancy\":{:.4},\
+             \"lat_p50_ns\":{},\"lat_p90_ns\":{},\"lat_p99_ns\":{}}}",
             self.policy,
             self.window,
             self.block,
@@ -118,6 +133,9 @@ impl SweepRec {
             self.overlap_ratio,
             self.locality_steal_ratio,
             self.window_occupancy,
+            self.lat_p50_ns,
+            self.lat_p90_ns,
+            self.lat_p99_ns,
         )
     }
 }
@@ -361,6 +379,47 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
     records
 }
 
+/// A/B the telemetry overhead contract end to end: the same Zipf-RMW
+/// cell with telemetry fully off (no timestamps, trace sites reduce to
+/// one relaxed load + branch) and with tracing + latency timing on.
+/// Emits one `BENCH_JSON` record with both throughputs and their ratio;
+/// the contract (documented in `dyadhytm::obs`) is that the "off" cell
+/// pays no locks and no clock reads.
+fn obs_overhead_ab() {
+    let n: usize = if smoke() { 4096 } else { 16384 };
+    const LINES: usize = 64;
+    const WORKERS: usize = 4;
+    let heap_words = LINES * WORDS_PER_LINE;
+
+    dyadhytm::obs::set_timing(false);
+    let txns_off = sweep_txns(0.8, n, LINES);
+    let (_, tps_off) = run_fixed(&txns_off, heap_words, 1024, WORKERS, false);
+
+    dyadhytm::obs::trace::enable(); // also turns latency timing on
+    let txns_on = sweep_txns(0.8, n, LINES);
+    let (report_on, tps_on) = run_fixed(&txns_on, heap_words, 1024, WORKERS, false);
+    let traced = dyadhytm::obs::trace::drain().len();
+    dyadhytm::obs::trace::disable();
+
+    println!(
+        "\n> obs A/B (block 1024, zipf 0.8, {WORKERS} workers, {n} txns): \
+         off {tps_off:.0} txns/s vs on {tps_on:.0} txns/s \
+         ({:.3}x, {traced} events traced, txn p50/p99 {} / {} ns)",
+        tps_on / tps_off.max(1e-9),
+        report_on.txn_lat.p50(),
+        report_on.txn_lat.p99(),
+    );
+    println!(
+        "BENCH_JSON {{\"bench\":\"batch_obs_ab\",\"block\":1024,\"zipf_s\":0.8,\
+         \"workers\":{WORKERS},\"txns\":{n},\"txns_per_sec_off\":{tps_off:.0},\
+         \"txns_per_sec_on\":{tps_on:.0},\"on_off_ratio\":{:.4},\
+         \"events_traced\":{traced},\"lat_p50_ns\":{},\"lat_p99_ns\":{}}}",
+        tps_on / tps_off.max(1e-9),
+        report_on.txn_lat.p50(),
+        report_on.txn_lat.p99(),
+    );
+}
+
 /// Write the perf-trajectory file at the repo root (next to
 /// `Cargo.toml`): a stable JSON array, one object per sweep cell.
 /// An empty sweep is a bench bug, not a result — fail loudly instead
@@ -439,7 +498,13 @@ fn main() {
             );
         }
     }
+    obs_overhead_ab();
+    // The sweep itself runs with latency timing on so every record
+    // carries real lat_p50/p90/p99 fields (tracing stays off: the
+    // histograms live in BatchCounters, no rings needed).
+    dyadhytm::obs::set_timing(true);
     let records = block_conflict_sweep();
+    dyadhytm::obs::set_timing(false);
     write_bench_json(&records);
     eprintln!("[batch_throughput: finished in {:?}]", t0.elapsed());
 }

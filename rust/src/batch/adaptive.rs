@@ -252,6 +252,20 @@ impl BlockSizeController {
     /// an overrun halves the block even at a clean conflict rate —
     /// then the AIMD law picks the next block size.
     pub fn observe_block(&mut self, executions: u64, committed: u64, wall: Duration) {
+        let (b0, w0) = (self.block, self.window);
+        self.decide(executions, committed, wall);
+        // Resize decisions are block-granular (never inside a
+        // transaction), so tracing them here costs nothing on the
+        // per-txn hot path.
+        if self.block != b0 {
+            crate::obs::trace::block_resize(b0 as u64, self.block as u64);
+        }
+        if self.window != w0 {
+            crate::obs::trace::window_resize(w0 as u64, self.window as u64);
+        }
+    }
+
+    fn decide(&mut self, executions: u64, committed: u64, wall: Duration) {
         self.samples += 1;
         if !self.is_adaptive() || committed == 0 {
             return;

@@ -51,6 +51,11 @@ pub struct BatchCounters {
     /// Execution attempts started while the *previous block* was still
     /// draining (cross-block pipelining overlap).
     pub overlapped: AtomicU64,
+    /// Winning execution-attempt latency per transaction. Only fed
+    /// while `obs::timing_enabled()` (the guard is one relaxed load);
+    /// recording is a relaxed `fetch_add`, lock-free like the counters
+    /// above.
+    pub txn_lat: crate::obs::hist::AtomicHist,
 }
 
 /// One link of the predecessor chain a pipelined block resolves its
@@ -238,6 +243,11 @@ impl<M: MvStore> Worker<'_, '_, M> {
     fn try_execute(&self, version: Version) -> Option<Task> {
         let (txn, incarnation) = version;
         loop {
+            let t0 = if crate::obs::timing_enabled() {
+                Some(std::time::Instant::now())
+            } else {
+                None
+            };
             self.counters.executions.fetch_add(1, Ordering::Relaxed);
             if self.base.overlapping() {
                 self.counters.overlapped.fetch_add(1, Ordering::Relaxed);
@@ -255,6 +265,9 @@ impl<M: MvStore> Worker<'_, '_, M> {
             match (self.txns[txn].body)(&mut view) {
                 Ok(()) => {
                     let wrote_new = self.mv.record(version, view.reads, &view.writes);
+                    if let Some(t0) = t0 {
+                        self.counters.txn_lat.record_duration(t0.elapsed());
+                    }
                     return self.scheduler.finish_execution(txn, incarnation, wrote_new);
                 }
                 Err(_) => {

@@ -114,6 +114,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::mem::TxHeap;
+use crate::obs::hist::LatencyHist;
 use crate::runtime::workers::{run_pool_plan_with, PinPlan, PoolConfig};
 use crate::stats::TxStats;
 use crate::tm::access::{TxAccess, TxResult};
@@ -178,6 +179,12 @@ pub struct BatchReport {
     /// flight, the W-deep window's utilization.
     pub window_depth_sum: u64,
     pub elapsed: Duration,
+    /// Winning execution-attempt latency per transaction (only
+    /// populated when `obs::timing_enabled()`).
+    pub txn_lat: LatencyHist,
+    /// Admit→promote latency per block (only populated when
+    /// `obs::timing_enabled()`).
+    pub block_lat: LatencyHist,
 }
 
 impl BatchReport {
@@ -195,6 +202,8 @@ impl BatchReport {
         self.window_admissions += other.window_admissions;
         self.window_depth_sum += other.window_depth_sum;
         self.elapsed += other.elapsed;
+        self.txn_lat.merge(&other.txn_lat);
+        self.block_lat.merge(&other.block_lat);
     }
 
     /// Fraction of steals served by a same-locality-group victim.
@@ -232,6 +241,8 @@ impl BatchReport {
         s.overlapped_txns = self.overlapped_txns;
         s.pinned_workers = self.pinned_workers;
         s.time_ns = self.elapsed.as_nanos() as u64;
+        s.txn_lat = self.txn_lat;
+        s.block_lat = self.block_lat;
         s
     }
 }
@@ -256,6 +267,9 @@ struct BlockRun<'b, M: MvStore> {
     /// Write-back claimed (exactly one worker completes a block).
     completed: AtomicBool,
     admitted: Instant,
+    /// Stream-wide admission index (set at admission; the trace plane's
+    /// block id).
+    seq: AtomicU64,
 }
 
 impl<'b, M: MvStore> BlockRun<'b, M> {
@@ -271,6 +285,7 @@ impl<'b, M: MvStore> BlockRun<'b, M> {
             parked: Mutex::new(Vec::new()),
             completed: AtomicBool::new(false),
             admitted: Instant::now(),
+            seq: AtomicU64::new(0),
         }
     }
 
@@ -291,6 +306,8 @@ impl<'b, M: MvStore> BlockRun<'b, M> {
             window_admissions: 0,
             window_depth_sum: 0,
             elapsed: Duration::ZERO,
+            txn_lat: self.counters.txn_lat.fold(),
+            block_lat: LatencyHist::default(),
         }
     }
 }
@@ -376,6 +393,12 @@ impl BatchSystem {
             || (),
         );
         mv.write_back(heap);
+        let elapsed = t0.elapsed();
+        let mut block_lat = LatencyHist::default();
+        if crate::obs::timing_enabled() {
+            // A barrier run is one block: admit→promote is the run.
+            block_lat.record_duration(elapsed);
+        }
         BatchReport {
             txns: txns.len(),
             executions: counters.executions.load(Ordering::Relaxed),
@@ -388,7 +411,9 @@ impl BatchSystem {
             pinned_workers: pins.iter().filter(|&&p| p).count() as u64,
             window_admissions: 0,
             window_depth_sum: 0,
-            elapsed: t0.elapsed(),
+            elapsed,
+            txn_lat: counters.txn_lat.fold(),
+            block_lat,
         }
     }
 
@@ -524,14 +549,17 @@ impl BatchSystem {
             }
             match (*src)(size) {
                 Some(txns) if !txns.is_empty() => {
+                    let n = txns.len() as u64;
                     let run = Arc::new(BlockRun::new(txns, workers, &groups));
                     let mut win = window.lock().unwrap();
                     if win.is_empty() {
                         run.prev_done.store(true, Ordering::SeqCst);
                     }
-                    admissions.fetch_add(1, Ordering::SeqCst);
+                    let seq = admissions.fetch_add(1, Ordering::SeqCst);
+                    run.seq.store(seq, Ordering::SeqCst);
                     depth_sum.fetch_add(win.len() as u64 + 1, Ordering::SeqCst);
                     win.push_back(run);
+                    crate::obs::trace::block_admitted(seq, n);
                 }
                 _ => exhausted.store(true, Ordering::SeqCst),
             }
@@ -558,12 +586,23 @@ impl BatchSystem {
             // Publish the flush: stale chain snapshots that still link
             // this block fall through to the heap from here on.
             head.written_back.store(true, Ordering::SeqCst);
+            let block_lat = head.admitted.elapsed();
             ctl.lock().unwrap().observe_block(
                 head.counters.executions.load(Ordering::Relaxed),
                 head.txns.len() as u64,
-                head.admitted.elapsed(),
+                block_lat,
             );
-            report.lock().unwrap().merge(&head.report());
+            crate::obs::trace::block_promoted(
+                head.seq.load(Ordering::SeqCst),
+                block_lat.as_nanos() as u64,
+            );
+            {
+                let mut rep = report.lock().unwrap();
+                rep.merge(&head.report());
+                if crate::obs::timing_enabled() {
+                    rep.block_lat.record_duration(block_lat);
+                }
+            }
             win.pop_front();
             if let Some(next) = win.front() {
                 let mut parked = next.parked.lock().unwrap();
@@ -993,6 +1032,7 @@ mod tests {
             window_admissions: 5,
             window_depth_sum: 9,
             elapsed: Duration::from_millis(5),
+            ..BatchReport::default()
         };
         let b = a;
         a.merge(&b);

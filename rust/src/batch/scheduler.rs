@@ -470,8 +470,12 @@ impl Scheduler {
         let cur = s.load(Ordering::SeqCst);
         debug_assert_eq!(state_of(cur), ST_ABORTING);
         // Single resumer (the abort claimant or the dependency
-        // drainer): store the bumped incarnation.
-        s.store(pack(incarnation_of(cur) + 1, ST_READY), Ordering::SeqCst);
+        // drainer): store the bumped incarnation. Every re-incarnation
+        // — validation abort, dependency resume, cross-block resume —
+        // funnels through here, so this is the trace event site.
+        let next = incarnation_of(cur) + 1;
+        s.store(pack(next, ST_READY), Ordering::SeqCst);
+        crate::obs::trace::reincarnation(t as u64, next as u64);
     }
 
     /// Incarnation `(txn, incarnation)` finished executing and its

@@ -178,15 +178,18 @@ pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
         // block plus how it got there.
         let g = gen_stats.total();
         let c = comp.stats.total();
-        eprintln!(
-            "[batch-adaptive] generation: block -> {} ({} grows, {} shrinks); \
-             computation: block -> {} ({} grows, {} shrinks)",
-            g.final_block,
-            g.block_grows,
-            g.block_shrinks,
-            c.final_block,
-            c.block_grows,
-            c.block_shrinks,
+        crate::obs::diag(
+            1,
+            &format!(
+                "batch-adaptive generation: block -> {} ({} grows, {} shrinks); \
+                 computation: block -> {} ({} grows, {} shrinks)",
+                g.final_block,
+                g.block_grows,
+                g.block_shrinks,
+                c.final_block,
+                c.block_grows,
+                c.block_shrinks,
+            ),
         );
     }
     if matches!(
@@ -197,14 +200,17 @@ pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
         // steals (with the locality split from the topology-aware
         // plan), how many workers the affinity plan actually pinned,
         // and the pipelining window the controller finished on.
-        eprintln!(
-            "[worker-runtime] overlapped_txns={} steals={} local_steals={} \
-             pinned_workers={} window={}",
-            merged.overlapped_txns,
-            merged.steals,
-            merged.local_steals,
-            merged.pinned_workers,
-            merged.final_window,
+        crate::obs::diag(
+            2,
+            &format!(
+                "worker-runtime overlapped_txns={} steals={} local_steals={} \
+                 pinned_workers={} window={}",
+                merged.overlapped_txns,
+                merged.steals,
+                merged.local_steals,
+                merged.pinned_workers,
+                merged.final_window,
+            ),
         );
     }
 

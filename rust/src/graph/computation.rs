@@ -21,7 +21,7 @@ use std::time::{Duration, Instant};
 
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
 use crate::runtime::workers::{run_sharded, PoolConfig};
-use crate::stats::StatsTable;
+use crate::stats::{StatsTable, TxStats};
 use crate::tm::access::{TxAccess, TxResult};
 
 use super::generation::kernel_grain;
@@ -127,7 +127,19 @@ pub fn run(
     if let Some(ctl) = spec.batch_sizing() {
         // Speculative batch backend: same two phases, admitted as
         // controller-sized blocks of deterministic-order transactions.
-        return crate::batch::workload::run_computation(g, threads, ctl);
+        let r = crate::batch::workload::run_computation(g, threads, ctl);
+        let mut interval = r.stats.total();
+        interval.time_ns = r.elapsed.as_nanos() as u64;
+        crate::obs::snapshot::record(
+            "computation",
+            "kernel",
+            &interval,
+            &[
+                ("threads", threads.to_string()),
+                ("selected", r.selected.to_string()),
+            ],
+        );
+        return r;
     }
     let total_cells = g.cells_allocated();
     let t0 = Instant::now();
@@ -150,8 +162,23 @@ pub fn run(
         },
     );
 
+    if crate::obs::snapshot::is_enabled() {
+        let mut interval = TxStats::new();
+        for s in &phase1_stats {
+            interval.merge(s);
+        }
+        interval.time_ns = t0.elapsed().as_nanos() as u64;
+        crate::obs::snapshot::record(
+            "computation",
+            "probe",
+            &interval,
+            &[("threads", threads.to_string())],
+        );
+    }
+
     let max_weight = g.heap.load(g.gmax) as u32;
     let cutoff = g.weight_cutoff() as u64;
+    let t1 = Instant::now();
 
     // Phase 2: collect the band.
     let (phase2_stats, pool2) = run_sharded(
@@ -168,6 +195,23 @@ pub fn run(
             ex.stats
         },
     );
+
+    if crate::obs::snapshot::is_enabled() {
+        let mut interval = TxStats::new();
+        for s in &phase2_stats {
+            interval.merge(s);
+        }
+        interval.time_ns = t1.elapsed().as_nanos() as u64;
+        crate::obs::snapshot::record(
+            "computation",
+            "collect",
+            &interval,
+            &[
+                ("threads", threads.to_string()),
+                ("cutoff", cutoff.to_string()),
+            ],
+        );
+    }
 
     for (tid, (mut s, p1)) in phase2_stats
         .into_iter()

@@ -127,48 +127,69 @@ pub fn run(
     seed: u64,
 ) -> (Duration, StatsTable) {
     assert!(threads >= 1);
-    if let Some(ctl) = spec.batch_sizing() {
+    let (elapsed, table) = if let Some(ctl) = spec.batch_sizing() {
         // The batch backend owns its own worker pool and serialization
         // order; `threads` becomes its concurrency level. The
         // controller pins the block (`batch=N`) or adapts it from the
         // observed conflict rate (`batch=adaptive`).
-        return crate::batch::workload::run_generation(g, tuples, threads, ctl);
-    }
-    let t0 = Instant::now();
-    let mut table = StatsTable::new();
-    let grain = kernel_grain(tuples.len(), threads, g.cfg.batch.max(1));
+        crate::batch::workload::run_generation(g, tuples, threads, ctl)
+    } else {
+        let t0 = Instant::now();
+        let mut table = StatsTable::new();
+        let grain = kernel_grain(tuples.len(), threads, g.cfg.batch.max(1));
 
-    let (rows, pool) = run_sharded(
-        &PoolConfig::pinned(threads),
-        tuples.len(),
-        grain,
-        |tid, feed, _pinned| {
-            let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
-            let t = Instant::now();
-            while let Some((lo, hi)) = feed.next() {
-                insert_slice(g, &mut ex, &tuples[lo..hi]);
+        let (rows, pool) = run_sharded(
+            &PoolConfig::pinned(threads),
+            tuples.len(),
+            grain,
+            |tid, feed, _pinned| {
+                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
+                let t = Instant::now();
+                while let Some((lo, hi)) = feed.next() {
+                    insert_slice(g, &mut ex, &tuples[lo..hi]);
+                }
+                ex.stats.time_ns = t.elapsed().as_nanos() as u64;
+                ex.stats
+            },
+        );
+        for (tid, mut stats) in rows.into_iter().enumerate() {
+            if tid == 0 {
+                stats.steals += pool.steals;
+                stats.local_steals += pool.local_steals;
+                stats.pinned_workers = pool.pinned_workers;
             }
-            ex.stats.time_ns = t.elapsed().as_nanos() as u64;
-            ex.stats
-        },
-    );
-    for (tid, mut stats) in rows.into_iter().enumerate() {
-        if tid == 0 {
-            stats.steals += pool.steals;
-            stats.local_steals += pool.local_steals;
-            stats.pinned_workers = pool.pinned_workers;
+            table.push(tid, stats);
         }
-        table.push(tid, stats);
-    }
 
-    (t0.elapsed(), table)
+        (t0.elapsed(), table)
+    };
+    let mut interval = table.total();
+    interval.time_ns = elapsed.as_nanos() as u64;
+    crate::obs::snapshot::record(
+        "generation",
+        "insert",
+        &interval,
+        &[
+            ("threads", threads.to_string()),
+            ("tuples", tuples.len().to_string()),
+        ],
+    );
+    (elapsed, table)
 }
 
 /// Convenience: single-threaded, direct (lock) insertion — used for
 /// setup in computation-kernel-only experiments and tests.
 pub fn build_serial(sys: &TmSystem, g: &Graph, tuples: &[EdgeTuple]) -> TxStats {
     let mut ex = ThreadExecutor::new(sys, PolicySpec::CoarseLock, 0, 1);
+    let t0 = Instant::now();
     insert_slice(g, &mut ex, tuples);
+    ex.stats.time_ns = t0.elapsed().as_nanos() as u64;
+    crate::obs::snapshot::record(
+        "generation",
+        "serial",
+        &ex.stats,
+        &[("tuples", tuples.len().to_string())],
+    );
     ex.stats
 }
 

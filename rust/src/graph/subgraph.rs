@@ -69,7 +69,19 @@ pub fn run(
         // The batch backend owns its worker pool and serialization
         // order; `threads` becomes its concurrency level. No silent
         // NOrec fallback: the claims run through `BatchSystem`.
-        return crate::batch::workload::run_subgraph(g, roots, depth, threads, ctl);
+        let r = crate::batch::workload::run_subgraph(g, roots, depth, threads, ctl);
+        let mut interval = r.stats.total();
+        interval.time_ns = r.elapsed.as_nanos() as u64;
+        crate::obs::snapshot::record(
+            "extraction",
+            "kernel",
+            &interval,
+            &[
+                ("threads", threads.to_string()),
+                ("marked", r.total_marked.to_string()),
+            ],
+        );
+        return r;
     }
     let n = g.cfg.vertices();
     // Mark region: one word per vertex, level+1 when claimed.
@@ -99,6 +111,12 @@ pub fn run(
                 frontier.push(r);
             }
         }
+        crate::obs::snapshot::record(
+            "extraction",
+            "level-0",
+            &ex.stats,
+            &[("frontier", frontier.len().to_string())],
+        );
         table.rows[0].stats.merge(&ex.stats);
     }
 
@@ -114,6 +132,7 @@ pub fn run(
         // frontier entries make shares wildly uneven, which is exactly
         // what the stealing deques absorb.
         let grain = kernel_grain(frontier.len(), threads, 1).min(frontier.len().max(1));
+        let level_t0 = Instant::now();
         let (rows, pool) = run_sharded(
             &PoolConfig::pinned(threads),
             frontier.len(),
@@ -150,6 +169,20 @@ pub fn run(
                 ex.stats
             },
         );
+        if crate::obs::snapshot::is_enabled() {
+            let mut interval = crate::stats::TxStats::new();
+            for s in &rows {
+                interval.merge(s);
+            }
+            interval.time_ns = level_t0.elapsed().as_nanos() as u64;
+            let phase = format!("level-{level}");
+            crate::obs::snapshot::record(
+                "extraction",
+                &phase,
+                &interval,
+                &[("frontier", frontier.len().to_string())],
+            );
+        }
         for (tid, mut s2) in rows.into_iter().enumerate() {
             if tid == 0 {
                 s2.steals += pool.steals;

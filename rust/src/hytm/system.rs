@@ -391,7 +391,25 @@ impl<'s> ThreadExecutor<'s> {
 
     /// Run one transaction body to completion under the configured
     /// policy. Never returns until the body has committed on some path.
+    ///
+    /// When the telemetry plane is live (`obs::timing_enabled`), the
+    /// whole attempt→commit span — hardware retries, fallback, and all
+    /// — lands in `TxStats::txn_lat`; otherwise the guard is one
+    /// relaxed load and no clock is read.
     pub fn execute<R>(
+        &mut self,
+        body: &mut dyn FnMut(&mut dyn TxAccess) -> TxResult<R>,
+    ) -> R {
+        if crate::obs::timing_enabled() {
+            let t0 = std::time::Instant::now();
+            let r = self.execute_untimed(body);
+            self.stats.txn_lat.record_duration(t0.elapsed());
+            return r;
+        }
+        self.execute_untimed(body)
+    }
+
+    fn execute_untimed<R>(
         &mut self,
         body: &mut dyn FnMut(&mut dyn TxAccess) -> TxResult<R>,
     ) -> R {

@@ -100,6 +100,26 @@
 //! sweep with `steal_rate`/`overlap_ratio` per cell, and the
 //! `BENCH_batch.json` perf trajectory it writes at the repo root.
 //!
+//! ## The telemetry plane
+//!
+//! All five backends share one observability substrate, [`obs`]: (1)
+//! per-worker **lock-free ring-buffer event tracing** (`--trace[=PATH]`)
+//! of packed 32-byte records — block admitted/promoted, HTM
+//! abort+cause, re-incarnation, block/window resize decisions,
+//! local/remote steals — drained post-run to JSON-lines; (2) a
+//! **snapshot registry** (`--metrics-json PATH`) that exports each
+//! kernel phase's counter deltas (abort-cause breakdown, conflict
+//! rate, steal/locality ratios, controller block/window state) as one
+//! JSON object per interval, with the DES simulator emitting the same
+//! schema in virtual time; and (3) **log-bucketed latency histograms**
+//! (per-txn attempt→commit, per-block admit→promote) carried in
+//! [`stats::TxStats`] and merged across workers to p50/p90/p99. The
+//! contract: with telemetry off, every hot-path event site costs at
+//! most one relaxed load and one branch — never a lock (see the
+//! [`obs`] module docs and the obs A/B cell in
+//! `benches/batch_throughput`). These phase snapshots are the signals
+//! the `--policy auto` meta-controller consumes.
+//!
 //! System inventory and the paper-vs-measured record live in
 //! `ROADMAP.md` (north star, open items) and `PAPER.md` (source
 //! abstract) at the repository root; per-module documentation below is
@@ -111,6 +131,7 @@ pub mod graph;
 pub mod htm;
 pub mod hytm;
 pub mod mem;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod stats;

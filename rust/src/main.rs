@@ -28,6 +28,14 @@
 //!                          SSCA-2 kernel 3: multi-source BFS extraction
 //! dyadhytm policies        list policy names
 //! ```
+//!
+//! Global telemetry flags (any subcommand, see `dyadhytm::obs`):
+//!
+//! ```text
+//! --trace[=PATH]       event tracing -> JSON-lines (default trace.jsonl)
+//! --metrics-json PATH  phase-scoped metric snapshots -> JSON-lines
+//! --obs-verbosity N    [obs] diagnostics: 0 silent, 1 default, 2 chatty
+//! ```
 
 use std::process::ExitCode;
 
@@ -53,6 +61,24 @@ impl Args {
             true
         } else {
             false
+        }
+    }
+
+    /// `--name` / `--name=VALUE` (the value never consumes the next
+    /// token, so the flag can precede a subcommand argument safely).
+    /// Returns `Some(None)` for the bare form, `Some(Some(v))` for
+    /// `--name=v`.
+    fn opt_eq(&mut self, name: &str) -> Option<Option<String>> {
+        let prefix = format!("{name}=");
+        let i = self
+            .rest
+            .iter()
+            .position(|a| a == name || a.starts_with(&prefix))?;
+        let arg = self.rest.remove(i);
+        if arg == name {
+            Some(None)
+        } else {
+            Some(Some(arg[prefix.len()..].to_string()))
         }
     }
 
@@ -275,12 +301,30 @@ fn usage() -> ExitCode {
 }
 
 fn main() -> ExitCode {
-    let mut argv: Vec<String> = std::env::args().skip(1).collect();
-    if argv.is_empty() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let mut a = Args::new(argv);
+
+    // Telemetry-plane flags are global: they work before or after any
+    // subcommand. `--trace[=PATH]` turns the event rings on,
+    // `--metrics-json PATH` turns the snapshot registry on, and both
+    // flush after the subcommand returns.
+    let trace_path = a
+        .opt_eq("--trace")
+        .map(|v| v.unwrap_or_else(|| "trace.jsonl".into()));
+    let metrics_path = a.opt("--metrics-json");
+    dyadhytm::obs::set_verbosity(a.opt_parse("--obs-verbosity", 1u8));
+    if trace_path.is_some() {
+        dyadhytm::obs::trace::enable();
+    }
+    if metrics_path.is_some() {
+        dyadhytm::obs::snapshot::enable();
+    }
+
+    if a.rest.is_empty() {
         return usage();
     }
-    let cmd = argv.remove(0);
-    let a = Args::new(argv);
+    let cmd = a.rest.remove(0);
+
     let result = match cmd.as_str() {
         "run" => cmd_run(a),
         "sim" => cmd_sim(a),
@@ -325,6 +369,23 @@ fn main() -> ExitCode {
         }
         _ => return usage(),
     };
+    if let Some(path) = &trace_path {
+        // Capture the overwrite count before the drain resets cursors.
+        let lost = dyadhytm::obs::trace::dropped();
+        match dyadhytm::obs::trace::write_jsonl(path) {
+            Ok(n) => dyadhytm::obs::diag(
+                1,
+                &format!("trace: {n} events -> {path} ({lost} overwritten)"),
+            ),
+            Err(e) => eprintln!("error writing {path}: {e}"),
+        }
+    }
+    if let Some(path) = &metrics_path {
+        match dyadhytm::obs::snapshot::write_jsonl(path) {
+            Ok(n) => dyadhytm::obs::diag(1, &format!("metrics: {n} snapshots -> {path}")),
+            Err(e) => eprintln!("error writing {path}: {e}"),
+        }
+    }
     match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {

@@ -1,0 +1,233 @@
+//! Log-bucketed latency histograms (telemetry plane, DESIGN.md S14).
+//!
+//! Each histogram is a fixed array of power-of-two nanosecond buckets:
+//! bucket 0 holds a latency of 0 ns, bucket `b >= 1` holds latencies in
+//! `[2^(b-1), 2^b - 1]`. Recording is a branch-free index computation
+//! plus one array increment, so per-worker instances can sit on the hot
+//! path; aggregation happens after join through [`LatencyHist::merge`]
+//! (element-wise sum — total count is preserved exactly, percentile
+//! estimates are bucket upper bounds).
+
+/// Number of buckets. Bucket 47's upper bound is `2^47 - 1` ns
+/// (~39 hours) — anything larger clamps into the last bucket.
+pub const BUCKETS: usize = 48;
+
+/// A log2-bucketed histogram of nanosecond latencies.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyHist {
+    counts: [u64; BUCKETS],
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self {
+            counts: [0; BUCKETS],
+        }
+    }
+}
+
+/// Bucket index for a nanosecond value: 0 for 0 ns, else
+/// `floor(log2(ns)) + 1`, clamped to the last bucket.
+#[inline]
+pub fn bucket_of(ns: u64) -> usize {
+    ((64 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive upper bound of a bucket in nanoseconds.
+#[inline]
+pub fn bucket_upper(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency sample.
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.counts[bucket_of(ns)] += 1;
+    }
+
+    #[inline]
+    pub fn record_duration(&mut self, d: std::time::Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    /// Total number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Raw bucket counts (index = [`bucket_of`]).
+    pub fn buckets(&self) -> &[u64; BUCKETS] {
+        &self.counts
+    }
+
+    /// Bump bucket `b` by `n` — for folding externally accumulated
+    /// (e.g. atomic) bucket arrays into an owned histogram.
+    pub fn add_bucket(&mut self, b: usize, n: u64) {
+        self.counts[b.min(BUCKETS - 1)] += n;
+    }
+
+    /// Element-wise sum: total count is the sum of both counts, and any
+    /// percentile of the merged histogram lies between the inputs'
+    /// percentiles (a quantile of a mixture is bounded by the
+    /// components' quantiles).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+    }
+
+    /// Upper bound (ns) of the bucket containing the `p`-quantile
+    /// sample (`0.0 < p <= 1.0`). Returns 0 on an empty histogram.
+    /// Monotone in `p`: `percentile(a) <= percentile(b)` for `a <= b`.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(b);
+            }
+        }
+        bucket_upper(BUCKETS - 1)
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.percentile(0.90)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(0.99)
+    }
+}
+
+/// The shared-counter variant of [`LatencyHist`]: relaxed atomic
+/// buckets, for recording from many workers at once (e.g.
+/// `BatchCounters`). Recording is one relaxed `fetch_add` — lock-free,
+/// like the counters it sits beside. Fold into an owned histogram with
+/// [`AtomicHist::fold`] after the workers have joined.
+#[derive(Debug)]
+pub struct AtomicHist {
+    counts: [std::sync::atomic::AtomicU64; BUCKETS],
+}
+
+impl Default for AtomicHist {
+    fn default() -> Self {
+        Self {
+            counts: std::array::from_fn(|_| std::sync::atomic::AtomicU64::new(0)),
+        }
+    }
+}
+
+impl AtomicHist {
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.counts[bucket_of(ns)].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    pub fn fold(&self) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        for (b, c) in self.counts.iter().enumerate() {
+            h.add_bucket(b, c.load(std::sync::atomic::Ordering::Relaxed));
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_deterministic() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1);
+        // Every bucket's upper bound maps back into that bucket.
+        for b in 0..BUCKETS - 1 {
+            assert_eq!(bucket_of(bucket_upper(b)), b, "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_bucket_aligned() {
+        let mut h = LatencyHist::new();
+        for _ in 0..90 {
+            h.record(100); // bucket 7, upper 127
+        }
+        for _ in 0..10 {
+            h.record(10_000); // bucket 14, upper 16383
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.p50(), 127);
+        assert_eq!(h.p90(), 127);
+        assert_eq!(h.p99(), 16383);
+        assert!(h.p50() <= h.p90() && h.p90() <= h.p99());
+    }
+
+    #[test]
+    fn atomic_hist_folds_into_owned() {
+        let a = AtomicHist::default();
+        a.record(100);
+        a.record(100);
+        a.record(10_000);
+        let h = a.fold();
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.p50(), 127);
+        assert_eq!(h.percentile(1.0), 16383);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p99(), 0);
+    }
+
+    #[test]
+    fn merge_preserves_count_and_bounds_percentiles() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        for i in 0..1000u64 {
+            a.record(i);
+        }
+        for i in 0..500u64 {
+            b.record(i * 100);
+        }
+        let (ca, cb) = (a.count(), b.count());
+        let (pa, pb) = (a.p99(), b.p99());
+        let mut m = a;
+        m.merge(&b);
+        assert_eq!(m.count(), ca + cb, "merge preserves total count");
+        // The merged p99 sits between the inputs' p99s (mixture
+        // quantile bound), and the merged percentiles stay monotone.
+        assert!(m.p99() >= pa.min(pb) && m.p99() <= pa.max(pb));
+        assert!(m.p50() <= m.p90() && m.p90() <= m.p99());
+    }
+}

@@ -1,0 +1,353 @@
+//! Per-worker lock-free ring-buffer event tracing.
+//!
+//! Each emitting thread is hashed onto one of [`RINGS`] fixed-capacity
+//! ring buffers. A ring is an array of packed four-word records
+//! (`[t_ns, kind|ring, a, b]`, 32 bytes) plus a cursor; emitting is one
+//! relaxed `fetch_add` on the cursor and four relaxed stores — no locks
+//! anywhere on the path. When tracing is disabled (the default) every
+//! event site reduces to a single relaxed load and a branch (see the
+//! overhead contract in [`crate::obs`]).
+//!
+//! Rings overwrite their oldest records when full (the cursor keeps
+//! counting, so the drop count is reported). [`drain`] is meant for
+//! after the traced run's threads have joined — the join provides the
+//! happens-before edge that makes the relaxed record words safe to
+//! read; draining mid-run may observe torn records and is only suitable
+//! for diagnostics.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::tm::AbortCause;
+use crate::util::json;
+
+/// Number of per-worker rings. Threads beyond this share rings (the
+/// cursor `fetch_add` keeps sharing race-free).
+pub const RINGS: usize = 64;
+
+/// Records per ring before the oldest are overwritten.
+pub const RING_CAPACITY: usize = 16 * 1024;
+
+const WORDS: usize = 4;
+
+/// Event kinds, packed into the record's second word alongside the
+/// ring index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A speculation block entered the pipeline window. `a` = block
+    /// index, `b` = transactions in the block.
+    BlockAdmitted = 1,
+    /// The window head completed and wrote back. `a` = block index,
+    /// `b` = admit→promote latency in ns.
+    BlockPromoted = 2,
+    /// A hardware transaction aborted. `a` = [`AbortCause::index`].
+    HwAbort = 3,
+    /// A batch transaction was re-readied with a bumped incarnation
+    /// (validation abort, dependency resume, or cross-block resume).
+    /// `a` = transaction index, `b` = new incarnation.
+    Reincarnation = 4,
+    /// The adaptive controller changed the block size. `a` = old,
+    /// `b` = new.
+    BlockResize = 5,
+    /// The adaptive controller changed the window depth. `a` = old,
+    /// `b` = new.
+    WindowResize = 6,
+    /// A worker stole work from a same-locality-group peer.
+    StealLocal = 7,
+    /// A worker stole work across locality groups.
+    StealRemote = 8,
+}
+
+impl EventKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::BlockAdmitted => "block-admitted",
+            EventKind::BlockPromoted => "block-promoted",
+            EventKind::HwAbort => "hw-abort",
+            EventKind::Reincarnation => "reincarnation",
+            EventKind::BlockResize => "block-resize",
+            EventKind::WindowResize => "window-resize",
+            EventKind::StealLocal => "steal-local",
+            EventKind::StealRemote => "steal-remote",
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<Self> {
+        Some(match v {
+            1 => EventKind::BlockAdmitted,
+            2 => EventKind::BlockPromoted,
+            3 => EventKind::HwAbort,
+            4 => EventKind::Reincarnation,
+            5 => EventKind::BlockResize,
+            6 => EventKind::WindowResize,
+            7 => EventKind::StealLocal,
+            8 => EventKind::StealRemote,
+            _ => return None,
+        })
+    }
+}
+
+/// One drained trace record.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Nanoseconds since tracing was enabled.
+    pub t_ns: u64,
+    /// Ring the emitting thread hashed onto (≈ worker id).
+    pub ring: usize,
+    pub kind: EventKind,
+    pub a: u64,
+    pub b: u64,
+}
+
+struct Ring {
+    cursor: AtomicUsize,
+    /// `RING_CAPACITY * WORDS` relaxed words.
+    cells: Box<[AtomicU64]>,
+}
+
+struct Sink {
+    epoch: Instant,
+    rings: Vec<Ring>,
+    next_slot: AtomicUsize,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: OnceLock<Sink> = OnceLock::new();
+
+thread_local! {
+    static SLOT: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
+}
+
+fn sink() -> &'static Sink {
+    SINK.get_or_init(|| Sink {
+        epoch: Instant::now(),
+        rings: (0..RINGS)
+            .map(|_| Ring {
+                cursor: AtomicUsize::new(0),
+                cells: (0..RING_CAPACITY * WORDS).map(|_| AtomicU64::new(0)).collect(),
+            })
+            .collect(),
+        next_slot: AtomicUsize::new(0),
+    })
+}
+
+/// Turn tracing on. Allocates the rings on first call; the timestamp
+/// epoch is the first `enable()`.
+pub fn enable() {
+    sink();
+    ENABLED.store(true, Ordering::SeqCst);
+    super::note_timing_consumer();
+}
+
+/// Turn tracing off (event sites go back to load+branch). Buffered
+/// records stay drainable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Is tracing currently on? One relaxed load.
+#[inline]
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Emit one event. When tracing is off this is a relaxed load and a
+/// branch — the cold half never runs.
+#[inline]
+pub fn emit(kind: EventKind, a: u64, b: u64) {
+    if !is_enabled() {
+        return;
+    }
+    emit_slow(kind, a, b);
+}
+
+#[cold]
+fn emit_slow(kind: EventKind, a: u64, b: u64) {
+    let sink = sink();
+    let slot = SLOT.with(|s| {
+        let mut v = s.get();
+        if v == usize::MAX {
+            v = sink.next_slot.fetch_add(1, Ordering::Relaxed) % RINGS;
+            s.set(v);
+        }
+        v
+    });
+    let ring = &sink.rings[slot];
+    let i = ring.cursor.fetch_add(1, Ordering::Relaxed) % RING_CAPACITY;
+    let t_ns = sink.epoch.elapsed().as_nanos() as u64;
+    let base = i * WORDS;
+    ring.cells[base].store(t_ns, Ordering::Relaxed);
+    ring.cells[base + 1].store(kind as u64, Ordering::Relaxed);
+    ring.cells[base + 2].store(a, Ordering::Relaxed);
+    ring.cells[base + 3].store(b, Ordering::Relaxed);
+}
+
+// -- typed event-site helpers ------------------------------------------
+
+#[inline]
+pub fn block_admitted(block: u64, txns: u64) {
+    emit(EventKind::BlockAdmitted, block, txns);
+}
+
+#[inline]
+pub fn block_promoted(block: u64, latency_ns: u64) {
+    emit(EventKind::BlockPromoted, block, latency_ns);
+}
+
+#[inline]
+pub fn hw_abort(cause: AbortCause) {
+    emit(EventKind::HwAbort, cause.index() as u64, 0);
+}
+
+#[inline]
+pub fn reincarnation(txn: u64, incarnation: u64) {
+    emit(EventKind::Reincarnation, txn, incarnation);
+}
+
+#[inline]
+pub fn block_resize(old: u64, new: u64) {
+    emit(EventKind::BlockResize, old, new);
+}
+
+#[inline]
+pub fn window_resize(old: u64, new: u64) {
+    emit(EventKind::WindowResize, old, new);
+}
+
+#[inline]
+pub fn steal(local: bool) {
+    emit(
+        if local {
+            EventKind::StealLocal
+        } else {
+            EventKind::StealRemote
+        },
+        0,
+        0,
+    );
+}
+
+// -- draining ----------------------------------------------------------
+
+/// Total records emitted beyond ring capacity (overwritten, lost).
+pub fn dropped() -> u64 {
+    let Some(sink) = SINK.get() else { return 0 };
+    sink.rings
+        .iter()
+        .map(|r| r.cursor.load(Ordering::Relaxed).saturating_sub(RING_CAPACITY) as u64)
+        .sum()
+}
+
+/// Drain every ring into a time-sorted vector. Call after the traced
+/// threads have joined (see module docs); the rings are reset so a
+/// subsequent run traces fresh.
+pub fn drain() -> Vec<Event> {
+    let Some(sink) = SINK.get() else {
+        return Vec::new();
+    };
+    let mut out = Vec::new();
+    for (ri, ring) in sink.rings.iter().enumerate() {
+        let written = ring.cursor.swap(0, Ordering::SeqCst);
+        let n = written.min(RING_CAPACITY);
+        for i in 0..n {
+            let base = i * WORDS;
+            let kind = ring.cells[base + 1].load(Ordering::Relaxed);
+            let Some(kind) = EventKind::from_u64(kind) else {
+                continue;
+            };
+            out.push(Event {
+                t_ns: ring.cells[base].load(Ordering::Relaxed),
+                ring: ri,
+                kind,
+                a: ring.cells[base + 2].load(Ordering::Relaxed),
+                b: ring.cells[base + 3].load(Ordering::Relaxed),
+            });
+            ring.cells[base + 1].store(0, Ordering::Relaxed);
+        }
+    }
+    out.sort_by_key(|e| e.t_ns);
+    out
+}
+
+/// One event as a JSON-lines record.
+pub fn event_json(e: &Event) -> String {
+    format!(
+        "{{\"t_ns\":{},\"worker\":{},\"kind\":\"{}\",\"a\":{},\"b\":{}}}",
+        e.t_ns,
+        e.ring,
+        json::escape(e.kind.name()),
+        e.a,
+        e.b
+    )
+}
+
+/// Drain and write all buffered events to `path` as JSON-lines.
+/// Returns the number of events written.
+pub fn write_jsonl(path: &str) -> std::io::Result<usize> {
+    let events = drain();
+    let mut out = String::new();
+    for e in &events {
+        out.push_str(&event_json(e));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tracing state is process-global and other tests run concurrently
+    // in this binary: while this test's enable window is open, foreign
+    // threads (worker pools aborting transactions, stealing, …) may
+    // emit real events. Everything this test emits carries the marker
+    // in `a`, and every assertion filters on it.
+    const MARK: u64 = 0xFEED_0B5E;
+
+    #[test]
+    fn emit_drain_round_trip() {
+        // Disabled: emit is a no-op.
+        emit(EventKind::HwAbort, MARK, 2);
+        assert!(
+            drain().iter().all(|e| e.a != MARK),
+            "disabled emit must not record"
+        );
+        enable();
+        emit(EventKind::BlockAdmitted, MARK, 1024);
+        emit(EventKind::BlockPromoted, MARK, 5_000);
+        hw_abort(AbortCause::Capacity);
+        steal(true);
+        emit(EventKind::Reincarnation, MARK, 2);
+        emit(EventKind::BlockResize, MARK, 512);
+        emit(EventKind::WindowResize, MARK, 3);
+        disable();
+        // Disabled again: not recorded.
+        emit(EventKind::HwAbort, MARK, 9);
+        let events = drain();
+        // The typed helpers are unmarked; assert they landed at all.
+        assert!(events
+            .iter()
+            .any(|e| e.kind == EventKind::HwAbort
+                && e.a == AbortCause::Capacity.index() as u64));
+        assert!(events.iter().any(|e| e.kind == EventKind::StealLocal));
+        let mine: Vec<&Event> = events.iter().filter(|e| e.a == MARK).collect();
+        assert_eq!(mine.len(), 5);
+        // drain() sorts stably by t_ns, so same-thread (same-ring)
+        // emission order is preserved.
+        assert_eq!(mine[0].kind, EventKind::BlockAdmitted);
+        assert_eq!(mine[0].b, 1024);
+        assert_eq!(mine[1].kind, EventKind::BlockPromoted);
+        assert_eq!(mine[1].b, 5_000);
+        assert_eq!(mine[2].kind, EventKind::Reincarnation);
+        assert_eq!(mine[3].kind, EventKind::BlockResize);
+        assert_eq!(mine[4].kind, EventKind::WindowResize);
+        assert!(events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
+        let line = event_json(mine[0]);
+        assert!(line.contains("\"kind\":\"block-admitted\""));
+        assert!(line.starts_with('{') && line.ends_with('}'));
+        // Drained rings hold none of this test's events.
+        assert!(drain().iter().all(|e| e.a != MARK));
+    }
+}

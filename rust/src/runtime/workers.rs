@@ -466,6 +466,7 @@ pub fn steal_from_peers(
                 if local {
                     local_steal_counter.fetch_add(1, SeqCst);
                 }
+                crate::obs::trace::steal(local);
                 return Some(v);
             }
         }

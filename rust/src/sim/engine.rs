@@ -720,6 +720,22 @@ impl Simulator {
             s.time_ns = (self.cost.to_seconds(th.clock) * 1e9) as u64;
             table.push(tid, s);
         }
+        // Same snapshot schema as the live kernels, with *virtual* time
+        // in `time_ns` — so simulator sweeps and live runs land in one
+        // metrics stream.
+        if crate::obs::snapshot::is_enabled() {
+            let mut interval = table.total();
+            interval.time_ns = (self.cost.to_seconds(makespan) * 1e9) as u64;
+            crate::obs::snapshot::record(
+                "sim",
+                spec.name(),
+                &interval,
+                &[
+                    ("threads", threads.to_string()),
+                    ("cycles", makespan.to_string()),
+                ],
+            );
+        }
         SimOutcome {
             cycles: makespan,
             seconds: self.cost.to_seconds(makespan),

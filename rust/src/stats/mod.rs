@@ -6,6 +6,7 @@ mod table;
 
 pub use table::{StatsTable, ThreadStats};
 
+use crate::obs::hist::LatencyHist;
 use crate::tm::AbortCause;
 
 /// Counters for one thread under one policy. Plain u64 fields — each
@@ -64,6 +65,12 @@ pub struct TxStats {
     pub final_window: u64,
     /// Wall-clock or virtual nanoseconds attributed to this thread.
     pub time_ns: u64,
+    /// Per-transaction attempt→commit latency (only populated when
+    /// `obs::timing_enabled()`; merged element-wise across threads).
+    pub txn_lat: LatencyHist,
+    /// Per-block admit→promote latency of the batch pipeline (only
+    /// populated when `obs::timing_enabled()`).
+    pub block_lat: LatencyHist,
 }
 
 impl TxStats {
@@ -71,9 +78,14 @@ impl TxStats {
         Self::default()
     }
 
+    /// Count a hardware abort by cause. This is the single accounting
+    /// site for every HTM backend (live and simulated), so it doubles
+    /// as the `hw-abort` trace event site — one branch when tracing is
+    /// off.
     #[inline]
     pub fn note_hw_abort(&mut self, cause: AbortCause) {
         self.hw_aborts[cause.index()] += 1;
+        crate::obs::trace::hw_abort(cause);
     }
 
     pub fn hw_aborts_total(&self) -> u64 {
@@ -115,6 +127,8 @@ impl TxStats {
             self.final_window = other.final_window;
         }
         self.time_ns = self.time_ns.max(other.time_ns);
+        self.txn_lat.merge(&other.txn_lat);
+        self.block_lat.merge(&other.block_lat);
     }
 }
 
@@ -141,5 +155,29 @@ mod tests {
         assert_eq!(a.aborts_of(AbortCause::Conflict), 1);
         assert_eq!(a.time_ns, 250, "parallel time = max, not sum");
         assert_eq!(a.total_commits(), 18);
+    }
+
+    #[test]
+    fn merge_folds_per_worker_histograms() {
+        // Two workers with disjoint latency profiles: the merged
+        // histogram keeps every sample and its percentiles stay
+        // monotone — the cross-worker aggregation StatsTable::total
+        // relies on.
+        let mut a = TxStats::new();
+        for _ in 0..99 {
+            a.txn_lat.record(200); // bucket 8, upper 255
+        }
+        a.block_lat.record(1_000_000);
+        let mut b = TxStats::new();
+        b.txn_lat.record(50_000); // bucket 16, upper 65535
+        b.block_lat.record(2_000_000);
+        a.merge(&b);
+        assert_eq!(a.txn_lat.count(), 100, "merge preserves total count");
+        assert_eq!(a.block_lat.count(), 2);
+        assert_eq!(a.txn_lat.p50(), 255);
+        assert_eq!(a.txn_lat.p99(), 255);
+        assert_eq!(a.txn_lat.percentile(1.0), 65535);
+        assert!(a.txn_lat.p50() <= a.txn_lat.p90());
+        assert!(a.txn_lat.p90() <= a.txn_lat.p99());
     }
 }
