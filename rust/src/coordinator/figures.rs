@@ -39,10 +39,11 @@ pub fn thread_axis() -> Vec<usize> {
 }
 
 /// Every scheme on one axis: the six Figure-2 policies, the remaining
-/// Figure-3 HyTM variants, and the batch backend in its fixed,
-/// runtime-adaptive, and deep-window (`window=4`) forms — the one
-/// table that places `batch` next to the paper's policies and prices
-/// the W-block pipelining lookahead.
+/// Figure-3 HyTM variants, the batch backend in its fixed,
+/// runtime-adaptive, and deep-window (`window=4`) forms, and the
+/// `auto` meta-controller — the one table that places `batch` and
+/// `auto` next to the paper's policies and prices the W-block
+/// pipelining lookahead plus the controller's switch costs.
 pub fn combined_set() -> Vec<PolicySpec> {
     let mut v = PolicySpec::fig2_set();
     for p in PolicySpec::fig3_set() {
@@ -57,6 +58,9 @@ pub fn combined_set() -> Vec<PolicySpec> {
     v.push(PolicySpec::BatchAdaptive {
         latency_ms: 0,
         window: 4,
+    });
+    v.push(PolicySpec::Auto {
+        hysteresis: crate::engine::auto::DEFAULT_HYSTERESIS,
     });
     v
 }
@@ -344,6 +348,7 @@ mod tests {
             "batch",
             "batch-adaptive",
             "batch-adaptive(window=4)",
+            "auto",
         ] {
             assert!(
                 names.iter().any(|n| n == expected),
@@ -357,6 +362,35 @@ mod tests {
         dedup.sort_unstable();
         dedup.dedup();
         assert_eq!(dedup.len(), names.len(), "duplicate rows: {names:?}");
+    }
+
+    #[test]
+    fn auto_row_is_competitive_on_the_combined_run() {
+        // The acceptance bar for `--policy auto`: on the combined-run
+        // cell it must land with the best fixed policies, not the
+        // worst — the controller's switch costs and probe intervals
+        // are allowed a small constant overhead, nothing more.
+        let cell = |spec| sim_cell(spec, 8, 10, Kernel::Both, 1, 7).0;
+        let auto_secs = cell(PolicySpec::Auto { hysteresis: 2 });
+        let fixed = [
+            cell(PolicySpec::CoarseLock),
+            cell(PolicySpec::StmNorec),
+            cell(PolicySpec::DyAd { n: 43 }),
+            cell(PolicySpec::Batch {
+                block: crate::batch::DEFAULT_BLOCK,
+            }),
+            cell(PolicySpec::batch_adaptive()),
+        ];
+        let best = fixed.iter().cloned().fold(f64::INFINITY, f64::min);
+        let worst = fixed.iter().cloned().fold(0.0, f64::max);
+        assert!(
+            auto_secs <= 1.15 * best,
+            "auto {auto_secs:.4}s must track the best fixed policy {best:.4}s"
+        );
+        assert!(
+            auto_secs < worst,
+            "auto {auto_secs:.4}s must beat the worst fixed policy {worst:.4}s"
+        );
     }
 
     #[test]

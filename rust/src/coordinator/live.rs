@@ -16,6 +16,7 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::engine::Engine;
 use crate::graph::{computation, generation, rmat, verify, EdgeTuple, Graph, Ssca2Config};
 use crate::htm::HtmConfig;
 use crate::hytm::{PolicySpec, TmSystem};
@@ -150,10 +151,16 @@ pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
     let g = Graph::alloc(cfg.ssca2());
     let sys = TmSystem::new(Arc::clone(&g.heap), cfg.htm.clone());
 
-    let (generation, gen_stats) =
-        generation::run(&sys, &g, &tuples, cfg.policy, cfg.threads, cfg.seed);
+    // One engine handle spans both kernels, so under `--policy auto`
+    // the meta-controller's state (candidate votes, dwell, decision
+    // log) carries from generation into computation instead of
+    // restarting cold at the kernel boundary.
+    let mut engine = Engine::new(cfg.policy);
 
-    let comp = computation::run(&sys, &g, cfg.policy, cfg.threads, cfg.seed ^ 0xBEEF);
+    let (generation, gen_stats) =
+        generation::run_with(&sys, &g, &tuples, &mut engine, cfg.threads, cfg.seed);
+
+    let comp = computation::run_with(&sys, &g, &mut engine, cfg.threads, cfg.seed ^ 0xBEEF);
 
     let verified = if cfg.verify {
         verify::check_graph(&g, &tuples)
@@ -171,6 +178,7 @@ pub fn run_live(cfg: &RunConfig) -> Result<LiveReport> {
     // reports the block size it converged to.
     let mut merged = gen_stats.total();
     merged.merge(&comp.stats.total());
+    engine.apply_to(&mut merged);
     let policy_label = cfg.policy.label(&merged);
 
     if matches!(cfg.policy, PolicySpec::BatchAdaptive { .. }) {
@@ -286,6 +294,15 @@ mod tests {
             "label: {}",
             r.cfg_label
         );
+    }
+
+    #[test]
+    fn live_auto_run_verifies_and_labels() {
+        let cfg = RunConfig::new(7, PolicySpec::Auto { hysteresis: 1 }, 3);
+        let r = run_live(&cfg).unwrap();
+        assert!(r.verified);
+        assert_eq!(r.gen_stats.total().total_commits(), r.tuples as u64);
+        assert!(r.cfg_label.starts_with("auto"), "label: {}", r.cfg_label);
     }
 
     #[test]

@@ -54,6 +54,45 @@ pub fn default_candidates() -> Vec<u32> {
     vec![1, 2, 4, 6, 8, 12, 16, 24, 32, 43, 64, 96]
 }
 
+/// Sweep the `--policy auto` hysteresis (consecutive votes before a
+/// backend switch commits) over the generation kernel. Low values
+/// chase every interval and pay switch costs; high values sit out
+/// whole regime changes — the sweep shows where the knee is for this
+/// workload.
+pub fn tune_auto_hysteresis(
+    scale: u32,
+    threads: usize,
+    candidates: &[u32],
+    seed: u64,
+) -> (Vec<ProbeResult>, u32) {
+    let cost = CostModel::for_scale(scale);
+    let w = SimWorkload::new(scale);
+    let sim = Simulator::new(cost.clone());
+
+    let mut probes = Vec::with_capacity(candidates.len());
+    for &n in candidates {
+        let streams: Vec<Box<dyn Iterator<Item = TxnDesc>>> = (0..threads)
+            .map(|tid| Box::new(w.generation_stream(&cost, threads, tid)) as _)
+            .collect();
+        let out = sim.run(PolicySpec::Auto { hysteresis: n }, threads, streams, seed);
+        probes.push(ProbeResult {
+            n,
+            seconds: out.seconds,
+        });
+    }
+    let best = probes
+        .iter()
+        .min_by(|a, b| a.seconds.total_cmp(&b.seconds))
+        .expect("at least one candidate")
+        .n;
+    (probes, best)
+}
+
+/// Hysteresis candidates for the auto sweep.
+pub fn default_hysteresis_candidates() -> Vec<u32> {
+    vec![1, 2, 3, 4, 6, 8]
+}
+
 pub fn render_tuning(scale: u32, threads: usize, seed: u64) -> String {
     let (probes, best) = tune_stad(scale, threads, &default_candidates(), seed);
     let mut out = format!(
@@ -66,6 +105,20 @@ pub fn render_tuning(scale: u32, threads: usize, seed: u64) -> String {
     out.push_str(&format!(
         "\nDSE cost: {} full application runs. Chosen StAd quota: {best}.\n",
         probes.len()
+    ));
+
+    let (aprobes, abest) =
+        tune_auto_hysteresis(scale, threads, &default_hysteresis_candidates(), seed);
+    out.push_str(&format!(
+        "\n### `--policy auto` hysteresis sweep (scale {scale}, {threads} threads)\n\n| hysteresis | virtual seconds |\n|---|---|\n"
+    ));
+    for p in &aprobes {
+        let marker = if p.n == abest { " **<- best**" } else { "" };
+        out.push_str(&format!("| {} | {:.3}{} |\n", p.n, p.seconds, marker));
+    }
+    out.push_str(&format!(
+        "\nChosen auto hysteresis: {abest} (default ships {}).\n",
+        crate::engine::auto::DEFAULT_HYSTERESIS
     ));
     out
 }
@@ -85,5 +138,15 @@ mod tests {
     fn render_marks_winner() {
         let md = render_tuning(9, 2, 1);
         assert!(md.contains("<- tuned"));
+        assert!(md.contains("hysteresis sweep"));
+        assert!(md.contains("<- best"));
+    }
+
+    #[test]
+    fn auto_hysteresis_sweep_picks_a_candidate() {
+        let (probes, best) = tune_auto_hysteresis(10, 4, &[1, 2, 4], 3);
+        assert_eq!(probes.len(), 3);
+        assert!([1, 2, 4].contains(&best));
+        assert!(probes.iter().all(|p| p.seconds > 0.0));
     }
 }

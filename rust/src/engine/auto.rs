@@ -1,0 +1,455 @@
+//! The `--policy auto` meta-controller: runtime backend selection from
+//! `obs::snapshot` interval deltas.
+//!
+//! This is the DyAdHyTM thesis lifted one level up: instead of adapting
+//! a retry quota inside one hybrid policy, [`AutoController`] adapts
+//! *which backend* runs the next interval. It consumes exactly the
+//! fields the snapshot registry records ([`Sample::from_stats`] and
+//! [`Sample::from_json`] compute the same `conflict_rate` from the same
+//! integer counters), scores them with the AIMD-style thresholds of
+//! [`crate::batch::adaptive::BlockSizeController`], and switches with
+//! two anti-thrash guards borrowed from PhTM's quantum: a *hysteresis*
+//! vote count (the same regime must win `hysteresis` consecutive
+//! intervals) and a *minimum dwell* ([`MIN_DWELL`] intervals must pass
+//! after a switch before the next one).
+//!
+//! The decision law:
+//! - capacity-dominated HTM abort streams (the transaction footprint
+//!   does not fit hardware, no retry count helps) → the multi-version
+//!   batch backend, which has no footprint limit;
+//! - `conflict_rate >= HI_CONFLICT` → the batch backend: block
+//!   speculation absorbs conflicts deterministically instead of
+//!   burning HTM retries;
+//! - `conflict_rate <= LO_CONFLICT` → DyAdHyTM: the HTM fast path wins
+//!   when conflicts are rare;
+//! - the dead zone in between votes for nobody (the current backend
+//!   keeps running and pending votes reset).
+//!
+//! Every switch is pushed onto a [`Decision`] log — the deterministic
+//! replay seam — and surfaced as an `obs::trace` `backend-switch`
+//! event plus a `backend_switches` stats counter by
+//! [`crate::engine::Engine`].
+
+use crate::hytm::policies::DyAdPolicy;
+use crate::hytm::PolicySpec;
+use crate::stats::TxStats;
+use crate::tm::AbortCause;
+use crate::util::json;
+
+/// Default consecutive-vote requirement (`--policy auto` with no arg).
+pub const DEFAULT_HYSTERESIS: u32 = 2;
+
+/// Intervals that must pass after a switch before the next switch.
+pub const MIN_DWELL: u32 = 2;
+
+/// Conflict rate at/above which the batch backend wins (mirrors
+/// `BlockSizeController::HI_CONFLICT`).
+pub const HI_CONFLICT: f64 = 0.10;
+
+/// Conflict rate at/below which the dyad HTM fast path wins (mirrors
+/// `BlockSizeController::LO_CONFLICT`).
+pub const LO_CONFLICT: f64 = 0.02;
+
+/// The backend the controller starts on: adaptive batch — safe under
+/// any conflict regime, and its drain-at-block-promotion is the clean
+/// handoff point for the first switch.
+pub fn start_spec() -> PolicySpec {
+    PolicySpec::batch_adaptive()
+}
+
+/// The per-transaction backend the controller switches to in sparse
+/// regimes.
+pub fn sparse_spec() -> PolicySpec {
+    PolicySpec::DyAd {
+        n: DyAdPolicy::DEFAULT_N,
+    }
+}
+
+/// One interval's controller inputs, reduced from a snapshot row or a
+/// [`TxStats`] delta. Both constructors compute `conflict_rate` from
+/// the same integer counters the snapshot registry writes, so replaying
+/// a recorded JSON-lines stream reproduces the live decisions exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sample {
+    /// `aborts / (aborts + commits)` where aborts = hw aborts (all
+    /// causes) + sw aborts — identical to the snapshot `conflict_rate`.
+    pub conflict_rate: f64,
+    /// `TxStats::total_commits()` (hw + sw + lock) for the interval.
+    pub commits: u64,
+    /// HTM aborts with [`AbortCause::Capacity`].
+    pub capacity_aborts: u64,
+    /// HTM begin attempts — the denominator of the capacity share.
+    pub hw_attempts: u64,
+    /// Interval wall (or virtual) time.
+    pub time_ns: u64,
+}
+
+impl Sample {
+    /// Reduce an interval [`TxStats`] delta.
+    pub fn from_stats(stats: &TxStats) -> Sample {
+        let aborts = stats.hw_aborts_total() + stats.sw_aborts;
+        let commits = stats.total_commits();
+        Sample {
+            conflict_rate: ratio(aborts, aborts + commits),
+            commits,
+            capacity_aborts: stats.aborts_of(AbortCause::Capacity),
+            hw_attempts: stats.hw_attempts,
+            time_ns: stats.time_ns,
+        }
+    }
+
+    /// Reduce one recorded snapshot JSON-lines row (the
+    /// `--metrics-json` schema). Only the integer counters are read;
+    /// `conflict_rate` is recomputed from them, which matches the
+    /// recorded float because [`crate::obs::snapshot::record`] derives
+    /// it from the same integers. Returns `None` when the row lacks
+    /// the counters (e.g. a non-snapshot line).
+    pub fn from_json(row: &str) -> Option<Sample> {
+        let commits = json::scrape_u64(row, "commits")?;
+        let sw_aborts = json::scrape_u64(row, "sw_aborts")?;
+        let mut hw_aborts = 0u64;
+        for cause in AbortCause::ALL {
+            let key = format!("abort_{}", cause.name().replace('-', "_"));
+            hw_aborts += json::scrape_u64(row, &key)?;
+        }
+        let aborts = hw_aborts + sw_aborts;
+        Some(Sample {
+            conflict_rate: ratio(aborts, aborts + commits),
+            commits,
+            capacity_aborts: json::scrape_u64(row, "abort_capacity")?,
+            hw_attempts: json::scrape_u64(row, "hw_attempts")?,
+            time_ns: json::scrape_u64(row, "time_ns").unwrap_or(0),
+        })
+    }
+
+    /// Build a synthetic sample from a bare conflict rate — test and
+    /// simulator convenience.
+    pub fn synthetic(conflict_rate: f64, commits: u64) -> Sample {
+        Sample {
+            conflict_rate,
+            commits,
+            capacity_aborts: 0,
+            hw_attempts: 0,
+            time_ns: 0,
+        }
+    }
+
+    /// Conflict-regime bucket: 0 = sparse (≤ LO), 2 = hot (≥ HI),
+    /// 1 = the dead zone.
+    pub fn regime(&self) -> u8 {
+        if self.conflict_rate >= HI_CONFLICT {
+            2
+        } else if self.conflict_rate <= LO_CONFLICT {
+            0
+        } else {
+            1
+        }
+    }
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+/// One committed switch decision — the replay log entry.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    /// 1-based index of the observed interval that triggered the
+    /// switch.
+    pub interval: u64,
+    pub from: PolicySpec,
+    pub to: PolicySpec,
+}
+
+/// The meta-controller state machine. Pure and deterministic: the same
+/// sample sequence always yields the same decision log (asserted by
+/// `tests/auto_replay.rs`).
+#[derive(Clone, Debug)]
+pub struct AutoController {
+    hysteresis: u32,
+    current: PolicySpec,
+    candidate: Option<PolicySpec>,
+    votes: u32,
+    /// Intervals observed since the last switch (or since start).
+    dwell: u32,
+    /// Total intervals observed.
+    intervals: u64,
+    decisions: Vec<Decision>,
+}
+
+impl AutoController {
+    pub fn new(hysteresis: u32) -> AutoController {
+        AutoController {
+            hysteresis: hysteresis.max(1),
+            current: start_spec(),
+            candidate: None,
+            votes: 0,
+            dwell: 0,
+            intervals: 0,
+            decisions: Vec::new(),
+        }
+    }
+
+    /// The backend the next interval should run under.
+    pub fn current(&self) -> PolicySpec {
+        self.current
+    }
+
+    /// Intervals observed so far.
+    pub fn intervals(&self) -> u64 {
+        self.intervals
+    }
+
+    /// The committed switch log, in decision order.
+    pub fn decisions(&self) -> &[Decision] {
+        &self.decisions
+    }
+
+    pub fn switch_count(&self) -> u64 {
+        self.decisions.len() as u64
+    }
+
+    /// The decision law, with no hysteresis applied: which backend this
+    /// sample votes for, or `None` for the dead zone / an empty
+    /// interval.
+    pub fn target_for(s: &Sample) -> Option<PolicySpec> {
+        if s.commits == 0 && s.hw_attempts == 0 {
+            return None; // empty interval carries no signal
+        }
+        // Capacity-dominated: most HTM begins die on footprint. No
+        // retry policy fixes that; the MV batch backend has no
+        // footprint limit.
+        if s.hw_attempts > 0 && s.capacity_aborts * 2 > s.hw_attempts {
+            return Some(start_spec());
+        }
+        if s.conflict_rate >= HI_CONFLICT {
+            Some(start_spec())
+        } else if s.conflict_rate <= LO_CONFLICT {
+            Some(sparse_spec())
+        } else {
+            None
+        }
+    }
+
+    /// Observe one interval sample. Returns `Some((from, to))` when the
+    /// hysteresis + dwell guards let a switch commit; the caller drains
+    /// the old backend at the next kernel/block boundary and routes
+    /// subsequent work through `to`.
+    pub fn observe(&mut self, s: &Sample) -> Option<(PolicySpec, PolicySpec)> {
+        self.intervals += 1;
+        self.dwell = self.dwell.saturating_add(1);
+        let target = match Self::target_for(s) {
+            Some(t) if t != self.current => t,
+            _ => {
+                // Dead zone or the incumbent's regime: pending votes
+                // for a challenger reset.
+                self.candidate = None;
+                self.votes = 0;
+                return None;
+            }
+        };
+        if self.candidate == Some(target) {
+            self.votes += 1;
+        } else {
+            self.candidate = Some(target);
+            self.votes = 1;
+        }
+        if self.votes >= self.hysteresis && self.dwell >= MIN_DWELL {
+            return Some(self.commit_switch(target));
+        }
+        None
+    }
+
+    /// Commit a switch unconditionally — the simulator's measured-cost
+    /// revert guard uses this to back out of a switch whose realized
+    /// throughput regressed.
+    pub fn force_switch(&mut self, to: PolicySpec) -> (PolicySpec, PolicySpec) {
+        self.commit_switch(to)
+    }
+
+    fn commit_switch(&mut self, to: PolicySpec) -> (PolicySpec, PolicySpec) {
+        let from = self.current;
+        self.decisions.push(Decision {
+            interval: self.intervals,
+            from,
+            to,
+        });
+        self.current = to;
+        self.candidate = None;
+        self.votes = 0;
+        self.dwell = 0;
+        (from, to)
+    }
+
+    /// Replay a recorded snapshot stream (JSON-lines rows, e.g. a
+    /// `--metrics-json` file) through a fresh controller and return the
+    /// decision log. Rows that don't parse as snapshot counters are
+    /// skipped, mirroring a reader tailing a mixed log.
+    pub fn replay<'a>(
+        hysteresis: u32,
+        rows: impl IntoIterator<Item = &'a str>,
+    ) -> Vec<Decision> {
+        let mut ctl = AutoController::new(hysteresis);
+        for row in rows {
+            if let Some(s) = Sample::from_json(row) {
+                ctl.observe(&s);
+            }
+        }
+        ctl.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hot() -> Sample {
+        Sample::synthetic(0.4, 1000)
+    }
+
+    fn sparse() -> Sample {
+        Sample::synthetic(0.001, 1000)
+    }
+
+    fn dead_zone() -> Sample {
+        Sample::synthetic(0.05, 1000)
+    }
+
+    #[test]
+    fn law_maps_regimes_to_backends() {
+        assert_eq!(AutoController::target_for(&hot()), Some(start_spec()));
+        assert_eq!(AutoController::target_for(&sparse()), Some(sparse_spec()));
+        assert_eq!(AutoController::target_for(&dead_zone()), None);
+        assert_eq!(
+            AutoController::target_for(&Sample::synthetic(0.0, 0)),
+            None,
+            "empty interval carries no signal"
+        );
+        // Capacity-dominated HTM streams pick batch even at a clean
+        // conflict rate.
+        let capacity = Sample {
+            conflict_rate: 0.0,
+            commits: 100,
+            capacity_aborts: 80,
+            hw_attempts: 100,
+            time_ns: 0,
+        };
+        assert_eq!(
+            AutoController::target_for(&capacity),
+            Some(start_spec())
+        );
+    }
+
+    #[test]
+    fn hysteresis_requires_consecutive_votes() {
+        let mut ctl = AutoController::new(2);
+        assert_eq!(ctl.current(), start_spec());
+        // First sparse vote: pending, no switch.
+        assert_eq!(ctl.observe(&sparse()), None);
+        // A hot interval resets the pending vote…
+        assert_eq!(ctl.observe(&hot()), None);
+        assert_eq!(ctl.observe(&sparse()), None);
+        // …so the switch needs two consecutive sparse votes again.
+        assert_eq!(
+            ctl.observe(&sparse()),
+            Some((start_spec(), sparse_spec()))
+        );
+        assert_eq!(ctl.current(), sparse_spec());
+        assert_eq!(ctl.switch_count(), 1);
+        assert_eq!(ctl.decisions()[0].interval, 4);
+    }
+
+    #[test]
+    fn dead_zone_resets_votes() {
+        let mut ctl = AutoController::new(2);
+        assert_eq!(ctl.observe(&sparse()), None);
+        assert_eq!(ctl.observe(&dead_zone()), None);
+        assert_eq!(ctl.observe(&sparse()), None, "vote count restarted");
+        assert!(ctl.observe(&sparse()).is_some());
+    }
+
+    #[test]
+    fn min_dwell_blocks_immediate_flapping() {
+        // hysteresis=1: every vote would switch, so MIN_DWELL is the
+        // only brake.
+        let mut ctl = AutoController::new(1);
+        assert_eq!(ctl.observe(&sparse()), None, "dwell 1 < MIN_DWELL");
+        assert!(ctl.observe(&sparse()).is_some(), "dwell satisfied");
+        // Straight back: dwell restarted at the switch.
+        assert_eq!(ctl.observe(&hot()), None);
+        assert!(ctl.observe(&hot()).is_some());
+        assert_eq!(ctl.switch_count(), 2);
+    }
+
+    #[test]
+    fn force_switch_logs_and_resets_dwell() {
+        let mut ctl = AutoController::new(1);
+        let (from, to) = ctl.force_switch(sparse_spec());
+        assert_eq!((from, to), (start_spec(), sparse_spec()));
+        assert_eq!(ctl.current(), sparse_spec());
+        assert_eq!(ctl.switch_count(), 1);
+        // Dwell restarted: the next regular switch needs MIN_DWELL
+        // fresh intervals.
+        assert_eq!(ctl.observe(&hot()), None);
+        assert!(ctl.observe(&hot()).is_some());
+    }
+
+    #[test]
+    fn sample_from_stats_matches_snapshot_formula() {
+        let mut s = TxStats::new();
+        s.sw_commits = 90;
+        s.sw_aborts = 10;
+        s.hw_attempts = 5;
+        s.time_ns = 777;
+        let sample = Sample::from_stats(&s);
+        assert!((sample.conflict_rate - 0.1).abs() < 1e-12);
+        assert_eq!(sample.commits, 90);
+        assert_eq!(sample.hw_attempts, 5);
+        assert_eq!(sample.time_ns, 777);
+    }
+
+    #[test]
+    fn sample_from_json_round_trips_a_snapshot_row() {
+        let row = "{\"seq\":0,\"kernel\":\"generation\",\"phase\":\"insert\",\
+                   \"time_ns\":5000,\"hw_commits\":0,\"hw_attempts\":12,\
+                   \"hw_retries\":0,\"abort_conflict\":0,\"abort_capacity\":3,\
+                   \"abort_explicit\":0,\"abort_interrupt\":0,\
+                   \"abort_sw_conflict\":0,\"sw_commits\":90,\"sw_aborts\":7,\
+                   \"lock_commits\":0,\"commits\":90}";
+        let s = Sample::from_json(row).unwrap();
+        assert_eq!(s.commits, 90);
+        assert_eq!(s.capacity_aborts, 3);
+        assert_eq!(s.hw_attempts, 12);
+        assert_eq!(s.time_ns, 5000);
+        assert!((s.conflict_rate - 10.0 / 100.0).abs() < 1e-12);
+        assert_eq!(Sample::from_json("{\"not\":\"a snapshot\"}"), None);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mk = |commits: u64, sw_aborts: u64| {
+            format!(
+                "{{\"time_ns\":1,\"hw_attempts\":0,\"abort_conflict\":0,\
+                 \"abort_capacity\":0,\"abort_explicit\":0,\
+                 \"abort_interrupt\":0,\"abort_sw_conflict\":0,\
+                 \"sw_aborts\":{sw_aborts},\"commits\":{commits}}}"
+            )
+        };
+        let rows: Vec<String> = vec![
+            mk(900, 600), // hot
+            mk(900, 600),
+            mk(999, 1), // sparse
+            mk(999, 1),
+            mk(999, 1),
+        ];
+        let a = AutoController::replay(2, rows.iter().map(|s| s.as_str()));
+        let b = AutoController::replay(2, rows.iter().map(|s| s.as_str()));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].to, sparse_spec());
+    }
+}

@@ -1,0 +1,412 @@
+//! The backend seam: one `engine` handle between the kernels and the
+//! five synchronization backends.
+//!
+//! Before this layer, every kernel, the pipeline, the simulator, and
+//! the coordinators matched on [`PolicySpec`] themselves — sixteen
+//! files of `if let Some(ctl) = spec.batch_sizing()` — so no controller
+//! could switch backends mid-run without touching all of them. Now they
+//! ask an [`Engine`] instead:
+//!
+//! * [`Engine::backend`] — the backend for the next interval: its
+//!   [`Backend::sizing`] decides block-speculated vs per-transaction
+//!   dispatch, [`Backend::executor`] builds the per-thread driver.
+//! * [`Engine::observe`] — feed the interval's [`TxStats`] delta back;
+//!   under `--policy auto` the [`auto::AutoController`] may decide to
+//!   switch, which materializes at the *next* `backend()` call — i.e.
+//!   at a kernel/phase boundary, after the old backend has drained.
+//! * [`Engine::threaded_spec`] — mid-kernel re-dispatch among
+//!   per-transaction backends only. Entering the batch backend is
+//!   deferred to the next kernel boundary: block promotion is the
+//!   drain point that keeps kernel-3's bitwise determinism across a
+//!   switch (see `tests/batch_determinism.rs`).
+//!
+//! For a fixed spec the engine is a zero-cost pass-through — same
+//! sizing, same executor, no controller — so `--policy dyad` runs
+//! exactly as before the seam existed.
+
+pub mod auto;
+
+use crate::batch::adaptive::BlockSizeController;
+use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
+use crate::stats::TxStats;
+
+use auto::AutoController;
+
+/// One synchronization backend behind the seam. Object-safe: the
+/// engine holds `Box<dyn Backend>` and swaps it on a controller switch.
+pub trait Backend {
+    /// The backend's reporting name (the spec family name).
+    fn name(&self) -> &'static str {
+        self.spec().name()
+    }
+
+    /// The concrete spec this backend executes — never
+    /// [`PolicySpec::Auto`] (the controller resolves that to one of
+    /// these).
+    fn spec(&self) -> PolicySpec;
+
+    /// `Some(controller)` when work should be block-speculated through
+    /// `crate::batch`, `None` for per-transaction dispatch. The same
+    /// seam `PolicySpec::batch_sizing` provided, now virtual.
+    fn sizing(&self) -> Option<BlockSizeController> {
+        self.spec().batch_sizing()
+    }
+
+    /// Build the per-thread driver for the per-transaction path.
+    fn executor<'s>(&self, sys: &'s TmSystem, tid: u32, seed: u64) -> ThreadExecutor<'s> {
+        ThreadExecutor::new(sys, self.spec(), tid, seed)
+    }
+}
+
+/// Coarse-grain lock baseline.
+pub struct LockBackend;
+
+impl Backend for LockBackend {
+    fn spec(&self) -> PolicySpec {
+        PolicySpec::CoarseLock
+    }
+}
+
+/// Pure STM (NOrec or TL2).
+pub struct StmBackend {
+    pub spec: PolicySpec,
+}
+
+impl Backend for StmBackend {
+    fn spec(&self) -> PolicySpec {
+        self.spec
+    }
+}
+
+/// Best-effort HTM with a lock fallback (HTMALock / HTMSpin / HLE).
+pub struct HtmBackend {
+    pub spec: PolicySpec,
+}
+
+impl Backend for HtmBackend {
+    fn spec(&self) -> PolicySpec {
+        self.spec
+    }
+}
+
+/// The HyTM retry-policy family (RND/Fx/StAd/DyAd/DyAd-TL2) plus PhTM.
+pub struct DyadBackend {
+    pub spec: PolicySpec,
+}
+
+impl Backend for DyadBackend {
+    fn spec(&self) -> PolicySpec {
+        self.spec
+    }
+}
+
+/// Block-STM-style speculative batch execution (fixed or adaptive
+/// sizing).
+pub struct BatchBackend {
+    pub spec: PolicySpec,
+}
+
+impl Backend for BatchBackend {
+    fn spec(&self) -> PolicySpec {
+        self.spec
+    }
+}
+
+/// Adapter lookup: the one place a spec is matched to a backend.
+/// [`PolicySpec::Auto`] resolves to the controller's start backend
+/// (adaptive batch); the [`Engine`] owns the controller that moves it
+/// afterwards.
+pub fn backend_for(spec: PolicySpec) -> Box<dyn Backend> {
+    match spec {
+        PolicySpec::CoarseLock => Box::new(LockBackend),
+        PolicySpec::StmNorec | PolicySpec::StmTl2 => Box::new(StmBackend { spec }),
+        PolicySpec::HtmALock { .. } | PolicySpec::HtmSpin { .. } | PolicySpec::Hle => {
+            Box::new(HtmBackend { spec })
+        }
+        PolicySpec::Rnd { .. }
+        | PolicySpec::Fx { .. }
+        | PolicySpec::StAd { .. }
+        | PolicySpec::DyAd { .. }
+        | PolicySpec::DyAdTl2 { .. }
+        | PolicySpec::PhTm { .. } => Box::new(DyadBackend { spec }),
+        PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive { .. } => {
+            Box::new(BatchBackend { spec })
+        }
+        PolicySpec::Auto { .. } => Box::new(BatchBackend {
+            spec: auto::start_spec(),
+        }),
+    }
+}
+
+/// Stable numeric code per spec family — the payload of the
+/// `backend-switch` trace event (`a` = from, `b` = to), so a trace
+/// consumer can decode switches without string parsing.
+pub fn ordinal(spec: PolicySpec) -> u64 {
+    match spec {
+        PolicySpec::CoarseLock => 0,
+        PolicySpec::StmNorec => 1,
+        PolicySpec::StmTl2 => 2,
+        PolicySpec::HtmALock { .. } => 3,
+        PolicySpec::HtmSpin { .. } => 4,
+        PolicySpec::Hle => 5,
+        PolicySpec::Rnd { .. } => 6,
+        PolicySpec::Fx { .. } => 7,
+        PolicySpec::StAd { .. } => 8,
+        PolicySpec::DyAd { .. } => 9,
+        PolicySpec::DyAdTl2 { .. } => 10,
+        PolicySpec::PhTm { .. } => 11,
+        PolicySpec::Batch { .. } => 12,
+        PolicySpec::BatchAdaptive { .. } => 13,
+        PolicySpec::Auto { .. } => 14,
+    }
+}
+
+/// The engine handle a run threads through its kernels: requested
+/// spec, the live backend, and (under `--policy auto`) the
+/// meta-controller that moves it.
+pub struct Engine {
+    requested: PolicySpec,
+    controller: Option<AutoController>,
+    current: Box<dyn Backend>,
+    switches: u64,
+}
+
+impl Engine {
+    pub fn new(spec: PolicySpec) -> Engine {
+        let controller = match spec {
+            PolicySpec::Auto { hysteresis } => Some(AutoController::new(hysteresis)),
+            _ => None,
+        };
+        Engine {
+            requested: spec,
+            controller,
+            current: backend_for(spec),
+            switches: 0,
+        }
+    }
+
+    /// The spec the run was configured with (`Auto { .. }` stays
+    /// `Auto` — use [`Engine::current_spec`] for the resolved backend).
+    pub fn requested(&self) -> PolicySpec {
+        self.requested
+    }
+
+    /// The concrete spec of the live backend.
+    pub fn current_spec(&self) -> PolicySpec {
+        self.current.spec()
+    }
+
+    pub fn is_auto(&self) -> bool {
+        self.controller.is_some()
+    }
+
+    /// Switches committed so far.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// The backend for the next interval. Under auto this is where a
+    /// pending controller decision materializes — the caller is at a
+    /// kernel/phase boundary, so the old backend has drained (its
+    /// stats interval was already fed to [`Engine::observe`]).
+    /// `kernel`/`phase` are diagnostic labels only.
+    pub fn backend(&mut self, _kernel: &str, _phase: &str) -> &dyn Backend {
+        self.materialize();
+        &*self.current
+    }
+
+    /// Mid-kernel re-dispatch for the per-transaction path: the live
+    /// backend's spec when it is per-transaction, else `fallback`.
+    /// Entering the *batch* backend mid-kernel is deliberately
+    /// deferred to the next [`Engine::backend`] call — the kernel
+    /// boundary is the clean drain point.
+    pub fn threaded_spec(&mut self, fallback: PolicySpec) -> PolicySpec {
+        if self.controller.is_some() {
+            let want = self.controller.as_ref().unwrap().current();
+            if want.batch_sizing().is_none() {
+                self.materialize();
+                return want;
+            }
+            return fallback;
+        }
+        let spec = self.current.spec();
+        if spec.batch_sizing().is_some() {
+            fallback
+        } else {
+            spec
+        }
+    }
+
+    fn materialize(&mut self) {
+        if let Some(ctl) = &self.controller {
+            let want = ctl.current();
+            if want != self.current.spec() {
+                self.current = backend_for(want);
+            }
+        }
+    }
+
+    /// Feed one completed interval's [`TxStats`] delta back. Under a
+    /// fixed spec this is a no-op; under auto the controller votes, and
+    /// a committed switch is logged (`backend-switch` trace event +
+    /// `[obs]` diag line) and counted into `backend_switches`.
+    pub fn observe(&mut self, interval: &TxStats) {
+        let Some(ctl) = &mut self.controller else {
+            return;
+        };
+        let sample = auto::Sample::from_stats(interval);
+        if let Some((from, to)) = ctl.observe(&sample) {
+            self.switches += 1;
+            crate::obs::trace::backend_switch(ordinal(from), ordinal(to));
+            crate::obs::diag(
+                1,
+                &format!(
+                    "auto: backend switch {} -> {} at interval {} (conflict {:.4})",
+                    from.name(),
+                    to.name(),
+                    ctl.intervals(),
+                    sample.conflict_rate
+                ),
+            );
+        }
+    }
+
+    /// Fold the engine's own counters into a run's merged stats (the
+    /// coordinators call this before labeling).
+    pub fn apply_to(&self, stats: &mut TxStats) {
+        stats.backend_switches += self.switches;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_spec_is_a_passthrough() {
+        let specs = [
+            PolicySpec::CoarseLock,
+            PolicySpec::StmNorec,
+            PolicySpec::StmTl2,
+            PolicySpec::HtmALock { retries: 8 },
+            PolicySpec::Hle,
+            PolicySpec::DyAd { n: 43 },
+            PolicySpec::PhTm { retries: 4, sw_quantum: 16 },
+            PolicySpec::Batch { block: 512 },
+            PolicySpec::batch_adaptive(),
+        ];
+        for spec in specs {
+            let mut e = Engine::new(spec);
+            assert!(!e.is_auto());
+            assert_eq!(e.requested(), spec);
+            let be = e.backend("test", "phase");
+            assert_eq!(be.spec(), spec);
+            assert_eq!(be.name(), spec.name());
+            // sizing matches the old seam exactly.
+            assert_eq!(
+                be.sizing().is_some(),
+                spec.batch_sizing().is_some(),
+                "{}",
+                spec.name()
+            );
+            // observe is inert; no switches ever.
+            let mut s = TxStats::new();
+            s.sw_commits = 10;
+            e.observe(&s);
+            assert_eq!(e.switches(), 0);
+            let mut merged = TxStats::new();
+            e.apply_to(&mut merged);
+            assert_eq!(merged.backend_switches, 0);
+        }
+    }
+
+    #[test]
+    fn threaded_spec_defers_batch_to_kernel_boundaries() {
+        // Fixed batch spec: the threaded path runs the fallback.
+        let mut e = Engine::new(PolicySpec::Batch { block: 64 });
+        assert_eq!(
+            e.threaded_spec(PolicySpec::StmNorec),
+            PolicySpec::StmNorec
+        );
+        // Fixed per-txn spec: the spec itself.
+        let mut e = Engine::new(PolicySpec::DyAd { n: 43 });
+        assert_eq!(e.threaded_spec(PolicySpec::StmNorec), PolicySpec::DyAd { n: 43 });
+    }
+
+    #[test]
+    fn auto_engine_switches_and_counts() {
+        let mut e = Engine::new(PolicySpec::Auto { hysteresis: 1 });
+        assert!(e.is_auto());
+        // Starts on the adaptive batch backend.
+        assert_eq!(e.current_spec(), PolicySpec::batch_adaptive());
+        assert!(e.backend("k", "p").sizing().is_some());
+        // Two sparse intervals (MIN_DWELL) flip it to dyad.
+        let mut sparse = TxStats::new();
+        sparse.sw_commits = 1000;
+        e.observe(&sparse);
+        e.observe(&sparse);
+        assert_eq!(e.switches(), 1);
+        assert_eq!(e.backend("k", "p").spec(), auto::sparse_spec());
+        assert_eq!(e.current_spec(), auto::sparse_spec());
+        let mut merged = TxStats::new();
+        e.apply_to(&mut merged);
+        assert_eq!(merged.backend_switches, 1);
+    }
+
+    #[test]
+    fn auto_threaded_spec_tracks_controller_but_not_into_batch() {
+        let mut e = Engine::new(PolicySpec::Auto { hysteresis: 1 });
+        // Controller still on batch: threaded path uses the fallback.
+        assert_eq!(
+            e.threaded_spec(PolicySpec::StmNorec),
+            PolicySpec::StmNorec
+        );
+        let mut sparse = TxStats::new();
+        sparse.sw_commits = 1000;
+        e.observe(&sparse);
+        e.observe(&sparse);
+        // Switched to dyad: the threaded path follows mid-kernel.
+        assert_eq!(e.threaded_spec(PolicySpec::StmNorec), auto::sparse_spec());
+        // Drive it back to batch: two hot intervals.
+        let mut hot = TxStats::new();
+        hot.sw_commits = 600;
+        hot.sw_aborts = 400;
+        e.observe(&hot);
+        e.observe(&hot);
+        assert_eq!(e.current_spec(), auto::sparse_spec(), "not yet materialized");
+        // Mid-kernel the threaded path must NOT enter batch…
+        assert_eq!(
+            e.threaded_spec(PolicySpec::StmNorec),
+            PolicySpec::StmNorec
+        );
+        // …but the next kernel boundary picks it up.
+        assert!(e.backend("k", "p").sizing().is_some());
+        assert_eq!(e.switches(), 2);
+    }
+
+    #[test]
+    fn ordinals_are_distinct_and_stable() {
+        let specs = [
+            PolicySpec::CoarseLock,
+            PolicySpec::StmNorec,
+            PolicySpec::StmTl2,
+            PolicySpec::HtmALock { retries: 8 },
+            PolicySpec::HtmSpin { retries: 8 },
+            PolicySpec::Hle,
+            PolicySpec::Rnd { lo: 1, hi: 50 },
+            PolicySpec::Fx { n: 43 },
+            PolicySpec::StAd { n: 6 },
+            PolicySpec::DyAd { n: 43 },
+            PolicySpec::DyAdTl2 { n: 43 },
+            PolicySpec::PhTm { retries: 4, sw_quantum: 16 },
+            PolicySpec::Batch { block: 1 },
+            PolicySpec::batch_adaptive(),
+            PolicySpec::Auto { hysteresis: 2 },
+        ];
+        let mut seen = std::collections::HashSet::new();
+        for (i, spec) in specs.iter().enumerate() {
+            assert_eq!(ordinal(*spec), i as u64);
+            assert!(seen.insert(ordinal(*spec)));
+        }
+    }
+}

@@ -19,6 +19,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::engine::Engine;
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
 use crate::runtime::workers::{run_sharded, PoolConfig};
 use crate::stats::{StatsTable, TxStats};
@@ -109,13 +110,7 @@ fn collect_band(
 }
 
 /// Run the computation kernel with `threads` workers under `spec`.
-///
-/// Both phases run on the shared worker runtime
-/// ([`crate::runtime::workers::run_sharded`]): the cell region is cut
-/// into grain-sized scan ranges dealt to pinned workers, and an idle
-/// worker steals ranges from its peers instead of idling at the phase
-/// barrier (the phase boundary itself is semantic — the cutoff depends
-/// on every probe — and stays).
+/// Thin wrapper over [`run_with`] with a run-local [`Engine`].
 pub fn run(
     sys: &TmSystem,
     g: &Graph,
@@ -123,8 +118,38 @@ pub fn run(
     threads: usize,
     seed: u64,
 ) -> ComputationResult {
+    let mut engine = Engine::new(spec);
+    run_with(sys, g, &mut engine, threads, seed)
+}
+
+/// Run the computation kernel through an [`Engine`] handle.
+///
+/// The engine's live backend decides the dispatch at kernel entry;
+/// each phase's interval delta is fed back via [`Engine::observe`], and
+/// the phase boundary between probe and collect is a re-dispatch point
+/// for per-transaction backends ([`Engine::threaded_spec`] — a
+/// controller decision to *enter* the batch backend is deferred to the
+/// next kernel boundary, where the previous backend has drained).
+///
+/// Both phases run on the shared worker runtime
+/// ([`crate::runtime::workers::run_sharded`]): the cell region is cut
+/// into grain-sized scan ranges dealt to pinned workers, and an idle
+/// worker steals ranges from its peers instead of idling at the phase
+/// barrier (the phase boundary itself is semantic — the cutoff depends
+/// on every probe — and stays).
+pub fn run_with(
+    sys: &TmSystem,
+    g: &Graph,
+    engine: &mut Engine,
+    threads: usize,
+    seed: u64,
+) -> ComputationResult {
     assert!(threads >= 1);
-    if let Some(ctl) = spec.batch_sizing() {
+    let (sizing, exec_spec) = {
+        let be = engine.backend("computation", "probe");
+        (be.sizing(), be.spec())
+    };
+    if let Some(ctl) = sizing {
         // Speculative batch backend: same two phases, admitted as
         // controller-sized blocks of deterministic-order transactions.
         let r = crate::batch::workload::run_computation(g, threads, ctl);
@@ -139,6 +164,7 @@ pub fn run(
                 ("selected", r.selected.to_string()),
             ],
         );
+        engine.observe(&interval);
         return r;
     }
     let total_cells = g.cells_allocated();
@@ -152,7 +178,7 @@ pub fn run(
         total_cells,
         grain,
         |tid, feed, _| {
-            let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
+            let mut ex = ThreadExecutor::new(sys, exec_spec, tid as u32, seed);
             let t = Instant::now();
             while let Some((lo, hi)) = feed.next() {
                 scan_and_merge_max(g, &mut ex, lo, hi);
@@ -162,7 +188,7 @@ pub fn run(
         },
     );
 
-    if crate::obs::snapshot::is_enabled() {
+    {
         let mut interval = TxStats::new();
         for s in &phase1_stats {
             interval.merge(s);
@@ -174,11 +200,16 @@ pub fn run(
             &interval,
             &[("threads", threads.to_string())],
         );
+        engine.observe(&interval);
     }
 
     let max_weight = g.heap.load(g.gmax) as u32;
     let cutoff = g.weight_cutoff() as u64;
     let t1 = Instant::now();
+
+    // Phase boundary: a mid-kernel re-dispatch point for the
+    // per-transaction backends.
+    let collect_spec = engine.threaded_spec(exec_spec);
 
     // Phase 2: collect the band.
     let (phase2_stats, pool2) = run_sharded(
@@ -186,7 +217,7 @@ pub fn run(
         total_cells,
         grain,
         |tid, feed, _| {
-            let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed ^ 0xC0);
+            let mut ex = ThreadExecutor::new(sys, collect_spec, tid as u32, seed ^ 0xC0);
             let t = Instant::now();
             while let Some((lo, hi)) = feed.next() {
                 collect_band(g, &mut ex, lo, hi, cutoff);
@@ -196,7 +227,7 @@ pub fn run(
         },
     );
 
-    if crate::obs::snapshot::is_enabled() {
+    {
         let mut interval = TxStats::new();
         for s in &phase2_stats {
             interval.merge(s);
@@ -211,6 +242,7 @@ pub fn run(
                 ("cutoff", cutoff.to_string()),
             ],
         );
+        engine.observe(&interval);
     }
 
     for (tid, (mut s, p1)) in phase2_stats
@@ -278,6 +310,9 @@ mod tests {
             PolicySpec::Rnd { lo: 1, hi: 50 },
             PolicySpec::DyAd { n: 43 },
             PolicySpec::Batch { block: 128 },
+            // Auto resolves to the batch start backend on a fresh
+            // engine; the band must come out identical regardless.
+            PolicySpec::Auto { hysteresis: 2 },
         ] {
             let (sys, g, tuples) = built(6);
             let r = run(&sys, &g, spec, 4, 11);

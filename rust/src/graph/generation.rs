@@ -21,6 +21,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::engine::Engine;
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
 use crate::runtime::workers::{run_sharded, PoolConfig};
 use crate::stats::{StatsTable, TxStats};
@@ -111,13 +112,10 @@ pub(crate) fn kernel_grain(total: usize, threads: usize, align: usize) -> usize 
 }
 
 /// Run the generation kernel with `threads` workers under `spec`.
-/// Returns (wall time, per-thread stats).
-///
-/// Non-batch policies run on the shared worker runtime
-/// ([`crate::runtime::workers::run_sharded`]): the tuple range is cut
-/// into grain-sized chunks dealt contiguously to pinned workers, and an
-/// idle worker steals chunks from its peers instead of waiting at the
-/// join barrier — steal and pin counts land in the stats table.
+/// Returns (wall time, per-thread stats). Thin wrapper over
+/// [`run_with`] with a run-local [`Engine`] — callers that thread one
+/// engine across several kernels (live runs, `k3`) use `run_with`
+/// directly so the auto controller's state survives kernel boundaries.
 pub fn run(
     sys: &TmSystem,
     g: &Graph,
@@ -126,8 +124,35 @@ pub fn run(
     threads: usize,
     seed: u64,
 ) -> (Duration, StatsTable) {
+    let mut engine = Engine::new(spec);
+    run_with(sys, g, tuples, &mut engine, threads, seed)
+}
+
+/// Run the generation kernel through an [`Engine`] handle: the engine's
+/// live backend decides block-speculated vs per-transaction dispatch at
+/// entry, and the completed interval is fed back via
+/// [`Engine::observe`] so a `--policy auto` controller can re-route the
+/// next kernel.
+///
+/// Non-batch backends run on the shared worker runtime
+/// ([`crate::runtime::workers::run_sharded`]): the tuple range is cut
+/// into grain-sized chunks dealt contiguously to pinned workers, and an
+/// idle worker steals chunks from its peers instead of waiting at the
+/// join barrier — steal and pin counts land in the stats table.
+pub fn run_with(
+    sys: &TmSystem,
+    g: &Graph,
+    tuples: &[EdgeTuple],
+    engine: &mut Engine,
+    threads: usize,
+    seed: u64,
+) -> (Duration, StatsTable) {
     assert!(threads >= 1);
-    let (elapsed, table) = if let Some(ctl) = spec.batch_sizing() {
+    let (sizing, exec_spec) = {
+        let be = engine.backend("generation", "insert");
+        (be.sizing(), be.spec())
+    };
+    let (elapsed, table) = if let Some(ctl) = sizing {
         // The batch backend owns its own worker pool and serialization
         // order; `threads` becomes its concurrency level. The
         // controller pins the block (`batch=N`) or adapts it from the
@@ -143,7 +168,7 @@ pub fn run(
             tuples.len(),
             grain,
             |tid, feed, _pinned| {
-                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed);
+                let mut ex = ThreadExecutor::new(sys, exec_spec, tid as u32, seed);
                 let t = Instant::now();
                 while let Some((lo, hi)) = feed.next() {
                     insert_slice(g, &mut ex, &tuples[lo..hi]);
@@ -174,6 +199,7 @@ pub fn run(
             ("tuples", tuples.len().to_string()),
         ],
     );
+    engine.observe(&interval);
     (elapsed, table)
 }
 

@@ -21,6 +21,7 @@
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::engine::Engine;
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
 use crate::mem::{Addr, WORDS_PER_LINE};
 use crate::runtime::workers::{run_sharded, PoolConfig};
@@ -55,6 +56,7 @@ pub fn roots_from_results(g: &Graph) -> Vec<u32> {
 }
 
 /// Run kernel 3 from `roots`, expanding `depth` levels under `spec`.
+/// Thin wrapper over [`run_with`] with a run-local [`Engine`].
 pub fn run(
     sys: &TmSystem,
     g: &Graph,
@@ -64,8 +66,32 @@ pub fn run(
     threads: usize,
     seed: u64,
 ) -> SubgraphResult {
+    let mut engine = Engine::new(spec);
+    run_with(sys, g, roots, depth, &mut engine, threads, seed)
+}
+
+/// Run kernel 3 through an [`Engine`] handle: dispatch is decided at
+/// kernel entry, every level's interval is fed back via
+/// [`Engine::observe`], and each level boundary is a re-dispatch point
+/// for per-transaction backends (a switch *into* the batch backend
+/// waits for the next kernel boundary — the level-synchronous claims
+/// make any per-level backend sequence visit the same deterministic
+/// vertex set, which [`verify_subgraph`] checks).
+pub fn run_with(
+    sys: &TmSystem,
+    g: &Graph,
+    roots: &[u32],
+    depth: usize,
+    engine: &mut Engine,
+    threads: usize,
+    seed: u64,
+) -> SubgraphResult {
     assert!(threads >= 1);
-    if let Some(ctl) = spec.batch_sizing() {
+    let (sizing, exec_spec) = {
+        let be = engine.backend("extraction", "level-0");
+        (be.sizing(), be.spec())
+    };
+    if let Some(ctl) = sizing {
         // The batch backend owns its worker pool and serialization
         // order; `threads` becomes its concurrency level. No silent
         // NOrec fallback: the claims run through `BatchSystem`.
@@ -81,6 +107,7 @@ pub fn run(
                 ("marked", r.total_marked.to_string()),
             ],
         );
+        engine.observe(&interval);
         return r;
     }
     let n = g.cfg.vertices();
@@ -96,7 +123,7 @@ pub fn run(
     // but run it through the TM path anyway for uniformity).
     let mut frontier: Vec<u32> = Vec::new();
     {
-        let mut ex = ThreadExecutor::new(sys, spec, 0, seed);
+        let mut ex = ThreadExecutor::new(sys, exec_spec, 0, seed);
         for &r in roots {
             let claimed = ex.execute(&mut |t: &mut dyn TxAccess| -> TxResult<bool> {
                 let m = t.read(marks_base + r as usize)?;
@@ -117,6 +144,7 @@ pub fn run(
             &ex.stats,
             &[("frontier", frontier.len().to_string())],
         );
+        engine.observe(&ex.stats);
         table.rows[0].stats.merge(&ex.stats);
     }
 
@@ -128,6 +156,8 @@ pub fn run(
         }
         let next = Mutex::new(Vec::<u32>::new());
         let mark_val = (level + 1) as u64;
+        // Level boundary: per-transaction re-dispatch under auto.
+        let level_spec = engine.threaded_spec(exec_spec);
         // Frontier ranges on the shared worker runtime: hub-heavy
         // frontier entries make shares wildly uneven, which is exactly
         // what the stealing deques absorb.
@@ -138,7 +168,7 @@ pub fn run(
             frontier.len(),
             grain,
             |tid, feed, _| {
-                let mut ex = ThreadExecutor::new(sys, spec, tid as u32, seed ^ level as u64);
+                let mut ex = ThreadExecutor::new(sys, level_spec, tid as u32, seed ^ level as u64);
                 let t = Instant::now();
                 let mut local_next = Vec::new();
                 while let Some((lo, hi)) = feed.next() {
@@ -169,7 +199,7 @@ pub fn run(
                 ex.stats
             },
         );
-        if crate::obs::snapshot::is_enabled() {
+        {
             let mut interval = crate::stats::TxStats::new();
             for s in &rows {
                 interval.merge(s);
@@ -182,6 +212,7 @@ pub fn run(
                 &interval,
                 &[("frontier", frontier.len().to_string())],
             );
+            engine.observe(&interval);
         }
         for (tid, mut s2) in rows.into_iter().enumerate() {
             if tid == 0 {
@@ -305,6 +336,9 @@ mod tests {
                 sw_quantum: 32,
             },
             PolicySpec::Batch { block: 64 },
+            // Auto on a fresh engine resolves to the batch backend; the
+            // visited set must still match every fixed policy.
+            PolicySpec::Auto { hysteresis: 2 },
         ] {
             let (sys, g) = built(7);
             let roots = roots_from_results(&g);

@@ -76,6 +76,20 @@ pub enum PolicySpec {
         /// Pipelining window ceiling in blocks; 0 = default (2).
         window: u32,
     },
+    /// `--policy auto[=hysteresis=N]`: the runtime meta-controller
+    /// ([`crate::engine::auto::AutoController`]). The run starts on the
+    /// adaptive batch backend and switches backends at kernel/phase
+    /// boundaries from the observed snapshot counters — batch under
+    /// capacity/high-conflict regimes, DyAdHyTM under sparse ones —
+    /// after `hysteresis` consecutive votes plus a minimum dwell.
+    /// Dispatch goes through [`crate::engine::Engine`]; a bare
+    /// `ThreadExecutor` handed this spec degrades to the DyAd default,
+    /// which is the controller's own sparse-regime choice.
+    Auto {
+        /// Consecutive intervals the same regime must win before a
+        /// switch commits (≥ 1).
+        hysteresis: u32,
+    },
 }
 
 impl PolicySpec {
@@ -141,6 +155,7 @@ impl PolicySpec {
             PolicySpec::PhTm { .. } => "phtm",
             PolicySpec::Batch { .. } => "batch",
             PolicySpec::BatchAdaptive { .. } => "batch-adaptive",
+            PolicySpec::Auto { .. } => "auto",
         }
     }
 
@@ -215,6 +230,20 @@ impl PolicySpec {
             // `batch=adaptive` is the CLI spelling; the round-trip name
             // is accepted too.
             "batch-adaptive" => PolicySpec::batch_adaptive(),
+            // `auto[=hysteresis=N]`: the split on the *first* `=` left
+            // `hysteresis=N` intact in `arg`. Unknown keys and
+            // malformed or zero values are rejected, not defaulted.
+            "auto" => match arg {
+                None => PolicySpec::Auto {
+                    hysteresis: crate::engine::auto::DEFAULT_HYSTERESIS,
+                },
+                Some(a) => match a.split_once('=') {
+                    Some(("hysteresis", v)) => PolicySpec::Auto {
+                        hysteresis: v.parse().ok().filter(|&h| h > 0)?,
+                    },
+                    _ => return None,
+                },
+            },
             _ => return None,
         })
     }
@@ -270,6 +299,14 @@ impl PolicySpec {
                     format!("batch({})", parts.join(","))
                 }
             }
+            // An auto run that actually switched reports how often; a
+            // run the controller never moved is just "auto".
+            PolicySpec::Auto { hysteresis } if stats.backend_switches > 0 => {
+                format!(
+                    "auto(hysteresis={hysteresis},switches={})",
+                    stats.backend_switches
+                )
+            }
             _ => self.name().into(),
         }
     }
@@ -306,6 +343,13 @@ impl PolicySpec {
             PolicySpec::StAd { n } => Some(Box::new(StAdPolicy::new(n))),
             PolicySpec::DyAd { n } | PolicySpec::DyAdTl2 { n } => {
                 Some(Box::new(DyAdPolicy::new(n)))
+            }
+            // A bare executor handed the meta-controller spec runs the
+            // controller's sparse-regime choice: DyAd at the paper
+            // default. (Engine-routed runs resolve Auto before an
+            // executor is built.)
+            PolicySpec::Auto { .. } => {
+                Some(Box::new(DyAdPolicy::new(DyAdPolicy::DEFAULT_N)))
             }
             _ => None,
         }
@@ -354,12 +398,16 @@ impl TmSystem {
 fn warn_batch_fallback_once() {
     static WARNED: std::sync::Once = std::sync::Once::new();
     WARNED.call_once(|| {
-        eprintln!(
-            "[dyadhytm] warning: PolicySpec::Batch executed through \
-             ThreadExecutor — running per-transaction NOrec, not BatchSystem; \
-             stats for this run are labeled batch(fallback:norec). Route the \
-             workload through crate::batch (generation/computation/subgraph/\
-             pipeline all do this) to get block speculation."
+        // Routed through the `[obs]` diag logger (level 1: on unless
+        // `--obs-verbosity 0`) so the warning obeys the same verbosity
+        // gate as every other diagnostic.
+        crate::obs::diag(
+            1,
+            "warning: PolicySpec::Batch executed through ThreadExecutor — \
+             running per-transaction NOrec, not BatchSystem; stats for this \
+             run are labeled batch(fallback:norec). Route the workload \
+             through crate::batch (generation/computation/subgraph/pipeline \
+             all do this) to get block speculation.",
         );
     });
 }
@@ -427,7 +475,8 @@ impl<'s> ThreadExecutor<'s> {
             PolicySpec::Rnd { .. }
             | PolicySpec::Fx { .. }
             | PolicySpec::StAd { .. }
-            | PolicySpec::DyAd { .. } => self.run_hybrid(body, false),
+            | PolicySpec::DyAd { .. }
+            | PolicySpec::Auto { .. } => self.run_hybrid(body, false),
             PolicySpec::DyAdTl2 { .. } => self.run_hybrid(body, true),
             PolicySpec::PhTm {
                 retries,
@@ -678,6 +727,11 @@ mod tests {
                 block: crate::batch::DEFAULT_BLOCK,
             },
             PolicySpec::batch_adaptive(),
+            // A bare executor degrades Auto to the DyAd default, so it
+            // belongs in the exhaustive correctness sweeps too.
+            PolicySpec::Auto {
+                hysteresis: crate::engine::auto::DEFAULT_HYSTERESIS,
+            },
         ]
     }
 
@@ -776,6 +830,54 @@ mod tests {
         assert_eq!(PolicySpec::parse("batch=adaptive:window=0"), None);
         assert_eq!(PolicySpec::parse("batch=adaptive:window=x"), None);
         assert_eq!(PolicySpec::parse("batch=adaptive:depth=3"), None);
+    }
+
+    #[test]
+    fn parse_roundtrips_auto() {
+        // Bare spelling: controller defaults.
+        assert_eq!(
+            PolicySpec::parse("auto"),
+            Some(PolicySpec::Auto {
+                hysteresis: crate::engine::auto::DEFAULT_HYSTERESIS,
+            })
+        );
+        // `parse(name())` reconstructs the defaults, like every family.
+        let auto = PolicySpec::Auto { hysteresis: 7 };
+        assert_eq!(auto.name(), "auto");
+        assert_eq!(
+            PolicySpec::parse(auto.name()),
+            Some(PolicySpec::Auto {
+                hysteresis: crate::engine::auto::DEFAULT_HYSTERESIS,
+            })
+        );
+        // The parameterized spelling survives the first-`=` split.
+        assert_eq!(
+            PolicySpec::parse("auto=hysteresis=3"),
+            Some(PolicySpec::Auto { hysteresis: 3 })
+        );
+        // Zero, malformed values, and unknown keys are rejected, not
+        // silently defaulted.
+        assert_eq!(PolicySpec::parse("auto=hysteresis=0"), None);
+        assert_eq!(PolicySpec::parse("auto=hysteresis=x"), None);
+        assert_eq!(PolicySpec::parse("auto=dwell=3"), None);
+        assert_eq!(PolicySpec::parse("auto=3"), None);
+    }
+
+    #[test]
+    fn auto_label_reports_switches() {
+        let auto = PolicySpec::Auto { hysteresis: 2 };
+        let mut stats = TxStats::new();
+        // A run the controller never moved is just the family name —
+        // label and parse stay symmetric.
+        assert_eq!(auto.label(&stats), "auto");
+        assert_eq!(
+            PolicySpec::parse(&auto.label(&stats)).map(|p| p.name()),
+            Some("auto")
+        );
+        stats.backend_switches = 3;
+        assert_eq!(auto.label(&stats), "auto(hysteresis=2,switches=3)");
+        // Other specs never surface the counter.
+        assert_eq!(PolicySpec::StmNorec.label(&stats), "stm");
     }
 
     #[test]

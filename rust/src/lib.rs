@@ -120,6 +120,38 @@
 //! `benches/batch_throughput`). These phase snapshots are the signals
 //! the `--policy auto` meta-controller consumes.
 //!
+//! ## The engine seam and `--policy auto`
+//!
+//! Backend selection goes through one seam, [`engine`]: a [`engine::Backend`]
+//! trait (spec / block-sizing / per-thread-executor) with adapters for
+//! the coarse lock, the STMs, best-effort HTM, the HyTM retry-policy
+//! family, and the batch backend. The kernels
+//! ([`graph::generation`], [`graph::computation`], [`graph::subgraph`]),
+//! the streaming pipeline, and the coordinators thread one
+//! [`engine::Engine`] handle through a run instead of matching on
+//! [`hytm::PolicySpec`] themselves: `engine.backend(kernel, phase)`
+//! decides block-speculated vs per-transaction dispatch at each phase
+//! boundary, and `engine.observe(&interval)` feeds every completed
+//! interval's stats delta back. For a fixed `--policy X` the engine is
+//! a pass-through; under **`--policy auto[=hysteresis=N]`** it owns an
+//! [`engine::auto::AutoController`] — the paper's dynamic-adaptation
+//! thesis applied across backends — that votes on the snapshot-schema
+//! counters each interval (capacity-dominated or high-conflict regimes
+//! → adaptive batch; sparse regimes → DyAdHyTM), switches only after
+//! `N` consecutive votes *and* a minimum dwell, and materializes the
+//! switch at the next kernel/phase boundary so the outgoing backend
+//! has fully drained (batch block promotion is the handoff point —
+//! kernel-3 stays bitwise-deterministic across a switch, see
+//! `tests/batch_determinism.rs`). Every switch is logged as a
+//! `backend-switch` trace event, counted in
+//! `TxStats::backend_switches`, and reproducible: replaying a recorded
+//! `--metrics-json` stream through `AutoController::replay` yields the
+//! identical decision log (`tests/auto_replay.rs`). The simulator runs
+//! the same controller with an explicit switch-cost charge
+//! (`CostModel::backend_switch`) plus a measured-cost revert guard, so
+//! `sim --fig combined` prices an `auto` row next to every fixed
+//! policy.
+//!
 //! System inventory and the paper-vs-measured record live in
 //! `ROADMAP.md` (north star, open items) and `PAPER.md` (source
 //! abstract) at the repository root; per-module documentation below is
@@ -127,6 +159,7 @@
 
 pub mod batch;
 pub mod coordinator;
+pub mod engine;
 pub mod graph;
 pub mod htm;
 pub mod hytm;

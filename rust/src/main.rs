@@ -275,9 +275,13 @@ fn cmd_k3(mut a: Args) -> anyhow::Result<()> {
     let sys = TmSystem::new(Arc::clone(&g.heap), HtmConfig::broadwell());
     let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
     generation::build_serial(&sys, &g, &tuples);
-    let _ = computation::run(&sys, &g, policy, threads, seed);
+    // One engine handle across both kernels: under `--policy auto` the
+    // meta-controller's votes and decision log carry from the
+    // computation intervals into the extraction levels.
+    let mut engine = dyadhytm::engine::Engine::new(policy);
+    let _ = computation::run_with(&sys, &g, &mut engine, threads, seed);
     let roots = subgraph::roots_from_results(&g);
-    let r = subgraph::run(&sys, &g, &roots, depth, policy, threads, seed);
+    let r = subgraph::run_with(&sys, &g, &roots, depth, &mut engine, threads, seed);
     subgraph::verify_subgraph(&g, &roots, depth, &r)
         .map_err(|e| anyhow::anyhow!(e))?;
     println!(
@@ -362,6 +366,7 @@ fn main() -> ExitCode {
                 "rnd[=LO-HI]", "fx[=N]", "stad[=N]", "dyad[=N]", "dyad-tl2[=N]",
                 "phtm[=R]", "batch[=BLOCK]", "batch=adaptive",
                 "batch=adaptive:latency=MS", "batch=adaptive:window=W",
+                "auto", "auto=hysteresis=N",
             ] {
                 println!("{s}");
             }

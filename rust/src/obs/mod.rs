@@ -8,8 +8,8 @@
 //! * [`trace`] — per-worker lock-free ring buffers of packed 32-byte
 //!   event records (block admitted/promoted, HTM abort+cause,
 //!   re-incarnation, block/window resize decisions, local/remote
-//!   steals), enabled by `--trace[=PATH]` and drained post-run to
-//!   JSON-lines.
+//!   steals, auto-controller backend switches), enabled by
+//!   `--trace[=PATH]` and drained post-run to JSON-lines.
 //! * [`snapshot`] — the registry that turns `TxStats` /
 //!   `BatchReport` / controller counters into interval deltas keyed by
 //!   kernel + phase (generation / computation / extraction), exported
@@ -55,11 +55,24 @@
 //! `abort_interrupt`, `abort_sw_conflict`, `sw_commits`, `sw_aborts`,
 //! `lock_commits`, `commits`), derived rates (`conflict_rate`,
 //! `steal_local_ratio`), controller state (`block`, `window`,
-//! `block_grows`, `block_shrinks`, `overlapped_txns`, `steals`,
-//! `local_steals`), latency percentiles (`txn_lat_count`,
-//! `txn_lat_p50_ns`, `txn_lat_p90_ns`, `txn_lat_p99_ns`,
-//! `block_lat_count`, `block_lat_p50_ns`, `block_lat_p99_ns`), plus
-//! kernel-specific extras (e.g. `threads`, `tuples`).
+//! `block_grows`, `block_shrinks`, `overlapped_txns`,
+//! `backend_switches`, `steals`, `local_steals`), latency percentiles
+//! (`txn_lat_count`, `txn_lat_p50_ns`, `txn_lat_p90_ns`,
+//! `txn_lat_p99_ns`, `block_lat_count`, `block_lat_p50_ns`,
+//! `block_lat_p99_ns`), plus kernel-specific extras (e.g. `threads`,
+//! `tuples`).
+//!
+//! **Fields the `--policy auto` controller consumes**
+//! (`engine::auto::Sample` reads exactly these, and
+//! `Sample::from_json` replays them from a recorded stream): the
+//! integer commit/abort counters `commits`, `sw_aborts`, the five
+//! `abort_*` cause fields (summed; `abort_capacity` also drives the
+//! capacity-dominated rule), `hw_attempts`, and `time_ns`. The
+//! recorded `conflict_rate` float is *derived* from those integers —
+//! the controller recomputes it with the same formula, so live
+//! decisions and replayed decisions match bit-for-bit. Everything else
+//! in the schema is reporting-only as far as the controller is
+//! concerned.
 
 pub mod hist;
 pub mod snapshot;

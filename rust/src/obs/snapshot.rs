@@ -105,12 +105,13 @@ pub fn record(kernel: &str, phase: &str, stats: &TxStats, extra: &[(&str, String
         ratio(stats.local_steals, stats.steals)
     ));
     line.push_str(&format!(
-        ",\"block\":{},\"window\":{},\"block_grows\":{},\"block_shrinks\":{},\"overlapped_txns\":{}",
+        ",\"block\":{},\"window\":{},\"block_grows\":{},\"block_shrinks\":{},\"overlapped_txns\":{},\"backend_switches\":{}",
         stats.final_block,
         stats.final_window,
         stats.block_grows,
         stats.block_shrinks,
-        stats.overlapped_txns
+        stats.overlapped_txns,
+        stats.backend_switches
     ));
     line.push_str(&format!(
         ",\"txn_lat_count\":{},\"txn_lat_p50_ns\":{},\"txn_lat_p90_ns\":{},\"txn_lat_p99_ns\":{}",
@@ -208,6 +209,7 @@ mod tests {
         assert_eq!(json::scrape_u64(r, "commits"), Some(90));
         assert_eq!(json::scrape_u64(r, "block"), Some(1024));
         assert_eq!(json::scrape_u64(r, "window"), Some(3));
+        assert_eq!(json::scrape_u64(r, "backend_switches"), Some(0));
         assert_eq!(json::scrape_u64(r, "threads"), Some(4));
         assert_eq!(json::scrape_u64(r, "txn_lat_count"), Some(2));
         assert_eq!(json::scrape_u64(r, "txn_lat_p50_ns"), Some(127));

@@ -57,6 +57,10 @@ pub enum EventKind {
     StealLocal = 7,
     /// A worker stole work across locality groups.
     StealRemote = 8,
+    /// The `--policy auto` meta-controller committed a backend switch.
+    /// `a` = outgoing backend, `b` = incoming backend, both as
+    /// [`crate::engine::ordinal`] codes.
+    BackendSwitch = 9,
 }
 
 impl EventKind {
@@ -70,6 +74,7 @@ impl EventKind {
             EventKind::WindowResize => "window-resize",
             EventKind::StealLocal => "steal-local",
             EventKind::StealRemote => "steal-remote",
+            EventKind::BackendSwitch => "backend-switch",
         }
     }
 
@@ -83,6 +88,7 @@ impl EventKind {
             6 => EventKind::WindowResize,
             7 => EventKind::StealLocal,
             8 => EventKind::StealRemote,
+            9 => EventKind::BackendSwitch,
             _ => return None,
         })
     }
@@ -216,6 +222,11 @@ pub fn window_resize(old: u64, new: u64) {
 }
 
 #[inline]
+pub fn backend_switch(from_ordinal: u64, to_ordinal: u64) {
+    emit(EventKind::BackendSwitch, from_ordinal, to_ordinal);
+}
+
+#[inline]
 pub fn steal(local: bool) {
     emit(
         if local {
@@ -322,6 +333,7 @@ mod tests {
         emit(EventKind::Reincarnation, MARK, 2);
         emit(EventKind::BlockResize, MARK, 512);
         emit(EventKind::WindowResize, MARK, 3);
+        emit(EventKind::BackendSwitch, MARK, 9);
         disable();
         // Disabled again: not recorded.
         emit(EventKind::HwAbort, MARK, 9);
@@ -333,7 +345,7 @@ mod tests {
                 && e.a == AbortCause::Capacity.index() as u64));
         assert!(events.iter().any(|e| e.kind == EventKind::StealLocal));
         let mine: Vec<&Event> = events.iter().filter(|e| e.a == MARK).collect();
-        assert_eq!(mine.len(), 5);
+        assert_eq!(mine.len(), 6);
         // drain() sorts stably by t_ns, so same-thread (same-ring)
         // emission order is preserved.
         assert_eq!(mine[0].kind, EventKind::BlockAdmitted);
@@ -343,6 +355,9 @@ mod tests {
         assert_eq!(mine[2].kind, EventKind::Reincarnation);
         assert_eq!(mine[3].kind, EventKind::BlockResize);
         assert_eq!(mine[4].kind, EventKind::WindowResize);
+        assert_eq!(mine[5].kind, EventKind::BackendSwitch);
+        assert_eq!(mine[5].b, 9);
+        assert_eq!(mine[5].kind.name(), "backend-switch");
         assert!(events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
         let line = event_json(mine[0]);
         assert!(line.contains("\"kind\":\"block-admitted\""));

@@ -44,6 +44,7 @@ use crate::batch::adaptive::BlockSizeController;
 use crate::batch::mvmemory::MvMemory;
 use crate::batch::workload::edge_insert_block_owned;
 use crate::batch::{BatchSystem, BatchTxn};
+use crate::engine::Engine;
 use crate::graph::rmat::EdgeTuple;
 use crate::graph::{generation, Graph};
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
@@ -195,7 +196,17 @@ pub fn run(
             cfg.edge_factor
         )
     })?;
-    if let Some(ctl) = cfg.policy.batch_sizing() {
+    // Dispatch through the engine seam. The pipeline is one unbroken
+    // stream with no kernel boundaries to re-dispatch at, so the
+    // engine's backend is consulted once at stream start — under
+    // `--policy auto` that is the controller's start backend (adaptive
+    // batch, the safe choice for an unknown stream).
+    let mut engine = Engine::new(cfg.policy);
+    let (sizing, exec_spec) = {
+        let be = engine.backend("pipeline", "stream");
+        (be.sizing(), be.spec())
+    };
+    if let Some(ctl) = sizing {
         // No silent NOrec fallback: a batch spec drains the channel in
         // controller-sized blocks through BatchSystem (`batch=N` pins
         // the block, `batch=adaptive` resizes it per observed block).
@@ -214,7 +225,7 @@ pub fn run(
     let (rows, produced) = run_pool_with(
         &PoolConfig::pinned(cfg.workers),
         |tid, pinned| {
-            let mut ex = ThreadExecutor::new(sys, cfg.policy, tid as u32, cfg.seed);
+            let mut ex = ThreadExecutor::new(sys, exec_spec, tid as u32, cfg.seed);
             let (inserted, insert_time, queue_wait) = consume(g, &rx, &mut ex);
             ex.stats.time_ns = insert_time.as_nanos() as u64;
             (inserted, queue_wait, ex.stats, pinned)

@@ -72,6 +72,14 @@ pub struct CostModel {
     /// Reading the abort-status flags (DyAdHyTM's only overhead).
     pub flag_check: u64,
 
+    /// Committed `--policy auto` backend switch: drain the old backend,
+    /// quiesce its workers, and warm the new one's structures (batch
+    /// promotion queues or per-thread executors). Charged once per
+    /// switch by the simulator's auto controller — the explicit
+    /// switch-cost term that keeps a flappy controller from looking
+    /// free in virtual time.
+    pub backend_switch: u64,
+
     // -- workload work ----------------------------------------------------
     /// Non-critical work to produce one edge tuple and bring its insert
     /// footprint into the cache (R-MAT descent + DRAM stalls at
@@ -116,6 +124,7 @@ impl CostModel {
             direct_access: 8,
             rng_draw: 20,
             flag_check: 3,
+            backend_switch: 25_000,
             edge_gen_work: 1200,
             scan_work: 65,
             capacity_prob: 0.0,

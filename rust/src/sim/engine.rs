@@ -169,6 +169,14 @@ impl Simulator {
         seed: u64,
     ) -> SimOutcome {
         assert_eq!(streams.len(), threads);
+        if let PolicySpec::Auto { hysteresis } = spec {
+            // The meta-controller runs *above* the conflict engine:
+            // round-robin intervals of the stream are priced under the
+            // controller's current backend, interval stats feed the
+            // same `engine::auto` law the live kernels use, and every
+            // committed switch charges `CostModel::backend_switch`.
+            return self.run_auto(hysteresis, threads, streams, seed);
+        }
         let derate = self.cost.derate(threads);
         let scale = |cycles: u64| -> u64 { (cycles as f64 * derate) as u64 };
 
@@ -742,6 +750,168 @@ impl Simulator {
             stats: table,
         }
     }
+
+    /// `--policy auto` in virtual time: drain the streams in
+    /// round-robin intervals, price each interval under the
+    /// controller's current backend through a nested [`Simulator::run`],
+    /// and feed interval stats to the *same* `engine::auto` law the
+    /// live kernels use — plus two sim-only terms the live controller
+    /// cannot afford to measure:
+    ///
+    /// * every committed switch (and every revert) charges
+    ///   [`CostModel::backend_switch`] cycles, so a flappy controller
+    ///   pays for its drains in the figure tables;
+    /// * a measured-cost revert guard: the first interval after a
+    ///   switch re-prices the new backend, and if its cycles-per-commit
+    ///   EWMA runs >10% worse than the old backend's, the controller is
+    ///   forced back and that target is vetoed until the conflict
+    ///   regime changes.
+    ///
+    /// Interval length starts at a short probe and doubles while the
+    /// controller is stable (capped), resetting after any switch — the
+    /// same AIMD shape as `batch/adaptive.rs`.
+    fn run_auto(
+        &self,
+        hysteresis: u32,
+        threads: usize,
+        streams: Vec<Box<dyn Iterator<Item = TxnDesc>>>,
+        seed: u64,
+    ) -> SimOutcome {
+        use crate::engine::auto::{AutoController, Sample};
+        use std::collections::VecDeque;
+
+        const PROBE: usize = 256;
+        const MAX_INTERVAL: usize = 8192;
+
+        let derate = self.cost.derate(threads);
+        let scale = |cycles: u64| -> u64 { (cycles as f64 * derate) as u64 };
+
+        let mut queues: Vec<VecDeque<TxnDesc>> =
+            streams.into_iter().map(|s| s.collect()).collect();
+
+        let mut ctl = AutoController::new(hysteresis);
+        let mut acc: Vec<TxStats> = vec![TxStats::new(); threads];
+        let mut total_cycles: u64 = 0;
+        // Cycles-per-commit EWMA per backend name. Keyed lookups only —
+        // the map is never iterated, so it cannot perturb determinism.
+        let mut cpc: HashMap<&'static str, f64> = HashMap::new();
+        // Revert-guard state: a just-committed switch awaiting its
+        // first priced interval, and a vetoed (backend, regime) pair.
+        let mut judging: Option<(PolicySpec, PolicySpec)> = None;
+        let mut veto: Option<(&'static str, u8)> = None;
+        let mut interval = PROBE;
+        let mut round: u64 = 0;
+
+        while queues.iter().any(|q| !q.is_empty()) {
+            let backend = ctl.current();
+            let chunk_streams: Vec<Box<dyn Iterator<Item = TxnDesc>>> = queues
+                .iter_mut()
+                .map(|q| {
+                    let n = interval.min(q.len());
+                    let chunk: Vec<TxnDesc> = q.drain(..n).collect();
+                    Box::new(chunk.into_iter()) as Box<dyn Iterator<Item = TxnDesc>>
+                })
+                .collect();
+            let out = self.run(
+                backend,
+                threads,
+                chunk_streams,
+                seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            total_cycles += out.cycles;
+            for r in &out.stats.rows {
+                if let Some(a) = acc.get_mut(r.thread) {
+                    // merge() keeps the max time_ns (parallel workers);
+                    // rounds run back to back, so re-sum it.
+                    let t = a.time_ns + r.stats.time_ns;
+                    a.merge(&r.stats);
+                    a.time_ns = t;
+                }
+            }
+            round += 1;
+
+            let itotal = out.stats.total();
+            let commits = itotal.total_commits().max(1);
+            let this_cpc = out.cycles as f64 / commits as f64;
+            let e = cpc.entry(backend.name()).or_insert(this_cpc);
+            *e = 0.5 * *e + 0.5 * this_cpc;
+
+            let sample = Sample::from_stats(&itotal);
+
+            // Revert guard: this interval was the new backend's
+            // audition — did it actually price better?
+            if let Some((old, new)) = judging.take() {
+                let new_cpc = cpc.get(new.name()).copied().unwrap_or(0.0);
+                let old_cpc = cpc.get(old.name()).copied().unwrap_or(f64::INFINITY);
+                if new_cpc > old_cpc * 1.10 {
+                    ctl.force_switch(old);
+                    total_cycles += scale(self.cost.backend_switch);
+                    crate::obs::trace::backend_switch(
+                        crate::engine::ordinal(new),
+                        crate::engine::ordinal(old),
+                    );
+                    veto = Some((new.name(), sample.regime()));
+                    interval = PROBE;
+                    continue;
+                }
+            }
+
+            // A veto expires when the conflict regime moves on.
+            if let Some((_, regime)) = veto {
+                if regime != sample.regime() {
+                    veto = None;
+                }
+            }
+            let target = AutoController::target_for(&sample);
+            let vetoed = matches!(
+                (target, veto),
+                (Some(t), Some((name, _))) if t.name() == name
+            );
+            if vetoed {
+                interval = (interval * 2).min(MAX_INTERVAL);
+                continue;
+            }
+            if let Some((from, to)) = ctl.observe(&sample) {
+                total_cycles += scale(self.cost.backend_switch);
+                crate::obs::trace::backend_switch(
+                    crate::engine::ordinal(from),
+                    crate::engine::ordinal(to),
+                );
+                judging = Some((from, to));
+                interval = PROBE;
+            } else {
+                interval = (interval * 2).min(MAX_INTERVAL);
+            }
+        }
+
+        if let Some(a0) = acc.first_mut() {
+            // Controller outcome on the report row (thread 0), same
+            // slot the batch controller uses for its converged block.
+            a0.backend_switches = ctl.switch_count();
+        }
+        let mut table = StatsTable::new();
+        for (tid, s) in acc.into_iter().enumerate() {
+            table.push(tid, s);
+        }
+        if crate::obs::snapshot::is_enabled() {
+            let mut total = table.total();
+            total.time_ns = (self.cost.to_seconds(total_cycles) * 1e9) as u64;
+            crate::obs::snapshot::record(
+                "sim",
+                "auto",
+                &total,
+                &[
+                    ("threads", threads.to_string()),
+                    ("cycles", total_cycles.to_string()),
+                ],
+            );
+        }
+        SimOutcome {
+            cycles: total_cycles,
+            seconds: self.cost.to_seconds(total_cycles),
+            stats: table,
+        }
+    }
 }
 
 /// Policy factory: HyTMs use their Figure-1 machines; HTM+lock modes use
@@ -759,6 +929,10 @@ fn make_policy(spec: &PolicySpec) -> Option<Box<dyn RetryPolicy>> {
         }
         PolicySpec::Hle => Some(Box::new(FxPolicy::new(0))),
         PolicySpec::PhTm { retries, .. } => Some(Box::new(FxPolicy::new(retries))),
+        // Unreachable through Simulator::run (Auto is intercepted into
+        // run_auto), but keep the factory total: the controller's
+        // hybrid regime resolves to DyAd.
+        PolicySpec::Auto { .. } => Some(Box::new(DyAdPolicy::new(DyAdPolicy::DEFAULT_N))),
         PolicySpec::CoarseLock
         | PolicySpec::StmNorec
         | PolicySpec::StmTl2
@@ -797,6 +971,20 @@ mod tests {
     }
 
     #[test]
+    fn auto_is_deterministic_and_commits_everything() {
+        let a = run_gen(PolicySpec::Auto { hysteresis: 2 }, 4, 10);
+        let b = run_gen(PolicySpec::Auto { hysteresis: 2 }, 4, 10);
+        assert_eq!(a.cycles, b.cycles, "same seed, same switch trajectory");
+        let t = a.stats.total();
+        assert_eq!(t.total_commits(), SimWorkload::new(10).edges());
+        assert_eq!(
+            t.backend_switches,
+            b.stats.total().backend_switches,
+            "decision log must replay identically"
+        );
+    }
+
+    #[test]
     fn all_transactions_commit_somewhere() {
         for spec in [
             PolicySpec::CoarseLock,
@@ -807,6 +995,7 @@ mod tests {
             PolicySpec::Rnd { lo: 1, hi: 50 },
             PolicySpec::Batch { block: 2048 },
             PolicySpec::batch_adaptive(),
+            PolicySpec::Auto { hysteresis: 2 },
         ] {
             let out = run_gen(spec, 4, 10);
             let m = SimWorkload::new(10).edges();

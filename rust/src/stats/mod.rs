@@ -63,6 +63,10 @@ pub struct TxStats {
     /// no batch controller ran; 2 is the default head+overlap window,
     /// `--policy batch=adaptive:window=W` raises the ceiling).
     pub final_window: u64,
+    /// Backend switches the `--policy auto` meta-controller committed
+    /// (`engine::auto`). Zero under every fixed spec; `PolicySpec::label`
+    /// reports it for auto runs and the snapshot schema exports it.
+    pub backend_switches: u64,
     /// Wall-clock or virtual nanoseconds attributed to this thread.
     pub time_ns: u64,
     /// Per-transaction attempt→commit latency (only populated when
@@ -126,6 +130,7 @@ impl TxStats {
             // Later merges carry the most recent controller state.
             self.final_window = other.final_window;
         }
+        self.backend_switches += other.backend_switches;
         self.time_ns = self.time_ns.max(other.time_ns);
         self.txn_lat.merge(&other.txn_lat);
         self.block_lat.merge(&other.block_lat);

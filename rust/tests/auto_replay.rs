@@ -1,0 +1,74 @@
+//! Deterministic replay of the `--policy auto` meta-controller
+//! (ISSUE-7 satellite): feeding a recorded `--metrics-json` snapshot
+//! stream through [`AutoController::replay`] must reproduce the exact
+//! switch decisions, run after run — the controller is a pure function
+//! of the interval counters, and `Sample::from_json` recomputes
+//! `conflict_rate` from the same integers the live `Sample::from_stats`
+//! reduction uses.
+//!
+//! The assertions run against the controller's own decision log, not
+//! the global trace rings (`obs::trace::drain` resets shared state and
+//! is exercised by its own round-trip test).
+
+use dyadhytm::engine::auto::{self, AutoController, Sample};
+
+/// A recorded snapshot stream, verbatim rows in the `--metrics-json`
+/// schema (only the controller-consumed counters matter; reporting
+/// fields are omitted — `Sample::from_json` ignores them anyway).
+/// Three hot intervals (conflict 600/1500 = 0.40), then five sparse
+/// ones (1/1000 = 0.001).
+fn recorded_rows() -> Vec<&'static str> {
+    let hot = r#"{"seq":1,"kernel":"generation","phase":"insert","time_ns":5000000,"hw_attempts":0,"abort_conflict":0,"abort_capacity":0,"abort_explicit":0,"abort_interrupt":0,"abort_sw_conflict":0,"sw_aborts":600,"commits":900}"#;
+    let sparse = r#"{"seq":2,"kernel":"generation","phase":"insert","time_ns":5000000,"hw_attempts":0,"abort_conflict":0,"abort_capacity":0,"abort_explicit":0,"abort_interrupt":0,"abort_sw_conflict":0,"sw_aborts":1,"commits":999}"#;
+    vec![hot, hot, hot, sparse, sparse, sparse, sparse, sparse]
+}
+
+#[test]
+fn replayed_stream_reproduces_switch_decisions() {
+    let a = AutoController::replay(2, recorded_rows());
+    let b = AutoController::replay(2, recorded_rows());
+    assert_eq!(a, b, "same stream, same decision log");
+
+    // Hot rows keep the start backend (it already serves the hot
+    // regime); the sparse run then needs hysteresis=2 consecutive
+    // votes, so the switch commits on the second sparse interval —
+    // interval 5 overall.
+    assert_eq!(a.len(), 1, "exactly one committed switch: {a:?}");
+    assert_eq!(a[0].interval, 5);
+    assert_eq!(a[0].from, auto::start_spec());
+    assert_eq!(a[0].to, auto::sparse_spec());
+}
+
+#[test]
+fn hysteresis_one_switches_on_the_first_sparse_vote() {
+    let d = AutoController::replay(1, recorded_rows());
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].interval, 4, "first sparse interval commits at h=1");
+    assert_eq!(d[0].to, auto::sparse_spec());
+}
+
+#[test]
+fn non_snapshot_lines_are_skipped_not_counted() {
+    // A mixed log (diag lines, trace events, partial rows) must not
+    // consume controller intervals: the decision log matches the
+    // clean stream's exactly.
+    let mut rows = recorded_rows();
+    rows.insert(0, "[obs] warning: not a snapshot row");
+    rows.insert(4, r#"{"t_ns":12,"worker":0,"kind":"block-promoted","a":1,"b":2}"#);
+    let mixed = AutoController::replay(2, rows);
+    let clean = AutoController::replay(2, recorded_rows());
+    assert_eq!(mixed, clean);
+}
+
+#[test]
+fn replayed_decisions_match_a_live_controller_on_the_same_samples() {
+    // The JSON path and the TxStats path must agree: drive a live
+    // controller with `Sample`s built from the same counters the rows
+    // carry and compare decision logs.
+    let mut live = AutoController::new(2);
+    for row in recorded_rows() {
+        let s = Sample::from_json(row).expect("recorded row parses");
+        live.observe(&s);
+    }
+    assert_eq!(live.decisions(), &AutoController::replay(2, recorded_rows())[..]);
+}

@@ -17,6 +17,7 @@ use dyadhytm::batch::adaptive::BlockSizeController;
 use dyadhytm::batch::workload::{
     desc_txn, run_blocks, run_sequential, run_txns_pipelined_with_pool,
 };
+use dyadhytm::engine::auto::{AutoController, Sample};
 use dyadhytm::runtime::PoolConfig;
 use dyadhytm::batch::{BatchSystem, BatchTxn};
 use dyadhytm::graph::{computation, generation, rmat, subgraph, verify, Graph, Ssca2Config};
@@ -391,6 +392,103 @@ fn window_one_is_a_barrier_stream_and_matches() {
     // W=1 degenerates to a per-block barrier stream: still exact. (The
     // zero-overlap invariant of W=1 is asserted in batch::tests.)
     check_pipelined_case_pool(0xBA44, 1.2, 64, 4, 8, 1, true).unwrap();
+}
+
+/// The ISSUE-7 drain rule, as a property: partition one transaction
+/// stream into random segments, let a live [`AutoController`] (driven
+/// by synthetic hot/sparse interval samples) pick the backend *at each
+/// segment boundary* — BatchSystem when it holds a batch spec, the
+/// drained-serial stand-in otherwise — and the final heap must equal
+/// the sequential oracle word for word. This is exactly what a
+/// mid-kernel switch does in the kernels: the old backend drains at a
+/// block/phase boundary, the new one picks up the next segment, and
+/// index order (hence bitwise output) is preserved across the handoff.
+fn check_switch_case(
+    seed: u64,
+    zipf_s: f64,
+    n_txns: usize,
+    workers: usize,
+) -> Result<(), String> {
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(LINES - 1, zipf_s);
+    let txns: Vec<BatchTxn> = (0..n_txns)
+        .map(|_| {
+            let d = random_desc(&mut rng, &zipf);
+            desc_txn(d, rng.next_u64())
+        })
+        .collect();
+
+    let words = LINES * WORDS_PER_LINE;
+    let heap_seq = TxHeap::new(words);
+    let heap_par = TxHeap::new(words);
+    let mut init = Rng::new(seed ^ 0xD15C);
+    for addr in 0..words {
+        let v = init.next_u64();
+        heap_seq.store(addr, v);
+        heap_par.store(addr, v);
+    }
+
+    run_sequential(&heap_seq, &txns);
+
+    let mut ctl = AutoController::new(1);
+    let mut j0 = 0usize;
+    while j0 < n_txns {
+        let j1 = (j0 + 1 + rng.below(17) as usize).min(n_txns);
+        // A synthetic interval sample flips the controller between the
+        // hot and sparse regimes; hysteresis=1 + the dwell window still
+        // gate the actual switches.
+        let conflict = if rng.below(2) == 0 { 0.2 } else { 0.0 };
+        ctl.observe(&Sample::synthetic(conflict, 1_000));
+        if ctl.current().batch_sizing().is_some() {
+            let report = BatchSystem::run(&heap_par, &txns[j0..j1], workers);
+            if report.txns != j1 - j0 {
+                return Err(format!(
+                    "segment [{j0}, {j1}) committed {} of {}",
+                    report.txns,
+                    j1 - j0
+                ));
+            }
+        } else {
+            // The per-transaction backends preserve index order when
+            // drained to a boundary; the sequential runner is their
+            // order-preserving stand-in.
+            run_sequential(&heap_par, &txns[j0..j1]);
+        }
+        j0 = j1;
+    }
+
+    for addr in 0..words {
+        let (a, b) = (heap_seq.load(addr), heap_par.load(addr));
+        if a != b {
+            return Err(format!(
+                "divergence at word {addr}: sequential {a:#x} vs switched {b:#x} \
+                 (zipf_s={zipf_s}, n={n_txns}, workers={workers}, \
+                 switches={})",
+                ctl.switch_count()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_mid_kernel_backend_switch_is_bitwise_sequential() {
+    for (round, &zipf_s) in [0.0f64, 1.2].iter().enumerate() {
+        qcheck_res(
+            "auto-switched segments == sequential (bitwise)",
+            10,
+            |rng| {
+                (
+                    rng.next_u64(),
+                    16 + rng.below(64) as usize,
+                    1 + rng.below(6) as usize,
+                )
+            },
+            |&(seed, n, workers)| {
+                check_switch_case(seed ^ ((round as u64) << 40), zipf_s, n, workers)
+            },
+        );
+    }
 }
 
 #[test]
