@@ -56,6 +56,16 @@ pub struct BatchCounters {
     /// recording is a relaxed `fetch_add`, lock-free like the counters
     /// above.
     pub txn_lat: crate::obs::hist::AtomicHist,
+    /// Transaction bodies that panicked mid-execution and were caught,
+    /// quarantined, and re-dispatched instead of killing the pool.
+    pub quarantines: AtomicU64,
+    /// Watchdog interventions: an elected kicker re-readied lost
+    /// wakeups and forced a revalidation pass after the progress
+    /// deadline expired.
+    pub watchdog_kicks: AtomicU64,
+    /// Watchdog escalations to the degraded serial backend
+    /// ([`crate::engine::degraded`]) after repeated fruitless kicks.
+    pub degradations: AtomicU64,
 }
 
 /// One link of the predecessor chain a pipelined block resolves its
@@ -211,6 +221,11 @@ pub(super) struct Worker<'r, 'b, M: MvStore> {
     pub base: BaseSource<'r, M>,
     /// Cross-block parking (pipelined runs only).
     pub park: Option<CrossBlockPark<'r>>,
+    /// The run's shared progress watchdog (barrier runs with the fault
+    /// plane installed; `None` otherwise — pipelined sessions poll
+    /// their watchdog in the window loop instead, where the whole
+    /// window is in scope).
+    pub wd: Option<&'r crate::fault::watchdog::Watchdog>,
 }
 
 impl<M: MvStore> Worker<'_, '_, M> {
@@ -221,10 +236,63 @@ impl<M: MvStore> Worker<'_, '_, M> {
             if self.scheduler.done() {
                 return;
             }
+            // Fault plane: a bounded injected stall before the next
+            // task (one relaxed load + branch when no plane is
+            // installed). Recovery needs no help here — the stalled
+            // worker simply resumes; the watchdog only steps in if
+            // every worker stalls past the scaled deadline.
+            crate::fault::maybe_stall();
             match self.scheduler.next_task(w) {
                 Some(task) => self.step(task),
-                None => std::hint::spin_loop(),
+                None => {
+                    // Idle: the only regime a genuine stall (lost
+                    // wakeup, every peer asleep) is visible from. The
+                    // poll is on the workers — never the joining thread
+                    // — so a kick that reopens validation always has a
+                    // live worker (this one) to drain what it reopened.
+                    if let Some(wd) = self.wd {
+                        self.watchdog_poll(wd);
+                    }
+                    std::hint::spin_loop();
+                }
             }
+        }
+    }
+
+    /// One watchdog poll from an idle worker: feed the commit-latency
+    /// EWMA, report the progress counter, and — if this worker wins
+    /// the kicker election after a missed deadline — run the recovery
+    /// pass: re-ready recorded lost wakeups, force a revalidation
+    /// pass, and escalate to the degraded serial backend after
+    /// repeated fruitless kicks. Only ever called with the fault plane
+    /// installed.
+    #[cold]
+    fn watchdog_poll(&self, wd: &crate::fault::watchdog::Watchdog) {
+        use crate::fault::watchdog::Diagnosis;
+        let lat = self.counters.txn_lat.fold();
+        if lat.count() > 0 {
+            wd.observe_commit_latency(lat.p50().max(1));
+        }
+        let progress = self.counters.executions.load(Ordering::Relaxed)
+            + self.counters.validations.load(Ordering::Relaxed);
+        if !wd.poll(progress) {
+            if crate::engine::degraded::is_degraded() && wd.ready_to_recover() {
+                crate::engine::degraded::recover(wd.kicks());
+            }
+            return;
+        }
+        let recovered = self.scheduler.recover_lost();
+        self.scheduler.reopen_validation();
+        let diag = if recovered > 0 {
+            Diagnosis::LostWakeup
+        } else {
+            Diagnosis::Livelock
+        };
+        crate::obs::trace::watchdog_kick(diag as u64, recovered as u64);
+        self.counters.watchdog_kicks.fetch_add(1, Ordering::Relaxed);
+        if wd.should_escalate() && !crate::engine::degraded::is_degraded() {
+            crate::engine::degraded::escalate(wd.kicks());
+            self.counters.degradations.fetch_add(1, Ordering::Relaxed);
         }
     }
 
@@ -262,15 +330,49 @@ impl<M: MvStore> Worker<'_, '_, M> {
                 blocked_on: None,
                 blocked_on_prev: false,
             };
-            match (self.txns[txn].body)(&mut view) {
-                Ok(()) => {
+            // The body runs under `catch_unwind`: a poisoned
+            // transaction (a genuine bug, or `--faults panic=P`) is
+            // quarantined and re-dispatched instead of crashing the
+            // pool. Nothing has been published at this point — writes
+            // only reach the store via `mv.record` below — so the
+            // catch can never leak partial state. `AssertUnwindSafe`
+            // is justified by exactly that: the view is local, and
+            // the shared structures are only touched after a
+            // successful body.
+            let body_result = {
+                let inject = crate::fault::active()
+                    && self.scheduler.quarantine_count(txn) < crate::fault::MAX_INJECT_PER_TXN
+                    && crate::fault::inject(crate::fault::Site::Panic);
+                let view = &mut view;
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    if inject {
+                        panic!("injected fault: poisoned transaction body");
+                    }
+                    (self.txns[txn].body)(view)
+                }))
+            };
+            match body_result {
+                Err(payload) => {
+                    // Past the requeue budget the panic is genuine and
+                    // persistent (injection self-suppresses first, at
+                    // MAX_INJECT_PER_TXN < MAX_REQUEUE): re-raise so a
+                    // real bug still surfaces instead of retrying
+                    // forever.
+                    if self.scheduler.quarantine_count(txn) >= crate::fault::MAX_REQUEUE {
+                        std::panic::resume_unwind(payload);
+                    }
+                    self.counters.quarantines.fetch_add(1, Ordering::Relaxed);
+                    self.scheduler.requeue_panicked(txn, incarnation);
+                    return None;
+                }
+                Ok(Ok(())) => {
                     let wrote_new = self.mv.record(version, view.reads, &view.writes);
                     if let Some(t0) = t0 {
                         self.counters.txn_lat.record_duration(t0.elapsed());
                     }
                     return self.scheduler.finish_execution(txn, incarnation, wrote_new);
                 }
-                Err(_) => {
+                Ok(Err(_)) => {
                     if view.blocked_on_prev {
                         let park = self.park.as_ref().expect(
                             "cross-block base read outside a pipelined run",
@@ -306,7 +408,14 @@ impl<M: MvStore> Worker<'_, '_, M> {
         let (txn, incarnation) = version;
         self.counters.validations.fetch_add(1, Ordering::Relaxed);
         let base = |addr: Addr| self.base.value(self.heap, addr);
-        let valid = self.mv.validate_read_set(txn, &base);
+        let mut valid = self.mv.validate_read_set(txn, &base);
+        // Fault plane (`--faults validation_fail=P`): force a passing
+        // validation to fail. The abort flows through the genuine
+        // convert-to-ESTIMATES + re-incarnate path, so the final state
+        // is untouched — only extra (priced) work is induced.
+        if valid && crate::fault::inject(crate::fault::Site::ValidationFail) {
+            valid = false;
+        }
         let aborted = !valid && self.scheduler.try_validation_abort(txn, incarnation);
         if aborted {
             self.counters.validation_aborts.fetch_add(1, Ordering::Relaxed);

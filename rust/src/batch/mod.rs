@@ -129,6 +129,21 @@ use scheduler::{Scheduler, TxnIdx};
 /// the controller pick).
 pub const DEFAULT_BLOCK: usize = 2048;
 
+/// Deadline floor the batch drivers hand the fault-plane watchdog —
+/// deliberately far below `watchdog::DEFAULT_BASE_DEADLINE`: batch
+/// commits take microseconds, so 30ms of a flat progress counter with
+/// the plane installed is decisive, and the commit-latency EWMA term
+/// (`SLACK_FACTOR × p50`) still raises the deadline on genuinely slow
+/// single-core or debug runs.
+const WATCHDOG_BASE: Duration = Duration::from_millis(30);
+
+/// The run's watchdog, if one should exist: only fault-plane runs pay
+/// for progress polling.
+fn watchdog() -> Option<crate::fault::watchdog::Watchdog> {
+    crate::fault::active()
+        .then(|| crate::fault::watchdog::Watchdog::new(WATCHDOG_BASE))
+}
+
 /// A batch transaction body. Must be a pure function of the values it
 /// reads through the access handle (it may be re-executed any number of
 /// times, concurrently with other transactions), and must not return
@@ -178,6 +193,17 @@ pub struct BatchReport {
     /// `window_depth_sum / window_admissions` is the mean blocks in
     /// flight, the W-deep window's utilization.
     pub window_depth_sum: u64,
+    /// Transaction bodies that panicked, were caught before publishing
+    /// anything, quarantined, and re-dispatched.
+    pub quarantines: u64,
+    /// Watchdog recovery passes (lost-wakeup re-ready + forced
+    /// revalidation) after a missed progress deadline.
+    pub watchdog_kicks: u64,
+    /// Watchdog escalations to the degraded serial backend.
+    pub degradations: u64,
+    /// Faults the installed plane injected process-wide while this run
+    /// executed (0 when no `--faults` plane is installed).
+    pub faults_injected: u64,
     pub elapsed: Duration,
     /// Winning execution-attempt latency per transaction (only
     /// populated when `obs::timing_enabled()`).
@@ -201,6 +227,10 @@ impl BatchReport {
         self.pinned_workers = self.pinned_workers.max(other.pinned_workers);
         self.window_admissions += other.window_admissions;
         self.window_depth_sum += other.window_depth_sum;
+        self.quarantines += other.quarantines;
+        self.watchdog_kicks += other.watchdog_kicks;
+        self.degradations += other.degradations;
+        self.faults_injected += other.faults_injected;
         self.elapsed += other.elapsed;
         self.txn_lat.merge(&other.txn_lat);
         self.block_lat.merge(&other.block_lat);
@@ -240,6 +270,10 @@ impl BatchReport {
         s.local_steals = self.local_steals;
         s.overlapped_txns = self.overlapped_txns;
         s.pinned_workers = self.pinned_workers;
+        s.quarantines = self.quarantines;
+        s.watchdog_kicks = self.watchdog_kicks;
+        s.degradations = self.degradations;
+        s.faults_injected = self.faults_injected;
         s.time_ns = self.elapsed.as_nanos() as u64;
         s.txn_lat = self.txn_lat;
         s.block_lat = self.block_lat;
@@ -305,6 +339,10 @@ impl<'b, M: MvStore> BlockRun<'b, M> {
             pinned_workers: 0,
             window_admissions: 0,
             window_depth_sum: 0,
+            quarantines: self.counters.quarantines.load(Ordering::Relaxed),
+            watchdog_kicks: self.counters.watchdog_kicks.load(Ordering::Relaxed),
+            degradations: self.counters.degradations.load(Ordering::Relaxed),
+            faults_injected: 0,
             elapsed: Duration::ZERO,
             txn_lat: self.counters.txn_lat.fold(),
             block_lat: LatencyHist::default(),
@@ -358,6 +396,8 @@ impl BatchSystem {
             Scheduler::with_groups(txns.len(), workers, &plan.worker_groups(workers));
         let mv = M::new(txns.len());
         let counters = BatchCounters::default();
+        let wd = watchdog();
+        let faults_before = crate::fault::injected_total();
         // If a worker panics (a body violating the infallibility
         // contract, or a bug in a user closure), it unwinds with
         // `num_active` still elevated and the done-check could never
@@ -386,6 +426,7 @@ impl BatchSystem {
                     counters: &counters,
                     base: BaseSource::Heap,
                     park: None,
+                    wd: wd.as_ref(),
                 };
                 worker.run(w);
                 pinned
@@ -411,6 +452,10 @@ impl BatchSystem {
             pinned_workers: pins.iter().filter(|&&p| p).count() as u64,
             window_admissions: 0,
             window_depth_sum: 0,
+            quarantines: counters.quarantines.load(Ordering::Relaxed),
+            watchdog_kicks: counters.watchdog_kicks.load(Ordering::Relaxed),
+            degradations: counters.degradations.load(Ordering::Relaxed),
+            faults_injected: crate::fault::injected_total().saturating_sub(faults_before),
             elapsed,
             txn_lat: counters.txn_lat.fold(),
             block_lat,
@@ -514,6 +559,13 @@ impl BatchSystem {
         let pinned = AtomicU64::new(0);
         let admissions = AtomicU64::new(0);
         let depth_sum = AtomicU64::new(0);
+        let wd = watchdog();
+        let faults_before = crate::fault::injected_total();
+        // Progress already contributed by completed (popped) blocks, so
+        // the watchdog's progress counter stays monotone across block
+        // promotions (a completing block's live counters leave the
+        // window sum and re-enter here, under the same window lock).
+        let completed_progress = AtomicU64::new(0);
 
         // Pull the next block from the source and admit it. Single
         // puller at a time (try_lock); the source may block (e.g. a
@@ -603,6 +655,11 @@ impl BatchSystem {
                     rep.block_lat.record_duration(block_lat);
                 }
             }
+            completed_progress.fetch_add(
+                head.counters.executions.load(Ordering::Relaxed)
+                    + head.counters.validations.load(Ordering::Relaxed),
+                Ordering::Relaxed,
+            );
             win.pop_front();
             if let Some(next) = win.front() {
                 let mut parked = next.parked.lock().unwrap();
@@ -715,6 +772,10 @@ impl BatchSystem {
                             counters: &blk.counters,
                             base,
                             park,
+                            // The pipelined loop polls the watchdog
+                            // itself (below), with the whole window in
+                            // scope.
+                            wd: None,
                         };
                         worker.step(first);
                         while let Some(task) = blk.scheduler.next_task(w) {
@@ -728,6 +789,14 @@ impl BatchSystem {
                     }
                     if did_work {
                         continue;
+                    }
+                    // Idle with the window non-empty: the only regime a
+                    // genuine stall is visible from — poll the fault
+                    // plane's watchdog (no-op without `--faults`). The
+                    // kicker is a live pool worker, so whatever the
+                    // kick reopens, this thread is around to drain it.
+                    if let Some(wd) = &wd {
+                        Self::watchdog_poll_window(wd, &snap, &completed_progress);
                     }
                     // Whole window drained of claimable work: deepen it
                     // (the admit gate re-checks depth and the youngest
@@ -750,7 +819,64 @@ impl BatchSystem {
         rep.pinned_workers = pinned.load(Ordering::SeqCst);
         rep.window_admissions = admissions.load(Ordering::SeqCst);
         rep.window_depth_sum = depth_sum.load(Ordering::SeqCst);
+        rep.faults_injected = crate::fault::injected_total().saturating_sub(faults_before);
         (rep, r)
+    }
+
+    /// One watchdog poll from an idle pipelined worker: progress is the
+    /// session-wide execution+validation count (completed blocks plus
+    /// the live window), and a kick runs the recovery pass over the
+    /// whole window — re-ready every block's lost wakeups, force a
+    /// revalidation pass on the head (the block gating everything
+    /// behind it), and escalate to the degraded serial backend after
+    /// repeated fruitless kicks. Only called with the fault plane
+    /// installed.
+    #[cold]
+    fn watchdog_poll_window<M: MvStore>(
+        wd: &crate::fault::watchdog::Watchdog,
+        snap: &[Arc<BlockRun<'_, M>>],
+        completed_progress: &AtomicU64,
+    ) {
+        use crate::fault::watchdog::Diagnosis;
+        let Some(head) = snap.first() else {
+            return;
+        };
+        let lat = head.counters.txn_lat.fold();
+        if lat.count() > 0 {
+            wd.observe_commit_latency(lat.p50().max(1));
+        }
+        let live: u64 = snap
+            .iter()
+            .map(|b| {
+                b.counters.executions.load(Ordering::Relaxed)
+                    + b.counters.validations.load(Ordering::Relaxed)
+            })
+            .sum();
+        if !wd.poll(completed_progress.load(Ordering::Relaxed) + live) {
+            if crate::engine::degraded::is_degraded() && wd.ready_to_recover() {
+                crate::engine::degraded::recover(wd.kicks());
+            }
+            return;
+        }
+        let mut recovered = 0usize;
+        for b in snap {
+            recovered += b.scheduler.recover_lost();
+        }
+        head.scheduler.reopen_validation();
+        let parked = snap.iter().any(|b| !b.parked.lock().unwrap().is_empty());
+        let diag = if recovered > 0 {
+            Diagnosis::LostWakeup
+        } else if parked {
+            Diagnosis::ParkedChain
+        } else {
+            Diagnosis::Livelock
+        };
+        crate::obs::trace::watchdog_kick(diag as u64, recovered as u64);
+        head.counters.watchdog_kicks.fetch_add(1, Ordering::Relaxed);
+        if wd.should_escalate() && !crate::engine::degraded::is_degraded() {
+            crate::engine::degraded::escalate(wd.kicks());
+            head.counters.degradations.fetch_add(1, Ordering::Relaxed);
+        }
     }
 }
 

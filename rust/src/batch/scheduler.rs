@@ -58,7 +58,7 @@
 //! the step that makes speculative reads taken while the predecessor
 //! was still draining safe to commit.
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::runtime::workers::{steal_from_peers, StealDeque};
@@ -167,6 +167,25 @@ pub struct Scheduler {
     /// The subset of `steal_cnt` whose victim shared the thief's
     /// locality group.
     local_steal_cnt: AtomicU64,
+    /// Dependents whose resume wakeup was dropped by the fault plane
+    /// (`--faults wakeup_drop=P`). Each victim keeps one `num_active`
+    /// count held, so `check_done` can never declare the batch done
+    /// with work silently lost — an induced lost wakeup is a
+    /// *recoverable stall*, never a wrong answer. The watchdog's
+    /// recovery pass drains this via [`Scheduler::recover_lost`].
+    lost: Mutex<Vec<TxnIdx>>,
+    /// Wakeups dropped so far (monotone; survives recovery).
+    lost_total: AtomicU64,
+    /// Per-transaction quarantine counts: how many times this
+    /// transaction's body panicked and was re-dispatched. Bounds the
+    /// requeue loop (`fault::MAX_REQUEUE`) and suppresses further
+    /// *injected* panics past `fault::MAX_INJECT_PER_TXN`.
+    quarantines: Box<[AtomicU32]>,
+    /// Latched by [`Scheduler::halt`], separate from the done bit so a
+    /// concurrent [`Scheduler::reopen_validation`] (e.g. a watchdog
+    /// kick racing a panic) can never resurrect a halted scheduler and
+    /// strand workers on it.
+    halted: AtomicBool,
 }
 
 impl Scheduler {
@@ -200,13 +219,18 @@ impl Scheduler {
                 .collect(),
             steal_cnt: AtomicU64::new(0),
             local_steal_cnt: AtomicU64::new(0),
+            lost: Mutex::new(Vec::new()),
+            lost_total: AtomicU64::new(0),
+            quarantines: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            halted: AtomicBool::new(false),
         }
     }
 
-    /// Has every transaction been executed and validated?
+    /// Has every transaction been executed and validated (or has the
+    /// scheduler been halted)?
     #[inline]
     pub fn done(&self) -> bool {
-        self.done_word.load(Ordering::SeqCst) & 1 == 1
+        self.done_word.load(Ordering::SeqCst) & 1 == 1 || self.halted.load(Ordering::SeqCst)
     }
 
     /// Candidates taken from a peer's deque so far.
@@ -236,6 +260,10 @@ impl Scheduler {
     /// peers spinning forever on a `num_active` count that can no
     /// longer reach zero.
     pub fn halt(&self) {
+        // The dedicated latch (not just the done bit): `reopen_validation`
+        // rebuilds the done word without its low bit, so a watchdog kick
+        // racing the halt could otherwise clear the emergency stop.
+        self.halted.store(true, Ordering::SeqCst);
         self.done_word.fetch_or(1, Ordering::SeqCst);
     }
 
@@ -495,11 +523,30 @@ impl Scheduler {
         // place) or lands its push where the drain below collects it.
         s.store(pack(incarnation, ST_EXECUTED), Ordering::SeqCst);
         let deps = std::mem::take(&mut *self.deps[txn].lock().unwrap());
-        if let Some(&min_dep) = deps.iter().min() {
+        if !deps.is_empty() {
+            // Fault plane (`--faults wakeup_drop=P`): this drain is
+            // exactly the window the store-Executed-before-drain
+            // protocol exists to close, so it is where an induced lost
+            // wakeup strikes. A dropped dependent stays parked in
+            // Aborting; `record_lost` keeps its active count held (the
+            // batch stalls instead of finishing without it) until the
+            // watchdog re-readies it via `recover_lost`.
+            let mut min_dep = usize::MAX;
+            let mut dropped: Vec<TxnIdx> = Vec::new();
             for &d in &deps {
-                self.set_ready(d);
+                if crate::fault::inject(crate::fault::Site::WakeupDrop) {
+                    dropped.push(d);
+                } else {
+                    self.set_ready(d);
+                    min_dep = min_dep.min(d);
+                }
             }
-            self.decrease_execution_idx(min_dep);
+            if min_dep != usize::MAX {
+                self.decrease_execution_idx(min_dep);
+            }
+            if !dropped.is_empty() {
+                self.record_lost(dropped);
+            }
         }
         if self.validation_idx.load(Ordering::SeqCst) > txn {
             if wrote_new_location {
@@ -514,6 +561,76 @@ impl Scheduler {
         }
         self.num_active.fetch_sub(1, Ordering::SeqCst);
         None
+    }
+
+    /// Park `dropped` (already in Aborting with their active counts
+    /// released) as lost-wakeup victims: re-hold one active count per
+    /// victim — the caller still holds its own count, so the done
+    /// check cannot slip through between the drop and this hold —
+    /// and record them for [`Scheduler::recover_lost`].
+    fn record_lost(&self, dropped: Vec<TxnIdx>) {
+        self.num_active.fetch_add(dropped.len(), Ordering::SeqCst);
+        self.lost_total
+            .fetch_add(dropped.len() as u64, Ordering::SeqCst);
+        self.lost.lock().unwrap().extend(dropped);
+    }
+
+    /// Re-ready every recorded lost-wakeup victim and drag the
+    /// execution stream back to the lowest of them. Returns how many
+    /// were recovered. Called by the watchdog's recovery pass; safe to
+    /// call concurrently with running workers (the re-ready before the
+    /// active-count release keeps the done check conservative).
+    pub fn recover_lost(&self) -> usize {
+        let lost = std::mem::take(&mut *self.lost.lock().unwrap());
+        if lost.is_empty() {
+            return 0;
+        }
+        let mut min_t = usize::MAX;
+        for &t in &lost {
+            self.set_ready(t);
+            min_t = min_t.min(t);
+        }
+        self.decrease_execution_idx(min_t);
+        // Release the held counts only after the stream has been
+        // dragged back: a done check in between sees num_active > 0.
+        self.num_active.fetch_sub(lost.len(), Ordering::SeqCst);
+        lost.len()
+    }
+
+    /// Wakeups dropped by the fault plane so far (monotone).
+    pub fn lost_wakeups(&self) -> u64 {
+        self.lost_total.load(Ordering::SeqCst)
+    }
+
+    /// Lost-wakeup victims currently awaiting recovery.
+    pub fn lost_pending(&self) -> usize {
+        self.lost.lock().unwrap().len()
+    }
+
+    /// How many times `txn`'s body has panicked and been quarantined.
+    pub fn quarantine_count(&self, txn: TxnIdx) -> u32 {
+        self.quarantines[txn].load(Ordering::SeqCst)
+    }
+
+    /// Quarantine `(txn, incarnation)` after its body panicked
+    /// mid-execution: nothing was published (writes only record on a
+    /// successful body), so the transaction is simply re-readied with
+    /// a bumped incarnation and re-offered to the execution stream.
+    /// Returns the transaction's new quarantine count.
+    pub fn requeue_panicked(&self, txn: TxnIdx, incarnation: Incarnation) -> u32 {
+        let count = self.quarantines[txn].fetch_add(1, Ordering::SeqCst) + 1;
+        let s = &self.status[txn].0;
+        debug_assert_eq!(s.load(Ordering::SeqCst), pack(incarnation, ST_EXECUTING));
+        // The panicking worker still owns the Executing state: a plain
+        // store transitions straight to Ready with the next
+        // incarnation.
+        s.store(pack(incarnation + 1, ST_READY), Ordering::SeqCst);
+        crate::obs::trace::quarantine(txn as u64, count as u64);
+        self.decrease_execution_idx(txn);
+        // Release this dispatch's active count only after the stream
+        // was dragged back, mirroring recover_lost.
+        self.num_active.fetch_sub(1, Ordering::SeqCst);
+        count
     }
 
     /// Try to claim the abort of `(txn, incarnation)` after a failed
@@ -731,6 +848,96 @@ mod tests {
         while !s.done() {
             assert_eq!(s.next_task(0), None);
         }
+    }
+
+    #[test]
+    fn lost_wakeup_holds_done_open_until_recovered() {
+        // The store-Executed-before-drain window, with the wakeup
+        // dropped: emulate exactly what the `wakeup_drop` injector does
+        // inside finish_execution's drain (this binary never installs
+        // the global fault plane — see fault::tests), then prove the
+        // scheduler stalls instead of completing without the victim,
+        // and that recover_lost drives it to a correct finish.
+        let s = Scheduler::new(2, 1);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.next_task(0), Some(Task::Execution((1, 0))));
+        // txn 1 parks on txn 0's ESTIMATE.
+        assert!(s.add_dependency(1, 0));
+        // Drop the wakeup: steal the dependency list before txn 0's
+        // finish can drain it, and record the victim the way the
+        // injection site does.
+        let stolen = std::mem::take(&mut *s.deps[0].lock().unwrap());
+        assert_eq!(stolen, vec![1]);
+        s.record_lost(stolen);
+        assert_eq!(s.lost_pending(), 1);
+        assert_eq!(s.finish_execution(0, 0, true), None);
+        // Drain everything reachable: txn 0 validates, txn 1 is lost.
+        for _ in 0..64 {
+            match s.next_task(0) {
+                Some(Task::Validation((0, 0))) => {
+                    s.finish_validation(0, false);
+                }
+                Some(other) => panic!("unexpected task {other:?}"),
+                None => {}
+            }
+        }
+        assert!(
+            !s.done(),
+            "a dropped wakeup must stall the batch, never complete it"
+        );
+        // The watchdog's recovery pass.
+        assert_eq!(s.recover_lost(), 1);
+        assert_eq!(s.lost_pending(), 0);
+        let t = loop {
+            if let Some(t) = s.next_task(0) {
+                break t;
+            }
+        };
+        assert_eq!(t, Task::Execution((1, 1)), "victim re-readied, bumped");
+        assert_eq!(s.finish_execution(1, 1, true), None);
+        for _ in 0..64 {
+            if s.done() {
+                break;
+            }
+            if let Some(Task::Validation((1, 1))) = s.next_task(0) {
+                s.finish_validation(1, false);
+            }
+        }
+        assert!(s.done(), "recovery must drive the batch to done");
+    }
+
+    #[test]
+    fn requeue_panicked_reincarnates_without_publishing() {
+        let s = Scheduler::new(2, 1);
+        assert_eq!(s.next_task(0), Some(Task::Execution((0, 0))));
+        assert_eq!(s.quarantine_count(0), 0);
+        // txn 0's body "panicked": quarantine it.
+        assert_eq!(s.requeue_panicked(0, 0), 1);
+        assert_eq!(s.quarantine_count(0), 1);
+        // It comes back as incarnation 1 and the batch still completes.
+        let mut saw = false;
+        for _ in 0..64 {
+            match s.next_task(0) {
+                Some(Task::Execution((0, 1))) => {
+                    saw = true;
+                    s.finish_execution(0, 1, true);
+                }
+                Some(Task::Execution((1, 0))) => {
+                    s.finish_execution(1, 0, true);
+                }
+                Some(Task::Validation((t, inc))) => {
+                    s.finish_validation(t, false);
+                    let _ = inc;
+                }
+                None => {
+                    if s.done() {
+                        break;
+                    }
+                }
+            }
+        }
+        assert!(saw, "quarantined txn must re-dispatch as incarnation 1");
+        assert!(s.done());
     }
 
     #[test]

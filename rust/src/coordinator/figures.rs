@@ -264,6 +264,20 @@ pub fn render_figure(fig: &FigureSpec, seed: u64) -> String {
             out.push('\n');
         }
     }
+    // With a `--faults` plane installed, the combined table also prices
+    // the watchdog's last-resort escalation target: a `degraded` row —
+    // the global-lock serial backend, priced under the same fault spec
+    // (the simulator picks the installed spec up at construction) — so
+    // the cost of riding out a fault storm serialized is visible next
+    // to every policy that absorbs it speculatively.
+    if fig.id == "combined" && !counters && crate::fault::active() {
+        out.push_str("| degraded |");
+        for &t in &fig.threads {
+            let (secs, _) = sim_cell(PolicySpec::CoarseLock, t, fig.scale, fig.kernel, 1, seed);
+            out.push_str(&format!(" {secs:.3} |"));
+        }
+        out.push('\n');
+    }
     out
 }
 

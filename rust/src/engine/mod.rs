@@ -26,6 +26,54 @@
 
 pub mod auto;
 
+/// The watchdog's last-resort escalation state. When structural
+/// recovery (re-readied wakeups, forced revalidation) fails to restart
+/// progress, the fault watchdog flips this process-wide `Degraded`
+/// flag; every [`Engine::backend`] call then resolves to the
+/// global-lock serial backend — the one rung of the ladder that cannot
+/// livelock — until the watchdog observes sustained progress
+/// ([`crate::fault::watchdog::RECOVERY_HYSTERESIS`] healthy intervals)
+/// and lifts it, at which point the engine returns to its requested or
+/// controller-chosen backend at the next boundary.
+pub mod degraded {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+    static DEGRADED: AtomicBool = AtomicBool::new(false);
+    static ESCALATIONS: AtomicU64 = AtomicU64::new(0);
+
+    /// Enter the degraded state (idempotent; counts and traces only
+    /// the edge).
+    pub fn escalate(kicks: u64) {
+        if !DEGRADED.swap(true, Ordering::SeqCst) {
+            ESCALATIONS.fetch_add(1, Ordering::Relaxed);
+            crate::obs::trace::degraded(kicks);
+            crate::obs::diag(
+                1,
+                &format!("watchdog: escalating to serial backend after {kicks} kicks"),
+            );
+        }
+    }
+
+    /// Leave the degraded state (idempotent; traces only the edge).
+    pub fn recover(kicks: u64) {
+        if DEGRADED.swap(false, Ordering::SeqCst) {
+            crate::obs::trace::recovered(kicks);
+            crate::obs::diag(1, "watchdog: degraded state lifted, restoring backend");
+        }
+    }
+
+    /// One relaxed load: is the process currently degraded?
+    #[inline]
+    pub fn is_degraded() -> bool {
+        DEGRADED.load(Ordering::Relaxed)
+    }
+
+    /// Escalations since process start.
+    pub fn escalations() -> u64 {
+        ESCALATIONS.load(Ordering::Relaxed)
+    }
+}
+
 use crate::batch::adaptive::BlockSizeController;
 use crate::hytm::{PolicySpec, ThreadExecutor, TmSystem};
 use crate::stats::TxStats;
@@ -169,6 +217,9 @@ pub struct Engine {
     controller: Option<AutoController>,
     current: Box<dyn Backend>,
     switches: u64,
+    /// The live backend was installed by a degraded-state override
+    /// (so the restore on recovery is traced as a switch too).
+    degraded_applied: bool,
 }
 
 impl Engine {
@@ -182,6 +233,7 @@ impl Engine {
             controller,
             current: backend_for(spec),
             switches: 0,
+            degraded_applied: false,
         }
     }
 
@@ -238,11 +290,26 @@ impl Engine {
     }
 
     fn materialize(&mut self) {
-        if let Some(ctl) = &self.controller {
-            let want = ctl.current();
-            if want != self.current.spec() {
-                self.current = backend_for(want);
+        // Watchdog escalation overrides everything: while degraded the
+        // engine serves the serial lock backend, and recovery restores
+        // the requested/controller spec at the next boundary.
+        let deg = degraded::is_degraded();
+        let want = if deg {
+            PolicySpec::CoarseLock
+        } else if let Some(ctl) = &self.controller {
+            ctl.current()
+        } else {
+            self.requested
+        };
+        if want != self.current.spec() {
+            // Controller switches were already traced at decision time
+            // in `observe`; trace only the degraded edges here.
+            if deg || self.degraded_applied {
+                self.switches += 1;
+                crate::obs::trace::backend_switch(ordinal(self.current.spec()), ordinal(want));
             }
+            self.degraded_applied = deg;
+            self.current = backend_for(want);
         }
     }
 

@@ -1,0 +1,521 @@
+//! The fault-injection plane: deterministic, seeded fault injection
+//! for every layer of the retry/fallback ladder, plus the progress
+//! watchdog ([`watchdog`]) that heals what the faults break.
+//!
+//! # Fault spec grammar (`--faults SPEC`)
+//!
+//! A spec is a comma-separated `key=value` list:
+//!
+//! ```text
+//! seed=7,htm_abort=0.05,validation_fail=0.02,wakeup_drop=0.01,\
+//! worker_stall=0.005:2ms,panic=0.001
+//! ```
+//!
+//! * `seed=N` — the injection RNG seed (default 1). Same seed + same
+//!   spec ⇒ the same set of injection decisions per site.
+//! * `htm_abort=P` — probability a hardware attempt is killed at
+//!   `HW_BEGIN` with a forced abort (alternating conflict/capacity
+//!   causes, so both ladder rungs are exercised).
+//! * `validation_fail=P` — probability a passing batch read-set
+//!   validation is forced to fail (the transaction re-incarnates
+//!   exactly as on a genuine conflict).
+//! * `wakeup_drop=P` — probability a scheduler dependency wakeup is
+//!   dropped (the classic lost-wakeup bug, induced on demand; the
+//!   scheduler records the victim so the watchdog can re-ready it).
+//! * `worker_stall=P[:DUR]` — probability a worker pauses for `DUR`
+//!   (default 1ms; suffixes `ns`/`us`/`ms`/`s`) before its next task.
+//! * `panic=P` — probability a transaction body panics mid-flight
+//!   (quarantined by the executor's `catch_unwind`, never published).
+//!
+//! Probabilities parse in `[0, 1]` and are clamped to
+//! [`MAX_RATE`] = 0.95 so every fault regime stays live: a rate of 1.0
+//! on a retried site (validation, panic) would otherwise loop forever.
+//! Unknown keys and malformed values are parse *errors* (the CLI turns
+//! them into usage errors, never panics).
+//!
+//! # Determinism
+//!
+//! Each site keeps a monotone ticket counter; a draw hashes
+//! `seed ⊕ site-salt ⊕ ticket` through SplitMix64. The *set* of
+//! injected tickets per site is therefore a pure function of
+//! (seed, spec), independent of thread interleaving — which dynamic
+//! operation claims which ticket still races, but every injection is
+//! recoverable by construction, so kernel output stays bitwise equal
+//! to the fault-free run regardless (the `tests/fault_injection.rs`
+//! invariant).
+//!
+//! # Overhead contract
+//!
+//! Matching [`crate::obs`]: with no plane installed every injection
+//! site is one relaxed load and one branch ([`active`]); the hashing,
+//! counters, and trace emission live in `#[cold]` slow paths.
+//!
+//! # The degradation ladder
+//!
+//! Injected faults exercise, in escalation order:
+//!
+//! 1. HTM abort → the policy's own retry/STM/lock fallback;
+//! 2. validation failure → batch re-incarnation (ESTIMATE + re-run);
+//! 3. task panic → quarantine + re-dispatch with a bumped incarnation
+//!    ([`crate::batch`]'s executor, bounded by [`MAX_REQUEUE`]);
+//! 4. lost wakeup / stall → the [`watchdog`] re-readies recorded
+//!    victims and forces a revalidation pass;
+//! 5. repeated watchdog kicks → [`crate::engine::degraded`] escalates
+//!    the engine to the global-lock serial backend, recovering with
+//!    hysteresis once progress resumes.
+
+pub mod watchdog;
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
+use std::time::Duration;
+
+use crate::util::rng::SplitMix64;
+
+/// Injection rates clamp here so retried sites always terminate.
+pub const MAX_RATE: f64 = 0.95;
+
+/// Injected-panic requeue budget per transaction: past this many
+/// quarantines the executor stops injecting at that transaction, and a
+/// *genuine* (non-injected) persistent panic is re-raised — a real bug
+/// must still surface.
+pub const MAX_REQUEUE: u32 = 12;
+
+/// Quarantines after which injection is suppressed for a transaction
+/// (strictly below [`MAX_REQUEUE`], so injected panics can never
+/// exhaust the requeue budget).
+pub const MAX_INJECT_PER_TXN: u32 = 8;
+
+/// The injection sites, indexable for counters and salts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// `htm/engine.rs`: forced abort at `HW_BEGIN`.
+    HtmAbort = 0,
+    /// `batch/executor.rs`: forced read-set validation failure.
+    ValidationFail = 1,
+    /// `batch/scheduler.rs`: dropped dependency wakeup.
+    WakeupDrop = 2,
+    /// Worker loops: a bounded stall before the next task.
+    WorkerStall = 3,
+    /// `batch/executor.rs`: a panic inside the transaction body.
+    Panic = 4,
+}
+
+/// Number of distinct sites.
+pub const SITES: usize = 5;
+
+/// Per-site draw salts (arbitrary odd constants so sites decorrelate
+/// under one seed).
+const SALTS: [u64; SITES] = [
+    0x9E37_79B9_7F4A_7C15,
+    0xBF58_476D_1CE4_E5B9,
+    0x94D0_49BB_1331_11EB,
+    0xD6E8_FEB8_6659_FD93,
+    0xA076_1D64_78BD_642F,
+];
+
+impl Site {
+    pub fn name(self) -> &'static str {
+        match self {
+            Site::HtmAbort => "htm-abort",
+            Site::ValidationFail => "validation-fail",
+            Site::WakeupDrop => "wakeup-drop",
+            Site::WorkerStall => "worker-stall",
+            Site::Panic => "panic",
+        }
+    }
+
+    pub const ALL: [Site; SITES] = [
+        Site::HtmAbort,
+        Site::ValidationFail,
+        Site::WakeupDrop,
+        Site::WorkerStall,
+        Site::Panic,
+    ];
+}
+
+/// A parsed `--faults` spec. See the module docs for the grammar.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub seed: u64,
+    pub htm_abort: f64,
+    pub validation_fail: f64,
+    pub wakeup_drop: f64,
+    pub worker_stall: f64,
+    /// Duration of one injected worker stall.
+    pub stall: Duration,
+    pub panic: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 1,
+            htm_abort: 0.0,
+            validation_fail: 0.0,
+            wakeup_drop: 0.0,
+            worker_stall: 0.0,
+            stall: Duration::from_millis(1),
+            panic: 0.0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse a comma-separated `key=value` spec. Every malformed key or
+    /// value is an `Err` with a human-readable reason — the CLI maps
+    /// that to a usage error, never a panic.
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        if s.trim().is_empty() {
+            return Err("empty fault spec".into());
+        }
+        for part in s.split(',') {
+            let part = part.trim();
+            let Some((key, value)) = part.split_once('=') else {
+                return Err(format!("fault spec entry '{part}' is not key=value"));
+            };
+            let rate = |v: &str| -> Result<f64, String> {
+                let p: f64 = v
+                    .parse()
+                    .map_err(|_| format!("bad probability for {key}: '{v}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("probability for {key} out of [0,1]: {p}"));
+                }
+                Ok(p.min(MAX_RATE))
+            };
+            match key {
+                "seed" => {
+                    spec.seed = value
+                        .parse()
+                        .map_err(|_| format!("bad seed: '{value}'"))?;
+                }
+                "htm_abort" => spec.htm_abort = rate(value)?,
+                "validation_fail" => spec.validation_fail = rate(value)?,
+                "wakeup_drop" => spec.wakeup_drop = rate(value)?,
+                "panic" => spec.panic = rate(value)?,
+                "worker_stall" => match value.split_once(':') {
+                    Some((p, dur)) => {
+                        spec.worker_stall = rate(p)?;
+                        spec.stall = parse_duration(dur)
+                            .ok_or_else(|| format!("bad stall duration: '{dur}'"))?;
+                    }
+                    None => spec.worker_stall = rate(value)?,
+                },
+                _ => return Err(format!("unknown fault key '{key}'")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// The injection probability of a site.
+    pub fn rate_of(&self, site: Site) -> f64 {
+        match site {
+            Site::HtmAbort => self.htm_abort,
+            Site::ValidationFail => self.validation_fail,
+            Site::WakeupDrop => self.wakeup_drop,
+            Site::WorkerStall => self.worker_stall,
+            Site::Panic => self.panic,
+        }
+    }
+
+    /// The deterministic draw: does ticket number `ticket` at `site`
+    /// inject under this spec? Pure — the whole plane's decision
+    /// function, unit-testable without installing anything.
+    pub fn draw(&self, site: Site, ticket: u64) -> bool {
+        let rate = self.rate_of(site);
+        if rate <= 0.0 {
+            return false;
+        }
+        let mut mix = SplitMix64::new(
+            self.seed ^ SALTS[site as usize] ^ ticket.wrapping_mul(0x2545_F491_4F6C_DD1D),
+        );
+        let unit = (mix.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        unit < rate
+    }
+}
+
+/// `"2ms"` / `"150us"` / `"3s"` / `"500ns"` → a `Duration`.
+fn parse_duration(s: &str) -> Option<Duration> {
+    let (digits, unit): (String, String) = {
+        let split = s.find(|c: char| !c.is_ascii_digit())?;
+        (s[..split].to_string(), s[split..].to_string())
+    };
+    let n: u64 = digits.parse().ok()?;
+    Some(match unit.as_str() {
+        "ns" => Duration::from_nanos(n),
+        "us" => Duration::from_micros(n),
+        "ms" => Duration::from_millis(n),
+        "s" => Duration::from_secs(n),
+        _ => return None,
+    })
+}
+
+// ----------------------------------------------------------------
+// The installed plane
+// ----------------------------------------------------------------
+
+struct Plane {
+    spec: FaultSpec,
+    /// Per-site ticket counters (draws taken).
+    tickets: [AtomicU64; SITES],
+    /// Per-site injections fired.
+    injected: [AtomicU64; SITES],
+}
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static PLANE: AtomicPtr<Plane> = AtomicPtr::new(std::ptr::null_mut());
+
+/// Install a fault plane process-wide. Re-installing swaps the plane
+/// (the old one is intentionally leaked — installs happen O(1) times
+/// per process: once from `--faults`, a handful from the fault test
+/// binary — so the leak is bounded and keeps every reader lock-free).
+pub fn install(spec: FaultSpec) {
+    let plane = Box::leak(Box::new(Plane {
+        spec,
+        tickets: std::array::from_fn(|_| AtomicU64::new(0)),
+        injected: std::array::from_fn(|_| AtomicU64::new(0)),
+    }));
+    PLANE.store(plane, Ordering::Release);
+    ACTIVE.store(true, Ordering::SeqCst);
+    crate::obs::diag(1, "fault plane installed");
+}
+
+/// Disable injection (the plane stays readable for counter queries).
+pub fn clear() {
+    ACTIVE.store(false, Ordering::SeqCst);
+}
+
+/// Is a fault plane installed and enabled? One relaxed load — the
+/// whole cost of every injection site on a fault-free run.
+#[inline]
+pub fn active() -> bool {
+    ACTIVE.load(Ordering::Relaxed)
+}
+
+#[inline]
+fn plane() -> Option<&'static Plane> {
+    let p = PLANE.load(Ordering::Acquire);
+    if p.is_null() {
+        None
+    } else {
+        Some(unsafe { &*p })
+    }
+}
+
+/// The installed spec, if any (regardless of [`active`]).
+pub fn current() -> Option<FaultSpec> {
+    if !active() {
+        return None;
+    }
+    plane().map(|p| p.spec.clone())
+}
+
+/// Should this dynamic occurrence of `site` inject? Returns the
+/// claimed ticket on injection (callers that shape the fault by ticket
+/// parity — the HTM abort-cause alternation — read it).
+#[inline]
+pub fn inject_ticket(site: Site) -> Option<u64> {
+    if !active() {
+        return None;
+    }
+    inject_slow(site)
+}
+
+/// [`inject_ticket`] without the ticket.
+#[inline]
+pub fn inject(site: Site) -> bool {
+    inject_ticket(site).is_some()
+}
+
+#[cold]
+fn inject_slow(site: Site) -> Option<u64> {
+    let plane = plane()?;
+    if plane.spec.rate_of(site) <= 0.0 {
+        return None;
+    }
+    let ticket = plane.tickets[site as usize].fetch_add(1, Ordering::Relaxed);
+    if !plane.spec.draw(site, ticket) {
+        return None;
+    }
+    plane.injected[site as usize].fetch_add(1, Ordering::Relaxed);
+    crate::obs::trace::fault_injected(site as u64, ticket);
+    Some(ticket)
+}
+
+/// Stall the calling worker if the `worker_stall` site fires. One
+/// relaxed load + branch when the plane is off.
+#[inline]
+pub fn maybe_stall() {
+    if !active() {
+        return;
+    }
+    stall_slow();
+}
+
+#[cold]
+fn stall_slow() {
+    if inject(Site::WorkerStall) {
+        if let Some(plane) = plane() {
+            std::thread::sleep(plane.spec.stall);
+        }
+    }
+}
+
+/// Injections fired at one site since install.
+pub fn injected(site: Site) -> u64 {
+    plane().map_or(0, |p| p.injected[site as usize].load(Ordering::Relaxed))
+}
+
+/// Total injections fired across all sites since install.
+pub fn injected_total() -> u64 {
+    plane().map_or(0, |p| {
+        p.injected
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: these tests never call `install` — the plane is
+    // process-global, and this binary's other tests (batch
+    // determinism, kernel runs) must not race an injected fault. All
+    // installed-plane behaviour is covered by the serialized
+    // `tests/fault_injection.rs` binary; here only the pure pieces.
+
+    #[test]
+    fn parse_full_spec_round_trips() {
+        let s = FaultSpec::parse(
+            "seed=7,htm_abort=0.05,validation_fail=0.02,wakeup_drop=0.01,\
+             worker_stall=0.005:2ms,panic=0.001",
+        )
+        .unwrap();
+        assert_eq!(s.seed, 7);
+        assert!((s.htm_abort - 0.05).abs() < 1e-12);
+        assert!((s.validation_fail - 0.02).abs() < 1e-12);
+        assert!((s.wakeup_drop - 0.01).abs() < 1e-12);
+        assert!((s.worker_stall - 0.005).abs() < 1e-12);
+        assert_eq!(s.stall, Duration::from_millis(2));
+        assert!((s.panic - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_defaults_and_partial_specs() {
+        let s = FaultSpec::parse("seed=3").unwrap();
+        assert_eq!(s.seed, 3);
+        assert_eq!(s.rate_of(Site::Panic), 0.0);
+        assert_eq!(s.stall, Duration::from_millis(1));
+        let s = FaultSpec::parse("worker_stall=0.5").unwrap();
+        assert!((s.worker_stall - 0.5).abs() < 1e-12);
+        // Duration suffixes.
+        for (txt, want) in [
+            ("worker_stall=0.1:500ns", Duration::from_nanos(500)),
+            ("worker_stall=0.1:150us", Duration::from_micros(150)),
+            ("worker_stall=0.1:3s", Duration::from_secs(3)),
+        ] {
+            assert_eq!(FaultSpec::parse(txt).unwrap().stall, want, "{txt}");
+        }
+    }
+
+    #[test]
+    fn parse_clamps_saturating_rates() {
+        let s = FaultSpec::parse("panic=1.0,validation_fail=0.99").unwrap();
+        assert!((s.panic - MAX_RATE).abs() < 1e-12, "1.0 clamps to MAX_RATE");
+        assert!((s.validation_fail - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "   ",
+            "htm_abort",               // not key=value
+            "htm_abort=",              // empty value
+            "htm_abort=x",             // not a number
+            "htm_abort=1.5",           // out of range
+            "htm_abort=-0.1",          // negative
+            "seed=abc",                // bad seed
+            "worker_stall=0.1:2",      // missing duration unit
+            "worker_stall=0.1:2min",   // unknown unit
+            "worker_stall=0.1:ms",     // missing digits
+            "worker_stall=x:2ms",      // bad probability
+            "unknown_key=0.1",         // unknown key
+            "panic=0.1,,seed=2",       // empty entry
+            "panic=0.1;seed=2",        // wrong separator
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    #[test]
+    fn draw_is_deterministic_and_seed_sensitive() {
+        let mut spec = FaultSpec::default();
+        spec.seed = 7;
+        spec.validation_fail = 0.25;
+        let hits: Vec<u64> = (0..4096)
+            .filter(|&t| spec.draw(Site::ValidationFail, t))
+            .collect();
+        let again: Vec<u64> = (0..4096)
+            .filter(|&t| spec.draw(Site::ValidationFail, t))
+            .collect();
+        assert_eq!(hits, again, "same seed ⇒ same injected ticket set");
+        // The empirical rate tracks the requested one.
+        let rate = hits.len() as f64 / 4096.0;
+        assert!((rate - 0.25).abs() < 0.05, "empirical rate {rate}");
+        // A different seed moves the set; a different site decorrelates.
+        let mut other = spec.clone();
+        other.seed = 8;
+        let moved: Vec<u64> = (0..4096)
+            .filter(|&t| other.draw(Site::ValidationFail, t))
+            .collect();
+        assert_ne!(hits, moved, "seed must matter");
+        let mut wider = spec.clone();
+        wider.wakeup_drop = 0.25;
+        let cross: Vec<u64> = (0..4096)
+            .filter(|&t| wider.draw(Site::WakeupDrop, t))
+            .collect();
+        assert_ne!(hits, cross, "sites must decorrelate under one seed");
+    }
+
+    #[test]
+    fn zero_rate_never_draws() {
+        let spec = FaultSpec::default();
+        for site in Site::ALL {
+            assert!((0..1000).all(|t| !spec.draw(site, t)), "{}", site.name());
+        }
+    }
+
+    #[test]
+    fn inactive_plane_is_inert() {
+        // No install in this binary: every query path returns the
+        // fault-free answer.
+        if active() {
+            return; // another harness installed a plane; skip
+        }
+        assert!(inject_ticket(Site::Panic).is_none());
+        assert!(!inject(Site::HtmAbort));
+        maybe_stall(); // must not sleep or panic
+        assert_eq!(current(), None);
+    }
+
+    #[test]
+    fn site_names_are_stable() {
+        let names: Vec<&str> = Site::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "htm-abort",
+                "validation-fail",
+                "wakeup-drop",
+                "worker-stall",
+                "panic"
+            ]
+        );
+        for (i, s) in Site::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i);
+        }
+    }
+}

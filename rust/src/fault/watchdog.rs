@@ -1,0 +1,286 @@
+//! Progress watchdog: detects a stalled run (the global commit/
+//! execution counter stops advancing past a deadline), elects one
+//! kicker to run recovery, and escalates to the serial backend after
+//! repeated fruitless kicks.
+//!
+//! # Contract
+//!
+//! * The watchdog never fires while progress advances: every observed
+//!   change of the progress counter resets the deadline clock.
+//! * The deadline **scales with measured commit latency** so
+//!   single-threaded, `NO_PIN=1`, or debug-slow runs do not trip it:
+//!   `deadline = max(base, SLACK_FACTOR × ewma_commit_latency)` where
+//!   the EWMA is fed from the same nanosecond samples the
+//!   [`crate::obs::hist`] latency histograms record (the batch driver
+//!   folds the live transaction-latency histogram into
+//!   [`Watchdog::observe_commit_latency`]). The law is pinned by a
+//!   unit test below.
+//! * [`Watchdog::poll`] is safe to call from many workers; exactly one
+//!   caller wins each kick (CAS election), so recovery never runs
+//!   twice for one stall.
+//! * Recovery is the *caller's* job (re-ready recorded lost wakeups,
+//!   force a revalidation pass via `reopen_validation`); the watchdog
+//!   supplies the trigger, the kick accounting, and the escalation /
+//!   recovery hysteresis ([`Watchdog::should_escalate`],
+//!   [`Watchdog::ready_to_recover`]).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Deadline slack over the commit-latency EWMA: a run is only
+/// "stalled" once nothing commits for this many typical commit
+/// latencies.
+pub const SLACK_FACTOR: u64 = 1024;
+
+/// Deadline floor before any latency has been observed.
+pub const DEFAULT_BASE_DEADLINE: Duration = Duration::from_millis(250);
+
+/// EWMA decay: `e' = e + (sample - e) / 2^EWMA_SHIFT` (α = 1/8).
+pub const EWMA_SHIFT: u32 = 3;
+
+/// Kicks with zero intervening progress before the watchdog asks for
+/// escalation to the serial backend.
+pub const ESCALATE_AFTER_KICKS: u64 = 3;
+
+/// Consecutive progress observations required after an escalation
+/// before the degraded state may lift (recovery hysteresis).
+pub const RECOVERY_HYSTERESIS: u64 = 2;
+
+/// The pinned deadline scaling law (pure; see module docs).
+pub fn deadline_law_ns(base_ns: u64, ewma_ns: u64) -> u64 {
+    base_ns.max(SLACK_FACTOR.saturating_mul(ewma_ns))
+}
+
+/// What a kick found. Carried in the watchdog-kick trace event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Diagnosis {
+    /// Dropped dependency wakeups were recorded and re-readied.
+    LostWakeup = 0,
+    /// No recorded drops — a parked ESTIMATE chain or stuck
+    /// validation frontier; recovery forces a revalidation pass.
+    ParkedChain = 1,
+    /// Structural recovery found nothing: a livelocked retry storm or
+    /// a dead/stalled worker. Only escalation helps.
+    Livelock = 2,
+}
+
+impl Diagnosis {
+    pub fn name(self) -> &'static str {
+        match self {
+            Diagnosis::LostWakeup => "lost-wakeup",
+            Diagnosis::ParkedChain => "parked-chain",
+            Diagnosis::Livelock => "livelock",
+        }
+    }
+}
+
+/// Shared stall detector. All methods take `&self`; the struct is
+/// designed to sit in an `Arc` or on the driver's stack, polled by
+/// the driver thread and/or idle workers.
+pub struct Watchdog {
+    epoch: Instant,
+    base_ns: u64,
+    ewma_ns: AtomicU64,
+    last_progress: AtomicU64,
+    last_change_ns: AtomicU64,
+    kicks: AtomicU64,
+    kicks_since_progress: AtomicU64,
+    healthy_streak: AtomicU64,
+}
+
+impl Watchdog {
+    pub fn new(base: Duration) -> Watchdog {
+        Watchdog {
+            epoch: Instant::now(),
+            base_ns: base.as_nanos() as u64,
+            ewma_ns: AtomicU64::new(0),
+            last_progress: AtomicU64::new(0),
+            last_change_ns: AtomicU64::new(0),
+            kicks: AtomicU64::new(0),
+            kicks_since_progress: AtomicU64::new(0),
+            healthy_streak: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_default_deadline() -> Watchdog {
+        Watchdog::new(DEFAULT_BASE_DEADLINE)
+    }
+
+    /// Feed one commit-latency sample (nanoseconds) into the EWMA.
+    /// Racy updates may drop a sample; the estimate only steers the
+    /// deadline, so that is harmless.
+    pub fn observe_commit_latency(&self, ns: u64) {
+        let prev = self.ewma_ns.load(Ordering::Relaxed);
+        let next = if prev == 0 {
+            ns
+        } else {
+            // e + (sample - e)/8, in integer arithmetic without
+            // underflow on sample < e.
+            let shifted = prev - (prev >> EWMA_SHIFT) + (ns >> EWMA_SHIFT);
+            shifted.max(1)
+        };
+        self.ewma_ns.store(next, Ordering::Relaxed);
+    }
+
+    /// Current commit-latency EWMA in nanoseconds (0 until fed).
+    pub fn ewma_ns(&self) -> u64 {
+        self.ewma_ns.load(Ordering::Relaxed)
+    }
+
+    /// The live deadline under the pinned scaling law.
+    pub fn deadline_ns(&self) -> u64 {
+        deadline_law_ns(self.base_ns, self.ewma_ns())
+    }
+
+    /// Report the current progress counter. Returns `true` exactly
+    /// once per stall interval — the caller that receives `true` owns
+    /// the recovery for this kick.
+    pub fn poll(&self, progress: u64) -> bool {
+        let now = self.epoch.elapsed().as_nanos() as u64;
+        let last = self.last_progress.load(Ordering::Relaxed);
+        if progress != last {
+            self.last_progress.store(progress, Ordering::Relaxed);
+            self.last_change_ns.store(now, Ordering::Relaxed);
+            self.kicks_since_progress.store(0, Ordering::Relaxed);
+            self.healthy_streak.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let seen = self.last_change_ns.load(Ordering::Relaxed);
+        if now.saturating_sub(seen) < self.deadline_ns() {
+            return false;
+        }
+        // Elect one kicker; the CAS also restarts the deadline clock
+        // so recovery gets a full fresh interval before the next kick.
+        if self
+            .last_change_ns
+            .compare_exchange(seen, now, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+        {
+            self.kicks.fetch_add(1, Ordering::Relaxed);
+            self.kicks_since_progress.fetch_add(1, Ordering::Relaxed);
+            self.healthy_streak.store(0, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Total kicks fired.
+    pub fn kicks(&self) -> u64 {
+        self.kicks.load(Ordering::Relaxed)
+    }
+
+    /// Consecutive kicks with no intervening progress — past
+    /// [`ESCALATE_AFTER_KICKS`], structural recovery is not working
+    /// and the caller should escalate to the serial backend.
+    pub fn should_escalate(&self) -> bool {
+        self.kicks_since_progress.load(Ordering::Relaxed) >= ESCALATE_AFTER_KICKS
+    }
+
+    /// Recovery hysteresis: after an escalation, has progress resumed
+    /// for long enough that the degraded state may lift?
+    pub fn ready_to_recover(&self) -> bool {
+        self.healthy_streak.load(Ordering::Relaxed) >= RECOVERY_HYSTERESIS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_scaling_law_is_pinned() {
+        // The exact law — changing it is a deliberate act.
+        let base = DEFAULT_BASE_DEADLINE.as_nanos() as u64;
+        assert_eq!(deadline_law_ns(base, 0), base, "floor before any sample");
+        // Fast commits (1µs): the floor dominates.
+        assert_eq!(deadline_law_ns(base, 1_000), base);
+        // Slow commits (1ms, a debug/single-thread regime): the EWMA
+        // term dominates and the deadline stretches to SLACK×EWMA.
+        assert_eq!(
+            deadline_law_ns(base, 1_000_000),
+            SLACK_FACTOR * 1_000_000,
+            "deadline must scale with measured commit latency"
+        );
+        // Monotone in the EWMA.
+        let mut prev = 0;
+        for e in [0u64, 10, 1_000, 100_000, 10_000_000] {
+            let d = deadline_law_ns(base, e);
+            assert!(d >= prev);
+            prev = d;
+        }
+        // Crossover point: base / SLACK_FACTOR.
+        let cross = base / SLACK_FACTOR;
+        assert_eq!(deadline_law_ns(base, cross.saturating_sub(1)), base);
+        assert!(deadline_law_ns(base, cross + 1) > base);
+    }
+
+    #[test]
+    fn ewma_converges_and_tracks_regime_changes() {
+        let wd = Watchdog::new(Duration::from_millis(1));
+        for _ in 0..64 {
+            wd.observe_commit_latency(1_000);
+        }
+        let settled = wd.ewma_ns();
+        assert!(
+            (900..=1_100).contains(&settled),
+            "EWMA should settle near the constant sample, got {settled}"
+        );
+        // A 100× slower regime pulls the estimate (and the deadline) up.
+        for _ in 0..64 {
+            wd.observe_commit_latency(100_000);
+        }
+        let slow = wd.ewma_ns();
+        assert!(slow > 50_000, "EWMA must track the slow regime, got {slow}");
+        assert_eq!(wd.deadline_ns(), deadline_law_ns(1_000_000, slow));
+    }
+
+    #[test]
+    fn slow_commit_latency_suppresses_false_positives() {
+        // A single-threaded / debug-slow run: commits take ~5ms each.
+        // With a 1ms base deadline the naive watchdog would kick
+        // between every two commits; the scaled deadline must not.
+        let wd = Watchdog::new(Duration::from_millis(1));
+        wd.observe_commit_latency(5_000_000);
+        assert!(!wd.poll(1), "first observation only records progress");
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(
+            !wd.poll(1),
+            "5ms of no progress is within one commit latency — no kick"
+        );
+        assert_eq!(wd.kicks(), 0);
+    }
+
+    #[test]
+    fn kicks_after_deadline_then_resets_and_escalates() {
+        let wd = Watchdog::new(Duration::from_millis(2));
+        assert!(!wd.poll(7), "progress registration is not a kick");
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(wd.poll(7), "deadline passed with no progress");
+        assert_eq!(wd.kicks(), 1);
+        assert!(!wd.poll(7), "kick restarts the deadline clock");
+        assert!(!wd.should_escalate());
+        for _ in 0..(ESCALATE_AFTER_KICKS - 1) {
+            std::thread::sleep(Duration::from_millis(5));
+            assert!(wd.poll(7));
+        }
+        assert!(wd.should_escalate(), "repeated fruitless kicks escalate");
+        // Progress clears the escalation pressure and, sustained,
+        // satisfies the recovery hysteresis.
+        assert!(!wd.poll(8));
+        assert!(!wd.should_escalate());
+        assert!(!wd.ready_to_recover(), "one healthy poll is not enough");
+        assert!(!wd.poll(9));
+        assert!(wd.ready_to_recover(), "hysteresis satisfied after {RECOVERY_HYSTERESIS} healthy polls");
+    }
+
+    #[test]
+    fn diagnosis_names_are_stable() {
+        assert_eq!(Diagnosis::LostWakeup.name(), "lost-wakeup");
+        assert_eq!(Diagnosis::ParkedChain.name(), "parked-chain");
+        assert_eq!(Diagnosis::Livelock.name(), "livelock");
+        assert_eq!(Diagnosis::LostWakeup as u64, 0);
+        assert_eq!(Diagnosis::ParkedChain as u64, 1);
+        assert_eq!(Diagnosis::Livelock as u64, 2);
+    }
+}

@@ -133,6 +133,21 @@ impl HtmEngine {
             None => 0,
         };
 
+        // Fault plane (`--faults htm_abort=P`): kill the attempt at
+        // HW_BEGIN, before the body runs, so a forced abort is
+        // indistinguishable from a real one to every retry policy. The
+        // ticket parity alternates the cause so both the
+        // conflict-retry and capacity-fallback ladder rungs get
+        // exercised. One relaxed load + branch when no plane is
+        // installed.
+        if let Some(ticket) = crate::fault::inject_ticket(crate::fault::Site::HtmAbort) {
+            return Err(if ticket & 1 == 0 {
+                AbortCause::Conflict
+            } else {
+                AbortCause::Capacity
+            });
+        }
+
         // Fault model: decide up front whether an async event will kill
         // this attempt, and after how many accesses.
         let interrupt_at = if self.cfg.interrupt_prob > 0.0

@@ -864,6 +864,54 @@ mod tests {
     }
 
     #[test]
+    fn parse_rejects_malformed_specs_without_panicking() {
+        // CLI-audit satellite: every malformed spec the user can type
+        // must come back as a rejection the CLI maps to a usage error —
+        // never an unwrap panic inside the parser.
+        for bad in [
+            "", "=", "lock=", "rnd=5-", "rnd=-10", "rnd=a-b", "batch=",
+            "batch=adaptive:", "batch=adaptive:latency=", "auto=",
+            "auto=hysteresis=", "dyad=-1", "htm-spin=4294967296",
+        ] {
+            // Rejection may surface as None or as the family default —
+            // what it must never do is panic. Pin the ones with a
+            // single correct answer.
+            let _ = PolicySpec::parse(bad);
+        }
+        assert_eq!(PolicySpec::parse(""), None);
+        assert_eq!(PolicySpec::parse("="), None);
+        assert_eq!(PolicySpec::parse("rnd=5-"), None);
+        assert_eq!(PolicySpec::parse("batch=adaptive:"), None);
+        assert_eq!(PolicySpec::parse("batch=adaptive:latency="), None);
+        assert_eq!(PolicySpec::parse("auto="), None);
+        assert_eq!(PolicySpec::parse("auto=hysteresis="), None);
+
+        // The fault plane's spec parser holds the same line: malformed
+        // input is an Err with a reason, never a panic, and good input
+        // round-trips every field.
+        use crate::fault::FaultSpec;
+        for bad in [
+            "", "seed", "seed=", "seed=x", "panic=1.5", "panic=-0.1",
+            "panic=oops", "worker_stall=0.1:2", "worker_stall=0.1:2days",
+            "gamma_ray=0.5", "htm_abort", ",",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        let spec = FaultSpec::parse(
+            "seed=7,htm_abort=0.05,validation_fail=0.02,wakeup_drop=0.01,\
+             worker_stall=0.005:2ms,panic=0.001",
+        )
+        .unwrap();
+        assert_eq!(spec.seed, 7);
+        assert_eq!(spec.htm_abort, 0.05);
+        assert_eq!(spec.validation_fail, 0.02);
+        assert_eq!(spec.wakeup_drop, 0.01);
+        assert_eq!(spec.worker_stall, 0.005);
+        assert_eq!(spec.stall, std::time::Duration::from_millis(2));
+        assert_eq!(spec.panic, 0.001);
+    }
+
+    #[test]
     fn auto_label_reports_switches() {
         let auto = PolicySpec::Auto { hysteresis: 2 };
         let mut stats = TxStats::new();

@@ -152,6 +152,46 @@
 //! `sim --fig combined` prices an `auto` row next to every fixed
 //! policy.
 //!
+//! ## Robustness: the fault plane, quarantine, and the watchdog
+//!
+//! The retry/fallback ladder is only trustworthy if something induces
+//! the failures it claims to absorb. The [`fault`] subsystem does
+//! exactly that, deterministically: **`--faults SPEC`** installs a
+//! seeded injection plane (grammar in the [`fault`] module docs, e.g.
+//! `--faults seed=7,htm_abort=0.05,validation_fail=0.02,`
+//! `wakeup_drop=0.01,worker_stall=0.005:2ms,panic=0.001`) whose sites
+//! are threaded through every layer: forced conflict/capacity aborts
+//! at `HW_BEGIN` ([`htm::engine`]), forced read-set validation
+//! failures and injected body panics in the batch executor, dropped
+//! dependency wakeups in the batch scheduler (the classic lost-wakeup
+//! bug on demand), and bounded worker stalls in the worker loops. A
+//! disabled site costs one relaxed load and a branch — the same
+//! overhead contract as [`obs`] — and each site's injected-ticket set
+//! is a pure function of the seed, so fault runs replay.
+//!
+//! What the faults break, the runtime heals, up a **degradation
+//! ladder**: (1) a forced HTM abort is absorbed by the policy's own
+//! retry/STM/lock fallback; (2) a forced validation failure
+//! re-incarnates the transaction exactly like a genuine conflict; (3)
+//! a panicking transaction body is caught (`catch_unwind`) before
+//! anything is published, **quarantined**, and re-dispatched with a
+//! bumped incarnation (bounded per transaction — a genuinely
+//! deterministic panic still surfaces); (4) a dropped wakeup or stall
+//! trips the [`fault::watchdog`] — when the global execution counter
+//! stops advancing past a deadline that *scales with the measured
+//! commit-latency EWMA* (so single-threaded or debug-slow runs never
+//! false-positive), one elected kicker re-readies recorded lost
+//! wakeups and forces a revalidation pass via `reopen_validation`; (5)
+//! if repeated kicks bring no progress, the watchdog escalates the
+//! [`engine`] to the global-lock serial backend
+//! ([`engine::degraded`]), recovering with hysteresis once progress
+//! resumes. Every injection, quarantine, kick, escalation, and
+//! recovery is a typed trace event and a
+//! `TxStats`/snapshot counter. The invariant, enforced by
+//! `tests/fault_injection.rs` and a CI chaos tier: under **any**
+//! seeded fault spec, kernel output is bitwise-identical to the
+//! fault-free run and the process exits cleanly.
+//!
 //! System inventory and the paper-vs-measured record live in
 //! `ROADMAP.md` (north star, open items) and `PAPER.md` (source
 //! abstract) at the repository root; per-module documentation below is
@@ -160,6 +200,7 @@
 pub mod batch;
 pub mod coordinator;
 pub mod engine;
+pub mod fault;
 pub mod graph;
 pub mod htm;
 pub mod hytm;

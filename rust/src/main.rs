@@ -35,6 +35,9 @@
 //! --trace[=PATH]       event tracing -> JSON-lines (default trace.jsonl)
 //! --metrics-json PATH  phase-scoped metric snapshots -> JSON-lines
 //! --obs-verbosity N    [obs] diagnostics: 0 silent, 1 default, 2 chatty
+//! --faults SPEC        deterministic fault injection (see `dyadhytm::fault`),
+//!                      e.g. seed=7,htm_abort=0.05,validation_fail=0.02,
+//!                      wakeup_drop=0.01,worker_stall=0.005:2ms,panic=0.001
 //! ```
 
 use std::process::ExitCode;
@@ -322,6 +325,58 @@ fn main() -> ExitCode {
     }
     if metrics_path.is_some() {
         dyadhytm::obs::snapshot::enable();
+    }
+    // `--faults SPEC` (or `--faults=SPEC`) installs the deterministic
+    // fault-injection plane for the whole process before any subcommand
+    // runs. A malformed spec is a usage error, never a panic.
+    let faults = a.opt("--faults").or_else(|| a.opt_eq("--faults").flatten());
+    if let Some(spec) = &faults {
+        match dyadhytm::fault::FaultSpec::parse(spec) {
+            Ok(s) => dyadhytm::fault::install(s),
+            Err(e) => {
+                eprintln!("bad --faults spec: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    // Abnormal-exit flush: a genuine panic anywhere still lands the
+    // telemetry buffers on disk before the process dies. Injected fault
+    // panics are expected — the batch executor quarantines them — so
+    // the hook stays silent for those and leaves flushing to the normal
+    // exit path below.
+    {
+        let default_hook = std::panic::take_hook();
+        let trace_path = trace_path.clone();
+        let metrics_path = metrics_path.clone();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected fault"))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<String>()
+                        .map(|s| s.contains("injected fault"))
+                })
+                .unwrap_or(false);
+            if injected {
+                return;
+            }
+            default_hook(info);
+            if let Some(path) = &trace_path {
+                match dyadhytm::obs::trace::write_jsonl(path) {
+                    Ok(n) => eprintln!("panic: flushed {n} trace events -> {path}"),
+                    Err(e) => eprintln!("panic: error writing {path}: {e}"),
+                }
+            }
+            if let Some(path) = &metrics_path {
+                match dyadhytm::obs::snapshot::write_jsonl(path) {
+                    Ok(n) => eprintln!("panic: flushed {n} snapshots -> {path}"),
+                    Err(e) => eprintln!("panic: error writing {path}: {e}"),
+                }
+            }
+        }));
     }
 
     if a.rest.is_empty() {

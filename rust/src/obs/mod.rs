@@ -8,8 +8,10 @@
 //! * [`trace`] — per-worker lock-free ring buffers of packed 32-byte
 //!   event records (block admitted/promoted, HTM abort+cause,
 //!   re-incarnation, block/window resize decisions, local/remote
-//!   steals, auto-controller backend switches), enabled by
-//!   `--trace[=PATH]` and drained post-run to JSON-lines.
+//!   steals, auto-controller backend switches, and the robustness
+//!   plane's fault-injected / quarantine / watchdog-kick /
+//!   degraded / recovered events), enabled by `--trace[=PATH]` and
+//!   drained post-run to JSON-lines.
 //! * [`snapshot`] — the registry that turns `TxStats` /
 //!   `BatchReport` / controller counters into interval deltas keyed by
 //!   kernel + phase (generation / computation / extraction), exported
@@ -43,6 +45,24 @@
 //! `t_ns` is nanoseconds since tracing was enabled, `worker` is the
 //! emitting ring index, and `kind`/`a`/`b` are documented per variant
 //! on [`trace::EventKind`].
+//!
+//! The robustness plane (`--faults SPEC`, see `crate::fault`) adds
+//! five kinds to the stream:
+//!
+//! * `fault-injected` — a fault-plane site fired: `a` = site index
+//!   (`fault::Site`), `b` = the site's ticket number (the
+//!   deterministic draw that fired, replayable from the spec's seed).
+//! * `quarantine` — the batch executor caught a panicking transaction
+//!   body and requeued it: `a` = transaction index, `b` = times this
+//!   transaction has been quarantined.
+//! * `watchdog-kick` — the progress watchdog missed its deadline and
+//!   forced a resume: `a` = diagnosis (0 lost wakeup, 1 parked
+//!   ESTIMATE chain, 2 livelocked retry storm), `b` = transactions
+//!   recovered from the lost-wakeup set.
+//! * `degraded` — kicks without progress escalated the engine to the
+//!   global-lock serial backend: `a` = kick count at escalation.
+//! * `recovered` — hysteresis cleared and the engine left the
+//!   degraded state: `a` = kick count at recovery.
 //!
 //! # Snapshot schema (`--metrics-json PATH`, JSON-lines)
 //!

@@ -114,6 +114,10 @@ pub fn record(kernel: &str, phase: &str, stats: &TxStats, extra: &[(&str, String
         stats.backend_switches
     ));
     line.push_str(&format!(
+        ",\"faults_injected\":{},\"quarantines\":{},\"watchdog_kicks\":{},\"degradations\":{}",
+        stats.faults_injected, stats.quarantines, stats.watchdog_kicks, stats.degradations
+    ));
+    line.push_str(&format!(
         ",\"txn_lat_count\":{},\"txn_lat_p50_ns\":{},\"txn_lat_p90_ns\":{},\"txn_lat_p99_ns\":{}",
         stats.txn_lat.count(),
         stats.txn_lat.p50(),
@@ -210,6 +214,10 @@ mod tests {
         assert_eq!(json::scrape_u64(r, "block"), Some(1024));
         assert_eq!(json::scrape_u64(r, "window"), Some(3));
         assert_eq!(json::scrape_u64(r, "backend_switches"), Some(0));
+        assert_eq!(json::scrape_u64(r, "faults_injected"), Some(0));
+        assert_eq!(json::scrape_u64(r, "quarantines"), Some(0));
+        assert_eq!(json::scrape_u64(r, "watchdog_kicks"), Some(0));
+        assert_eq!(json::scrape_u64(r, "degradations"), Some(0));
         assert_eq!(json::scrape_u64(r, "threads"), Some(4));
         assert_eq!(json::scrape_u64(r, "txn_lat_count"), Some(2));
         assert_eq!(json::scrape_u64(r, "txn_lat_p50_ns"), Some(127));

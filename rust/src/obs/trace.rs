@@ -61,6 +61,23 @@ pub enum EventKind {
     /// `a` = outgoing backend, `b` = incoming backend, both as
     /// [`crate::engine::ordinal`] codes.
     BackendSwitch = 9,
+    /// The fault plane fired an injection. `a` = site index
+    /// ([`crate::fault::Site`]), `b` = the site's ticket number.
+    FaultInjected = 10,
+    /// A panicking transaction body was caught and quarantined; the
+    /// transaction re-dispatches with a bumped incarnation. `a` =
+    /// transaction index, `b` = quarantine count for that transaction.
+    Quarantine = 11,
+    /// The progress watchdog fired and ran recovery. `a` =
+    /// [`crate::fault::watchdog::Diagnosis`] code, `b` = lost wakeups
+    /// re-readied by this kick.
+    WatchdogKick = 12,
+    /// The watchdog escalated the engine to the global-lock serial
+    /// backend. `a` = total kicks at escalation, `b` = 0.
+    Degraded = 13,
+    /// The degraded state lifted after sustained progress (recovery
+    /// hysteresis). `a` = total kicks at recovery, `b` = 0.
+    Recovered = 14,
 }
 
 impl EventKind {
@@ -75,6 +92,11 @@ impl EventKind {
             EventKind::StealLocal => "steal-local",
             EventKind::StealRemote => "steal-remote",
             EventKind::BackendSwitch => "backend-switch",
+            EventKind::FaultInjected => "fault-injected",
+            EventKind::Quarantine => "quarantine",
+            EventKind::WatchdogKick => "watchdog-kick",
+            EventKind::Degraded => "degraded",
+            EventKind::Recovered => "recovered",
         }
     }
 
@@ -89,6 +111,11 @@ impl EventKind {
             7 => EventKind::StealLocal,
             8 => EventKind::StealRemote,
             9 => EventKind::BackendSwitch,
+            10 => EventKind::FaultInjected,
+            11 => EventKind::Quarantine,
+            12 => EventKind::WatchdogKick,
+            13 => EventKind::Degraded,
+            14 => EventKind::Recovered,
             _ => return None,
         })
     }
@@ -227,6 +254,31 @@ pub fn backend_switch(from_ordinal: u64, to_ordinal: u64) {
 }
 
 #[inline]
+pub fn fault_injected(site: u64, ticket: u64) {
+    emit(EventKind::FaultInjected, site, ticket);
+}
+
+#[inline]
+pub fn quarantine(txn: u64, count: u64) {
+    emit(EventKind::Quarantine, txn, count);
+}
+
+#[inline]
+pub fn watchdog_kick(diagnosis: u64, recovered: u64) {
+    emit(EventKind::WatchdogKick, diagnosis, recovered);
+}
+
+#[inline]
+pub fn degraded(kicks: u64) {
+    emit(EventKind::Degraded, kicks, 0);
+}
+
+#[inline]
+pub fn recovered(kicks: u64) {
+    emit(EventKind::Recovered, kicks, 0);
+}
+
+#[inline]
 pub fn steal(local: bool) {
     emit(
         if local {
@@ -334,6 +386,11 @@ mod tests {
         emit(EventKind::BlockResize, MARK, 512);
         emit(EventKind::WindowResize, MARK, 3);
         emit(EventKind::BackendSwitch, MARK, 9);
+        emit(EventKind::FaultInjected, MARK, 41);
+        emit(EventKind::Quarantine, MARK, 2);
+        emit(EventKind::WatchdogKick, MARK, 3);
+        emit(EventKind::Degraded, MARK, 0);
+        emit(EventKind::Recovered, MARK, 0);
         disable();
         // Disabled again: not recorded.
         emit(EventKind::HwAbort, MARK, 9);
@@ -345,7 +402,7 @@ mod tests {
                 && e.a == AbortCause::Capacity.index() as u64));
         assert!(events.iter().any(|e| e.kind == EventKind::StealLocal));
         let mine: Vec<&Event> = events.iter().filter(|e| e.a == MARK).collect();
-        assert_eq!(mine.len(), 6);
+        assert_eq!(mine.len(), 11);
         // drain() sorts stably by t_ns, so same-thread (same-ring)
         // emission order is preserved.
         assert_eq!(mine[0].kind, EventKind::BlockAdmitted);
@@ -358,6 +415,14 @@ mod tests {
         assert_eq!(mine[5].kind, EventKind::BackendSwitch);
         assert_eq!(mine[5].b, 9);
         assert_eq!(mine[5].kind.name(), "backend-switch");
+        assert_eq!(mine[6].kind, EventKind::FaultInjected);
+        assert_eq!(mine[6].b, 41);
+        assert_eq!(mine[6].kind.name(), "fault-injected");
+        assert_eq!(mine[7].kind, EventKind::Quarantine);
+        assert_eq!(mine[8].kind, EventKind::WatchdogKick);
+        assert_eq!(mine[8].kind.name(), "watchdog-kick");
+        assert_eq!(mine[9].kind, EventKind::Degraded);
+        assert_eq!(mine[10].kind, EventKind::Recovered);
         assert!(events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
         let line = event_json(mine[0]);
         assert!(line.contains("\"kind\":\"block-admitted\""));

@@ -601,6 +601,12 @@ impl RangeFeed<'_> {
     /// deque has drained (ranges are never re-added, so `None` is
     /// final).
     pub fn next(&self) -> Option<(usize, usize)> {
+        // Fault plane: a bounded injected stall between chunks (one
+        // relaxed load + branch when no `--faults` plane is installed).
+        // Purely a delay — the range deal is static, so recovery is
+        // just this worker waking back up (peers steal its share in
+        // the meantime).
+        crate::fault::maybe_stall();
         if let Some(v) = self.deques[self.me].pop() {
             return Some(unpack_range(v));
         }

@@ -80,6 +80,16 @@ pub struct CostModel {
     /// free in virtual time.
     pub backend_switch: u64,
 
+    // -- fault plane (robustness pricing) ---------------------------------
+    /// Catching, quarantining, and re-dispatching a panicking
+    /// transaction body (`--faults panic=P`): unwind teardown plus the
+    /// scheduler requeue, on top of the wasted attempt.
+    pub quarantine: u64,
+    /// One watchdog recovery pass after a dropped dependency wakeup
+    /// (`--faults wakeup_drop=P`): the missed-deadline stall share plus
+    /// the re-ready and forced revalidation, amortized to cycles.
+    pub watchdog_recovery: u64,
+
     // -- workload work ----------------------------------------------------
     /// Non-critical work to produce one edge tuple and bring its insert
     /// footprint into the cache (R-MAT descent + DRAM stalls at
@@ -125,6 +135,8 @@ impl CostModel {
             rng_draw: 20,
             flag_check: 3,
             backend_switch: 25_000,
+            quarantine: 2_000,
+            watchdog_recovery: 80_000,
             edge_gen_work: 1200,
             scan_work: 65,
             capacity_prob: 0.0,

@@ -150,6 +150,29 @@ pub struct Simulator {
     /// abort (mirrors HtmConfig::broadwell()'s 512-line L1d write set
     /// with set-conflict slack).
     pub wr_line_capacity: u16,
+    /// The fault spec installed at construction time (`--faults`), if
+    /// any: the engine prices its regimes in virtual time — forced HTM
+    /// aborts, forced validation failures, stall/quarantine/watchdog
+    /// charges — with its own deterministic ticket streams (the live
+    /// plane's tickets and trace events are never consumed).
+    faults: Option<crate::fault::FaultSpec>,
+}
+
+/// Deterministic per-run fault draws: same `SplitMix64(seed ^ salt ^
+/// ticket)` decision function as the live plane, with run-local ticket
+/// counters so virtual runs replay bit-for-bit.
+struct FaultDice {
+    spec: crate::fault::FaultSpec,
+    tickets: [u64; crate::fault::SITES],
+}
+
+impl FaultDice {
+    /// Draw the site's next ticket; `Some(ticket)` when it injects.
+    fn fire(&mut self, site: crate::fault::Site) -> Option<u64> {
+        let t = self.tickets[site as usize];
+        self.tickets[site as usize] += 1;
+        self.spec.draw(site, t).then_some(t)
+    }
 }
 
 impl Simulator {
@@ -157,6 +180,7 @@ impl Simulator {
         Self {
             cost,
             wr_line_capacity: 448,
+            faults: crate::fault::current(),
         }
     }
 
@@ -207,6 +231,17 @@ impl Simulator {
             PolicySpec::HtmALock { .. } => 45,
             _ => 0,
         };
+        // Fault-regime pricing: run-local deterministic dice mirroring
+        // the live plane's decision function, plus the injected stall
+        // length converted to cycles once.
+        let mut dice = self.faults.clone().map(|spec| FaultDice {
+            spec,
+            tickets: [0; crate::fault::SITES],
+        });
+        let stall_cycles: u64 = self
+            .faults
+            .as_ref()
+            .map_or(0, |f| (f.stall.as_secs_f64() * self.cost.clock_hz) as u64);
 
         let mut threads_sim: Vec<ThreadSim> = streams
             .into_iter()
@@ -338,7 +373,32 @@ impl Simulator {
                         * (desc.footprint_lines.max(1) as f64 / 4.0);
                     th.cur_capacity = desc.footprint_lines > self.wr_line_capacity
                         || (p_eff > 0.0 && th.rng.next_f64() < p_eff);
-                    let start = now + scale(desc.work);
+                    let mut start = now + scale(desc.work);
+                    if let Some(d) = dice.as_mut() {
+                        // `--faults worker_stall=P:DUR`: the worker
+                        // sleeps before its next task; virtual time
+                        // just pays the nap.
+                        if d.fire(crate::fault::Site::WorkerStall).is_some() {
+                            th.stats.faults_injected += 1;
+                            start += scale(stall_cycles);
+                        }
+                        // `--faults panic=P` (multi-version executor
+                        // site): the body panics, is caught before
+                        // publishing, quarantined, and re-dispatched —
+                        // one wasted attempt plus the quarantine charge.
+                        if mode == Mode::MultiVersion
+                            && d.fire(crate::fault::Site::Panic).is_some()
+                        {
+                            th.stats.faults_injected += 1;
+                            th.stats.quarantines += 1;
+                            start += scale(
+                                self.cost.mv_txn_cycles(
+                                    desc.n_reads as u64,
+                                    desc.n_writes as u64,
+                                ) + self.cost.quarantine,
+                            );
+                        }
+                    }
                     th.cur = Some(desc);
                     if let Some(p) = th.policy.as_mut() {
                         p.begin_txn(&mut th.rng);
@@ -436,8 +496,25 @@ impl Simulator {
                         Mode::Phased { .. } => &ph,
                         _ => &gbl,
                     };
+                    // `--faults htm_abort=P`: a forced abort ahead of
+                    // the genuine causes, ticket parity picking
+                    // conflict vs capacity exactly like the live site
+                    // in `htm::engine::attempt_with`.
+                    let forced = dice
+                        .as_mut()
+                        .and_then(|d| d.fire(crate::fault::Site::HtmAbort))
+                        .map(|t| {
+                            th.stats.faults_injected += 1;
+                            if t & 1 == 0 {
+                                AbortCause::Conflict
+                            } else {
+                                AbortCause::Capacity
+                            }
+                        });
                     // Abort cause resolution, in RTM's priority order.
-                    let cause = if th.cur_capacity {
+                    let cause = if let Some(c) = forced {
+                        Some(c)
+                    } else if th.cur_capacity {
                         Some(AbortCause::Capacity)
                     } else if lock.held_at(start) {
                         Some(AbortCause::Explicit)
@@ -570,8 +647,19 @@ impl Simulator {
                                 .iter()
                                 .any(|&(t, i)| t > start && t <= now && i < my_idx)
                         };
-                        let lower_conflict = desc.wlines().iter().any(&mut hit)
+                        let mut lower_conflict = desc.wlines().iter().any(&mut hit)
                             || desc.rlines().iter().any(&mut hit);
+                        // `--faults validation_fail=P`: force a passing
+                        // validation to fail — the re-incarnation below
+                        // is the genuine recovery path, priced as such.
+                        if !lower_conflict {
+                            if let Some(d) = dice.as_mut() {
+                                if d.fire(crate::fault::Site::ValidationFail).is_some() {
+                                    th.stats.faults_injected += 1;
+                                    lower_conflict = true;
+                                }
+                            }
+                        }
                         if lower_conflict {
                             // Re-incarnate: failed validation + ESTIMATE
                             // conversion; repeat offenders model the
@@ -593,6 +681,18 @@ impl Simulator {
                                 + self.cost.mv_abort;
                             if th.mv_retries > 0 {
                                 penalty += self.cost.mv_estimate_wait;
+                                // `--faults wakeup_drop=P`: the resume
+                                // wakeup for this dependency is dropped
+                                // and the watchdog's recovery pass
+                                // (deadline stall + re-ready + forced
+                                // revalidation) brings it back.
+                                if let Some(d) = dice.as_mut() {
+                                    if d.fire(crate::fault::Site::WakeupDrop).is_some() {
+                                        th.stats.faults_injected += 1;
+                                        th.stats.watchdog_kicks += 1;
+                                        penalty += self.cost.watchdog_recovery;
+                                    }
+                                }
                             }
                             th.mv_retries += 1;
                             let s2 = now + scale(penalty);

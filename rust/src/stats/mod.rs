@@ -67,6 +67,18 @@ pub struct TxStats {
     /// (`engine::auto`). Zero under every fixed spec; `PolicySpec::label`
     /// reports it for auto runs and the snapshot schema exports it.
     pub backend_switches: u64,
+    /// Fault-plane injections fired during this interval (`crate::fault`;
+    /// always 0 without `--faults`).
+    pub faults_injected: u64,
+    /// Panicking transaction bodies caught and re-dispatched by the
+    /// batch executor's quarantine (`catch_unwind`) path.
+    pub quarantines: u64,
+    /// Progress-watchdog kicks: stall deadlines that fired and ran
+    /// recovery (`fault::watchdog`).
+    pub watchdog_kicks: u64,
+    /// Watchdog escalations to the serial lock backend
+    /// (`engine::degraded`).
+    pub degradations: u64,
     /// Wall-clock or virtual nanoseconds attributed to this thread.
     pub time_ns: u64,
     /// Per-transaction attempt→commit latency (only populated when
@@ -131,6 +143,10 @@ impl TxStats {
             self.final_window = other.final_window;
         }
         self.backend_switches += other.backend_switches;
+        self.faults_injected += other.faults_injected;
+        self.quarantines += other.quarantines;
+        self.watchdog_kicks += other.watchdog_kicks;
+        self.degradations += other.degradations;
         self.time_ns = self.time_ns.max(other.time_ns);
         self.txn_lat.merge(&other.txn_lat);
         self.block_lat.merge(&other.block_lat);

@@ -34,6 +34,35 @@ use dyadhytm::util::zipf::Zipf;
 /// Lines available on the scratch heaps (line 0 stays reserved).
 const LINES: usize = 48;
 
+/// Chaos tier: setting `FAULT_SPEC` (e.g.
+/// `FAULT_SPEC=seed=11,validation_fail=0.05,wakeup_drop=0.05,panic=0.01`)
+/// reruns this whole suite with the fault-injection plane installed —
+/// every bitwise property must keep holding under injected validation
+/// failures, dropped wakeups, stalls, and transaction-body panics.
+/// Injected-panic reports are silenced so the quarantine path doesn't
+/// bury the harness output; genuine panics still print. Without the
+/// env var this is a no-op and the suite runs fault-free as before.
+fn chaos() {
+    static INSTALL: std::sync::Once = std::sync::Once::new();
+    INSTALL.call_once(|| {
+        let Ok(spec) = std::env::var("FAULT_SPEC") else { return };
+        let spec = dyadhytm::fault::FaultSpec::parse(&spec)
+            .unwrap_or_else(|e| panic!("bad FAULT_SPEC: {e}"));
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected fault"))
+                .unwrap_or(false);
+            if !injected {
+                default_hook(info);
+            }
+        }));
+        dyadhytm::fault::install(spec);
+    });
+}
+
 /// Draw a random transaction descriptor whose write/read lines come
 /// from `zipf` over `1..LINES` — `s` near 0 gives sparse batches, `s`
 /// above 1 concentrates everything on a few hot lines.
@@ -110,6 +139,7 @@ fn check_case(seed: u64, zipf_s: f64, n_txns: usize, workers: usize) -> Result<(
 
 #[test]
 fn prop_batch_equals_sequential_sparse() {
+    chaos();
     qcheck_res(
         "batch == sequential (uniform footprints)",
         20,
@@ -126,6 +156,7 @@ fn prop_batch_equals_sequential_sparse() {
 
 #[test]
 fn prop_batch_equals_sequential_zipf_skewed() {
+    chaos();
     // High-conflict: Zipf 1.2 concentrates most writes on a handful of
     // hub lines, maximizing validation aborts and dependencies.
     qcheck_res(
@@ -144,6 +175,7 @@ fn prop_batch_equals_sequential_zipf_skewed() {
 
 #[test]
 fn pathological_single_hub_line() {
+    chaos();
     // Every transaction RMWs the same line: full serialization through
     // the multi-version store. Still must match sequential exactly.
     for workers in [1usize, 2, 4, 7] {
@@ -285,6 +317,7 @@ fn check_pipelined_case(
 
 #[test]
 fn prop_pipelined_equals_sequential_across_skews_and_workers() {
+    chaos();
     // The ISSUE-4 tentpole property: cross-block pipelining + stealing
     // stays bitwise-identical to the sequential oracle across Zipf
     // skews, worker counts, and block sizes (small blocks force many
@@ -316,6 +349,7 @@ fn prop_pipelined_equals_sequential_across_skews_and_workers() {
 
 #[test]
 fn pipelined_hub_line_overlaps_and_matches() {
+    chaos();
     // Every transaction RMWs the same few hub lines across many tiny
     // blocks: the worst case for cross-block speculation — the deeper
     // blocks' chained base reads keep guessing values their
@@ -340,6 +374,7 @@ fn pipelined_hub_line_overlaps_and_matches() {
 
 #[test]
 fn prop_windowed_pipeline_equals_sequential_across_depths() {
+    chaos();
     // The ISSUE-5 tentpole property: the W-deep pipelined session
     // (chained base-peeking through up to W-1 draining predecessors)
     // stays bitwise-identical to the sequential oracle across window
@@ -375,6 +410,7 @@ fn prop_windowed_pipeline_equals_sequential_across_depths() {
 
 #[test]
 fn windowed_pipeline_matches_oracle_when_pinning_unavailable() {
+    chaos();
     // The topology-fallback case: `pin: false` is exactly the path a
     // host without affinity support (or `NO_PIN=1`) takes — flat
     // `PinPlan::none()` locality groups, no `sched_setaffinity` calls.
@@ -389,6 +425,7 @@ fn windowed_pipeline_matches_oracle_when_pinning_unavailable() {
 
 #[test]
 fn window_one_is_a_barrier_stream_and_matches() {
+    chaos();
     // W=1 degenerates to a per-block barrier stream: still exact. (The
     // zero-overlap invariant of W=1 is asserted in batch::tests.)
     check_pipelined_case_pool(0xBA44, 1.2, 64, 4, 8, 1, true).unwrap();
@@ -473,6 +510,7 @@ fn check_switch_case(
 
 #[test]
 fn prop_mid_kernel_backend_switch_is_bitwise_sequential() {
+    chaos();
     for (round, &zipf_s) in [0.0f64, 1.2].iter().enumerate() {
         qcheck_res(
             "auto-switched segments == sequential (bitwise)",
@@ -493,6 +531,7 @@ fn prop_mid_kernel_backend_switch_is_bitwise_sequential() {
 
 #[test]
 fn prop_adaptive_sizing_is_bit_identical_to_fixed() {
+    chaos();
     // The ISSUE-3 controller property: output is invariant across
     // fixed vs adaptive block sizing at several Zipf skews and worker
     // counts.
@@ -536,6 +575,7 @@ fn built_graph(scale: u32, seed: u64) -> (TmSystem, Graph) {
 
 #[test]
 fn prop_batch_subgraph_matches_serial_oracle() {
+    chaos();
     // Kernel 3 under `--policy batch`: the claimed ball and every
     // per-vertex BFS level must equal the serial oracle for random
     // seeds, depths, and worker counts in {1, 2, 4}.
@@ -576,6 +616,7 @@ fn prop_batch_subgraph_matches_serial_oracle() {
 
 #[test]
 fn batch_subgraph_agrees_with_every_other_policy() {
+    chaos();
     // The batch backend must visit exactly the set the lock and DyAd
     // paths visit (level-synchronous BFS is schedule-independent).
     let mut totals = Vec::new();
@@ -600,6 +641,7 @@ fn batch_subgraph_agrees_with_every_other_policy() {
 
 #[test]
 fn pipeline_smoke_under_batch_policy() {
+    chaos();
     // Small-scale streaming pipeline under `--policy batch`: drains the
     // bounded channel through BatchSystem and builds a verified graph.
     let cfg0 = Ssca2Config::new(8);
@@ -632,6 +674,7 @@ fn pipeline_smoke_under_batch_policy() {
 
 #[test]
 fn batch_reports_speculation_work_under_conflict() {
+    chaos();
     // Sanity on the counters: a hub-heavy batch with several workers
     // must do at least one execution per txn, and the determinism
     // guarantee must hold even when aborts occur.

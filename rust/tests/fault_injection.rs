@@ -1,0 +1,352 @@
+//! Installed-plane fault-injection suite — the only test binary that
+//! calls `fault::install`.
+//!
+//! The plane is process-global, so every test here takes a static
+//! mutex: two tests injecting concurrently would see each other's
+//! ticket draws and the per-run `faults_injected` deltas would be
+//! meaningless. The invariant under test is the tentpole guarantee:
+//! under **any** seeded fault spec the committed output is bitwise
+//! identical to the fault-free run, and the process terminates
+//! cleanly — faults may only cost time, never correctness.
+//!
+//! (The pure pieces — spec parsing, the draw function, the watchdog
+//! deadline law — are unit-tested inside the library without an
+//! install; see `fault::tests` and `fault::watchdog::tests`.)
+
+use std::sync::{Mutex, MutexGuard, Once};
+
+use dyadhytm::batch::adaptive::BlockSizeController;
+use dyadhytm::batch::workload::{desc_txn, run_sequential, run_txns_pipelined_with_pool};
+use dyadhytm::batch::{BatchSystem, BatchTxn};
+use dyadhytm::engine::degraded;
+use dyadhytm::fault::{self, FaultSpec, Site};
+use dyadhytm::graph::{computation, generation, rmat, subgraph, Graph, Ssca2Config};
+use dyadhytm::htm::HtmConfig;
+use dyadhytm::hytm::{PolicySpec, TmSystem};
+use dyadhytm::mem::{TxHeap, WORDS_PER_LINE};
+use dyadhytm::runtime::PoolConfig;
+use dyadhytm::sim::workload::{TxnDesc, MAX_WLINES};
+use dyadhytm::util::rng::Rng;
+use dyadhytm::util::zipf::Zipf;
+
+/// Serializes every test in this binary around the process-global
+/// plane, and silences the default panic hook for *injected* panics so
+/// a panic-rate sweep doesn't bury the test output (genuine panics
+/// still print).
+fn serialize() -> MutexGuard<'static, ()> {
+    static QUIET: Once = Once::new();
+    QUIET.call_once(|| {
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected fault"))
+                .unwrap_or(false);
+            if !injected {
+                default_hook(info);
+            }
+        }));
+    });
+    static LOCK: Mutex<()> = Mutex::new(());
+    // A poisoned lock just means a previous test failed; the guard
+    // below cleared the plane on unwind, so continuing is safe.
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Clears the plane (and any degraded escalation a watchdog tripped)
+/// when a test scope ends, even on unwind.
+struct PlaneGuard;
+
+impl Drop for PlaneGuard {
+    fn drop(&mut self) {
+        fault::clear();
+        if degraded::is_degraded() {
+            degraded::recover(0);
+        }
+    }
+}
+
+fn with_faults(spec: &str) -> PlaneGuard {
+    fault::install(FaultSpec::parse(spec).expect("test spec must parse"));
+    PlaneGuard
+}
+
+/// Lines on the scratch heaps (line 0 stays reserved).
+const LINES: usize = 48;
+
+/// Same descriptor distribution as the determinism suite: writes and
+/// reads Zipf-drawn over `1..LINES`.
+fn random_desc(rng: &mut Rng, zipf: &Zipf) -> TxnDesc {
+    let mut d = TxnDesc {
+        work: 0,
+        wlines: [0; MAX_WLINES],
+        n_wlines: 0,
+        rlines: [0; 2],
+        n_rlines: 0,
+        n_reads: 0,
+        n_writes: 0,
+        footprint_lines: 0,
+    };
+    let n_w = 1 + rng.below(4) as usize;
+    for _ in 0..n_w {
+        let line = 1 + zipf.sample(rng) as u64;
+        if !d.wlines[..d.n_wlines as usize].contains(&line) {
+            d.wlines[d.n_wlines as usize] = line;
+            d.n_wlines += 1;
+        }
+    }
+    let n_r = rng.below(3) as usize;
+    for i in 0..n_r.min(2) {
+        d.rlines[i] = 1 + zipf.sample(rng) as u64;
+        d.n_rlines = (i + 1) as u8;
+    }
+    d.n_reads = d.n_wlines as u32 + d.n_rlines as u32;
+    d.n_writes = d.n_wlines as u32;
+    d.footprint_lines = d.n_wlines as u16;
+    d
+}
+
+fn build_txns(seed: u64, zipf_s: f64, n: usize) -> Vec<BatchTxn<'static>> {
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(LINES - 1, zipf_s);
+    (0..n)
+        .map(|_| desc_txn(random_desc(&mut rng, &zipf), rng.next_u64()))
+        .collect()
+}
+
+fn seeded_heap(seed: u64) -> TxHeap {
+    let words = LINES * WORDS_PER_LINE;
+    let heap = TxHeap::new(words);
+    let mut init = Rng::new(seed ^ 0xFA17);
+    for addr in 0..words {
+        heap.store(addr, init.next_u64());
+    }
+    heap
+}
+
+fn assert_heaps_equal(oracle: &TxHeap, faulty: &TxHeap, ctx: &str) {
+    for addr in 0..LINES * WORDS_PER_LINE {
+        let (a, b) = (oracle.load(addr), faulty.load(addr));
+        assert_eq!(
+            a, b,
+            "divergence at word {addr}: fault-free {a:#x} vs faulty {b:#x} ({ctx})"
+        );
+    }
+}
+
+#[test]
+fn faulty_batch_is_bitwise_identical_to_fault_free() {
+    // The tentpole sweep: seeds × fault regimes × worker counts. Each
+    // case runs the fault-free sequential oracle, then the barrier
+    // batch backend under an installed plane, and compares every heap
+    // word. Faults must cost retries/kicks, never output.
+    let _lock = serialize();
+    let specs = [
+        // The ISSUE's headline spec shape, stall shortened for CI.
+        "seed=7,htm_abort=0.05,validation_fail=0.02,wakeup_drop=0.01,\
+         worker_stall=0.005:200us,panic=0.001",
+        // Panic + validation storm: exercises quarantine requeues hard.
+        "seed=11,validation_fail=0.3,panic=0.25",
+        // Dropped-wakeup storm: exercises the watchdog recovery path.
+        "seed=23,wakeup_drop=0.5,panic=0.05",
+    ];
+    for spec in specs {
+        for case_seed in [0xA1u64, 0xB2] {
+            for workers in [1usize, 2, 4] {
+                let n = 48;
+                let txns = build_txns(case_seed, 1.2, n);
+                let heap_seq = seeded_heap(case_seed);
+                let heap_par = seeded_heap(case_seed);
+                run_sequential(&heap_seq, &txns);
+
+                let _plane = with_faults(spec);
+                let drops0 = fault::injected(Site::WakeupDrop);
+                let panics0 = fault::injected(Site::Panic);
+                let report = BatchSystem::run(&heap_par, &txns, workers);
+                let drops = fault::injected(Site::WakeupDrop) - drops0;
+                let panics = fault::injected(Site::Panic) - panics0;
+                fault::clear();
+
+                let ctx = format!("spec={spec}, seed={case_seed:#x}, workers={workers}");
+                assert_eq!(report.txns, n, "lost transactions ({ctx})");
+                assert_heaps_equal(&heap_seq, &heap_par, &ctx);
+                // Every injected panic must show up as a quarantine,
+                // and a dropped wakeup can only be repaired by a kick.
+                assert_eq!(report.quarantines, panics, "quarantine accounting ({ctx})");
+                if drops > 0 {
+                    assert!(
+                        report.watchdog_kicks >= 1,
+                        "{drops} dropped wakeups recovered without a kick ({ctx})"
+                    );
+                }
+                assert!(
+                    report.faults_injected >= drops + panics,
+                    "fault delta under-reported ({ctx})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipelined_fault_storm_matches_oracle() {
+    // Same invariant through the W-deep pipelined session: overlapping
+    // blocks, stealing deques, and the window-loop watchdog poller.
+    let _lock = serialize();
+    let n = 96;
+    let txns = build_txns(0xC3, 1.2, n);
+    let heap_seq = seeded_heap(0xC3);
+    let heap_pipe = seeded_heap(0xC3);
+    run_sequential(&heap_seq, &txns);
+
+    let _plane = with_faults("seed=5,validation_fail=0.2,wakeup_drop=0.2,panic=0.1");
+    let mut ctl = BlockSizeController::fixed(8).with_window(3);
+    let pool = PoolConfig { workers: 4, pin: false };
+    let report = run_txns_pipelined_with_pool(&heap_pipe, build_txns(0xC3, 1.2, n), &pool, &mut ctl);
+    let drops = fault::injected(Site::WakeupDrop);
+    fault::clear();
+
+    assert_eq!(report.txns, n);
+    assert_heaps_equal(&heap_seq, &heap_pipe, "pipelined, window=3, workers=4");
+    if drops > 0 {
+        assert!(report.watchdog_kicks >= 1, "drops recovered without a kick");
+    }
+}
+
+#[test]
+fn lost_wakeup_window_recovers_deterministically() {
+    // The scheduler's lost-wakeup regression (satellite): a hub-line
+    // batch serializes through ESTIMATE dependencies, and a 0.9 drop
+    // rate turns nearly every dependency wakeup into the classic lost
+    // wakeup. Only a watchdog kick can re-ready the victims — the run
+    // must still terminate with the exact sequential image.
+    let _lock = serialize();
+    let n = 48;
+    let txns = build_txns(0xD4, 8.0, n);
+    let heap_seq = seeded_heap(0xD4);
+    let heap_par = seeded_heap(0xD4);
+    run_sequential(&heap_seq, &txns);
+
+    let _plane = with_faults("seed=9,wakeup_drop=0.9");
+    let report = BatchSystem::run(&heap_par, &txns, 4);
+    let drops = fault::injected(Site::WakeupDrop);
+    fault::clear();
+
+    assert_eq!(report.txns, n);
+    assert_heaps_equal(&heap_seq, &heap_par, "hub batch, wakeup_drop=0.9");
+    // A fully serialized hub batch parks dozens of dependents; at a
+    // 0.9 drop rate at least one wakeup is lost for any seed (the draw
+    // is deterministic — this pins the regression, not a probability).
+    assert!(drops > 0, "hub batch produced no dependency wakeup drops");
+    assert!(
+        report.watchdog_kicks >= 1,
+        "{drops} lost wakeups but no watchdog kick — the run should not \
+         have been able to finish"
+    );
+}
+
+#[test]
+fn kernel3_under_faults_matches_serial_oracle() {
+    // The acceptance sweep on a real kernel: SSCA-2 kernel 3 under an
+    // installed plane must extract the exact subgraph the serial BFS
+    // oracle extracts — for the batch backend (quarantine + watchdog
+    // paths) and DyAd (forced HTM abort path) alike.
+    let _lock = serialize();
+    let _plane = with_faults(
+        "seed=13,htm_abort=0.2,validation_fail=0.1,wakeup_drop=0.1,panic=0.05",
+    );
+    for graph_seed in [0x51u64, 0x52] {
+        for workers in [2usize, 4] {
+            for policy in [PolicySpec::Batch { block: 32 }, PolicySpec::DyAd { n: 43 }] {
+                let cfg = Ssca2Config::new(7).with_seed(graph_seed);
+                let g = Graph::alloc(cfg);
+                let sys = TmSystem::new(std::sync::Arc::clone(&g.heap), HtmConfig::broadwell());
+                let tuples = rmat::generate(cfg.seed, cfg.scale, cfg.edge_factor);
+                generation::build_serial(&sys, &g, &tuples);
+                let _ = computation::run(&sys, &g, PolicySpec::CoarseLock, 2, 5);
+                let roots = subgraph::roots_from_results(&g);
+                assert!(!roots.is_empty(), "no kernel-2 roots (seed {graph_seed:#x})");
+                let r = subgraph::run(&sys, &g, &roots, 2, policy, workers, graph_seed);
+                subgraph::verify_subgraph(&g, &roots, 2, &r).unwrap_or_else(|e| {
+                    panic!(
+                        "kernel 3 diverged under faults: {} workers={workers} \
+                         seed={graph_seed:#x}: {e}",
+                        policy.name()
+                    )
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_degrades_to_serial_and_recovers_with_hysteresis() {
+    // The escalation state machine, driven directly (organic
+    // escalation needs a run where kicks repeatedly find no progress —
+    // deliberately rare). Edge-triggered both ways, counted once.
+    let _lock = serialize();
+    let _cleanup = PlaneGuard;
+    assert!(!degraded::is_degraded());
+    let before = degraded::escalations();
+    degraded::escalate(3);
+    assert!(degraded::is_degraded());
+    assert_eq!(degraded::escalations(), before + 1);
+    // Re-escalating while degraded is a no-op, not a double count.
+    degraded::escalate(4);
+    assert_eq!(degraded::escalations(), before + 1);
+    degraded::recover(5);
+    assert!(!degraded::is_degraded());
+    // Recovery is idempotent too.
+    degraded::recover(5);
+    assert!(!degraded::is_degraded());
+    // A fresh stall can escalate again.
+    degraded::escalate(9);
+    assert!(degraded::is_degraded());
+    assert_eq!(degraded::escalations(), before + 2);
+    degraded::recover(11);
+    assert!(!degraded::is_degraded());
+}
+
+#[test]
+fn combined_figure_prices_a_degraded_row_under_faults() {
+    // `--faults ... sim --fig combined` must append a `degraded` row —
+    // the global-lock serial backend the watchdog escalates to, priced
+    // in virtual time under the same installed spec. Without a plane
+    // the row must not appear.
+    let _lock = serialize();
+    use dyadhytm::coordinator::figures::{self, FigureSpec, Kernel};
+    // Same shape as the real combined figure (`fig_by_name("combined")`
+    // resolves it at scale 15 × 8 thread counts — asserted in the lib
+    // tests), shrunk to a debug-friendly scale like the lib's own
+    // render tests.
+    let fig = FigureSpec {
+        id: "combined",
+        paper_ref: "combined set (test-sized)",
+        scale: 9,
+        kernel: Kernel::Both,
+        policies: vec![PolicySpec::CoarseLock, PolicySpec::DyAd { n: 43 }],
+        threads: vec![2, 4],
+    };
+    let plain = figures::render_figure(&fig, 7);
+    assert!(
+        !plain.contains("| degraded |"),
+        "degraded row leaked into a fault-free render"
+    );
+    let _plane = with_faults("seed=7,validation_fail=0.1,wakeup_drop=0.05,panic=0.02");
+    let faulty = figures::render_figure(&fig, 7);
+    assert!(
+        faulty.contains("| degraded |"),
+        "no degraded row under an installed fault plane"
+    );
+    // The row prices real cells: every thread column carries a number.
+    let row = faulty
+        .lines()
+        .find(|l| l.starts_with("| degraded |"))
+        .unwrap();
+    assert_eq!(
+        row.matches('|').count(),
+        fig.threads.len() + 2,
+        "degraded row must have one cell per thread count: {row}"
+    );
+}
