@@ -44,7 +44,7 @@ use std::time::Instant;
 
 use dyadhytm::batch::adaptive::BlockSizeController;
 use dyadhytm::batch::workload::run_txns_pipelined;
-use dyadhytm::batch::{BatchReport, BatchSystem, BatchTxn};
+use dyadhytm::batch::{set_reclaim, BatchReport, BatchSystem, BatchTxn};
 use dyadhytm::graph::{generation, rmat, verify, Graph, Ssca2Config};
 use dyadhytm::htm::HtmConfig;
 use dyadhytm::hytm::{PolicySpec, TmSystem};
@@ -84,6 +84,14 @@ struct SweepRec {
     lat_p50_ns: u64,
     lat_p90_ns: u64,
     lat_p99_ns: u64,
+    /// Peak live recorded-set cells in the session's reclamation
+    /// domain (0 for barrier cells, which have no domain).
+    mv_live_cells: u64,
+    /// Peak bump-arena footprint of the version store, bytes.
+    arena_bytes: u64,
+    /// Recorded-set cells freed per admitted block — the reclamation
+    /// keep-up rate (0 when reclamation is off or barrier-only).
+    reclaimed_per_block: f64,
 }
 
 impl SweepRec {
@@ -112,6 +120,10 @@ impl SweepRec {
             lat_p50_ns: report.txn_lat.p50(),
             lat_p90_ns: report.txn_lat.p90(),
             lat_p99_ns: report.txn_lat.p99(),
+            mv_live_cells: report.mv_live_cells,
+            arena_bytes: report.arena_bytes,
+            reclaimed_per_block: report.mv_reclaimed as f64
+                / report.window_admissions.max(1) as f64,
         }
     }
 
@@ -121,7 +133,8 @@ impl SweepRec {
              \"txns_per_sec\":{:.0},\"zipf_s\":{},\"workers\":{},\
              \"steal_rate\":{:.4},\"overlap_ratio\":{:.4},\
              \"locality_steal_ratio\":{:.4},\"window_occupancy\":{:.4},\
-             \"lat_p50_ns\":{},\"lat_p90_ns\":{},\"lat_p99_ns\":{}}}",
+             \"lat_p50_ns\":{},\"lat_p90_ns\":{},\"lat_p99_ns\":{},\
+             \"mv_live_cells\":{},\"arena_bytes\":{},\"reclaimed_per_block\":{:.1}}}",
             self.policy,
             self.window,
             self.block,
@@ -136,6 +149,9 @@ impl SweepRec {
             self.lat_p50_ns,
             self.lat_p90_ns,
             self.lat_p99_ns,
+            self.mv_live_cells,
+            self.arena_bytes,
+            self.reclaimed_per_block,
         )
     }
 }
@@ -379,6 +395,53 @@ fn block_conflict_sweep() -> Vec<SweepRec> {
     records
 }
 
+/// A/B the reclamation overhead contract: the same pipelined cell
+/// (zipf 0, block 1024, window 3 — the uncontended regime where any
+/// reclamation cost would show as pure overhead) with epoch
+/// reclamation on vs off. The contract (ISSUE 9): the on cell's
+/// throughput must not trail the off cell's — retire + epoch advance
+/// + limbo frees ride the promotion path, off the per-transaction hot
+/// path — while its live-cell peak stays bounded and the off cell's
+/// grows with the stream. Both cells land in `BENCH_batch.json` under
+/// their own policy names so the CI throughput-delta gate tracks them.
+fn reclaim_overhead_ab(records: &mut Vec<SweepRec>) {
+    let n: usize = if smoke() { 4096 } else { 16384 };
+    const LINES: usize = 64;
+    const WORKERS: usize = 4;
+    let heap_words = LINES * WORDS_PER_LINE;
+    let (block, window, zipf_s) = (1024usize, 3usize, 0.0f64);
+
+    let mut cell = |policy: &'static str, reclaim: bool| -> SweepRec {
+        set_reclaim(reclaim);
+        let txns = sweep_txns(zipf_s, n, LINES);
+        let heap = TxHeap::new(heap_words);
+        let mut ctl = BlockSizeController::fixed(block).with_window(window);
+        let t0 = Instant::now();
+        let report = run_txns_pipelined(&heap, txns, WORKERS, &mut ctl);
+        let tps = n as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        SweepRec::from_report(policy, window, block, zipf_s, WORKERS, &report, tps)
+    };
+    let on = cell("batch-reclaim-on", true);
+    let off = cell("batch-reclaim-off", false);
+    set_reclaim(true);
+
+    println!(
+        "\n> reclaim A/B (block {block}, window {window}, zipf {zipf_s}, {WORKERS} workers, \
+         {n} txns): on {:.0} txns/s (live peak {} cells, {:.1} reclaimed/block) vs \
+         off {:.0} txns/s (live peak {} cells, arena {} B)",
+        on.txns_per_sec,
+        on.mv_live_cells,
+        on.reclaimed_per_block,
+        off.txns_per_sec,
+        off.mv_live_cells,
+        off.arena_bytes,
+    );
+    println!("BENCH_JSON {}", on.to_json());
+    println!("BENCH_JSON {}", off.to_json());
+    records.push(on);
+    records.push(off);
+}
+
 /// A/B the telemetry overhead contract end to end: the same Zipf-RMW
 /// cell with telemetry fully off (no timestamps, trace sites reduce to
 /// one relaxed load + branch) and with tracing + latency timing on.
@@ -503,7 +566,8 @@ fn main() {
     // carries real lat_p50/p90/p99 fields (tracing stays off: the
     // histograms live in BatchCounters, no rings needed).
     dyadhytm::obs::set_timing(true);
-    let records = block_conflict_sweep();
+    let mut records = block_conflict_sweep();
+    reclaim_overhead_ab(&mut records);
     dyadhytm::obs::set_timing(false);
     write_bench_json(&records);
     eprintln!("[batch_throughput: finished in {:?}]", t0.elapsed());

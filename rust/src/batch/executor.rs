@@ -168,11 +168,19 @@ impl<M: MvStore> TxAccess for MvView<'_, M> {
         if let Some(w) = self.writes.iter().rev().find(|w| w.0 == addr) {
             return Ok(w.1);
         }
+        // Sample the shard watermark BEFORE the store probe: if the
+        // mark is still equal at validation time, no publish since this
+        // point can have touched the shard, so the probe is skippable.
+        // (Sampling after the read would leave a window where a write
+        // lands between read and sample and hides behind an "unchanged"
+        // mark.)
+        let mark = self.mv.mark_of(addr);
         match self.mv.read(addr, self.txn) {
             MvRead::Value(version, v) => {
                 self.reads.push(ReadDesc {
                     addr,
                     origin: ReadOrigin::Version(version),
+                    mark,
                 });
                 Ok(v)
             }
@@ -181,6 +189,7 @@ impl<M: MvStore> TxAccess for MvView<'_, M> {
                     self.reads.push(ReadDesc {
                         addr,
                         origin: ReadOrigin::Base(v),
+                        mark,
                     });
                     Ok(v)
                 }
@@ -407,8 +416,19 @@ impl<M: MvStore> Worker<'_, '_, M> {
     fn try_validate(&self, version: Version) -> Option<Task> {
         let (txn, incarnation) = version;
         self.counters.validations.fetch_add(1, Ordering::Relaxed);
-        let base = |addr: Addr| self.base.value(self.heap, addr);
-        let mut valid = self.mv.validate_read_set(txn, &base);
+        // The base resolver dispatch is hoisted out of the per-read
+        // loop: each arm hands `validate_read_set` a concrete closure,
+        // so the walk monomorphizes per source instead of paying a
+        // virtual call per read — and the heap fast path is a single
+        // inlined acquire load.
+        let mut valid = match &self.base {
+            BaseSource::Heap => self
+                .mv
+                .validate_read_set(txn, |addr: Addr| Some(self.heap.load_acquire(addr))),
+            chain => self
+                .mv
+                .validate_read_set(txn, |addr: Addr| chain.value(self.heap, addr)),
+        };
         // Fault plane (`--faults validation_fail=P`): force a passing
         // validation to fail. The abort flows through the genuine
         // convert-to-ESTIMATES + re-incarnate path, so the final state

@@ -110,9 +110,10 @@ pub mod workload;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
+use crate::mem::epoch::EpochGc;
 use crate::mem::TxHeap;
 use crate::obs::hist::LatencyHist;
 use crate::runtime::workers::{run_pool_plan_with, PinPlan, PoolConfig};
@@ -142,6 +143,33 @@ const WATCHDOG_BASE: Duration = Duration::from_millis(30);
 fn watchdog() -> Option<crate::fault::watchdog::Watchdog> {
     crate::fault::active()
         .then(|| crate::fault::watchdog::Watchdog::new(WATCHDOG_BASE))
+}
+
+// -- epoch-reclamation toggle ------------------------------------------
+
+static RECLAIM: AtomicBool = AtomicBool::new(true);
+static RECLAIM_ENV: OnceLock<()> = OnceLock::new();
+
+/// Toggle epoch reclamation for pipelined sessions (read once per
+/// session at construction). On by default; the bench A/B and the
+/// determinism suite flip it to price/verify the leaky baseline.
+/// Calling this pins the value — a later `MV_RECLAIM` env read cannot
+/// override an explicit choice.
+pub fn set_reclaim(on: bool) {
+    RECLAIM_ENV.get_or_init(|| ());
+    RECLAIM.store(on, Ordering::SeqCst);
+}
+
+/// Is epoch reclamation enabled for new pipelined sessions?
+/// `MV_RECLAIM=0` in the environment flips the default off (honored
+/// once, on first query, unless [`set_reclaim`] already ran).
+pub fn reclaim_enabled() -> bool {
+    RECLAIM_ENV.get_or_init(|| {
+        if std::env::var("MV_RECLAIM").is_ok_and(|v| v == "0") {
+            RECLAIM.store(false, Ordering::SeqCst);
+        }
+    });
+    RECLAIM.load(Ordering::SeqCst)
 }
 
 /// A batch transaction body. Must be a pure function of the values it
@@ -204,6 +232,21 @@ pub struct BatchReport {
     /// Faults the installed plane injected process-wide while this run
     /// executed (0 when no `--faults` plane is installed).
     pub faults_injected: u64,
+    /// Peak live (retired − reclaimed) recorded-set cells in the
+    /// session's epoch limbo — the bounded-memory metric: a plateau
+    /// under reclamation, ≈ `mv_retired` with reclamation off. 0 for
+    /// barrier runs (no reclamation domain).
+    pub mv_live_cells: u64,
+    /// Recorded-set cells retired into the epoch limbo (superseded
+    /// incarnations plus promotion-time final sets).
+    pub mv_retired: u64,
+    /// Retired cells actually freed (their epoch passed every live
+    /// worker). Equals `mv_retired` by session end with reclamation
+    /// on; 0 with it off.
+    pub mv_reclaimed: u64,
+    /// Peak arena bytes backing one block's version index (entries +
+    /// segments).
+    pub arena_bytes: u64,
     pub elapsed: Duration,
     /// Winning execution-attempt latency per transaction (only
     /// populated when `obs::timing_enabled()`).
@@ -231,6 +274,11 @@ impl BatchReport {
         self.watchdog_kicks += other.watchdog_kicks;
         self.degradations += other.degradations;
         self.faults_injected += other.faults_injected;
+        // Peaks are session properties: max, not sum.
+        self.mv_live_cells = self.mv_live_cells.max(other.mv_live_cells);
+        self.mv_retired += other.mv_retired;
+        self.mv_reclaimed += other.mv_reclaimed;
+        self.arena_bytes = self.arena_bytes.max(other.arena_bytes);
         self.elapsed += other.elapsed;
         self.txn_lat.merge(&other.txn_lat);
         self.block_lat.merge(&other.block_lat);
@@ -274,6 +322,10 @@ impl BatchReport {
         s.watchdog_kicks = self.watchdog_kicks;
         s.degradations = self.degradations;
         s.faults_injected = self.faults_injected;
+        s.mv_live_cells = self.mv_live_cells;
+        s.mv_retired = self.mv_retired;
+        s.mv_reclaimed = self.mv_reclaimed;
+        s.arena_bytes = self.arena_bytes;
         s.time_ns = self.elapsed.as_nanos() as u64;
         s.txn_lat = self.txn_lat;
         s.block_lat = self.block_lat;
@@ -343,6 +395,12 @@ impl<'b, M: MvStore> BlockRun<'b, M> {
             watchdog_kicks: self.counters.watchdog_kicks.load(Ordering::Relaxed),
             degradations: self.counters.degradations.load(Ordering::Relaxed),
             faults_injected: 0,
+            // Memory counters are session-level (the gc outlives every
+            // block); filled in by the session finale.
+            mv_live_cells: 0,
+            mv_retired: 0,
+            mv_reclaimed: 0,
+            arena_bytes: 0,
             elapsed: Duration::ZERO,
             txn_lat: self.counters.txn_lat.fold(),
             block_lat: LatencyHist::default(),
@@ -456,6 +514,12 @@ impl BatchSystem {
             watchdog_kicks: counters.watchdog_kicks.load(Ordering::Relaxed),
             degradations: counters.degradations.load(Ordering::Relaxed),
             faults_injected: crate::fault::injected_total().saturating_sub(faults_before),
+            // Barrier runs keep the store's prev-chains until the block
+            // drops — no reclamation domain, nothing to report.
+            mv_live_cells: 0,
+            mv_retired: 0,
+            mv_reclaimed: 0,
+            arena_bytes: 0,
             elapsed,
             txn_lat: counters.txn_lat.fold(),
             block_lat,
@@ -566,6 +630,12 @@ impl BatchSystem {
         // promotions (a completing block's live counters leave the
         // window sum and re-enter here, under the same window lock).
         let completed_progress = AtomicU64::new(0);
+        // The session's epoch-reclamation domain: workers pin an epoch
+        // per drain iteration, promotion advances it, and superseded
+        // recorded sets retire through its limbo (`mem::epoch`). One
+        // domain for the whole stream — the blocks' stores attach at
+        // admission.
+        let gc = Arc::new(EpochGc::with_reclaim(workers, reclaim_enabled()));
 
         // Pull the next block from the source and admit it. Single
         // puller at a time (try_lock); the source may block (e.g. a
@@ -603,6 +673,7 @@ impl BatchSystem {
                 Some(txns) if !txns.is_empty() => {
                     let n = txns.len() as u64;
                     let run = Arc::new(BlockRun::new(txns, workers, &groups));
+                    run.mv.attach_gc(&gc);
                     let mut win = window.lock().unwrap();
                     if win.is_empty() {
                         run.prev_done.store(true, Ordering::SeqCst);
@@ -660,6 +731,19 @@ impl BatchSystem {
                     + head.counters.validations.load(Ordering::Relaxed),
                 Ordering::Relaxed,
             );
+            // Promotion is the reclamation epoch boundary: detach the
+            // promoted block's recorded sets into limbo, sample its
+            // arena footprint, advance the global epoch, and free
+            // every limbo bin all live workers have passed. (The
+            // completing worker's own pin keeps the bins it may still
+            // reference; they free on a later promotion.)
+            head.mv.retire_sets();
+            gc.note_arena_bytes(head.mv.mem_bytes());
+            gc.advance();
+            let (freed_cells, freed_bytes) = gc.try_reclaim();
+            if freed_cells != 0 || freed_bytes != 0 {
+                crate::obs::trace::reclaim(freed_cells, freed_bytes);
+            }
             win.pop_front();
             if let Some(next) = win.front() {
                 let mut parked = next.parked.lock().unwrap();
@@ -709,6 +793,13 @@ impl BatchSystem {
                     if halted.load(Ordering::SeqCst) {
                         return;
                     }
+                    // Pin a reclamation epoch for this whole drain
+                    // iteration: every raw recorded-sets pointer a
+                    // validation below may hold stays covered until
+                    // the guard drops at the loop bottom. Fresh pin
+                    // per iteration, so promotions made by peers can
+                    // keep reclaiming between our task runs.
+                    let _epoch = gc.pin(w);
                     // One window-lock snapshot amortizes over a whole
                     // run of tasks, keeping the mutex off the per-task
                     // hot path. (A snapshot can go stale while we
@@ -814,12 +905,21 @@ impl BatchSystem {
             main,
         );
 
+        // Pool joined — nothing is pinned: drain the limbo (a no-op
+        // when reclamation is off, so the leaky baseline's counters
+        // show the leak) and publish the session's memory counters.
+        gc.flush();
+        let gcc = gc.counters();
         let mut rep = { report.lock().unwrap().clone() };
         rep.elapsed = t0.elapsed();
         rep.pinned_workers = pinned.load(Ordering::SeqCst);
         rep.window_admissions = admissions.load(Ordering::SeqCst);
         rep.window_depth_sum = depth_sum.load(Ordering::SeqCst);
         rep.faults_injected = crate::fault::injected_total().saturating_sub(faults_before);
+        rep.mv_live_cells = gcc.live_peak_cells;
+        rep.mv_retired = gcc.retired_cells;
+        rep.mv_reclaimed = gcc.reclaimed_cells;
+        rep.arena_bytes = gcc.arena_peak_bytes;
         (rep, r)
     }
 
@@ -1157,6 +1257,10 @@ mod tests {
             pinned_workers: 2,
             window_admissions: 5,
             window_depth_sum: 9,
+            mv_live_cells: 7,
+            mv_retired: 40,
+            mv_reclaimed: 35,
+            arena_bytes: 4096,
             elapsed: Duration::from_millis(5),
             ..BatchReport::default()
         };
@@ -1170,6 +1274,10 @@ mod tests {
         assert_eq!(a.pinned_workers, 2, "pin count is a run property: max, not sum");
         assert_eq!(a.window_admissions, 10);
         assert_eq!(a.window_depth_sum, 18);
+        assert_eq!(a.mv_live_cells, 7, "live peak is a session property: max, not sum");
+        assert_eq!(a.mv_retired, 80);
+        assert_eq!(a.mv_reclaimed, 70);
+        assert_eq!(a.arena_bytes, 4096, "arena peak is a session property: max, not sum");
         assert_eq!(a.elapsed, Duration::from_millis(10));
         let s = a.to_stats();
         assert_eq!(s.sw_commits, 20);
@@ -1177,6 +1285,10 @@ mod tests {
         assert_eq!(s.steals, 6);
         assert_eq!(s.local_steals, 4);
         assert_eq!(s.overlapped_txns, 8);
+        assert_eq!(s.mv_live_cells, 7);
+        assert_eq!(s.mv_retired, 80);
+        assert_eq!(s.mv_reclaimed, 70);
+        assert_eq!(s.arena_bytes, 4096);
         assert_eq!(s.total_commits(), 20);
     }
 

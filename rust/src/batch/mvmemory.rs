@@ -18,12 +18,14 @@
 //!
 //! * the address index is an array of [`SHARDS`] `AtomicPtr` heads,
 //!   each the top of a CAS-published chain of [`AddrEntry`] nodes
-//!   (append-only: nodes are only freed when the store drops, so raw
-//!   traversal needs no reclamation protocol);
+//!   (append-only: nodes are bump-allocated from a store-owned
+//!   [`Arena`] and live exactly as long as the store, so raw traversal
+//!   needs no per-node reclamation protocol);
 //! * each `AddrEntry` owns a grow-only segmented **version vector**:
 //!   [`VersionSlot`]s claimed once per writing transaction by a CAS on
 //!   the slot's owner word and reused across that transaction's
-//!   incarnations;
+//!   incarnations. Overflow [`Segment`]s come from the same arena —
+//!   the hot path never calls the global allocator;
 //! * a slot publishes `(incarnation, flags, value)` through a two-word
 //!   **seqlock**: the writer (single per slot — the scheduler
 //!   serializes a transaction's incarnations) stores a WRITING-marked
@@ -36,10 +38,40 @@
 //! * per-transaction read/write sets are published as **immutable
 //!   [`RecordedSets`] nodes behind one `AtomicPtr` per transaction**
 //!   (the single-owner handoff replacing the old `Mutex<Vec<_>>`
-//!   cells): `record` builds the node privately and swaps it in, a
-//!   stale validator can still be walking the previous node — which
-//!   stays alive on a `prev` chain until the store drops — and its
+//!   cells): `record` builds the node privately and swaps it in; a
+//!   stale validator can still be walking the previous node, and its
 //!   stale verdict is dropped by the scheduler's incarnation check.
+//!
+//! # Memory management
+//!
+//! What happens to a *superseded* `RecordedSets` node depends on the
+//! session mode (see `crate::mem::epoch` and the crate-level "Memory
+//! management" section):
+//!
+//! * **barrier runs** (no attached gc): the node stays alive on a
+//!   `prev` chain until the store drops — one block's worth of
+//!   garbage, freed at the block boundary, exactly the pre-reclamation
+//!   behaviour;
+//! * **pipelined sessions** ([`MvStore::attach_gc`]): the swap's
+//!   exclusively-owned loser is retired into the session's epoch limbo
+//!   instead of chained, and block promotion
+//!   ([`MvStore::retire_sets`]) detaches every transaction's final
+//!   node the same way. Workers pin a reclamation epoch around each
+//!   task-drain iteration, so the limbo frees garbage as soon as every
+//!   live worker has passed the retiring epoch — bounded live cells on
+//!   an unbounded stream.
+//!
+//! Validation is batched: `record` publishes the read set sorted by
+//! address and the store keeps a **per-shard modification watermark**
+//! (bumped *after* every publish / tombstone / estimate flip). Each
+//! `ReadDesc` snapshots its shard watermark *before* the read; a
+//! validation pass walks the sorted read set and skips the version
+//! probe entirely for reads whose shard watermark is unchanged — the
+//! common case at low conflict, making re-validation O(1) per
+//! untouched shard. A racy skip (publish visible, bump not yet) is
+//! repaired by the same scheduler revalidation that already covers
+//! stale-verdict races: the deciding validation happens-after the
+//! record that bumped the mark.
 //!
 //! A Mutex-sharded baseline ([`MutexMvMemory`], the PR-1 layout) is
 //! kept behind the same [`MvStore`] trait so `benches/batch_throughput`
@@ -50,10 +82,13 @@
 //! same transaction closures run unchanged under HTM, STM, the locks,
 //! or this executor.
 
+use std::cell::UnsafeCell;
 use std::collections::{BTreeMap, HashMap};
+use std::mem::MaybeUninit;
 use std::sync::atomic::{AtomicPtr, AtomicU64, AtomicUsize, Ordering::SeqCst};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::mem::epoch::EpochGc;
 use crate::mem::{Addr, TxHeap};
 
 use super::scheduler::{Incarnation, TxnIdx, Version};
@@ -78,6 +113,12 @@ pub enum ReadOrigin {
 pub struct ReadDesc {
     pub addr: Addr,
     pub origin: ReadOrigin,
+    /// The address's shard watermark ([`MvStore::mark_of`]) sampled
+    /// *before* the read. Validation may skip the store probe when the
+    /// watermark is still equal — an unchanged shard proves the read's
+    /// version chain is untouched. Stores without watermarks record 0
+    /// and always re-probe.
+    pub mark: u64,
 }
 
 /// Result of a speculative read.
@@ -124,13 +165,41 @@ pub trait MvStore: Send + Sync {
     /// previous block's winning version under cross-block pipelining);
     /// `None` means the base is itself unresolved (a predecessor
     /// ESTIMATE), which fails the validation so the transaction
-    /// re-executes and parks.
-    fn validate_read_set(&self, txn: TxnIdx, base: &dyn Fn(Addr) -> Option<u64>) -> bool;
+    /// re-executes and parks. Generic over the resolver so each call
+    /// site monomorphizes its base lookup — the per-read virtual
+    /// dispatch the old `&dyn Fn` signature paid is gone.
+    fn validate_read_set<F: Fn(Addr) -> Option<u64>>(&self, txn: TxnIdx, base: F) -> bool;
 
     /// After the batch completes: flush the winning (highest-index)
     /// version of every address into the heap. Equivalent to committing
     /// the transactions one by one in index order.
     fn write_back(&self, heap: &TxHeap);
+
+    /// The modification watermark of `addr`'s shard, sampled into each
+    /// [`ReadDesc`] before the read. Default 0: stores without
+    /// watermarks never let validation skip.
+    fn mark_of(&self, _addr: Addr) -> u64 {
+        0
+    }
+
+    /// Attach the pipelined session's epoch-reclamation domain:
+    /// superseded recorded sets retire into its limbo instead of
+    /// accumulating on `prev` chains. Default: ignore (barrier runs
+    /// and the mutex baseline keep store-owned garbage).
+    fn attach_gc(&self, _gc: &Arc<EpochGc>) {}
+
+    /// Detach every transaction's recorded sets into the attached
+    /// gc's limbo. Called once per block at promotion, after
+    /// `write_back` — the scheduler is done, so no in-flight validator
+    /// can acquire a fresh reference. No-op without an attached gc.
+    fn retire_sets(&self) {}
+
+    /// Approximate bytes of arena backing owned by this store (0 when
+    /// not arena-backed). Sampled at promotion for the `arena_bytes`
+    /// report peak.
+    fn mem_bytes(&self) -> u64 {
+        0
+    }
 }
 
 // --------------------------------------------------------------------
@@ -250,9 +319,120 @@ impl Segment {
     }
 }
 
+// --------------------------------------------------------------------
+// Bump arenas
+// --------------------------------------------------------------------
+
+/// Nodes per arena chunk. One chunk of `AddrEntry`s covers a typical
+/// block footprint shard-side; hub-heavy blocks chain a few more.
+const ARENA_CHUNK: usize = 256;
+
+/// One chunk of a lock-free bump arena. `used` may overshoot the
+/// capacity (racers that lose the bump retry on a fresh chunk); `Drop`
+/// clamps it back.
+struct ArenaChunk<T> {
+    used: AtomicUsize,
+    /// The previously-filled chunk (newest-first chain from the head).
+    next: AtomicPtr<ArenaChunk<T>>,
+    items: Box<[UnsafeCell<MaybeUninit<T>>]>,
+}
+
+/// Lock-free chunked bump allocator. `alloc` is a `fetch_add` plus a
+/// write in the common case — no global-allocator call, no locks —
+/// and the returned reference is stable for the arena's whole
+/// lifetime: chunks are only freed when the arena drops, which is what
+/// lets the store hand out raw `&'store` pointers into it. Slots
+/// orphaned by CAS losers elsewhere in the store simply stay initialized
+/// until the arena drops (rare, a few nodes per contended block).
+struct Arena<T> {
+    head: AtomicPtr<ArenaChunk<T>>,
+}
+
+// SAFETY: a slot is claimed by exactly one thread (the `fetch_add`
+// winner) before its single initializing write; after `alloc` returns,
+// the slot is only reached through the store's own atomics-published
+// pointers. The `UnsafeCell` is never aliased mutably.
+unsafe impl<T: Send> Send for Arena<T> {}
+unsafe impl<T: Send + Sync> Sync for Arena<T> {}
+
+impl<T> Arena<T> {
+    fn new() -> Self {
+        Self {
+            head: AtomicPtr::new(Box::into_raw(Self::chunk())),
+        }
+    }
+
+    fn chunk() -> Box<ArenaChunk<T>> {
+        Box::new(ArenaChunk {
+            used: AtomicUsize::new(0),
+            next: AtomicPtr::new(std::ptr::null_mut()),
+            items: (0..ARENA_CHUNK)
+                .map(|_| UnsafeCell::new(MaybeUninit::uninit()))
+                .collect(),
+        })
+    }
+
+    /// Bump-allocate `value`, growing by a CAS-prepended chunk on
+    /// overflow (the loser frees its empty chunk and retries on the
+    /// winner's).
+    fn alloc(&self, value: T) -> &T {
+        let mut value = Some(value);
+        loop {
+            let headp = self.head.load(SeqCst);
+            let chunk = unsafe { &*headp };
+            let idx = chunk.used.fetch_add(1, SeqCst);
+            if idx < ARENA_CHUNK {
+                let cell = &chunk.items[idx];
+                unsafe {
+                    let slot = (*cell.get()).as_mut_ptr();
+                    slot.write(value.take().unwrap());
+                    return &*slot;
+                }
+            }
+            let fresh = Box::into_raw(Self::chunk());
+            unsafe { (*fresh).next.store(headp, SeqCst) };
+            if self
+                .head
+                .compare_exchange(headp, fresh, SeqCst, SeqCst)
+                .is_err()
+            {
+                drop(unsafe { Box::from_raw(fresh) });
+            }
+        }
+    }
+
+    /// Approximate bytes of backing memory across all chunks.
+    fn bytes(&self) -> u64 {
+        let per_chunk = (std::mem::size_of::<ArenaChunk<T>>()
+            + ARENA_CHUNK * std::mem::size_of::<T>()) as u64;
+        let mut n = 0u64;
+        let mut cur = self.head.load(SeqCst);
+        while !cur.is_null() {
+            n += per_chunk;
+            cur = unsafe { &*cur }.next.load(SeqCst);
+        }
+        n
+    }
+}
+
+impl<T> Drop for Arena<T> {
+    fn drop(&mut self) {
+        let mut cur = *self.head.get_mut();
+        while !cur.is_null() {
+            let mut chunk = unsafe { Box::from_raw(cur) };
+            let used = (*chunk.used.get_mut()).min(ARENA_CHUNK);
+            for cell in &mut chunk.items[..used] {
+                unsafe { cell.get_mut().assume_init_drop() };
+            }
+            cur = *chunk.next.get_mut();
+        }
+    }
+}
+
 /// One address's version vector plus its link in the shard chain.
-/// Append-only: never freed before the store drops, so readers may
-/// traverse raw pointers without a reclamation protocol.
+/// Arena-owned and append-only: never freed before the store drops, so
+/// readers may traverse raw pointers without a per-node reclamation
+/// protocol.
 struct AddrEntry {
     addr: Addr,
     first: Segment,
@@ -325,9 +505,11 @@ impl AddrEntry {
         }
     }
 
-    /// Find-or-claim the slot for `txn`, appending a segment when the
-    /// vector is full. Claims are one CAS; they never release.
-    fn claim_slot(&self, txn: TxnIdx) -> &VersionSlot {
+    /// Find-or-claim the slot for `txn`, appending an arena-allocated
+    /// segment when the vector is full. Claims are one CAS; they never
+    /// release. A CAS loser's pre-bumped segment stays orphaned in the
+    /// arena until the store drops.
+    fn claim_slot<'s>(&'s self, txn: TxnIdx, segs: &'s Arena<Segment>) -> &'s VersionSlot {
         let want = txn + 1;
         let mut seg: &Segment = &self.first;
         loop {
@@ -350,29 +532,58 @@ impl AddrEntry {
                 seg = unsafe { &*next };
                 continue;
             }
-            let fresh = Box::into_raw(Box::new(Segment::new()));
+            let fresh = segs.alloc(Segment::new()) as *const Segment as *mut Segment;
             match seg
                 .next
                 .compare_exchange(std::ptr::null_mut(), fresh, SeqCst, SeqCst)
             {
                 Ok(_) => seg = unsafe { &*fresh },
-                Err(existing) => {
-                    // Another writer appended first: free ours, use theirs.
-                    drop(unsafe { Box::from_raw(fresh) });
-                    seg = unsafe { &*existing };
-                }
+                Err(existing) => seg = unsafe { &*existing },
             }
         }
     }
 }
 
-/// A finished incarnation's read/write sets: immutable once published.
-/// `prev` chains every superseded publication — a stale validator may
-/// still be reading one, so nothing is freed before the store drops.
+/// A finished incarnation's read/write sets: immutable once published,
+/// reads and write addresses sorted by address. A superseded node
+/// either chains on `prev` (barrier runs: freed when the store drops)
+/// or is detached into the epoch limbo (pipelined sessions) — see the
+/// module docs.
 struct RecordedSets {
     reads: Vec<ReadDesc>,
     write_addrs: Vec<Addr>,
     prev: *mut RecordedSets,
+}
+
+/// Limbo-owned handle to a detached `RecordedSets` chain: dropping it
+/// frees the node(s). The holder must own the only path to the chain
+/// (the pointer was just swapped out of its `TxnSets` cell).
+struct RetiredSets(*mut RecordedSets);
+
+// SAFETY: the chain is exclusively owned once swapped out; dropping it
+// on another thread is plain `Box` deallocation.
+unsafe impl Send for RetiredSets {}
+
+impl Drop for RetiredSets {
+    fn drop(&mut self) {
+        let mut p = self.0;
+        while !p.is_null() {
+            let node = unsafe { Box::from_raw(p) };
+            p = node.prev;
+        }
+    }
+}
+
+/// Counter weight of a recorded-sets chain head: `(cells, bytes)`.
+/// At least one cell per node so even empty-footprint retires register
+/// in the live-cell accounting.
+fn sets_weight(p: *mut RecordedSets) -> (u64, u64) {
+    let s = unsafe { &*p };
+    let cells = ((s.reads.len() + s.write_addrs.len()) as u64).max(1);
+    let bytes = (std::mem::size_of::<RecordedSets>()
+        + s.reads.capacity() * std::mem::size_of::<ReadDesc>()
+        + s.write_addrs.capacity() * std::mem::size_of::<Addr>()) as u64;
+    (cells, bytes)
 }
 
 /// Single-owner handoff cell for one transaction's recorded sets.
@@ -381,16 +592,28 @@ struct TxnSets {
 }
 
 /// The lock-free multi-version store (see the module docs for the
-/// layout and the seqlock protocol).
+/// layout, the seqlock protocol, and the reclamation contract).
 pub struct MvMemory {
     shards: Box<[AtomicPtr<AddrEntry>]>,
+    /// Per-shard modification watermarks, bumped after every publish /
+    /// tombstone / estimate flip — the validation short-circuit.
+    marks: Box<[AtomicU64]>,
     txns: Box<[TxnSets]>,
+    entries: Arena<AddrEntry>,
+    segments: Arena<Segment>,
+    /// The session's reclamation domain, when pipelining attached one.
+    gc: OnceLock<Arc<EpochGc>>,
 }
 
 impl MvMemory {
     #[inline]
     fn shard_of(addr: Addr) -> usize {
         (((addr as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)) >> (64 - SHARD_BITS)) as usize
+    }
+
+    #[inline]
+    fn bump_mark(&self, addr: Addr) {
+        self.marks[Self::shard_of(addr)].fetch_add(1, SeqCst);
     }
 
     fn find_entry(&self, addr: Addr) -> Option<&AddrEntry> {
@@ -405,9 +628,11 @@ impl MvMemory {
         None
     }
 
-    /// Find the entry for `addr`, CAS-inserting a fresh one at the
-    /// shard head if absent. A losing CAS always rescans from the new
-    /// head, so two racers for the same address converge on one entry.
+    /// Find the entry for `addr`, CAS-inserting an arena-allocated one
+    /// at the shard head if absent. A losing CAS always rescans from
+    /// the new head, so two racers for the same address converge on one
+    /// entry; a pre-allocated node that loses to a same-address racer
+    /// stays orphaned in the arena until the store drops.
     fn entry_or_insert(&self, addr: Addr) -> &AddrEntry {
         let head = &self.shards[Self::shard_of(addr)];
         let mut fresh: *mut AddrEntry = std::ptr::null_mut();
@@ -417,19 +642,16 @@ impl MvMemory {
             while !cur.is_null() {
                 let e = unsafe { &*cur };
                 if e.addr == addr {
-                    if !fresh.is_null() {
-                        drop(unsafe { Box::from_raw(fresh) });
-                    }
                     return e;
                 }
                 cur = e.chain.load(SeqCst);
             }
             if fresh.is_null() {
-                fresh = Box::into_raw(Box::new(AddrEntry {
+                fresh = self.entries.alloc(AddrEntry {
                     addr,
                     first: Segment::new(),
                     chain: AtomicPtr::new(first),
-                }));
+                }) as *const AddrEntry as *mut AddrEntry;
             } else {
                 unsafe { (*fresh).chain.store(first, SeqCst) };
             }
@@ -455,11 +677,15 @@ impl MvStore for MvMemory {
             shards: (0..SHARDS)
                 .map(|_| AtomicPtr::new(std::ptr::null_mut()))
                 .collect(),
+            marks: (0..SHARDS).map(|_| AtomicU64::new(0)).collect(),
             txns: (0..n)
                 .map(|_| TxnSets {
                     sets: AtomicPtr::new(std::ptr::null_mut()),
                 })
                 .collect(),
+            entries: Arena::new(),
+            segments: Arena::new(),
+            gc: OnceLock::new(),
         }
     }
 
@@ -476,33 +702,82 @@ impl MvStore for MvMemory {
         }
     }
 
-    fn record(&self, version: Version, reads: Vec<ReadDesc>, writes: &[(Addr, u64)]) -> bool {
+    fn record(&self, version: Version, mut reads: Vec<ReadDesc>, writes: &[(Addr, u64)]) -> bool {
         let (txn, incarnation) = version;
         for &(addr, value) in writes {
             self.entry_or_insert(addr)
-                .claim_slot(txn)
+                .claim_slot(txn, &self.segments)
                 .publish(incarnation, value);
+            // Watermark bump strictly AFTER the publish: a validator
+            // still holding the old mark must also still be able to
+            // see the old version (bump-before-publish would let an
+            // unchanged-mark skip miss this write).
+            self.bump_mark(addr);
         }
+        // Publish both sets sorted by address: validation walks the
+        // reads in address order (cache-friendly shard/mark probes)
+        // and the incarnation diff below becomes one linear merge.
+        reads.sort_unstable_by_key(|r| r.addr);
+        let mut write_addrs: Vec<Addr> = writes.iter().map(|&(a, _)| a).collect();
+        write_addrs.sort_unstable();
         let prev_ptr = self.txns[txn].sets.load(SeqCst);
         let prev_writes: &[Addr] = if prev_ptr.is_null() {
             &[]
         } else {
             unsafe { &(*prev_ptr).write_addrs }
         };
-        let wrote_new = writes.iter().any(|&(a, _)| !prev_writes.contains(&a));
-        for &addr in prev_writes {
-            if !writes.iter().any(|&(a, _)| a == addr) {
-                if let Some(slot) = self.find_entry(addr).and_then(|e| e.slot_of(txn)) {
-                    slot.tombstone(incarnation);
+        // Sort-merge the incarnation diff (both lists sorted): new
+        // addresses flip `wrote_new`, vanished ones are tombstoned —
+        // one linear pass instead of the old O(writes × prev_writes)
+        // `contains` rescans.
+        let mut wrote_new = false;
+        let (mut i, mut j) = (0usize, 0usize);
+        loop {
+            match (write_addrs.get(i), prev_writes.get(j)) {
+                (Some(&w), Some(&p)) if w == p => {
+                    i += 1;
+                    j += 1;
                 }
+                (Some(&w), Some(&p)) if w < p => {
+                    wrote_new = true;
+                    i += 1;
+                }
+                (Some(_), None) => {
+                    wrote_new = true;
+                    i += 1;
+                }
+                (Some(_), Some(&p)) | (None, Some(&p)) => {
+                    if let Some(slot) = self.find_entry(p).and_then(|e| e.slot_of(txn)) {
+                        slot.tombstone(incarnation);
+                        self.bump_mark(p);
+                    }
+                    j += 1;
+                }
+                (None, None) => break,
             }
         }
-        let fresh = Box::new(RecordedSets {
+        let gc = self.gc.get();
+        let fresh = Box::into_raw(Box::new(RecordedSets {
             reads,
-            write_addrs: writes.iter().map(|&(a, _)| a).collect(),
-            prev: prev_ptr,
-        });
-        self.txns[txn].sets.store(Box::into_raw(fresh), SeqCst);
+            write_addrs,
+            // With a gc attached the superseded node is retired below
+            // instead of chained, so the fresh node must not alias it.
+            prev: if gc.is_some() {
+                std::ptr::null_mut()
+            } else {
+                prev_ptr
+            },
+        }));
+        let old = self.txns[txn].sets.swap(fresh, SeqCst);
+        if let Some(gc) = gc {
+            if !old.is_null() {
+                // The swap made us the exclusive owner of `old`
+                // (single serialized writer per transaction), so this
+                // retire happens exactly once per superseded node.
+                let (cells, bytes) = sets_weight(old);
+                gc.retire(Box::new(RetiredSets(old)), cells, bytes);
+            }
+        }
         wrote_new
     }
 
@@ -513,21 +788,46 @@ impl MvStore for MvMemory {
         for &addr in &sets.write_addrs {
             if let Some(slot) = self.find_entry(addr).and_then(|e| e.slot_of(txn)) {
                 slot.mark_estimate();
+                self.bump_mark(addr);
             }
         }
     }
 
-    fn validate_read_set(&self, txn: TxnIdx, base: &dyn Fn(Addr) -> Option<u64>) -> bool {
+    fn validate_read_set<F: Fn(Addr) -> Option<u64>>(&self, txn: TxnIdx, base: F) -> bool {
         let Some(sets) = self.current_sets(txn) else {
             return true;
         };
-        sets.reads
-            .iter()
-            .all(|r| match (self.read(r.addr, txn), r.origin) {
-                (MvRead::Base, ReadOrigin::Base(v)) => base(r.addr) == Some(v),
-                (MvRead::Value(now, _), ReadOrigin::Version(then)) => now == then,
-                _ => false,
-            })
+        // The reads are sorted by address (record() sorts), so the
+        // mark/shard probes below walk the shard array coherently.
+        sets.reads.iter().all(|r| {
+            let unchanged = self.marks[Self::shard_of(r.addr)].load(SeqCst) == r.mark;
+            match r.origin {
+                ReadOrigin::Version(then) => {
+                    // Unchanged shard watermark ⇒ no publish, tombstone
+                    // or estimate flip touched this shard since the
+                    // read: the recorded version still stands and the
+                    // probe is skipped entirely.
+                    if unchanged {
+                        return true;
+                    }
+                    matches!(self.read(r.addr, txn), MvRead::Value(now, _) if now == then)
+                }
+                ReadOrigin::Base(v) => {
+                    // The watermark only covers THIS store: even with
+                    // an unchanged shard the base below the block (the
+                    // still-draining predecessor / the heap) may have
+                    // moved, so the base resolver always runs — only
+                    // the store probe is skipped.
+                    if unchanged {
+                        return base(r.addr) == Some(v);
+                    }
+                    match self.read(r.addr, txn) {
+                        MvRead::Base => base(r.addr) == Some(v),
+                        _ => false,
+                    }
+                }
+            }
+        })
     }
 
     fn write_back(&self, heap: &TxHeap) {
@@ -547,27 +847,46 @@ impl MvStore for MvMemory {
             }
         }
     }
+
+    fn mark_of(&self, addr: Addr) -> u64 {
+        self.marks[Self::shard_of(addr)].load(SeqCst)
+    }
+
+    fn attach_gc(&self, gc: &Arc<EpochGc>) {
+        let _ = self.gc.set(Arc::clone(gc));
+    }
+
+    fn retire_sets(&self) {
+        let Some(gc) = self.gc.get() else {
+            return;
+        };
+        for t in self.txns.iter() {
+            let p = t.sets.swap(std::ptr::null_mut(), SeqCst);
+            if !p.is_null() {
+                let (cells, bytes) = sets_weight(p);
+                gc.retire(Box::new(RetiredSets(p)), cells, bytes);
+            }
+        }
+    }
+
+    fn mem_bytes(&self) -> u64 {
+        self.entries.bytes() + self.segments.bytes()
+    }
 }
 
 impl Drop for MvMemory {
     fn drop(&mut self) {
-        for head in self.shards.iter_mut() {
-            let mut cur = *head.get_mut();
-            while !cur.is_null() {
-                let mut entry = unsafe { Box::from_raw(cur) };
-                cur = *entry.chain.get_mut();
-                let mut seg = *entry.first.next.get_mut();
-                while !seg.is_null() {
-                    let mut s = unsafe { Box::from_raw(seg) };
-                    seg = *s.next.get_mut();
-                }
-            }
-        }
+        // AddrEntry nodes and Segments are arena-owned: the two Arena
+        // drops free them wholesale (no shard walk). Recorded sets are
+        // limbo-owned once retired; whatever is still linked here —
+        // barrier-mode prev chains, or sets of a store dropped before
+        // promotion — is freed now. A retired chain can never also be
+        // reachable from these cells (retire only happens to pointers
+        // swapped out of them), so there is no double free.
         for t in self.txns.iter_mut() {
-            let mut p = *t.sets.get_mut();
-            while !p.is_null() {
-                let sets = unsafe { Box::from_raw(p) };
-                p = sets.prev;
+            let p = *t.sets.get_mut();
+            if !p.is_null() {
+                drop(RetiredSets(p));
             }
         }
     }
@@ -674,7 +993,7 @@ impl MvStore for MutexMvMemory {
         }
     }
 
-    fn validate_read_set(&self, txn: TxnIdx, base: &dyn Fn(Addr) -> Option<u64>) -> bool {
+    fn validate_read_set<F: Fn(Addr) -> Option<u64>>(&self, txn: TxnIdx, base: F) -> bool {
         let snapshot = self.reads[txn].lock().unwrap().clone();
         snapshot.iter().all(|r| match (self.read(r.addr, txn), r.origin) {
             (MvRead::Base, ReadOrigin::Base(v)) => base(r.addr) == Some(v),
@@ -748,11 +1067,13 @@ mod tests {
         let base = |_addr: Addr| Some(7u64);
         mv.record((0, 0), Vec::new(), &[(8, 1)]);
         // txn 2 read (0,0) at addr 8 and the base value 7 at addr 16.
+        // Marks recorded as 0 (a stale watermark) so the lock-free
+        // store must take the full probe path, same as the baseline.
         mv.record(
             (2, 0),
             vec![
-                ReadDesc { addr: 8, origin: ReadOrigin::Version((0, 0)) },
-                ReadDesc { addr: 16, origin: ReadOrigin::Base(7) },
+                ReadDesc { addr: 8, origin: ReadOrigin::Version((0, 0)), mark: 0 },
+                ReadDesc { addr: 16, origin: ReadOrigin::Base(7), mark: 0 },
             ],
             &[],
         );
@@ -949,5 +1270,77 @@ mod tests {
         for addr in 0..512usize {
             assert_eq!(heap.load(addr), addr as u64 * 3);
         }
+    }
+
+    #[test]
+    fn lockfree_arena_backing_grows_with_footprint() {
+        // Dense inserts overflow the first arena chunks: mem_bytes must
+        // report the growth, and everything must still resolve (i.e.
+        // chunk-prepend kept every handed-out reference stable).
+        let mv = MvMemory::new(4);
+        let empty = mv.mem_bytes();
+        assert!(empty > 0, "fresh arenas still own one chunk each");
+        for addr in 0..2048usize {
+            mv.record((1, 0), Vec::new(), &[(addr, addr as u64)]);
+        }
+        assert!(
+            mv.mem_bytes() > empty,
+            "2048 entries cannot fit the initial chunk"
+        );
+        for addr in (0..2048usize).step_by(97) {
+            assert_eq!(mv.read(addr, 3), MvRead::Value((1, 0), addr as u64));
+        }
+    }
+
+    #[test]
+    fn lockfree_watermark_skips_and_catches_changes() {
+        let mv = MvMemory::new(8);
+        mv.record((0, 0), Vec::new(), &[(8, 1)]);
+        // Record txn 2's read with the CURRENT watermark, the way the
+        // executor's view does: validation may now skip the probe.
+        let m8 = mv.mark_of(8);
+        assert!(m8 > 0, "the publish must have bumped the shard mark");
+        mv.record(
+            (2, 0),
+            vec![ReadDesc { addr: 8, origin: ReadOrigin::Version((0, 0)), mark: m8 }],
+            &[],
+        );
+        let base = |_addr: Addr| -> Option<u64> { None };
+        assert!(
+            mv.validate_read_set(2, &base),
+            "unchanged watermark validates without touching the base"
+        );
+        // A lower writer republishing bumps the shard mark: the skip
+        // no longer applies and the version comparison fails.
+        mv.record((1, 0), Vec::new(), &[(8, 2)]);
+        assert!(!mv.validate_read_set(2, &base));
+    }
+
+    #[test]
+    fn lockfree_gc_retires_superseded_and_final_sets() {
+        use crate::mem::epoch::EpochGc;
+        let gc = Arc::new(EpochGc::new(1));
+        let mv = MvMemory::new(4);
+        mv.attach_gc(&gc);
+        // Two incarnations: the second record supersedes the first
+        // node, which must land in limbo (not on a prev chain).
+        mv.record(
+            (1, 0),
+            vec![ReadDesc { addr: 8, origin: ReadOrigin::Base(0), mark: 0 }],
+            &[(16, 1)],
+        );
+        mv.record((1, 1), Vec::new(), &[(16, 2)]);
+        let after_supersede = gc.counters().retired_cells;
+        assert!(after_supersede > 0, "superseded sets must retire");
+        // Promotion retires the final nodes too.
+        mv.retire_sets();
+        let k = gc.counters();
+        assert!(k.retired_cells > after_supersede, "final sets must retire");
+        // With nothing pinned, a flush reclaims every retired cell.
+        gc.flush();
+        assert_eq!(gc.counters().reclaimed_cells, k.retired_cells);
+        assert_eq!(gc.live_cells(), 0);
+        // The store still resolves reads after retiring its sets.
+        assert_eq!(mv.read(16, 3), MvRead::Value((1, 1), 2));
     }
 }

@@ -100,6 +100,32 @@
 //! sweep with `steal_rate`/`overlap_ratio` per cell, and the
 //! `BENCH_batch.json` perf trajectory it writes at the repo root.
 //!
+//! ## Memory management
+//!
+//! The lock-free multi-version store is built for a *continuous*
+//! stream of blocks, so its memory story is explicit ([`mem::epoch`],
+//! `batch::mvmemory`). Version segments and address entries come from
+//! **chunked lock-free bump arenas** owned by each block's store —
+//! allocation is one `fetch_add`, no per-node `Box` churn, and the
+//! whole footprint returns when the block's store drops after
+//! promotion. Per-transaction recorded read/write sets are the one
+//! structure whose old incarnations a racing validator may still
+//! dereference; those retire through **epoch-based reclamation**:
+//! pool workers pin the global epoch once per drain-loop iteration
+//! (see [`runtime::workers`]), superseded sets land in per-epoch limbo
+//! bins, and block **promotion** — the pipeline's natural quiescence
+//! boundary — advances the epoch and frees every bin all live workers
+//! have passed. Promotion also samples arena footprint and feeds the
+//! `mv_live_cells` / `mv_retired` / `mv_reclaimed` / `arena_bytes`
+//! counters into [`stats::TxStats`] and the snapshot schema, so a
+//! long-stream run shows a bounded live-cell plateau instead of
+//! unbounded growth (`MV_RECLAIM=0` or `batch::set_reclaim(false)`
+//! keeps the leaky baseline for A/B runs — see the reclaim cells in
+//! `benches/batch_throughput`). Read-set validation itself is batched:
+//! reads are recorded sorted by address, and a per-shard
+//! **version watermark** lets an unchanged shard's reads skip their
+//! store probes entirely in the common no-conflict case.
+//!
 //! ## The telemetry plane
 //!
 //! All five backends share one observability substrate, [`obs`]: (1)

@@ -1,0 +1,401 @@
+//! Epoch-based reclamation for the batch backend's lock-free
+//! multi-version store.
+//!
+//! The store publishes immutable `RecordedSets` nodes through raw
+//! `AtomicPtr` handoffs: a validator may still be walking a node while
+//! a re-executing incarnation swaps in its successor. Before this
+//! module the superseded node simply stayed alive on a `prev` chain
+//! until the whole store dropped — safe, but unbounded for a long
+//! pipelined stream. [`EpochGc`] bounds it with the classic
+//! epoch-based reclamation protocol:
+//!
+//! * a **global epoch** counter (starting at 1; slot value 0 means
+//!   "unpinned") advanced at block promotion — under the W-deep
+//!   window, promotion is a natural, strictly-ordered quiescence
+//!   boundary: once block N is promoted and popped, no validator can
+//!   acquire a fresh reference into its superseded sets;
+//! * **per-worker pin slots**: a worker [`pin`](EpochGc::pin)s the
+//!   current epoch before touching any store pointer and releases it
+//!   when the guard drops. The pin loop re-checks the global after
+//!   publishing the slot, so the reclamation horizon never misses a
+//!   slot published against a stale epoch;
+//! * **per-epoch limbo bins**: [`retire`](EpochGc::retire) moves an
+//!   exclusively-owned garbage handle (its `Drop` frees the memory)
+//!   into the bin tagged with the current epoch;
+//!   [`try_reclaim`](EpochGc::try_reclaim) frees every bin whose epoch
+//!   is strictly below the minimum pinned epoch — no live worker can
+//!   still hold a pointer retired that long ago.
+//!
+//! The safety argument is the standard one: a reader pins epoch `E`
+//! *before* loading a shared pointer; any retire of that pointer's
+//! target happens after the swap that removed it, so its bin is tagged
+//! `>= E`; a bin is only freed when every pinned slot is `> `its tag.
+//! Hence no freed object is reachable from a pinned reader.
+//!
+//! Reclamation can be constructed disabled
+//! ([`EpochGc::with_reclaim`]) — retires still count into the limbo
+//! (so the bench A/B can price the leak) but nothing is freed before
+//! the `EpochGc` itself drops.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering::SeqCst};
+use std::sync::Mutex;
+
+/// One worker's pinned-epoch slot (0 = unpinned), padded to a cache
+/// line so per-iteration pin/unpin stores never false-share.
+struct Slot {
+    epoch: AtomicU64,
+    _pad: [u64; 7],
+}
+
+/// A batch of garbage retired under one epoch. Dropping the bin runs
+/// the retired handles' destructors, which is what frees the memory.
+struct Bin {
+    epoch: u64,
+    items: Vec<Box<dyn Any + Send>>,
+    cells: u64,
+    bytes: u64,
+}
+
+/// Counter snapshot of one reclamation domain.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GcCounters {
+    /// Cells (recorded read/write entries) retired into limbo.
+    pub retired_cells: u64,
+    /// Approximate heap bytes retired into limbo.
+    pub retired_bytes: u64,
+    /// Retired cells actually freed.
+    pub reclaimed_cells: u64,
+    /// Retired bytes actually freed.
+    pub reclaimed_bytes: u64,
+    /// Peak of `retired - reclaimed` cells — the bounded-memory
+    /// metric: a plateau under reclamation, the whole retired total
+    /// with reclamation off.
+    pub live_peak_cells: u64,
+    /// Peak arena bytes observed via [`EpochGc::note_arena_bytes`].
+    pub arena_peak_bytes: u64,
+}
+
+/// One pipelined session's epoch-reclamation domain.
+pub struct EpochGc {
+    global: AtomicU64,
+    slots: Box<[Slot]>,
+    limbo: Mutex<VecDeque<Bin>>,
+    enabled: bool,
+    retired_cells: AtomicU64,
+    retired_bytes: AtomicU64,
+    reclaimed_cells: AtomicU64,
+    reclaimed_bytes: AtomicU64,
+    live_peak_cells: AtomicU64,
+    arena_peak_bytes: AtomicU64,
+}
+
+/// RAII pin of one worker's epoch slot; dropping it unpins.
+pub struct EpochGuard<'g> {
+    slot: &'g Slot,
+}
+
+impl Drop for EpochGuard<'_> {
+    fn drop(&mut self) {
+        self.slot.epoch.store(0, SeqCst);
+    }
+}
+
+impl EpochGc {
+    /// Domain for `workers` pin slots, reclamation on.
+    pub fn new(workers: usize) -> Self {
+        Self::with_reclaim(workers, true)
+    }
+
+    /// Domain with reclamation optionally disabled: retires still
+    /// accumulate (and count), nothing is freed before drop — the
+    /// leaky A/B baseline.
+    pub fn with_reclaim(workers: usize, enabled: bool) -> Self {
+        Self {
+            global: AtomicU64::new(1),
+            slots: (0..workers.max(1))
+                .map(|_| Slot {
+                    epoch: AtomicU64::new(0),
+                    _pad: [0; 7],
+                })
+                .collect(),
+            limbo: Mutex::new(VecDeque::new()),
+            enabled,
+            retired_cells: AtomicU64::new(0),
+            retired_bytes: AtomicU64::new(0),
+            reclaimed_cells: AtomicU64::new(0),
+            reclaimed_bytes: AtomicU64::new(0),
+            live_peak_cells: AtomicU64::new(0),
+            arena_peak_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Is this domain actually freeing, or only counting?
+    pub fn reclaim_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The current global epoch.
+    pub fn epoch(&self) -> u64 {
+        self.global.load(SeqCst)
+    }
+
+    /// Pin `worker`'s slot to the current epoch. Must be held across
+    /// any dereference of a pointer another thread may retire. The
+    /// publish-then-recheck loop closes the classic race: if the
+    /// global advances between our read and our slot store, the slot
+    /// would under-report — so re-pin at the newer epoch.
+    pub fn pin(&self, worker: usize) -> EpochGuard<'_> {
+        let slot = &self.slots[worker % self.slots.len()];
+        loop {
+            let e = self.global.load(SeqCst);
+            slot.epoch.store(e, SeqCst);
+            if self.global.load(SeqCst) == e {
+                return EpochGuard { slot };
+            }
+        }
+    }
+
+    /// Move exclusively-owned garbage into the current epoch's limbo
+    /// bin. `item`'s `Drop` frees the memory; `cells`/`bytes` feed the
+    /// counters. The caller must hold the *only* path to the memory
+    /// (e.g. the pointer just swapped out of a publication cell).
+    pub fn retire(&self, item: Box<dyn Any + Send>, cells: u64, bytes: u64) {
+        let retired = self.retired_cells.fetch_add(cells, SeqCst) + cells;
+        self.retired_bytes.fetch_add(bytes, SeqCst);
+        let live = retired.saturating_sub(self.reclaimed_cells.load(SeqCst));
+        self.live_peak_cells.fetch_max(live, SeqCst);
+        let mut limbo = self.limbo.lock().unwrap();
+        // Tag under the lock, clamped to the youngest bin: an epoch
+        // read racing an advance may only ever land *later* than the
+        // retire really happened, which is the safe direction, and it
+        // keeps the deque epoch-monotone for the pop loop below.
+        let epoch = self
+            .global
+            .load(SeqCst)
+            .max(limbo.back().map_or(0, |b| b.epoch));
+        match limbo.back_mut() {
+            Some(bin) if bin.epoch == epoch => {
+                bin.items.push(item);
+                bin.cells += cells;
+                bin.bytes += bytes;
+            }
+            _ => limbo.push_back(Bin {
+                epoch,
+                items: vec![item],
+                cells,
+                bytes,
+            }),
+        }
+    }
+
+    /// Advance the global epoch (the promotion boundary). Returns the
+    /// new epoch.
+    pub fn advance(&self) -> u64 {
+        self.global.fetch_add(1, SeqCst) + 1
+    }
+
+    /// Minimum epoch any worker is pinned at; the global epoch when
+    /// nobody is pinned.
+    fn min_pinned(&self) -> u64 {
+        let mut min = u64::MAX;
+        for s in self.slots.iter() {
+            let e = s.epoch.load(SeqCst);
+            if e != 0 && e < min {
+                min = e;
+            }
+        }
+        if min == u64::MAX {
+            self.global.load(SeqCst)
+        } else {
+            min
+        }
+    }
+
+    /// Free every limbo bin whose epoch every live worker has passed.
+    /// Returns `(cells, bytes)` freed; `(0, 0)` when reclamation is
+    /// disabled. Destructors run outside the limbo lock.
+    pub fn try_reclaim(&self) -> (u64, u64) {
+        if !self.enabled {
+            return (0, 0);
+        }
+        let horizon = self.min_pinned();
+        let mut freed: Vec<Bin> = Vec::new();
+        {
+            let mut limbo = self.limbo.lock().unwrap();
+            while limbo.front().is_some_and(|b| b.epoch < horizon) {
+                freed.push(limbo.pop_front().unwrap());
+            }
+        }
+        let (mut cells, mut bytes) = (0u64, 0u64);
+        for b in &freed {
+            cells += b.cells;
+            bytes += b.bytes;
+        }
+        if cells != 0 || bytes != 0 {
+            self.reclaimed_cells.fetch_add(cells, SeqCst);
+            self.reclaimed_bytes.fetch_add(bytes, SeqCst);
+        }
+        drop(freed);
+        (cells, bytes)
+    }
+
+    /// End-of-session drain: advance past every retired bin and — with
+    /// the pool joined, so nothing is pinned — reclaim it all (when
+    /// enabled).
+    pub fn flush(&self) -> (u64, u64) {
+        self.advance();
+        self.try_reclaim()
+    }
+
+    /// Feed the arena-bytes peak (sampled per block at promotion).
+    pub fn note_arena_bytes(&self, bytes: u64) {
+        self.arena_peak_bytes.fetch_max(bytes, SeqCst);
+    }
+
+    /// Cells currently sitting in limbo (`retired - reclaimed`).
+    pub fn live_cells(&self) -> u64 {
+        self.retired_cells
+            .load(SeqCst)
+            .saturating_sub(self.reclaimed_cells.load(SeqCst))
+    }
+
+    /// Counter snapshot.
+    pub fn counters(&self) -> GcCounters {
+        GcCounters {
+            retired_cells: self.retired_cells.load(SeqCst),
+            retired_bytes: self.retired_bytes.load(SeqCst),
+            reclaimed_cells: self.reclaimed_cells.load(SeqCst),
+            reclaimed_bytes: self.reclaimed_bytes.load(SeqCst),
+            live_peak_cells: self.live_peak_cells.load(SeqCst),
+            arena_peak_bytes: self.arena_peak_bytes.load(SeqCst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// Drop-counting sentinel standing in for retired store memory.
+    struct Sentinel(Arc<AtomicU64>);
+    impl Drop for Sentinel {
+        fn drop(&mut self) {
+            self.0.fetch_add(1, SeqCst);
+        }
+    }
+
+    fn retire_sentinel(gc: &EpochGc, drops: &Arc<AtomicU64>, cells: u64) {
+        gc.retire(Box::new(Sentinel(Arc::clone(drops))), cells, cells * 8);
+    }
+
+    #[test]
+    fn late_pin_blocks_reclaim_until_release() {
+        let gc = EpochGc::new(2);
+        let drops = Arc::new(AtomicU64::new(0));
+        // A validator pins the epoch the garbage is retired under.
+        let guard = gc.pin(0);
+        retire_sentinel(&gc, &drops, 3);
+        gc.advance();
+        let (c, _) = gc.try_reclaim();
+        assert_eq!(c, 0, "pinned epoch must hold its limbo bin");
+        assert_eq!(drops.load(SeqCst), 0);
+        assert_eq!(gc.live_cells(), 3);
+        // Release: the bin's epoch is now strictly below the horizon.
+        drop(guard);
+        let (c, b) = gc.try_reclaim();
+        assert_eq!(c, 3);
+        assert_eq!(b, 24);
+        assert_eq!(drops.load(SeqCst), 1, "exactly the retired set freed");
+        assert_eq!(gc.live_cells(), 0);
+    }
+
+    #[test]
+    fn release_frees_exactly_the_passed_epochs() {
+        let gc = EpochGc::new(2);
+        let drops = Arc::new(AtomicU64::new(0));
+        retire_sentinel(&gc, &drops, 1); // epoch 1
+        gc.advance(); // -> 2
+        let guard = gc.pin(1); // pinned at 2
+        retire_sentinel(&gc, &drops, 1); // epoch 2
+        gc.advance(); // -> 3
+        let (c, _) = gc.try_reclaim();
+        assert_eq!(c, 1, "only the bin below the pinned horizon frees");
+        assert_eq!(drops.load(SeqCst), 1);
+        drop(guard);
+        gc.advance();
+        let (c, _) = gc.try_reclaim();
+        assert_eq!(c, 1, "the release frees exactly the held bin");
+        assert_eq!(drops.load(SeqCst), 2);
+        let k = gc.counters();
+        assert_eq!(k.retired_cells, 2);
+        assert_eq!(k.reclaimed_cells, 2);
+        assert!(k.live_peak_cells >= 1);
+    }
+
+    #[test]
+    fn disabled_domain_counts_but_never_frees_before_drop() {
+        let drops = Arc::new(AtomicU64::new(0));
+        {
+            let gc = EpochGc::with_reclaim(1, false);
+            assert!(!gc.reclaim_enabled());
+            retire_sentinel(&gc, &drops, 5);
+            gc.advance();
+            assert_eq!(gc.try_reclaim(), (0, 0));
+            assert_eq!(gc.flush(), (0, 0));
+            assert_eq!(drops.load(SeqCst), 0, "leaky baseline holds garbage");
+            assert_eq!(gc.live_cells(), 5);
+            assert_eq!(gc.counters().reclaimed_cells, 0);
+        }
+        // Dropping the domain still frees (Rust ownership), it just
+        // never counts as reclaimed.
+        assert_eq!(drops.load(SeqCst), 1);
+    }
+
+    #[test]
+    fn flush_drains_everything_once_unpinned() {
+        let gc = EpochGc::new(4);
+        let drops = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            retire_sentinel(&gc, &drops, 2);
+            gc.advance();
+        }
+        gc.flush();
+        assert_eq!(drops.load(SeqCst), 10);
+        let k = gc.counters();
+        assert_eq!(k.retired_cells, 20);
+        assert_eq!(k.reclaimed_cells, 20);
+        assert_eq!(gc.live_cells(), 0);
+        assert!(k.live_peak_cells <= 20);
+    }
+
+    #[test]
+    fn pin_republishes_when_the_global_moves() {
+        // Concurrency smoke: retires + advances race pins; every
+        // sentinel must be freed exactly once by the end.
+        let gc = Arc::new(EpochGc::new(3));
+        let drops = Arc::new(AtomicU64::new(0));
+        const N: u64 = 200;
+        std::thread::scope(|s| {
+            for w in 0..2usize {
+                let gc = Arc::clone(&gc);
+                s.spawn(move || {
+                    for _ in 0..N {
+                        let _g = gc.pin(w);
+                        std::hint::spin_loop();
+                    }
+                });
+            }
+            for _ in 0..N {
+                retire_sentinel(&gc, &drops, 1);
+                gc.advance();
+                gc.try_reclaim();
+            }
+        });
+        gc.flush();
+        assert_eq!(drops.load(SeqCst), N, "every retire freed exactly once");
+        assert_eq!(gc.counters().reclaimed_cells, N);
+    }
+}

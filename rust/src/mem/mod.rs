@@ -8,6 +8,7 @@
 //! software HTM its conflict/capacity granularity, mirroring Intel TSX
 //! tracking read/write sets in L1 at line granularity.
 
+pub mod epoch;
 pub mod heap;
 pub mod layout;
 

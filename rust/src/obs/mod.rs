@@ -64,6 +64,12 @@
 //! * `recovered` — hysteresis cleared and the engine left the
 //!   degraded state: `a` = kick count at recovery.
 //!
+//! The batch pipeline's memory plane (`mem::epoch`) adds one more:
+//!
+//! * `reclaim` — an epoch-reclamation pass at block promotion freed
+//!   limbo bins every live worker had passed: `a` = recorded-set
+//!   cells freed, `b` = bytes freed.
+//!
 //! # Snapshot schema (`--metrics-json PATH`, JSON-lines)
 //!
 //! One object per completed interval:
@@ -79,8 +85,12 @@
 //! `backend_switches`, `steals`, `local_steals`), latency percentiles
 //! (`txn_lat_count`, `txn_lat_p50_ns`, `txn_lat_p90_ns`,
 //! `txn_lat_p99_ns`, `block_lat_count`, `block_lat_p50_ns`,
-//! `block_lat_p99_ns`), plus kernel-specific extras (e.g. `threads`,
-//! `tuples`).
+//! `block_lat_p99_ns`), memory-plane counters from the pipelined
+//! batch executor's reclamation domain (`mv_live_cells` peak live
+//! recorded-set cells — bounded when reclamation is on, growing when
+//! off — `mv_retired`, `mv_reclaimed`, `arena_bytes` peak bump-arena
+//! footprint; all zero outside pipelined batch runs), plus
+//! kernel-specific extras (e.g. `threads`, `tuples`).
 //!
 //! **Fields the `--policy auto` controller consumes**
 //! (`engine::auto::Sample` reads exactly these, and

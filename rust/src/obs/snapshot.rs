@@ -118,6 +118,10 @@ pub fn record(kernel: &str, phase: &str, stats: &TxStats, extra: &[(&str, String
         stats.faults_injected, stats.quarantines, stats.watchdog_kicks, stats.degradations
     ));
     line.push_str(&format!(
+        ",\"mv_live_cells\":{},\"mv_retired\":{},\"mv_reclaimed\":{},\"arena_bytes\":{}",
+        stats.mv_live_cells, stats.mv_retired, stats.mv_reclaimed, stats.arena_bytes
+    ));
+    line.push_str(&format!(
         ",\"txn_lat_count\":{},\"txn_lat_p50_ns\":{},\"txn_lat_p90_ns\":{},\"txn_lat_p99_ns\":{}",
         stats.txn_lat.count(),
         stats.txn_lat.p50(),
@@ -191,6 +195,10 @@ mod tests {
         s.local_steals = 6;
         s.final_block = 1024;
         s.final_window = 3;
+        s.mv_live_cells = 96;
+        s.mv_retired = 4000;
+        s.mv_reclaimed = 3904;
+        s.arena_bytes = 65_536;
         s.time_ns = 123_456;
         s.txn_lat.record(100);
         s.txn_lat.record(10_000);
@@ -218,6 +226,10 @@ mod tests {
         assert_eq!(json::scrape_u64(r, "quarantines"), Some(0));
         assert_eq!(json::scrape_u64(r, "watchdog_kicks"), Some(0));
         assert_eq!(json::scrape_u64(r, "degradations"), Some(0));
+        assert_eq!(json::scrape_u64(r, "mv_live_cells"), Some(96));
+        assert_eq!(json::scrape_u64(r, "mv_retired"), Some(4000));
+        assert_eq!(json::scrape_u64(r, "mv_reclaimed"), Some(3904));
+        assert_eq!(json::scrape_u64(r, "arena_bytes"), Some(65_536));
         assert_eq!(json::scrape_u64(r, "threads"), Some(4));
         assert_eq!(json::scrape_u64(r, "txn_lat_count"), Some(2));
         assert_eq!(json::scrape_u64(r, "txn_lat_p50_ns"), Some(127));

@@ -78,6 +78,10 @@ pub enum EventKind {
     /// The degraded state lifted after sustained progress (recovery
     /// hysteresis). `a` = total kicks at recovery, `b` = 0.
     Recovered = 14,
+    /// An epoch-reclamation pass freed limbo bins every live worker
+    /// had passed (`mem::epoch`, fired at block promotion). `a` =
+    /// recorded-set cells freed, `b` = bytes freed.
+    Reclaim = 15,
 }
 
 impl EventKind {
@@ -97,6 +101,7 @@ impl EventKind {
             EventKind::WatchdogKick => "watchdog-kick",
             EventKind::Degraded => "degraded",
             EventKind::Recovered => "recovered",
+            EventKind::Reclaim => "reclaim",
         }
     }
 
@@ -116,6 +121,7 @@ impl EventKind {
             12 => EventKind::WatchdogKick,
             13 => EventKind::Degraded,
             14 => EventKind::Recovered,
+            15 => EventKind::Reclaim,
             _ => return None,
         })
     }
@@ -279,6 +285,11 @@ pub fn recovered(kicks: u64) {
 }
 
 #[inline]
+pub fn reclaim(cells: u64, bytes: u64) {
+    emit(EventKind::Reclaim, cells, bytes);
+}
+
+#[inline]
 pub fn steal(local: bool) {
     emit(
         if local {
@@ -391,6 +402,7 @@ mod tests {
         emit(EventKind::WatchdogKick, MARK, 3);
         emit(EventKind::Degraded, MARK, 0);
         emit(EventKind::Recovered, MARK, 0);
+        emit(EventKind::Reclaim, MARK, 8192);
         disable();
         // Disabled again: not recorded.
         emit(EventKind::HwAbort, MARK, 9);
@@ -402,7 +414,7 @@ mod tests {
                 && e.a == AbortCause::Capacity.index() as u64));
         assert!(events.iter().any(|e| e.kind == EventKind::StealLocal));
         let mine: Vec<&Event> = events.iter().filter(|e| e.a == MARK).collect();
-        assert_eq!(mine.len(), 11);
+        assert_eq!(mine.len(), 12);
         // drain() sorts stably by t_ns, so same-thread (same-ring)
         // emission order is preserved.
         assert_eq!(mine[0].kind, EventKind::BlockAdmitted);
@@ -423,6 +435,9 @@ mod tests {
         assert_eq!(mine[8].kind.name(), "watchdog-kick");
         assert_eq!(mine[9].kind, EventKind::Degraded);
         assert_eq!(mine[10].kind, EventKind::Recovered);
+        assert_eq!(mine[11].kind, EventKind::Reclaim);
+        assert_eq!(mine[11].b, 8192);
+        assert_eq!(mine[11].kind.name(), "reclaim");
         assert!(events.windows(2).all(|w| w[0].t_ns <= w[1].t_ns));
         let line = event_json(mine[0]);
         assert!(line.contains("\"kind\":\"block-admitted\""));

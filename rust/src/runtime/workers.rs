@@ -47,6 +47,18 @@
 //! deque to their refill chunk ([`crate::batch::scheduler`]) or their
 //! preloaded share ([`run_sharded`]).
 //!
+//! # Epoch-reclamation interplay
+//!
+//! Pool workers driving a pipelined batch session participate in that
+//! session's epoch-reclamation domain ([`crate::mem::epoch`]): the
+//! drain loop pins an epoch at the top of each iteration and releases
+//! it at the bottom, so every raw recorded-set pointer a validation
+//! touches mid-iteration stays covered, and an idle worker never holds
+//! a pin. Pinning is the *only* obligation this runtime carries —
+//! retiring superseded sets and freeing limbo bins both happen on the
+//! block-promotion path in [`crate::batch`], never inside deque
+//! operations, so the lock-free deque above stays reclamation-free.
+//!
 //! # Topology awareness
 //!
 //! [`PinPlan::detect`] is socket/L3-aware: each allowed CPU is keyed by

@@ -58,6 +58,12 @@ pub struct CostModel {
     /// blocking transaction finishes and the scheduler re-readies us
     /// (the PR-1 `dependencies` counter).
     pub mv_estimate_wait: u64,
+    /// Epoch-reclamation work charged per promoted block
+    /// (`mem::epoch`): retiring the block's recorded sets into limbo,
+    /// advancing the epoch, and freeing the bins every worker has
+    /// passed. Amortized — the real cost is a handful of frees plus
+    /// two atomics per promotion, independent of block size.
+    pub mv_reclaim_per_block: u64,
 
     // -- locks -----------------------------------------------------------
     /// Uncontended acquire+release round trip (atomic RMW pair).
@@ -127,9 +133,13 @@ impl CostModel {
             sw_validate_per_read: 14,
             mv_read: 34,
             mv_write: 12,
-            mv_validate_per_read: 14,
+            // Batched sorted-walk validation with per-shard watermark
+            // skips (PR 9) re-probes only marked shards: cheaper per
+            // read-set entry than the NOrec full re-read (14).
+            mv_validate_per_read: 9,
             mv_abort: 120,
             mv_estimate_wait: 400,
+            mv_reclaim_per_block: 700,
             lock_cycle: 70,
             direct_access: 8,
             rng_draw: 20,

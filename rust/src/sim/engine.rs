@@ -722,11 +722,13 @@ impl Simulator {
                             // controller the block's waste AND its
                             // virtual wall time (the latency-target
                             // signal), then unparking admission.
+                            let mut promoted = 0u64;
                             while let Some(front) = mv_blocks.front() {
                                 if front.commits < front.hi - front.lo {
                                     break;
                                 }
                                 let b = mv_blocks.pop_front().unwrap();
+                                promoted += 1;
                                 let wall = std::time::Duration::from_secs_f64(
                                     self.cost
                                         .to_seconds(now.saturating_sub(b.admitted_at))
@@ -739,7 +741,15 @@ impl Simulator {
                             }
                             th.cur = None;
                             th.state = TState::Ready;
-                            queue.push(Reverse((now, tid)));
+                            // The promoting thread pays the reclamation
+                            // pass (retire + epoch advance + limbo
+                            // frees) for each block it promoted before
+                            // picking up new work — mirrors the live
+                            // complete_head path.
+                            queue.push(Reverse((
+                                now + scale(self.cost.mv_reclaim_per_block) * promoted,
+                                tid,
+                            )));
                         }
                         continue;
                     }

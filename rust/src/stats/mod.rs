@@ -79,6 +79,22 @@ pub struct TxStats {
     /// Watchdog escalations to the serial lock backend
     /// (`engine::degraded`).
     pub degradations: u64,
+    /// Peak live recorded-set cells across the batch pipeline's
+    /// reclamation domain (`mem::epoch`) — retired minus reclaimed,
+    /// sampled at every retire. A session property: merges take the
+    /// max, not the sum. Bounded (plateaus) when reclamation is on;
+    /// grows with the stream when it is off.
+    pub mv_live_cells: u64,
+    /// Recorded-set cells retired into epoch limbo (superseded
+    /// incarnations plus each promoted block's final sets).
+    pub mv_retired: u64,
+    /// Recorded-set cells actually freed once every live worker
+    /// passed their epoch. Stays 0 with reclamation disabled.
+    pub mv_reclaimed: u64,
+    /// Peak bump-arena footprint (bytes) of the lock-free store's
+    /// version segments and address entries, sampled at promotion.
+    /// A session property: merges take the max, not the sum.
+    pub arena_bytes: u64,
     /// Wall-clock or virtual nanoseconds attributed to this thread.
     pub time_ns: u64,
     /// Per-transaction attempt→commit latency (only populated when
@@ -147,6 +163,10 @@ impl TxStats {
         self.quarantines += other.quarantines;
         self.watchdog_kicks += other.watchdog_kicks;
         self.degradations += other.degradations;
+        self.mv_live_cells = self.mv_live_cells.max(other.mv_live_cells);
+        self.mv_retired += other.mv_retired;
+        self.mv_reclaimed += other.mv_reclaimed;
+        self.arena_bytes = self.arena_bytes.max(other.arena_bytes);
         self.time_ns = self.time_ns.max(other.time_ns);
         self.txn_lat.merge(&other.txn_lat);
         self.block_lat.merge(&other.block_lat);

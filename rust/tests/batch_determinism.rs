@@ -19,7 +19,7 @@ use dyadhytm::batch::workload::{
 };
 use dyadhytm::engine::auto::{AutoController, Sample};
 use dyadhytm::runtime::PoolConfig;
-use dyadhytm::batch::{BatchSystem, BatchTxn};
+use dyadhytm::batch::{set_reclaim, BatchSystem, BatchTxn};
 use dyadhytm::graph::{computation, generation, rmat, subgraph, verify, Graph, Ssca2Config};
 use dyadhytm::htm::HtmConfig;
 use dyadhytm::hytm::{PolicySpec, TmSystem};
@@ -670,6 +670,158 @@ fn pipeline_smoke_under_batch_policy() {
     }
     tuples.truncate(report.edges);
     verify::check_graph(&g, &tuples).unwrap();
+}
+
+/// `batch::set_reclaim` flips process-global state and this binary's
+/// tests run concurrently: every test that turns reclamation off holds
+/// this lock for its whole body and restores `true` before releasing.
+static RECLAIM_TOGGLE: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Run one pipelined stream (unpinned pool) and return its report plus
+/// the final heap image, with the reclamation toggle as given.
+fn run_stream_with_reclaim(
+    seed: u64,
+    zipf_s: f64,
+    n_txns: usize,
+    workers: usize,
+    block: usize,
+    window: usize,
+    reclaim: bool,
+) -> (dyadhytm::batch::BatchReport, Vec<u64>) {
+    set_reclaim(reclaim);
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(LINES - 1, zipf_s);
+    let txns: Vec<BatchTxn> = (0..n_txns)
+        .map(|_| desc_txn(random_desc(&mut rng, &zipf), rng.next_u64()))
+        .collect();
+    let words = LINES * WORDS_PER_LINE;
+    let heap = TxHeap::new(words);
+    let mut init = Rng::new(seed ^ 0x6C0B);
+    for addr in 0..words {
+        heap.store(addr, init.next_u64());
+    }
+    let mut ctl = BlockSizeController::fixed(block).with_window(window);
+    let pool = PoolConfig { workers, pin: false };
+    let report = run_txns_pipelined_with_pool(&heap, txns, &pool, &mut ctl);
+    assert_eq!(report.txns, n_txns, "stream must fully commit");
+    (report, (0..words).map(|a| heap.load(a)).collect())
+}
+
+/// Sequential-oracle heap image for the same seeded stream.
+fn oracle_image(seed: u64, zipf_s: f64, n_txns: usize) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(LINES - 1, zipf_s);
+    let txns: Vec<BatchTxn> = (0..n_txns)
+        .map(|_| desc_txn(random_desc(&mut rng, &zipf), rng.next_u64()))
+        .collect();
+    let words = LINES * WORDS_PER_LINE;
+    let heap = TxHeap::new(words);
+    let mut init = Rng::new(seed ^ 0x6C0B);
+    for addr in 0..words {
+        heap.store(addr, init.next_u64());
+    }
+    run_sequential(&heap, &txns);
+    (0..words).map(|a| heap.load(a)).collect()
+}
+
+#[test]
+fn long_stream_reclamation_bounds_live_cells_and_preserves_output() {
+    chaos();
+    let _guard = RECLAIM_TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+
+    // The PR-9 tentpole property, long-stream half: 1024 transactions
+    // through 16-txn blocks is a 64-block stream — far more blocks
+    // than the 3-deep window — so with reclamation on, the live
+    // recorded-set cell count must *plateau* (peak strictly below the
+    // retired total: epochs passed and limbo actually drained mid-run)
+    // while the heap stays bitwise-equal to the sequential oracle.
+    // With reclamation off, the same stream leaks by design — the
+    // peak equals the retired total — and must still be bit-exact.
+    let (seed, n, block, window, workers) = (0x9EC1A1_u64, 1024usize, 16usize, 3usize, 4usize);
+    let oracle = oracle_image(seed, 0.8, n);
+    let (on, heap_on) = run_stream_with_reclaim(seed, 0.8, n, workers, block, window, true);
+    let (off, heap_off) = run_stream_with_reclaim(seed, 0.8, n, workers, block, window, false);
+    assert_eq!(heap_on, oracle, "reclaim-on heap must match the oracle");
+    assert_eq!(heap_off, oracle, "reclaim-off heap must match the oracle");
+    assert!(on.mv_retired > 0, "64 promotions must retire sets");
+    assert!(on.mv_reclaimed > 0, "epochs must pass mid-run");
+    assert!(
+        on.mv_live_cells < on.mv_retired,
+        "live cells must plateau below the retired total: peak {} vs retired {}",
+        on.mv_live_cells,
+        on.mv_retired
+    );
+    assert!(on.arena_bytes > 0, "promotion samples arena footprint");
+    assert_eq!(off.mv_reclaimed, 0, "disabled reclamation must not free");
+    assert_eq!(
+        off.mv_live_cells, off.mv_retired,
+        "disabled reclamation leaks: the peak is the whole stream"
+    );
+
+    // And as a property: reclaim on/off heaps stay bitwise-identical
+    // to each other and the oracle across seeds × workers × windows.
+    qcheck_res(
+        "reclaim on == reclaim off == sequential (bitwise)",
+        6,
+        |rng| {
+            (
+                rng.next_u64(),
+                64 + rng.below(128) as usize,
+                1 + rng.below(4) as usize,
+                2 + rng.below(3) as usize,
+            )
+        },
+        |&(seed, n, workers, window)| {
+            let oracle = oracle_image(seed, 0.8, n);
+            let (on, heap_on) = run_stream_with_reclaim(seed, 0.8, n, workers, 8, window, true);
+            let (off, heap_off) =
+                run_stream_with_reclaim(seed, 0.8, n, workers, 8, window, false);
+            if heap_on != oracle {
+                return Err(format!(
+                    "reclaim-on diverged from oracle (n={n}, workers={workers}, window={window})"
+                ));
+            }
+            if heap_off != heap_on {
+                return Err(format!(
+                    "reclaim toggle changed output (n={n}, workers={workers}, window={window})"
+                ));
+            }
+            if on.mv_retired == 0 || off.mv_reclaimed != 0 {
+                return Err(format!(
+                    "counter contract broken: on.retired={} off.reclaimed={}",
+                    on.mv_retired, off.mv_reclaimed
+                ));
+            }
+            Ok(())
+        },
+    );
+    set_reclaim(true);
+}
+
+#[test]
+fn reclamation_retires_exactly_once_under_quarantine() {
+    chaos();
+    let _guard = RECLAIM_TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    set_reclaim(true);
+    // Conflict-heavy hubs maximize re-incarnations (each one swaps out
+    // a superseded recorded-sets chain), and under the chaos tier
+    // (`FAULT_SPEC` with panic/validation injection) quarantined and
+    // panicking transactions churn extra incarnations on top. The
+    // exactly-once law: after the pool joins and the finale flushes,
+    // every retired cell has been freed exactly once — retired and
+    // reclaimed totals match, and nothing double-frees (a double free
+    // would double-count reclaimed past retired or crash outright).
+    for (seed, workers) in [(0xC4A05_u64, 4usize), (0xC4A06, 2)] {
+        let oracle = oracle_image(seed, 1.5, 256);
+        let (report, heap) = run_stream_with_reclaim(seed, 1.5, 256, workers, 8, 3, true);
+        assert_eq!(heap, oracle, "workers={workers}: heap must match the oracle");
+        assert!(report.mv_retired > 0, "workers={workers}: hub churn must retire sets");
+        assert_eq!(
+            report.mv_retired, report.mv_reclaimed,
+            "workers={workers}: flush must free every retired cell exactly once"
+        );
+    }
+    set_reclaim(true);
 }
 
 #[test]
