@@ -29,7 +29,10 @@
 //! `batch-mutex` for the sharded-mutex baseline, `batch-pipelined` for
 //! the cross-block-overlapping session at each window depth,
 //! `batch-adaptive` for the controller run, whose `block`/`window` are
-//! the converged values). CI runs the bench in smoke mode
+//! the converged values, and `serve-ingest` / `serve-mixed` for the
+//! continuous-serving session cells — the mixed cell's `lat_*` columns
+//! hold the abort-free snapshot-read serving percentiles). CI runs the
+//! bench in smoke mode
 //! (`BENCH_SMOKE=1`, smaller sizes), **fails the run if the sweep
 //! produced no records** (an empty `[]` would otherwise upload as a
 //! "successful" artifact), and uploads the file.
@@ -442,6 +445,121 @@ fn reclaim_overhead_ab(records: &mut Vec<SweepRec>) {
     records.push(off);
 }
 
+/// Continuous-serving cells: one long-lived `ServeSession` per cell,
+/// four producers streaming tenant-partitioned edge/bridge mutations
+/// through the bounded ingress into the pipelined window.
+/// `serve-ingest` is the write-only baseline; `serve-mixed` overlays a
+/// concurrent snapshot reader querying every tenant (degree +
+/// neighborhood off one pinned horizon per pass). Both cells land in
+/// `BENCH_batch.json` under their own policy names — the CI
+/// throughput-delta gate tracks serving regressions like any other
+/// cell — with the **mixed cell's `lat_*` columns carrying the
+/// snapshot-read serving percentiles** (p50/p90/p99 of the abort-free
+/// read path) rather than write-path execution latency.
+fn serve_cells(records: &mut Vec<SweepRec>) {
+    use dyadhytm::serve::{Op, ServeConfig, ServeSession, TenantLayout};
+
+    const WORKERS: usize = 4;
+    const PRODUCERS: usize = 4;
+    const TENANTS: usize = 4;
+    const VERTS: usize = 64;
+    let per_producer: usize = if smoke() { 2048 } else { 8192 };
+    let (window, block) = (3usize, 1024usize);
+    let lay = TenantLayout::new(TENANTS, VERTS, 8);
+    let total = (PRODUCERS * per_producer) as u64;
+
+    let mut cell = |policy: &'static str, with_reads: bool| -> SweepRec {
+        let heap = lay.make_heap();
+        let cfg = ServeConfig {
+            producers: PRODUCERS,
+            workers: WORKERS,
+            window,
+            block,
+            queue_cap: 1024,
+            ..ServeConfig::default()
+        };
+        let t0 = Instant::now();
+        let (rep, _) = ServeSession::run(&heap, lay, &cfg, |h| {
+            std::thread::scope(|s| {
+                for p in 0..PRODUCERS {
+                    s.spawn(move || {
+                        let mut rng = Rng::new(0x5E12_0000 + p as u64);
+                        for _ in 0..per_producer {
+                            let t = rng.below(TENANTS as u64) as usize;
+                            let u = rng.below(VERTS as u64) as usize;
+                            let v = rng.below(VERTS as u64) as usize;
+                            let op = if rng.below(8) == 0 {
+                                Op::Bridge { from: t, to: (t + 1) % TENANTS, u, v }
+                            } else {
+                                Op::Edge { tenant: t, u, v }
+                            };
+                            h.submit(p, op).expect("producer closed early");
+                        }
+                        h.close_producer(p);
+                    });
+                }
+                if with_reads {
+                    // Concurrent reader on the session thread: one
+                    // pinned snapshot per pass, every tenant queried,
+                    // until the ingress has drained the full stream.
+                    let mut rng = Rng::new(0x5EAD);
+                    loop {
+                        let snap = h.snapshot();
+                        for t in 0..TENANTS {
+                            let v = rng.below(VERTS as u64) as usize;
+                            let _ = snap.degree(t, v);
+                            let _ = snap.neighbors(t, v);
+                        }
+                        if h.status().drained >= total {
+                            break;
+                        }
+                    }
+                }
+            });
+        });
+        let tps = total as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+        assert_eq!(
+            rep.promoted_txns, total,
+            "{policy}: exactly-once ingestion violated"
+        );
+        let mut rec =
+            SweepRec::from_report(policy, window, block, 0.0, WORKERS, &rep.batch, tps);
+        if with_reads {
+            rec.lat_p50_ns = rep.read_lat.p50();
+            rec.lat_p90_ns = rep.read_lat.p90();
+            rec.lat_p99_ns = rep.read_lat.p99();
+        }
+        println!(
+            "> {policy} (window {window}, block {block}, {PRODUCERS} producers, \
+             {TENANTS} tenants, {total} ops): {tps:.0} ops/s, {} blocks, \
+             reads {} (p99 {} ns), queue peak {}, snapshot age {} ns, \
+             log live peak {} cells ({} reclaimed)",
+            rep.promoted_blocks,
+            rep.served_reads,
+            rep.read_lat.p99(),
+            rep.queue_depth_peak,
+            rep.snapshot_age_ns,
+            rep.log_live_peak_cells,
+            rep.log_reclaimed_cells,
+        );
+        println!("BENCH_JSON {}", rec.to_json());
+        rec
+    };
+
+    println!("\n### batch_throughput — continuous-serving session cells\n");
+    let ingest = cell("serve-ingest", false);
+    let mixed = cell("serve-mixed", true);
+    let slowdown = ingest.txns_per_sec / mixed.txns_per_sec.max(1e-9);
+    println!(
+        "> serve read overlay cost: {slowdown:.3}x ingest slowdown with a \
+         full-time snapshot reader (reads are abort-free: conflict rate \
+         {:.4} mixed vs {:.4} ingest-only)",
+        mixed.conflict, ingest.conflict,
+    );
+    records.push(ingest);
+    records.push(mixed);
+}
+
 /// A/B the telemetry overhead contract end to end: the same Zipf-RMW
 /// cell with telemetry fully off (no timestamps, trace sites reduce to
 /// one relaxed load + branch) and with tracing + latency timing on.
@@ -568,6 +686,7 @@ fn main() {
     dyadhytm::obs::set_timing(true);
     let mut records = block_conflict_sweep();
     reclaim_overhead_ab(&mut records);
+    serve_cells(&mut records);
     dyadhytm::obs::set_timing(false);
     write_bench_json(&records);
     eprintln!("[batch_throughput: finished in {:?}]", t0.elapsed());

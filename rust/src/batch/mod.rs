@@ -597,7 +597,8 @@ impl BatchSystem {
     }
 
     /// The full pipelined session: explicit pool shape plus a
-    /// main-thread job. Everything above delegates here.
+    /// main-thread job. Everything above delegates here (with a no-op
+    /// promotion hook).
     pub fn run_pipelined_pool_with<'b, M, S, R, F>(
         heap: &TxHeap,
         source: S,
@@ -609,6 +610,44 @@ impl BatchSystem {
         M: MvStore,
         S: FnMut(usize) -> Option<Vec<BatchTxn<'b>>> + Send,
         F: FnOnce() -> R,
+    {
+        Self::run_pipelined_session::<M, S, R, F, _>(
+            heap,
+            source,
+            pool,
+            ctl,
+            main,
+            |_: u64, _: &M, _: &BatchReport| (),
+        )
+    }
+
+    /// [`run_pipelined_pool_with`](Self::run_pipelined_pool_with) plus
+    /// an `on_promote` hook — the continuous-serving plane's tap into
+    /// the promotion boundary. The hook runs on the completing worker
+    /// once the head block's scheduler is done and its completion is
+    /// claimed, but **before** its winning versions are written back
+    /// to the heap (and before its sets retire and the epoch
+    /// advances): the one point where the block's final `(addr,
+    /// value)` pairs are knowable (`MvStore::for_each_winning`) while
+    /// the heap still holds the pre-promotion state — exactly what an
+    /// abort-free snapshot log needs under concurrent promotions. The
+    /// hook receives the block's stream-wide admission sequence, its
+    /// store, and its (already-folded) per-block report. Called under
+    /// the window lock, so promotions — and hook invocations — are
+    /// strictly ordered by sequence; keep it short.
+    pub fn run_pipelined_session<'b, M, S, R, F, P>(
+        heap: &TxHeap,
+        source: S,
+        pool: &PoolConfig,
+        ctl: &mut BlockSizeController,
+        main: F,
+        on_promote: P,
+    ) -> (BatchReport, R)
+    where
+        M: MvStore,
+        S: FnMut(usize) -> Option<Vec<BatchTxn<'b>>> + Send,
+        F: FnOnce() -> R,
+        P: Fn(u64, &M, &BatchReport) + Sync,
     {
         let t0 = Instant::now();
         let workers = pool.workers.max(1);
@@ -705,6 +744,10 @@ impl BatchSystem {
             if !head.scheduler.done() || head.completed.swap(true, Ordering::SeqCst) {
                 return;
             }
+            // Fold the block's report once; the promotion hook sees
+            // the same numbers the session report merges below.
+            let block_report = head.report();
+            on_promote(head.seq.load(Ordering::SeqCst), &head.mv, &block_report);
             head.mv.write_back(heap);
             // Publish the flush: stale chain snapshots that still link
             // this block fall through to the heap from here on.
@@ -721,7 +764,7 @@ impl BatchSystem {
             );
             {
                 let mut rep = report.lock().unwrap();
-                rep.merge(&head.report());
+                rep.merge(&block_report);
                 if crate::obs::timing_enabled() {
                     rep.block_lat.record_duration(block_lat);
                 }
@@ -812,6 +855,28 @@ impl BatchSystem {
                     if snap.is_empty() {
                         if exhausted.load(Ordering::SeqCst) {
                             return;
+                        }
+                        // Empty window with the stream still open: a
+                        // *paused* serving stream never promotes, so
+                        // nothing would ever advance the epoch past
+                        // the last promotion's limbo bins — the drain
+                        // bug `flush()` papers over only because a
+                        // batch run's pool always joins. Quiescent
+                        // flush reclaims up to the live horizon (our
+                        // own per-iteration pin re-publishes above, so
+                        // an idle pool converges on an empty limbo
+                        // within two laps) and is a cheap no-op once
+                        // limbo is empty.
+                        let (qc, qb) = gc.quiescent_flush();
+                        if qc != 0 || qb != 0 {
+                            crate::obs::trace::reclaim(qc, qb);
+                        }
+                        // An empty window is idleness, not a stall:
+                        // heartbeat the watchdog so the first
+                        // flat-progress poll after a long serving
+                        // pause cannot spuriously kick or escalate.
+                        if let Some(wd) = &wd {
+                            wd.note_idle();
                         }
                         admit(w);
                         continue;
@@ -964,10 +1029,19 @@ impl BatchSystem {
         }
         head.scheduler.reopen_validation();
         let parked = snap.iter().any(|b| !b.parked.lock().unwrap().is_empty());
+        // Zero backlog on both task streams of every block means all
+        // remaining work is claimed by workers whose counters are
+        // flat — a dead/stalled worker holding tickets, not a retry
+        // storm.
+        let all_claimed = snap.iter().all(|b| {
+            b.scheduler.execution_backlog() == 0 && b.scheduler.validation_backlog() == 0
+        });
         let diag = if recovered > 0 {
             Diagnosis::LostWakeup
         } else if parked {
             Diagnosis::ParkedChain
+        } else if all_claimed {
+            Diagnosis::WorkerStall
         } else {
             Diagnosis::Livelock
         };

@@ -175,6 +175,15 @@ pub trait MvStore: Send + Sync {
     /// the transactions one by one in index order.
     fn write_back(&self, heap: &TxHeap);
 
+    /// Visit the winning (highest-index) version of every address
+    /// this block wrote — the exact set of `(addr, value)` pairs
+    /// [`write_back`](Self::write_back) would flush. The serving
+    /// plane's snapshot log captures these *before* write-back so
+    /// pinned readers keep seeing the pre-promotion value of each
+    /// address after the heap moves on. Must only be called once the
+    /// block's scheduler is done (same precondition as `write_back`).
+    fn for_each_winning(&self, f: &mut dyn FnMut(Addr, u64));
+
     /// The modification watermark of `addr`'s shard, sampled into each
     /// [`ReadDesc`] before the read. Default 0: stores without
     /// watermarks never let validation skip.
@@ -848,6 +857,24 @@ impl MvStore for MvMemory {
         }
     }
 
+    fn for_each_winning(&self, f: &mut dyn FnMut(Addr, u64)) {
+        for head in self.shards.iter() {
+            let mut cur = head.load(SeqCst);
+            while !cur.is_null() {
+                let e = unsafe { &*cur };
+                if let Some((_, _, estimate, value)) = e.best_below(usize::MAX) {
+                    debug_assert!(
+                        !estimate,
+                        "ESTIMATE survived to promotion at addr {}",
+                        e.addr
+                    );
+                    f(e.addr, value);
+                }
+                cur = e.chain.load(SeqCst);
+            }
+        }
+    }
+
     fn mark_of(&self, addr: Addr) -> u64 {
         self.marks[Self::shard_of(addr)].load(SeqCst)
     }
@@ -1016,6 +1043,21 @@ impl MvStore for MutexMvMemory {
             }
         }
     }
+
+    fn for_each_winning(&self, f: &mut dyn FnMut(Addr, u64)) {
+        for shard in &self.shards {
+            let shard = shard.lock().unwrap();
+            for (&addr, versions) in shard.iter() {
+                if let Some((_, cell)) = versions.iter().next_back() {
+                    debug_assert!(
+                        !cell.estimate,
+                        "ESTIMATE survived to promotion at addr {addr}"
+                    );
+                    f(addr, cell.value);
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1100,6 +1142,27 @@ mod tests {
         assert_eq!(heap.load(a), 30);
     }
 
+    fn check_for_each_winning_matches_write_back<M: MvStore>() {
+        let heap = TxHeap::new(256);
+        let a = heap.alloc(1);
+        let b = heap.alloc(1);
+        let mv = M::new(4);
+        mv.record((0, 0), Vec::new(), &[(a, 10), (b, 5)]);
+        mv.record((2, 1), Vec::new(), &[(a, 30)]);
+        let mut seen = std::collections::BTreeMap::new();
+        mv.for_each_winning(&mut |addr, v| {
+            assert!(seen.insert(addr, v).is_none(), "address visited twice");
+        });
+        mv.write_back(&heap);
+        assert_eq!(
+            seen.into_iter().collect::<Vec<_>>(),
+            vec![(a, heap.load(a)), (b, heap.load(b))],
+            "the visited winners must be exactly what write_back flushes"
+        );
+        assert_eq!(heap.load(a), 30);
+        assert_eq!(heap.load(b), 5);
+    }
+
     macro_rules! store_suite {
         ($modname:ident, $store:ty) => {
             mod $modname {
@@ -1128,6 +1191,10 @@ mod tests {
                 #[test]
                 fn write_back_commits_highest_version() {
                     check_write_back_commits_highest_version::<$store>();
+                }
+                #[test]
+                fn for_each_winning_matches_write_back() {
+                    check_for_each_winning_matches_write_back::<$store>();
                 }
             }
         };

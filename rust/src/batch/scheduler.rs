@@ -253,6 +253,24 @@ impl Scheduler {
         self.execution_idx.load(Ordering::SeqCst) >= self.n
     }
 
+    /// Execution-stream indices not yet handed out to any worker
+    /// (claimed-but-unfinished work is *not* counted). With
+    /// [`Scheduler::validation_backlog`], the watchdog's kick
+    /// diagnosis: a flat-progress block with zero backlog on both
+    /// streams has every remaining task claimed by a stalled worker —
+    /// in a serving session, the stall that freezes the snapshot
+    /// horizon.
+    pub fn execution_backlog(&self) -> usize {
+        self.n
+            .saturating_sub(self.execution_idx.load(Ordering::SeqCst))
+    }
+
+    /// Validation-stream indices not yet handed out to any worker.
+    pub fn validation_backlog(&self) -> usize {
+        self.n
+            .saturating_sub(self.validation_idx.load(Ordering::SeqCst))
+    }
+
     /// Emergency stop: flips the done marker so every worker drops out
     /// of its polling loop. Used by the panic guard in
     /// `BatchSystem::run` — one panicking worker (e.g. a transaction

@@ -25,6 +25,7 @@
 //! exactly as before the seam existed.
 
 pub mod auto;
+pub mod serve;
 
 /// The watchdog's last-resort escalation state. When structural
 /// recovery (re-readied wakeups, forced revalidation) fails to restart

@@ -1,0 +1,140 @@
+//! Mid-stream adaptation for the continuous-serving session.
+//!
+//! A serving session never stops to re-plan: [`ServeController`]
+//! wraps the `--policy auto` meta-controller ([`super::auto`]) and
+//! feeds it one [`Sample`] per *promoted block* (the same
+//! conflict-rate reduction the engine's interval loop uses), so the
+//! regime keeps adapting across an unbounded stream. The serving
+//! pipeline has exactly one actuation point — how many ingress
+//! operations each admission block drains — so the controller maps
+//! the winning backend onto a **drain cap**:
+//!
+//! - sparse regime (the per-transaction DyAd fast path would win) →
+//!   small blocks ([`ServeController::LATENCY_CAP`]): promotions come
+//!   fast, snapshots stay fresh, serving p99 drops;
+//! - conflicted regime (the batch backend wins) → uncapped blocks:
+//!   block speculation absorbs the conflicts and throughput rules.
+//!
+//! Every switch still goes through the shared trace plane as a
+//! `backend-switch` event (same ordinal coding as the engine), so
+//! the telemetry story is uniform between `run` and `serve`.
+
+use crate::batch::BatchReport;
+use crate::hytm::PolicySpec;
+
+use super::auto::{AutoController, Sample, DEFAULT_HYSTERESIS};
+
+/// Per-block meta-controller of one serving session (see module
+/// docs).
+pub struct ServeController {
+    auto: AutoController,
+    switches: u64,
+}
+
+impl ServeController {
+    /// Drain cap in the latency (sparse) regime: small admission
+    /// blocks keep the promoted horizon close behind the ingress.
+    pub const LATENCY_CAP: usize = 128;
+
+    pub fn new() -> Self {
+        Self::with_hysteresis(DEFAULT_HYSTERESIS)
+    }
+
+    pub fn with_hysteresis(h: u32) -> Self {
+        Self {
+            auto: AutoController::new(h),
+            switches: 0,
+        }
+    }
+
+    /// The backend the controller currently deems best.
+    pub fn current(&self) -> PolicySpec {
+        self.auto.current()
+    }
+
+    /// Backend switches made so far.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Feed one promoted block's report. On a regime switch, emits
+    /// the engine-coded `backend-switch` trace event.
+    pub fn observe_block(&mut self, rep: &BatchReport) {
+        let s = Sample::from_stats(&rep.to_stats());
+        if let Some((from, to)) = self.auto.observe(&s) {
+            self.switches += 1;
+            crate::obs::trace::backend_switch(
+                crate::engine::ordinal(from),
+                crate::engine::ordinal(to),
+            );
+        }
+    }
+
+    /// The admission-block bound the current regime asks for: the
+    /// batch backends run uncapped (throughput mode), everything
+    /// per-transaction-shaped caps at [`Self::LATENCY_CAP`]
+    /// (latency mode).
+    pub fn drain_cap(&self) -> usize {
+        match self.auto.current() {
+            PolicySpec::Batch { .. } | PolicySpec::BatchAdaptive { .. } => usize::MAX,
+            _ => Self::LATENCY_CAP,
+        }
+    }
+}
+
+impl Default for ServeController {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A block report with `txns` commits and `aborts` re-executions
+    /// — conflict rate `aborts / (aborts + txns)` after the
+    /// stats-plane fold.
+    fn block(txns: usize, aborts: u64) -> BatchReport {
+        BatchReport {
+            txns,
+            validation_aborts: aborts,
+            ..BatchReport::default()
+        }
+    }
+
+    #[test]
+    fn starts_in_throughput_mode_uncapped() {
+        let c = ServeController::new();
+        assert_eq!(c.current(), super::super::auto::start_spec());
+        assert_eq!(c.drain_cap(), usize::MAX);
+        assert_eq!(c.switches(), 0);
+    }
+
+    #[test]
+    fn sparse_stream_switches_to_latency_cap_and_back() {
+        let mut c = ServeController::with_hysteresis(1);
+        // Conflict-free blocks: the sparse regime wins, blocks cap.
+        for _ in 0..8 {
+            c.observe_block(&block(256, 0));
+        }
+        assert_eq!(c.switches(), 1, "one switch to the sparse backend");
+        assert_eq!(c.drain_cap(), ServeController::LATENCY_CAP);
+        // A conflict storm flips it back to uncapped batch blocks.
+        for _ in 0..8 {
+            c.observe_block(&block(64, 64));
+        }
+        assert_eq!(c.switches(), 2, "and one switch back");
+        assert_eq!(c.drain_cap(), usize::MAX);
+    }
+
+    #[test]
+    fn empty_blocks_carry_no_signal() {
+        let mut c = ServeController::with_hysteresis(1);
+        for _ in 0..16 {
+            c.observe_block(&block(0, 0));
+        }
+        assert_eq!(c.switches(), 0);
+        assert_eq!(c.drain_cap(), usize::MAX);
+    }
+}

@@ -59,9 +59,16 @@ pub enum Diagnosis {
     /// No recorded drops — a parked ESTIMATE chain or stuck
     /// validation frontier; recovery forces a revalidation pass.
     ParkedChain = 1,
-    /// Structural recovery found nothing: a livelocked retry storm or
-    /// a dead/stalled worker. Only escalation helps.
+    /// Structural recovery found nothing and tasks remain unclaimed:
+    /// a livelocked retry storm. Only escalation helps.
     Livelock = 2,
+    /// Structural recovery found nothing and *every* task stream is
+    /// drained: all remaining work is claimed by workers whose
+    /// progress counters are flat — a dead or stalled worker holding
+    /// tickets (the `worker_stall` fault signature). In a serving
+    /// session this is the stall that freezes the snapshot horizon:
+    /// the head block cannot promote until the holder resumes.
+    WorkerStall = 3,
 }
 
 impl Diagnosis {
@@ -70,6 +77,7 @@ impl Diagnosis {
             Diagnosis::LostWakeup => "lost-wakeup",
             Diagnosis::ParkedChain => "parked-chain",
             Diagnosis::Livelock => "livelock",
+            Diagnosis::WorkerStall => "worker-stall",
         }
     }
 }
@@ -163,6 +171,19 @@ impl Watchdog {
         } else {
             false
         }
+    }
+
+    /// Heartbeat from a pool that is *legitimately* idle (empty
+    /// pipelined window while a serving stream is paused): refresh
+    /// the deadline clock without claiming progress. A long-lived
+    /// session can idle arbitrarily long between bursts; without
+    /// this, the first flat-progress poll after a pause would compare
+    /// against a timestamp from before the pause, kick immediately,
+    /// and — repeated across a few pauses — spuriously escalate a
+    /// healthy session to the degraded backend.
+    pub fn note_idle(&self) {
+        let now = self.epoch.elapsed().as_nanos() as u64;
+        self.last_change_ns.store(now, Ordering::Relaxed);
     }
 
     /// Total kicks fired.
@@ -279,8 +300,31 @@ mod tests {
         assert_eq!(Diagnosis::LostWakeup.name(), "lost-wakeup");
         assert_eq!(Diagnosis::ParkedChain.name(), "parked-chain");
         assert_eq!(Diagnosis::Livelock.name(), "livelock");
+        assert_eq!(Diagnosis::WorkerStall.name(), "worker-stall");
         assert_eq!(Diagnosis::LostWakeup as u64, 0);
         assert_eq!(Diagnosis::ParkedChain as u64, 1);
         assert_eq!(Diagnosis::Livelock as u64, 2);
+        assert_eq!(Diagnosis::WorkerStall as u64, 3);
+    }
+
+    #[test]
+    fn idle_heartbeat_holds_the_kicker_off_across_a_pause() {
+        let wd = Watchdog::new(Duration::from_millis(2));
+        assert!(!wd.poll(1), "first observation only records progress");
+        // A paused serving stream: progress is flat, but the pool is
+        // idle (empty window), not stalled — heartbeats every lap.
+        for _ in 0..3 {
+            std::thread::sleep(Duration::from_millis(2));
+            wd.note_idle();
+        }
+        assert!(
+            !wd.poll(1),
+            "flat progress right after an idle pause must not kick"
+        );
+        assert_eq!(wd.kicks(), 0);
+        // A genuine stall after the pause still fires.
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(wd.poll(1), "real stalls still kick after a pause");
+        assert_eq!(wd.kicks(), 1);
     }
 }

@@ -218,6 +218,43 @@
 //! seeded fault spec, kernel output is bitwise-identical to the
 //! fault-free run and the process exits cleanly.
 //!
+//! ## Continuous serving: sessions, snapshots, tenants
+//!
+//! [`serve`] turns the pipelined batch system into a long-lived
+//! serving surface. A [`serve::ServeSession`] wraps one persistent
+//! `BatchSystem::run_pipelined_session`: N producer handles feed
+//! sharded bounded ingress queues ([`serve::ingress`]) whose drained
+//! chunks become admission blocks in the W-deep window — the merge is
+//! a strict round-robin that *stops* (never skips) at an open-but-
+//! empty producer, so the admitted operation order is a pure function
+//! of the per-producer sequences and close points, and timing moves
+//! only block boundaries (which block partitioning provably cannot
+//! observe: the final heap equals the sequential oracle either way;
+//! `tests/serve_session.rs` sweeps this against a round-robin replay
+//! oracle). **Session lifecycle**: `run` spins up the pool, hands the
+//! driver a [`serve::ServeHandle`] (submit / snapshot / status /
+//! quiesce), and the driver returning — or panicking — closes every
+//! producer, drains the window, and joins the pool; promotion remains
+//! the epoch boundary, so the reclamation plane keeps an unbounded
+//! session's memory flat, and an idle session drains its limbo tail
+//! via the quiescent flush instead of waiting for a join. **Snapshot
+//! contract**: each promotion absorbs the block's winning versions
+//! into a [`serve::snapshot::VersionLog`] *before* write-back; a
+//! [`serve::SnapshotHandle`] pinned at promoted-block horizon `K`
+//! observes exactly blocks `≤ K` forever — reads (degree /
+//! neighborhood / reachability probes) are abort-free and
+//! scheduler-free by construction, and an old pin holds only its own
+//! horizon's nodes while younger garbage keeps reclaiming. **Tenant
+//! partitioning**: a [`serve::TenantLayout`] splits the heap into
+//! per-tenant cell ranges; every ingested op executes through a
+//! [`serve::PartitionView`] that panics (→ quarantine) on any access
+//! outside its declared tenants, and cross-tenant
+//! [`serve::Op::Bridge`] transactions resolve through the ordinary
+//! window chain. The `serve` CLI subcommand and the `serve-mixed`
+//! bench cells exercise the whole plane under `--policy auto`, whose
+//! [`engine::serve::ServeController`] keeps adapting the admission
+//! drain cap across the stream.
+//!
 //! System inventory and the paper-vs-measured record live in
 //! `ROADMAP.md` (north star, open items) and `PAPER.md` (source
 //! abstract) at the repository root; per-module documentation below is
@@ -233,6 +270,7 @@ pub mod hytm;
 pub mod mem;
 pub mod obs;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod stm;

@@ -26,6 +26,16 @@
 //!                          L3 transactional consumers, bounded queue)
 //! dyadhytm k3     [--policy P] [--scale S] [--threads T] [--depth D]
 //!                          SSCA-2 kernel 3: multi-source BFS extraction
+//! dyadhytm serve  [--producers N] [--tenants T] [--read-mix F]
+//!                 [--duration SECS] [--workers W] [--window W]
+//!                 [--block B] [--verts V] [--cap C] [--queue-cap Q]
+//!                 [--policy auto|batch[=B]] [--seed N]
+//!                          continuous-serving session: N producers
+//!                          stream tenant-partitioned graph mutations
+//!                          while abort-free snapshot reads serve
+//!                          degree/neighborhood/reachability queries
+//!                          (`--read-mix` = probability a reader pass
+//!                          queries instead of idling)
 //! dyadhytm policies        list policy names
 //! ```
 //!
@@ -299,9 +309,149 @@ fn cmd_k3(mut a: Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_serve(mut a: Args) -> anyhow::Result<()> {
+    use dyadhytm::serve::{Op, ServeConfig, ServeSession, TenantLayout};
+    use dyadhytm::util::rng::Rng;
+    use std::time::{Duration, Instant};
+
+    let producers = a.opt_parse("--producers", 2usize).max(1);
+    let tenants = a.opt_parse("--tenants", 2usize).max(1);
+    let verts = a.opt_parse("--verts", 64usize);
+    let cap = a.opt_parse("--cap", 8usize);
+    let read_mix = a.opt_parse("--read-mix", 0.5f64).clamp(0.0, 1.0);
+    let duration = Duration::from_secs_f64(a.opt_parse("--duration", 1.0f64).max(0.0));
+    let workers = a.opt_parse("--workers", 2usize);
+    let window = a.opt_parse("--window", 2usize);
+    let block = a.opt_parse("--block", 64usize);
+    let queue_cap = a.opt_parse("--queue-cap", 256usize);
+    let seed = a.opt_parse("--seed", 0x55CA_2017u64);
+    let policy = a.opt("--policy");
+    a.finish();
+
+    let mut cfg = ServeConfig {
+        producers,
+        workers,
+        window,
+        block,
+        queue_cap,
+        ..ServeConfig::default()
+    };
+    if let Some(p) = &policy {
+        match parse_policy(p) {
+            PolicySpec::Auto { .. } => cfg.auto_policy = true,
+            PolicySpec::Batch { block } => cfg.block = block,
+            PolicySpec::BatchAdaptive { .. } => {}
+            other => {
+                eprintln!(
+                    "serve only takes --policy auto|batch[=B] (got {})",
+                    other.name()
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    let lay = TenantLayout::new(tenants, verts, cap);
+    let heap = lay.make_heap();
+
+    let (rep, final_degrees) = ServeSession::run(&heap, lay, &cfg, |h| {
+        std::thread::scope(|s| {
+            for p in 0..producers {
+                s.spawn(move || {
+                    let mut rng = Rng::new(seed ^ (0xA5E1 + 0x1000 * p as u64));
+                    let t0 = Instant::now();
+                    while t0.elapsed() < duration {
+                        let t = rng.below(tenants as u64) as usize;
+                        let u = rng.below(verts as u64) as usize;
+                        let v = rng.below(verts as u64) as usize;
+                        // One op in eight crosses tenants (when it can).
+                        let op = if tenants > 1 && rng.below(8) == 0 {
+                            Op::Bridge { from: t, to: (t + 1) % tenants, u, v }
+                        } else {
+                            Op::Edge { tenant: t, u, v }
+                        };
+                        if h.submit(p, op).is_err() {
+                            break;
+                        }
+                    }
+                    h.close_producer(p);
+                });
+            }
+            // Reader loop on the session thread, concurrent with the
+            // producers: each pass either queries every tenant from
+            // one pinned snapshot (probability `read_mix`) or idles.
+            let mut rng = Rng::new(seed ^ 0x5EAD);
+            let t0 = Instant::now();
+            while t0.elapsed() < duration {
+                if rng.next_f64() < read_mix {
+                    let snap = h.snapshot();
+                    for t in 0..tenants {
+                        let v = rng.below(verts as u64) as usize;
+                        let _ = snap.degree(t, v);
+                        let _ = snap.neighbors(t, v);
+                        if rng.below(4) == 0 {
+                            let dst = rng.below(verts as u64) as usize;
+                            let _ = snap.reachable(t, v, dst, 4);
+                        }
+                    }
+                } else {
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+            }
+        });
+        // Producers closed and joined: drain the window, then one
+        // guaranteed probe per tenant off the final snapshot (so a
+        // smoke run always serves >= 1 read per tenant).
+        h.quiesce();
+        let snap = h.snapshot();
+        (0..tenants)
+            .map(|t| snap.degree(t, 0))
+            .collect::<Vec<u64>>()
+    });
+
+    println!(
+        "serve: {} ops from {} producers in {:?} ({:.0} ops/s), {} blocks promoted",
+        rep.promoted_txns, producers, rep.batch.elapsed, rep.ingest_rate, rep.promoted_blocks
+    );
+    anyhow::ensure!(
+        rep.promoted_txns == rep.submitted,
+        "exactly-once violated: {} submitted vs {} promoted",
+        rep.submitted,
+        rep.promoted_txns
+    );
+    for (t, reads) in rep.reads_by_tenant.iter().enumerate() {
+        println!(
+            "serve: tenant {t} reads={reads} degree(v0)={}",
+            final_degrees[t]
+        );
+    }
+    println!(
+        "serve: reads={} p50={}ns p99={}ns snapshot_age={}ns",
+        rep.served_reads,
+        rep.read_lat.p50(),
+        rep.read_lat.p99(),
+        rep.snapshot_age_ns
+    );
+    println!(
+        "serve: queue_peak={} policy_switches={} mv_live_cells={} mv_retired={} mv_reclaimed={}",
+        rep.queue_depth_peak,
+        rep.policy_switches,
+        rep.batch.mv_live_cells,
+        rep.batch.mv_retired,
+        rep.batch.mv_reclaimed
+    );
+    println!(
+        "serve: log_live_peak={} log_retired={} log_reclaimed={} aborts={}",
+        rep.log_live_peak_cells,
+        rep.log_retired_cells,
+        rep.log_reclaimed_cells,
+        rep.batch.validation_aborts
+    );
+    Ok(())
+}
+
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: dyadhytm <run|sim|headline|tune|calibrate|check-artifacts|pipeline|k3|policies> [flags]\n\
+        "usage: dyadhytm <run|sim|headline|tune|calibrate|check-artifacts|pipeline|k3|serve|policies> [flags]\n\
          see README for flags"
     );
     ExitCode::from(2)
@@ -414,6 +564,7 @@ fn main() -> ExitCode {
         }
         "pipeline" => cmd_pipeline(a),
         "k3" => cmd_k3(a),
+        "serve" => cmd_serve(a),
         "policies" => {
             a.finish();
             for s in [

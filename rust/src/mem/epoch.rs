@@ -36,6 +36,30 @@
 //! ([`EpochGc::with_reclaim`]) — retires still count into the limbo
 //! (so the bench A/B can price the leak) but nothing is freed before
 //! the `EpochGc` itself drops.
+//!
+//! # Reader pins and quiescent sessions
+//!
+//! The continuous-serving plane (`crate::serve`) adds two demands the
+//! original batch-run shape never made:
+//!
+//! * **Transient reader pins** ([`pin_reader`](EpochGc::pin_reader)):
+//!   snapshot queries traverse store pointers from threads that are
+//!   not pool workers and have no slot index. A separate fixed pool of
+//!   CAS-acquired reader slots participates in the reclamation horizon
+//!   exactly like worker slots. A reader pin is held only for the
+//!   duration of one pointer traversal (microseconds) — the *snapshot
+//!   horizon* itself is pinned by version-visibility bookkeeping in
+//!   `serve::snapshot`, not by an epoch pin, so an hours-old snapshot
+//!   never stalls reclamation of younger garbage.
+//! * **Quiescent flush**
+//!   ([`quiescent_flush`](EpochGc::quiescent_flush)): [`flush`]
+//!   (EpochGc::flush) assumes the pool has joined (nothing pinned), so
+//!   a session that idles without exiting would strand the final limbo
+//!   bins forever — promotion, the normal epoch boundary, stops
+//!   happening when the stream pauses. `quiescent_flush` is safe to
+//!   call from a still-pinned worker: it advances and reclaims only up
+//!   to the live horizon, and skips the advance entirely when limbo is
+//!   already empty so an idle loop cannot spin the epoch counter.
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -77,10 +101,16 @@ pub struct GcCounters {
     pub arena_peak_bytes: u64,
 }
 
+/// Size of the transient reader-pin slot pool. Reader pins are held
+/// for one pointer traversal, so a small fixed pool suffices; an
+/// acquirer finding all slots busy spins until one frees.
+const READER_SLOTS: usize = 32;
+
 /// One pipelined session's epoch-reclamation domain.
 pub struct EpochGc {
     global: AtomicU64,
     slots: Box<[Slot]>,
+    reader_slots: Box<[Slot]>,
     limbo: Mutex<VecDeque<Bin>>,
     enabled: bool,
     retired_cells: AtomicU64,
@@ -102,6 +132,19 @@ impl Drop for EpochGuard<'_> {
     }
 }
 
+/// RAII pin of one transient reader slot (see
+/// [`EpochGc::pin_reader`]); dropping it releases the slot back to
+/// the pool.
+pub struct ReaderPin<'g> {
+    slot: &'g Slot,
+}
+
+impl Drop for ReaderPin<'_> {
+    fn drop(&mut self) {
+        self.slot.epoch.store(0, SeqCst);
+    }
+}
+
 impl EpochGc {
     /// Domain for `workers` pin slots, reclamation on.
     pub fn new(workers: usize) -> Self {
@@ -115,6 +158,12 @@ impl EpochGc {
         Self {
             global: AtomicU64::new(1),
             slots: (0..workers.max(1))
+                .map(|_| Slot {
+                    epoch: AtomicU64::new(0),
+                    _pad: [0; 7],
+                })
+                .collect(),
+            reader_slots: (0..READER_SLOTS)
                 .map(|_| Slot {
                     epoch: AtomicU64::new(0),
                     _pad: [0; 7],
@@ -154,6 +203,41 @@ impl EpochGc {
             if self.global.load(SeqCst) == e {
                 return EpochGuard { slot };
             }
+        }
+    }
+
+    /// Pin a transient reader slot to the current epoch. For threads
+    /// outside the worker pool (snapshot queries) that need to
+    /// traverse store pointers another thread may concurrently
+    /// retire. CAS-scans the fixed reader pool for a free slot,
+    /// spinning if all are briefly busy; once a slot is owned, the
+    /// same publish-then-recheck loop as [`pin`](Self::pin) closes
+    /// the stale-epoch race. Hold only across one traversal — a
+    /// long-held reader pin stalls reclamation of everything retired
+    /// after it.
+    pub fn pin_reader(&self) -> ReaderPin<'_> {
+        loop {
+            for slot in self.reader_slots.iter() {
+                if slot.epoch.load(SeqCst) != 0 {
+                    continue;
+                }
+                let e = self.global.load(SeqCst);
+                if slot.epoch.compare_exchange(0, e, SeqCst, SeqCst).is_err() {
+                    continue;
+                }
+                // The slot is ours now; plain stores re-publish if the
+                // global moved between our read and the CAS.
+                let mut cur = e;
+                loop {
+                    let now = self.global.load(SeqCst);
+                    if now == cur {
+                        return ReaderPin { slot };
+                    }
+                    slot.epoch.store(now, SeqCst);
+                    cur = now;
+                }
+            }
+            std::hint::spin_loop();
         }
     }
 
@@ -200,7 +284,7 @@ impl EpochGc {
     /// nobody is pinned.
     fn min_pinned(&self) -> u64 {
         let mut min = u64::MAX;
-        for s in self.slots.iter() {
+        for s in self.slots.iter().chain(self.reader_slots.iter()) {
             let e = s.epoch.load(SeqCst);
             if e != 0 && e < min {
                 min = e;
@@ -245,6 +329,24 @@ impl EpochGc {
     /// the pool joined, so nothing is pinned — reclaim it all (when
     /// enabled).
     pub fn flush(&self) -> (u64, u64) {
+        self.advance();
+        self.try_reclaim()
+    }
+
+    /// Drain limbo from *inside* a still-running session. Unlike
+    /// [`flush`](Self::flush) this is safe to call while workers (or
+    /// readers) remain pinned: it reclaims only up to the live
+    /// horizon, and it advances the epoch only when there is garbage
+    /// to move past — so an idle loop calling it every poll neither
+    /// frees anything a pin still protects nor spins the global epoch
+    /// counter. A worker that re-pins each loop iteration drains a
+    /// paused stream's tail within two idle iterations: the first
+    /// call advances past the youngest bin, the re-pin publishes the
+    /// new epoch, and the second call's horizon passes the bin.
+    pub fn quiescent_flush(&self) -> (u64, u64) {
+        if !self.enabled || self.limbo.lock().unwrap().is_empty() {
+            return (0, 0);
+        }
         self.advance();
         self.try_reclaim()
     }
@@ -369,6 +471,118 @@ mod tests {
         assert_eq!(k.reclaimed_cells, 20);
         assert_eq!(gc.live_cells(), 0);
         assert!(k.live_peak_cells <= 20);
+    }
+
+    #[test]
+    fn quiescent_flush_drains_a_session_that_never_joins() {
+        // The latent drain bug: `flush()` assumes the pool joins, but
+        // a serving session can idle forever with workers re-pinning
+        // each loop iteration and no promotion advancing the epoch.
+        let gc = EpochGc::new(2);
+        let drops = Arc::new(AtomicU64::new(0));
+        {
+            // Iteration 1: worker pinned at the retire epoch — the
+            // first quiescent flush advances but must hold the bin.
+            let _g = gc.pin(0);
+            retire_sentinel(&gc, &drops, 4);
+            assert_eq!(gc.quiescent_flush(), (0, 0));
+            assert_eq!(drops.load(SeqCst), 0, "own pin still guards the bin");
+        }
+        // Iteration 2: the worker re-pins at the advanced epoch; the
+        // bin's tag is now strictly below the horizon and drains.
+        let _g = gc.pin(0);
+        let (c, b) = gc.quiescent_flush();
+        assert_eq!((c, b), (4, 32));
+        assert_eq!(drops.load(SeqCst), 1);
+        assert_eq!(gc.live_cells(), 0);
+        // Empty limbo: no advance, so an idle loop cannot spin the
+        // epoch counter by polling.
+        let e = gc.epoch();
+        assert_eq!(gc.quiescent_flush(), (0, 0));
+        assert_eq!(gc.epoch(), e, "empty-limbo flush must not advance");
+    }
+
+    #[test]
+    fn quiescent_flush_disabled_domain_is_inert() {
+        let gc = EpochGc::with_reclaim(1, false);
+        let drops = Arc::new(AtomicU64::new(0));
+        retire_sentinel(&gc, &drops, 2);
+        let e = gc.epoch();
+        assert_eq!(gc.quiescent_flush(), (0, 0));
+        assert_eq!(gc.epoch(), e);
+        assert_eq!(drops.load(SeqCst), 0);
+    }
+
+    #[test]
+    fn reader_pin_holds_its_horizon_like_a_worker_pin() {
+        let gc = EpochGc::new(1);
+        let drops = Arc::new(AtomicU64::new(0));
+        retire_sentinel(&gc, &drops, 1); // bin tagged epoch 1
+        gc.advance(); // -> 2
+        let pin = gc.pin_reader(); // reader pinned at 2
+        retire_sentinel(&gc, &drops, 1); // bin tagged epoch 2
+        gc.advance(); // -> 3
+        let (c, _) = gc.try_reclaim();
+        assert_eq!(c, 1, "pre-pin garbage reclaims under a live reader");
+        assert_eq!(drops.load(SeqCst), 1);
+        assert_eq!(gc.live_cells(), 1, "the reader's epoch is held");
+        drop(pin);
+        let (c, _) = gc.try_reclaim();
+        assert_eq!(c, 1, "release frees exactly the held bin");
+        assert_eq!(drops.load(SeqCst), 2);
+    }
+
+    #[test]
+    fn reader_pins_acquire_distinct_slots_and_all_count() {
+        let gc = EpochGc::new(1);
+        let drops = Arc::new(AtomicU64::new(0));
+        // Eight simultaneous readers must each own a distinct slot.
+        let last = gc.pin_reader();
+        let pins: Vec<_> = (0..7).map(|_| gc.pin_reader()).collect();
+        retire_sentinel(&gc, &drops, 1);
+        gc.advance();
+        assert_eq!(gc.try_reclaim().0, 0, "any live reader holds the bin");
+        // Dropping all but one keeps the horizon held.
+        for p in pins {
+            drop(p);
+            assert_eq!(gc.try_reclaim().0, 0);
+        }
+        // Slot churn through the freed slots must not free anything
+        // early while `last` still pins the retire epoch.
+        drop(gc.pin_reader());
+        assert_eq!(gc.try_reclaim().0, 0);
+        assert_eq!(gc.counters().reclaimed_cells, 0);
+        drop(last);
+        assert_eq!(gc.try_reclaim().0, 1, "last reader out frees the bin");
+        assert_eq!(drops.load(SeqCst), 1);
+    }
+
+    #[test]
+    fn concurrent_reader_pins_never_lose_a_retire() {
+        // Readers cycling through the CAS pool race retires+advances;
+        // every sentinel must be freed exactly once by the end.
+        let gc = Arc::new(EpochGc::new(2));
+        let drops = Arc::new(AtomicU64::new(0));
+        const N: u64 = 200;
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let gc = Arc::clone(&gc);
+                s.spawn(move || {
+                    for _ in 0..N {
+                        let _p = gc.pin_reader();
+                        std::hint::spin_loop();
+                    }
+                });
+            }
+            for _ in 0..N {
+                retire_sentinel(&gc, &drops, 1);
+                gc.advance();
+                gc.try_reclaim();
+            }
+        });
+        gc.flush();
+        assert_eq!(drops.load(SeqCst), N, "every retire freed exactly once");
+        assert_eq!(gc.counters().reclaimed_cells, N);
     }
 
     #[test]

@@ -57,8 +57,10 @@
 //!   transaction has been quarantined.
 //! * `watchdog-kick` — the progress watchdog missed its deadline and
 //!   forced a resume: `a` = diagnosis (0 lost wakeup, 1 parked
-//!   ESTIMATE chain, 2 livelocked retry storm), `b` = transactions
-//!   recovered from the lost-wakeup set.
+//!   ESTIMATE chain, 2 livelocked retry storm, 3 worker stall —
+//!   every remaining task claimed by flat-progress workers, the
+//!   signature that freezes a serving session's snapshot horizon),
+//!   `b` = transactions recovered from the lost-wakeup set.
 //! * `degraded` — kicks without progress escalated the engine to the
 //!   global-lock serial backend: `a` = kick count at escalation.
 //! * `recovered` — hysteresis cleared and the engine left the
@@ -91,6 +93,15 @@
 //! off — `mv_retired`, `mv_reclaimed`, `arena_bytes` peak bump-arena
 //! footprint; all zero outside pipelined batch runs), plus
 //! kernel-specific extras (e.g. `threads`, `tuples`).
+//!
+//! A continuous-serving session (`kernel == "serve"`, one row per
+//! session) appends four serving-plane extras: `ingest_rate`
+//! (promoted operations per second over the session), `queue_depth`
+//! (peak queued ingress operations observed at promotion
+//! boundaries), `snapshot_age_ns` (nanoseconds from the last
+//! promotion to session end — how stale a fresh snapshot was at
+//! shutdown), and `serve_read_p99_ns` (p99 of the snapshot-query
+//! serving-latency histogram).
 //!
 //! **Fields the `--policy auto` controller consumes**
 //! (`engine::auto::Sample` reads exactly these, and

@@ -1,0 +1,373 @@
+//! Multi-producer ticketed ingress with a deterministic merge order.
+//!
+//! N producer handles feed per-producer bounded queues; the pipeline's
+//! source drains them into admission blocks. The merge is a **strict
+//! round-robin**: the drain cursor visits producers in index order,
+//! taking one operation per visit, and — crucially — *stops* (rather
+//! than skips) at a producer that is open but momentarily empty. A
+//! producer only leaves the rotation once it is closed *and* drained.
+//! Two consequences:
+//!
+//! - **Determinism.** The merged operation order is a pure function of
+//!   the per-producer operation sequences and their close points
+//!   (both fixed by the workload seed), independent of thread timing:
+//!   timing can only move *block boundaries*, and the batch layer
+//!   guarantees block partitioning never changes the final heap.
+//!   The oracle replay is therefore computable offline: rotate
+//!   producers `0..N`, one op each, dropping a producer once its
+//!   sequence is exhausted.
+//! - **Head-of-line blocking.** A stalled producer stalls admission
+//!   (the price of a deterministic merge). Producers are expected to
+//!   either feed promptly or close.
+//!
+//! Every accepted operation gets a per-producer **ticket** (its index
+//! in that producer's sequence); `pushed`/`drained` totals let the
+//! session prove exactly-once ingestion per ticket even under the
+//! fault plane: a dropped wakeup (injected on the submit notify path
+//! when a [`crate::fault`] spec is armed) is recovered by the drain's
+//! bounded wait, never by re-queueing.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::Op;
+
+/// How long a drain sleeps before re-scanning when every ready
+/// producer is empty — the recovery bound for dropped wakeups.
+const DRAIN_RECHECK: Duration = Duration::from_millis(5);
+
+/// One accepted operation plus its provenance: `ticket` is the
+/// 0-based index in `producer`'s own submission sequence.
+#[derive(Clone, Copy, Debug)]
+pub struct Ticketed {
+    pub producer: usize,
+    pub ticket: u64,
+    pub op: Op,
+}
+
+/// Error returned to a submit on a closed producer handle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Closed;
+
+struct MergeState {
+    queues: Vec<VecDeque<Ticketed>>,
+    closed: Vec<bool>,
+    /// Next producer the round-robin merge visits.
+    cursor: usize,
+    /// Accepted submissions per producer (the next ticket).
+    pushed: Vec<u64>,
+    /// Operations handed to the pipeline, total.
+    drained: u64,
+}
+
+/// The sharded bounded ingress (see module docs).
+pub struct Ingress {
+    state: Mutex<MergeState>,
+    /// Signalled on submit and close: data may be available.
+    data: Condvar,
+    /// Signalled on drain and close: queue space may be available.
+    space: Condvar,
+    cap: usize,
+}
+
+impl Ingress {
+    /// `producers` bounded queues of `cap` operations each.
+    pub fn new(producers: usize, cap: usize) -> Self {
+        let n = producers.max(1);
+        Self {
+            state: Mutex::new(MergeState {
+                queues: (0..n).map(|_| VecDeque::new()).collect(),
+                closed: vec![false; n],
+                cursor: 0,
+                pushed: vec![0; n],
+                drained: 0,
+            }),
+            data: Condvar::new(),
+            space: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    pub fn producers(&self) -> usize {
+        self.state.lock().unwrap().queues.len()
+    }
+
+    /// Submit one operation on producer `p`, blocking while its queue
+    /// is full (bounded ingress = backpressure, not loss). Returns
+    /// the operation's ticket, or [`Closed`] once the producer has
+    /// been closed. The wakeup of a waiting drain is subject to
+    /// `WakeupDrop` fault injection; the drain's bounded re-check
+    /// recovers without ever double-queueing the operation.
+    pub fn submit(&self, p: usize, op: Op) -> Result<u64, Closed> {
+        let mut st = self.state.lock().unwrap();
+        assert!(p < st.queues.len(), "producer index {p} out of range");
+        loop {
+            if st.closed[p] {
+                return Err(Closed);
+            }
+            if st.queues[p].len() < self.cap {
+                break;
+            }
+            st = self.space.wait(st).unwrap();
+        }
+        let ticket = st.pushed[p];
+        st.pushed[p] += 1;
+        st.queues[p].push_back(Ticketed {
+            producer: p,
+            ticket,
+            op,
+        });
+        drop(st);
+        if !crate::fault::inject(crate::fault::Site::WakeupDrop) {
+            self.data.notify_all();
+        }
+        Ok(ticket)
+    }
+
+    /// Close producer `p`: no further submits are accepted; already
+    /// queued operations still drain. Once its queue empties the
+    /// producer leaves the merge rotation for good.
+    pub fn close(&self, p: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.closed[p] = true;
+        drop(st);
+        self.data.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Close every producer (session shutdown).
+    pub fn close_all(&self) {
+        let mut st = self.state.lock().unwrap();
+        for c in st.closed.iter_mut() {
+            *c = true;
+        }
+        drop(st);
+        self.data.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Pull the next admission block: up to `max` operations in strict
+    /// round-robin merge order. Returns a non-empty partial block as
+    /// soon as the rotation hits an open-but-empty producer (the
+    /// pipeline should not idle on a slow producer when it already
+    /// has work), blocks while *nothing* is available, and returns
+    /// `None` once every producer is closed and drained.
+    pub fn drain(&self, max: usize) -> Option<Vec<Ticketed>> {
+        let max = max.max(1);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let n = st.queues.len();
+            let mut out: Vec<Ticketed> = Vec::new();
+            let mut finished = 0usize;
+            // Scan at most one full rotation of stalled producers
+            // between takes; `finished` counts consecutive
+            // closed-and-drained skips so a lap of the dead detects
+            // end-of-stream.
+            while out.len() < max && finished < n {
+                let p = st.cursor;
+                if let Some(t) = st.queues[p].pop_front() {
+                    out.push(t);
+                    st.drained += 1;
+                    finished = 0;
+                    st.cursor = (p + 1) % n;
+                } else if st.closed[p] {
+                    // Closed and drained: leaves the rotation.
+                    finished += 1;
+                    st.cursor = (p + 1) % n;
+                } else {
+                    // Open but empty: stop the merge here — the
+                    // cursor stays on `p` so the next drain resumes
+                    // at exactly this point of the rotation.
+                    break;
+                }
+            }
+            if !out.is_empty() {
+                drop(st);
+                self.space.notify_all();
+                return Some(out);
+            }
+            if finished == n {
+                return None; // every producer closed and drained
+            }
+            // Nothing ready: bounded wait (recovers dropped wakeups).
+            let (next, _) = self.data.wait_timeout(st, DRAIN_RECHECK).unwrap();
+            st = next;
+        }
+    }
+
+    /// Operations currently queued across all producers (sampled).
+    pub fn queue_depth(&self) -> u64 {
+        let st = self.state.lock().unwrap();
+        st.queues.iter().map(|q| q.len() as u64).sum()
+    }
+
+    /// Accepted submissions per producer so far.
+    pub fn pushed(&self) -> Vec<u64> {
+        self.state.lock().unwrap().pushed.clone()
+    }
+
+    /// `(total accepted, total drained)` — equal once the session has
+    /// pulled everything that was ever submitted.
+    pub fn totals(&self) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        (st.pushed.iter().sum(), st.drained)
+    }
+}
+
+/// Offline replay of the merge order [`Ingress::drain`] produces for
+/// the given per-producer sequences (each producer closing after its
+/// last op): one op per open producer per rotation, a producer
+/// leaving the rotation once exhausted. The serving determinism
+/// suite feeds this to the sequential oracle — the runtime merge
+/// equals it regardless of thread timing, because a drain never
+/// *skips* an open producer (it stops and waits instead).
+pub fn round_robin_merge(seqs: &[Vec<Op>]) -> Vec<Op> {
+    let mut idx = vec![0usize; seqs.len()];
+    let mut out = Vec::new();
+    let mut remaining: usize = seqs.iter().map(|s| s.len()).sum();
+    while remaining > 0 {
+        for (p, s) in seqs.iter().enumerate() {
+            if idx[p] < s.len() {
+                out.push(s[idx[p]]);
+                idx[p] += 1;
+                remaining -= 1;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(tenant: usize, u: usize, v: usize) -> Op {
+        Op::Edge { tenant, u, v }
+    }
+
+    #[test]
+    fn tickets_count_per_producer_submissions() {
+        let ing = Ingress::new(2, 8);
+        assert_eq!(ing.submit(0, op(0, 0, 1)), Ok(0));
+        assert_eq!(ing.submit(0, op(0, 1, 2)), Ok(1));
+        assert_eq!(ing.submit(1, op(0, 2, 3)), Ok(0));
+        assert_eq!(ing.pushed(), vec![2, 1]);
+        ing.close(0);
+        assert_eq!(ing.submit(0, op(0, 3, 4)), Err(Closed));
+        // Queued ops survive the close.
+        assert_eq!(ing.totals(), (3, 0));
+    }
+
+    #[test]
+    fn drain_merges_strict_round_robin_and_stops_at_open_empty() {
+        let ing = Ingress::new(3, 8);
+        // Producer 0: a,b ; producer 1: c ; producer 2: (empty, open).
+        ing.submit(0, op(0, 0, 1)).unwrap();
+        ing.submit(0, op(0, 0, 2)).unwrap();
+        ing.submit(1, op(0, 1, 1)).unwrap();
+        let chunk = ing.drain(16).unwrap();
+        // Rotation 0,1 then stop at open-but-empty 2.
+        let order: Vec<(usize, u64)> = chunk.iter().map(|t| (t.producer, t.ticket)).collect();
+        assert_eq!(order, vec![(0, 0), (1, 0)]);
+        // Cursor stayed on 2; once 2 closes, the rotation resumes
+        // there and picks up 0's remaining op.
+        ing.close(2);
+        let chunk = ing.drain(16).unwrap();
+        let order: Vec<(usize, u64)> = chunk.iter().map(|t| (t.producer, t.ticket)).collect();
+        assert_eq!(order, vec![(0, 1)]);
+        ing.close_all();
+        assert!(ing.drain(16).is_none(), "closed and drained ends the stream");
+    }
+
+    #[test]
+    fn drain_takes_multiple_laps_up_to_max() {
+        let ing = Ingress::new(2, 8);
+        for i in 0..3 {
+            ing.submit(0, op(0, i, i + 1)).unwrap();
+            ing.submit(1, op(1, i, i + 1)).unwrap();
+        }
+        ing.close_all();
+        let chunk = ing.drain(4).unwrap();
+        let order: Vec<(usize, u64)> = chunk.iter().map(|t| (t.producer, t.ticket)).collect();
+        assert_eq!(order, vec![(0, 0), (1, 0), (0, 1), (1, 1)], "two laps");
+        let rest = ing.drain(16).unwrap();
+        assert_eq!(rest.len(), 2);
+        assert!(ing.drain(16).is_none());
+        assert_eq!(ing.totals(), (6, 6));
+    }
+
+    #[test]
+    fn bounded_queue_applies_backpressure_not_loss() {
+        let ing = std::sync::Arc::new(Ingress::new(1, 2));
+        ing.submit(0, op(0, 0, 1)).unwrap();
+        ing.submit(0, op(0, 0, 2)).unwrap();
+        let w = {
+            let ing = ing.clone();
+            std::thread::spawn(move || ing.submit(0, op(0, 0, 3)))
+        };
+        // The third submit blocks until a drain frees a slot.
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!w.is_finished(), "submit must block on a full queue");
+        let chunk = ing.drain(1).unwrap();
+        assert_eq!(chunk.len(), 1);
+        assert_eq!(w.join().unwrap(), Ok(2));
+        assert_eq!(ing.totals(), (3, 1));
+    }
+
+    #[test]
+    fn drain_order_equals_offline_round_robin_replay() {
+        // Uneven sequences, submitted up front: the live merge must
+        // equal the offline replay op for op.
+        let seqs: Vec<Vec<Op>> = vec![
+            (0..5).map(|i| op(0, i, i + 1)).collect(),
+            (0..2).map(|i| op(1, i, i + 1)).collect(),
+            (0..7).map(|i| op(2, i, i + 1)).collect(),
+        ];
+        let ing = Ingress::new(3, 16);
+        for (p, s) in seqs.iter().enumerate() {
+            for &o in s {
+                ing.submit(p, o).unwrap();
+            }
+            ing.close(p);
+        }
+        let mut live = Vec::new();
+        while let Some(chunk) = ing.drain(3) {
+            live.extend(chunk.into_iter().map(|t| t.op));
+        }
+        assert_eq!(live, round_robin_merge(&seqs));
+    }
+
+    #[test]
+    fn concurrent_producers_deliver_every_ticket_exactly_once() {
+        const PER: u64 = 200;
+        let ing = std::sync::Arc::new(Ingress::new(4, 16));
+        let mut handles = Vec::new();
+        for p in 0..4usize {
+            let ing = ing.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER {
+                    let t = ing.submit(p, op(p, i as usize % 7, i as usize % 5)).unwrap();
+                    assert_eq!(t, i, "tickets are the producer-local sequence");
+                }
+                ing.close(p);
+            }));
+        }
+        let mut seen: Vec<Vec<bool>> = vec![vec![false; PER as usize]; 4];
+        while let Some(chunk) = ing.drain(32) {
+            for t in chunk {
+                assert!(
+                    !std::mem::replace(&mut seen[t.producer][t.ticket as usize], true),
+                    "ticket ({}, {}) delivered twice",
+                    t.producer,
+                    t.ticket
+                );
+            }
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(seen.iter().flatten().all(|&s| s), "every ticket delivered");
+        assert_eq!(ing.totals(), (4 * PER, 4 * PER));
+    }
+}

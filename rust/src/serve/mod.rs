@@ -1,0 +1,733 @@
+//! Continuous-serving session: long-lived multi-producer ingestion
+//! with abort-free snapshot reads.
+//!
+//! A [`ServeSession`] wraps one long-lived pipelined batch system
+//! (`BatchSystem::run_pipelined_session`): N producer handles feed
+//! the sharded bounded [`ingress`] queues, whose drained chunks
+//! become admission blocks in the existing W-deep pipelined window.
+//! Promotion remains the epoch boundary — the session's store
+//! reclamation keeps a continuous stream's memory flat — and each
+//! promotion additionally *absorbs* the block's winning versions
+//! into a [`snapshot::VersionLog`] before write-back, so a
+//! [`snapshot::SnapshotHandle`] pinned at promoted-block horizon `K`
+//! observes exactly blocks `≤ K` forever, without ever touching the
+//! scheduler (reads are wait-free and abort-free; the write path's
+//! `TxStats` abort counters are untouched by construction).
+//!
+//! # Tenant partitioning
+//!
+//! The heap is divided into per-tenant address ranges by a
+//! [`TenantLayout`]: tenant `t` owns one contiguous cell-index range
+//! holding its vertices' degree + adjacency slots. Every ingested
+//! [`Op`] executes through a [`PartitionView`] that panics (and is
+//! quarantined by the batch layer) on any access outside the op's
+//! declared tenants — single-tenant edges touch one range,
+//! cross-tenant [`Op::Bridge`] transactions touch exactly two, and
+//! conflicts between them resolve through the existing window chain
+//! like any other cross-block dependency.
+//!
+//! # Lifecycle
+//!
+//! [`ServeSession::run`] spins the worker pool up, runs the caller's
+//! driver closure on the session thread with a [`ServeHandle`]
+//! (submit / snapshot / status / quiesce), and tears everything down
+//! when the driver returns: producers close, the pipeline drains,
+//! workers join, and the final [`ServeReport`] folds the batch
+//! report with the serving-plane metrics (ingest rate, queue-depth
+//! peak, snapshot age, read-latency histogram, per-tenant read
+//! counts). A panicking driver still closes the ingress first, so
+//! the pool always joins.
+
+pub mod ingress;
+pub mod snapshot;
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::batch::adaptive::BlockSizeController;
+use crate::batch::mvmemory::MvMemory;
+use crate::batch::{BatchReport, BatchSystem, BatchTxn};
+use crate::engine::serve::ServeController;
+use crate::mem::{Addr, TxHeap, WORDS_PER_LINE};
+use crate::obs::hist::LatencyHist;
+use crate::runtime::workers::PoolConfig;
+use crate::tm::access::{DirectAccess, TxAccess, TxResult};
+
+pub use ingress::{Closed, Ingress, Ticketed};
+pub use snapshot::{ReadStats, SnapshotHandle, VersionLog};
+
+/// Per-tenant address-space partitioning of the heap: tenant `t`
+/// owns the contiguous cell range `[base(t), base(t) + span())`,
+/// holding `verts` vertices of one degree cell plus `cap` adjacency
+/// slots each. The first heap line stays reserved (address 0 is the
+/// global null sentinel).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TenantLayout {
+    pub tenants: usize,
+    pub verts: usize,
+    /// Adjacency slots per vertex (degree may exceed it; the list
+    /// clamps).
+    pub cap: usize,
+}
+
+impl TenantLayout {
+    pub fn new(tenants: usize, verts: usize, cap: usize) -> Self {
+        Self {
+            tenants: tenants.max(1),
+            verts: verts.max(1),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Cells per tenant partition.
+    pub fn span(&self) -> usize {
+        self.verts * (1 + self.cap)
+    }
+
+    /// First cell of tenant `t`'s partition.
+    pub fn base(&self, t: usize) -> Addr {
+        debug_assert!(t < self.tenants, "tenant {t} out of range");
+        WORDS_PER_LINE + t * self.span()
+    }
+
+    /// Tenant `t`'s cell range as `[start, end)`.
+    pub fn range(&self, t: usize) -> (Addr, Addr) {
+        (self.base(t), self.base(t) + self.span())
+    }
+
+    /// Heap words the full layout needs.
+    pub fn heap_cells(&self) -> usize {
+        WORDS_PER_LINE + self.tenants * self.span()
+    }
+
+    /// A heap sized for this layout.
+    pub fn make_heap(&self) -> TxHeap {
+        TxHeap::new(self.heap_cells())
+    }
+
+    /// Degree cell of vertex `v` in tenant `t`.
+    pub fn degree_addr(&self, t: usize, v: usize) -> Addr {
+        debug_assert!(v < self.verts, "vertex {v} out of range");
+        self.base(t) + v * (1 + self.cap)
+    }
+
+    /// `i`-th adjacency slot of vertex `v` in tenant `t`.
+    pub fn nbr_addr(&self, t: usize, v: usize, i: usize) -> Addr {
+        debug_assert!(i < self.cap, "adjacency slot {i} out of range");
+        self.degree_addr(t, v) + 1 + i
+    }
+
+    /// Which tenant owns `addr` (`None` for the reserved line or
+    /// past the last partition).
+    pub fn tenant_of(&self, addr: Addr) -> Option<usize> {
+        let off = addr.checked_sub(WORDS_PER_LINE)?;
+        let t = off / self.span();
+        (t < self.tenants).then_some(t)
+    }
+}
+
+/// One ingested graph mutation. `Copy` data only — the admission
+/// path moves ops into `'static` transaction bodies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Directed edge `u -> v` inside one tenant's partition.
+    Edge { tenant: usize, u: usize, v: usize },
+    /// Cross-tenant transaction: edge `u -> v` in `from` and the
+    /// mirror `v -> u` in `to`, atomically (one batch txn).
+    Bridge {
+        from: usize,
+        to: usize,
+        u: usize,
+        v: usize,
+    },
+}
+
+impl Op {
+    /// The (at most two) tenant partitions this op is allowed to
+    /// touch — the writer-isolation contract [`PartitionView`]
+    /// enforces.
+    pub fn tenants(&self) -> [Option<usize>; 2] {
+        match *self {
+            Op::Edge { tenant, .. } => [Some(tenant), None],
+            Op::Bridge { from, to, .. } => [Some(from), Some(to)],
+        }
+    }
+
+    /// Execute against any [`TxAccess`] — the same body runs
+    /// speculatively inside the batch pipeline and directly in the
+    /// sequential oracle, so the determinism suite compares like
+    /// with like. Adjacency insert is dedup-scan-then-append: the
+    /// degree cell counts distinct insertions, the list clamps at
+    /// the layout's capacity.
+    pub fn apply(&self, layout: &TenantLayout, t: &mut dyn TxAccess) -> TxResult<()> {
+        match *self {
+            Op::Edge { tenant, u, v } => add_edge(layout, t, tenant, u, v),
+            Op::Bridge { from, to, u, v } => {
+                add_edge(layout, t, from, u, v)?;
+                add_edge(layout, t, to, v, u)
+            }
+        }
+    }
+}
+
+fn add_edge(
+    layout: &TenantLayout,
+    t: &mut dyn TxAccess,
+    tenant: usize,
+    u: usize,
+    v: usize,
+) -> TxResult<()> {
+    let (u, v) = (u % layout.verts, v % layout.verts);
+    let d_addr = layout.degree_addr(tenant, u);
+    let deg = t.read(d_addr)?;
+    let cap = layout.cap as u64;
+    for i in 0..deg.min(cap) as usize {
+        if t.read(layout.nbr_addr(tenant, u, i))? == v as u64 {
+            return Ok(()); // duplicate edge: no-op
+        }
+    }
+    if deg < cap {
+        t.write(layout.nbr_addr(tenant, u, deg as usize), v as u64)?;
+    }
+    t.write(d_addr, deg + 1)
+}
+
+/// Apply `ops` in order through [`DirectAccess`] — the sequential
+/// oracle the serving determinism suite compares final heaps
+/// against.
+pub fn apply_sequential(heap: &TxHeap, layout: &TenantLayout, ops: &[Op]) {
+    let mut acc = DirectAccess { heap };
+    for op in ops {
+        op.apply(layout, &mut acc)
+            .expect("direct access cannot abort");
+    }
+}
+
+/// Writer-isolation guard: a [`TxAccess`] adapter that panics on any
+/// access outside the declared tenant partitions. Inside the batch
+/// pipeline the panic is caught by the quarantine machinery, so a
+/// buggy (or hostile) op body cannot scribble on another tenant's
+/// range — it gets quarantined instead.
+pub struct PartitionView<'a> {
+    inner: &'a mut dyn TxAccess,
+    layout: TenantLayout,
+    allowed: [Option<usize>; 2],
+}
+
+impl<'a> PartitionView<'a> {
+    pub fn new(
+        inner: &'a mut dyn TxAccess,
+        layout: TenantLayout,
+        allowed: [Option<usize>; 2],
+    ) -> Self {
+        Self {
+            inner,
+            layout,
+            allowed,
+        }
+    }
+
+    fn check(&self, addr: Addr) {
+        let t = self.layout.tenant_of(addr);
+        let ok = t.is_some_and(|t| self.allowed.iter().any(|a| *a == Some(t)));
+        assert!(
+            ok,
+            "tenant-partition violation: addr {addr} (tenant {t:?}) outside {:?}",
+            self.allowed
+        );
+    }
+}
+
+impl TxAccess for PartitionView<'_> {
+    fn read(&mut self, addr: Addr) -> TxResult<u64> {
+        self.check(addr);
+        self.inner.read(addr)
+    }
+
+    fn write(&mut self, addr: Addr, val: u64) -> TxResult<()> {
+        self.check(addr);
+        self.inner.write(addr, val)
+    }
+}
+
+/// Knobs of one serving session.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Producer handles feeding the ingress.
+    pub producers: usize,
+    /// Pipeline worker threads.
+    pub workers: usize,
+    /// Pipelined window depth (W).
+    pub window: usize,
+    /// Max operations per admission block (the drain bound).
+    pub block: usize,
+    /// Per-producer bounded-queue capacity (backpressure point).
+    pub queue_cap: usize,
+    /// Drive the admission block cap from the `--policy auto`
+    /// meta-controller ([`crate::engine::serve::ServeController`]).
+    pub auto_policy: bool,
+    /// Pin pool workers.
+    pub pin: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            producers: 2,
+            workers: 2,
+            window: 2,
+            block: 64,
+            queue_cap: 256,
+            auto_policy: false,
+            pin: false,
+        }
+    }
+}
+
+/// Point-in-time counters for a running session.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStatus {
+    pub horizon: u64,
+    pub queue_depth: u64,
+    pub submitted: u64,
+    pub drained: u64,
+    pub promoted_txns: u64,
+    pub promoted_blocks: u64,
+    pub served_reads: u64,
+}
+
+/// Final accounting of one session: the folded pipeline report plus
+/// the serving-plane metrics.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub batch: BatchReport,
+    /// Operations accepted by the ingress (== promoted once the
+    /// session drained cleanly).
+    pub submitted: u64,
+    pub promoted_txns: u64,
+    pub promoted_blocks: u64,
+    /// Snapshot queries served, total and per tenant.
+    pub served_reads: u64,
+    pub reads_by_tenant: Vec<u64>,
+    /// Promoted operations per second over the session.
+    pub ingest_rate: f64,
+    /// Peak queued operations observed at promotion boundaries.
+    pub queue_depth_peak: u64,
+    /// Nanoseconds between the last promotion and session end — how
+    /// stale a fresh snapshot was at shutdown.
+    pub snapshot_age_ns: u64,
+    /// Serving-latency histogram across all snapshot queries.
+    pub read_lat: LatencyHist,
+    /// Backend switches the auto meta-controller made mid-stream.
+    pub policy_switches: u64,
+    /// Snapshot-log reclamation: peak live / retired / reclaimed
+    /// trimmed version cells.
+    pub log_live_peak_cells: u64,
+    pub log_retired_cells: u64,
+    pub log_reclaimed_cells: u64,
+}
+
+struct ServeShared {
+    ingress: Ingress,
+    log: VersionLog,
+    stats: ReadStats,
+    layout: TenantLayout,
+    ctl: Option<Mutex<ServeController>>,
+    promoted_txns: AtomicU64,
+    promoted_blocks: AtomicU64,
+    last_promote_ns: AtomicU64,
+    queue_peak: AtomicU64,
+}
+
+/// The driver's window into a running session. `Copy`: hand clones
+/// to scoped producer/reader threads freely.
+#[derive(Clone, Copy)]
+pub struct ServeHandle<'s> {
+    shared: &'s ServeShared,
+    heap: &'s TxHeap,
+}
+
+impl<'s> ServeHandle<'s> {
+    /// Submit one op on producer `p` (blocking on a full queue);
+    /// returns its per-producer ticket.
+    pub fn submit(&self, p: usize, op: Op) -> Result<u64, Closed> {
+        self.shared.ingress.submit(p, op)
+    }
+
+    /// Close one producer; its queued ops still drain.
+    pub fn close_producer(&self, p: usize) {
+        self.shared.ingress.close(p);
+    }
+
+    /// Close every producer (ends the stream; the driver returning
+    /// does this implicitly).
+    pub fn close(&self) {
+        self.shared.ingress.close_all();
+    }
+
+    /// Take an abort-free snapshot pinned at the current promoted
+    /// horizon. Queries on the handle are attributed to the
+    /// session's read stats.
+    pub fn snapshot(&self) -> SnapshotHandle<'s> {
+        self.shared
+            .log
+            .snapshot(self.heap, self.shared.layout, Some(&self.shared.stats))
+    }
+
+    pub fn layout(&self) -> TenantLayout {
+        self.shared.layout
+    }
+
+    pub fn status(&self) -> ServeStatus {
+        let (submitted, drained) = self.shared.ingress.totals();
+        ServeStatus {
+            horizon: self.shared.log.horizon(),
+            queue_depth: self.shared.ingress.queue_depth(),
+            submitted,
+            drained,
+            promoted_txns: self.shared.promoted_txns.load(Ordering::SeqCst),
+            promoted_blocks: self.shared.promoted_blocks.load(Ordering::SeqCst),
+            served_reads: self.shared.stats.served.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Wait until everything submitted so far has been promoted (a
+    /// read-your-writes barrier: a snapshot taken after `quiesce`
+    /// observes every prior `submit` from this thread).
+    pub fn quiesce(&self) {
+        loop {
+            let (submitted, drained) = self.shared.ingress.totals();
+            if drained == submitted
+                && self.shared.promoted_txns.load(Ordering::SeqCst) == submitted
+            {
+                return;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+}
+
+/// The continuous-serving session (see module docs).
+pub struct ServeSession;
+
+impl ServeSession {
+    fn txn_of(layout: TenantLayout, t: Ticketed) -> BatchTxn<'static> {
+        let op = t.op;
+        BatchTxn::new(move |acc| {
+            let mut view = PartitionView::new(acc, layout, op.tenants());
+            op.apply(&layout, &mut view)
+        })
+    }
+
+    /// Run one session: spin up the pipelined pool over `heap`, call
+    /// `driver` with a [`ServeHandle`] on the calling thread, and
+    /// tear down when it returns (producers close, the window
+    /// drains, workers join). Returns the session report and the
+    /// driver's result.
+    pub fn run<R>(
+        heap: &TxHeap,
+        layout: TenantLayout,
+        cfg: &ServeConfig,
+        driver: impl FnOnce(ServeHandle<'_>) -> R,
+    ) -> (ServeReport, R) {
+        assert!(
+            heap.capacity() >= layout.heap_cells(),
+            "heap too small for layout: {} < {}",
+            heap.capacity(),
+            layout.heap_cells()
+        );
+        let t0 = Instant::now();
+        let shared = ServeShared {
+            ingress: Ingress::new(cfg.producers, cfg.queue_cap),
+            log: VersionLog::new(),
+            stats: ReadStats::new(layout.tenants),
+            layout,
+            ctl: cfg
+                .auto_policy
+                .then(|| Mutex::new(ServeController::new())),
+            promoted_txns: AtomicU64::new(0),
+            promoted_blocks: AtomicU64::new(0),
+            last_promote_ns: AtomicU64::new(0),
+            queue_peak: AtomicU64::new(0),
+        };
+        let shared = &shared;
+        let pool = PoolConfig {
+            workers: cfg.workers.max(1),
+            pin: cfg.pin,
+        };
+        let mut ctl = BlockSizeController::fixed(cfg.block.max(1)).with_window(cfg.window.max(1));
+
+        // Source: drained ingress chunks become admission blocks.
+        // The auto meta-controller (when on) caps the drain size —
+        // small blocks in the high-conflict (latency) regime, the
+        // full pipeline block in the sparse (throughput) regime.
+        let source = move |size: usize| {
+            let cap = match &shared.ctl {
+                Some(c) => c.lock().unwrap().drain_cap(),
+                None => usize::MAX,
+            };
+            shared.ingress.drain(size.min(cap)).map(|chunk| {
+                chunk
+                    .into_iter()
+                    .map(|t| Self::txn_of(layout, t))
+                    .collect()
+            })
+        };
+
+        // Promotion hook: absorb the block into the snapshot log
+        // (before its write-back — the log's whole consistency story
+        // leans on this ordering), then feed the meta-controller.
+        let on_promote = move |seq: u64, mv: &MvMemory, rep: &BatchReport| {
+            shared.log.absorb(seq, mv, heap);
+            shared.promoted_blocks.fetch_add(1, Ordering::SeqCst);
+            shared
+                .promoted_txns
+                .fetch_add(rep.txns as u64, Ordering::SeqCst);
+            shared
+                .last_promote_ns
+                .store(t0.elapsed().as_nanos() as u64, Ordering::SeqCst);
+            shared
+                .queue_peak
+                .fetch_max(shared.ingress.queue_depth(), Ordering::SeqCst);
+            if let Some(c) = &shared.ctl {
+                c.lock().unwrap().observe_block(rep);
+            }
+        };
+
+        let (batch, out) = BatchSystem::run_pipelined_session::<MvMemory, _, R, _, _>(
+            heap,
+            source,
+            &pool,
+            &mut ctl,
+            || {
+                let r = catch_unwind(AssertUnwindSafe(|| driver(ServeHandle { shared, heap })));
+                // Driver done (or unwinding): end ingestion so the
+                // pipeline drains and the pool joins either way.
+                shared.ingress.close_all();
+                match r {
+                    Ok(v) => v,
+                    Err(p) => resume_unwind(p),
+                }
+            },
+            on_promote,
+        );
+
+        let (submitted, _) = shared.ingress.totals();
+        let read_lat = shared.stats.lat.fold();
+        let lc = shared.log.counters();
+        let elapsed = t0.elapsed();
+        let promoted_txns = shared.promoted_txns.load(Ordering::SeqCst);
+        let ingest_rate = if elapsed.as_secs_f64() > 0.0 {
+            promoted_txns as f64 / elapsed.as_secs_f64()
+        } else {
+            0.0
+        };
+        let snapshot_age_ns = (elapsed.as_nanos() as u64)
+            .saturating_sub(shared.last_promote_ns.load(Ordering::SeqCst));
+        let report = ServeReport {
+            submitted,
+            promoted_txns,
+            promoted_blocks: shared.promoted_blocks.load(Ordering::SeqCst),
+            served_reads: shared.stats.served.load(Ordering::Relaxed),
+            reads_by_tenant: shared
+                .stats
+                .by_tenant
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            ingest_rate,
+            queue_depth_peak: shared.queue_peak.load(Ordering::SeqCst),
+            snapshot_age_ns,
+            read_lat,
+            policy_switches: shared
+                .ctl
+                .as_ref()
+                .map_or(0, |c| c.lock().unwrap().switches()),
+            log_live_peak_cells: lc.live_peak_cells,
+            log_retired_cells: lc.retired_cells,
+            log_reclaimed_cells: lc.reclaimed_cells,
+            batch,
+        };
+        crate::obs::snapshot::record(
+            "serve",
+            "session",
+            &report.batch.to_stats(),
+            &[
+                ("ingest_rate", format!("{:.1}", report.ingest_rate)),
+                ("queue_depth", report.queue_depth_peak.to_string()),
+                ("snapshot_age_ns", report.snapshot_age_ns.to_string()),
+                ("serve_read_p99_ns", report.read_lat.p99().to_string()),
+            ],
+        );
+        (report, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> TenantLayout {
+        TenantLayout::new(2, 8, 4)
+    }
+
+    #[test]
+    fn layout_partitions_are_disjoint_and_cover() {
+        let lay = layout();
+        let (s0, e0) = lay.range(0);
+        let (s1, e1) = lay.range(1);
+        assert_eq!(s0, WORDS_PER_LINE);
+        assert_eq!(e0, s1, "partitions tile the heap contiguously");
+        assert_eq!(e1, lay.heap_cells());
+        for addr in 0..lay.heap_cells() + 4 {
+            let expect = if addr < s0 {
+                None
+            } else if addr < e0 {
+                Some(0)
+            } else if addr < e1 {
+                Some(1)
+            } else {
+                None
+            };
+            assert_eq!(lay.tenant_of(addr), expect, "addr {addr}");
+        }
+        // Address math round-trips through tenant_of.
+        for t in 0..lay.tenants {
+            for v in 0..lay.verts {
+                assert_eq!(lay.tenant_of(lay.degree_addr(t, v)), Some(t));
+                assert_eq!(lay.tenant_of(lay.nbr_addr(t, v, lay.cap - 1)), Some(t));
+            }
+        }
+    }
+
+    #[test]
+    fn op_apply_dedups_and_clamps() {
+        let lay = layout();
+        let heap = lay.make_heap();
+        let ops = [
+            Op::Edge { tenant: 0, u: 1, v: 2 },
+            Op::Edge { tenant: 0, u: 1, v: 2 }, // duplicate
+            Op::Edge { tenant: 0, u: 1, v: 3 },
+            Op::Bridge { from: 0, to: 1, u: 1, v: 5 },
+        ];
+        apply_sequential(&heap, &lay, &ops);
+        // Vertex 1 in tenant 0: neighbors 2, 3, 5 (dup dropped).
+        assert_eq!(heap.load(lay.degree_addr(0, 1)), 3);
+        assert_eq!(heap.load(lay.nbr_addr(0, 1, 0)), 2);
+        assert_eq!(heap.load(lay.nbr_addr(0, 1, 1)), 3);
+        assert_eq!(heap.load(lay.nbr_addr(0, 1, 2)), 5);
+        // The bridge mirrored 5 -> 1 into tenant 1.
+        assert_eq!(heap.load(lay.degree_addr(1, 5)), 1);
+        assert_eq!(heap.load(lay.nbr_addr(1, 5, 0)), 1);
+        // Capacity clamp: degree keeps counting, the list stops.
+        let more = [
+            Op::Edge { tenant: 0, u: 1, v: 6 },
+            Op::Edge { tenant: 0, u: 1, v: 7 },
+            Op::Edge { tenant: 0, u: 1, v: 4 },
+        ];
+        apply_sequential(&heap, &lay, &more);
+        assert_eq!(heap.load(lay.degree_addr(0, 1)), 6);
+        assert_eq!(heap.load(lay.nbr_addr(0, 1, 3)), 6, "last slot filled");
+    }
+
+    #[test]
+    fn partition_view_blocks_cross_tenant_access() {
+        let lay = layout();
+        let heap = lay.make_heap();
+        // In-partition access passes through.
+        {
+            let mut acc = DirectAccess { heap: &heap };
+            let mut view = PartitionView::new(&mut acc, lay, [Some(0), None]);
+            Op::Edge { tenant: 0, u: 0, v: 1 }
+                .apply(&lay, &mut view)
+                .unwrap();
+        }
+        assert_eq!(heap.load(lay.degree_addr(0, 0)), 1);
+        // Out-of-partition access panics (the quarantine signal).
+        let err = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut acc = DirectAccess { heap: &heap };
+            let mut view = PartitionView::new(&mut acc, lay, [Some(0), None]);
+            Op::Edge { tenant: 1, u: 0, v: 1 }.apply(&lay, &mut view)
+        }));
+        assert!(err.is_err(), "cross-tenant write must be rejected");
+        assert_eq!(heap.load(lay.degree_addr(1, 0)), 0, "nothing leaked");
+        // A bridge's two declared tenants are both allowed.
+        {
+            let mut acc = DirectAccess { heap: &heap };
+            let op = Op::Bridge { from: 0, to: 1, u: 2, v: 3 };
+            let mut view = PartitionView::new(&mut acc, lay, op.tenants());
+            op.apply(&lay, &mut view).unwrap();
+        }
+        assert_eq!(heap.load(lay.degree_addr(1, 3)), 1);
+    }
+
+    #[test]
+    fn session_round_trip_matches_sequential_oracle() {
+        let lay = layout();
+        let heap = lay.make_heap();
+        let cfg = ServeConfig {
+            producers: 2,
+            workers: 2,
+            window: 2,
+            block: 4,
+            ..ServeConfig::default()
+        };
+        // Two producer sequences with an intra- and cross-tenant mix.
+        let seq0: Vec<Op> = (0..20)
+            .map(|i| Op::Edge { tenant: 0, u: i % 8, v: (i + 1) % 8 })
+            .collect();
+        let seq1: Vec<Op> = (0..20)
+            .map(|i| {
+                if i % 5 == 0 {
+                    Op::Bridge { from: 0, to: 1, u: i % 8, v: (i + 3) % 8 }
+                } else {
+                    Op::Edge { tenant: 1, u: i % 8, v: (i + 2) % 8 }
+                }
+            })
+            .collect();
+        let (rep, reads) = ServeSession::run(&heap, lay, &cfg, |h| {
+            std::thread::scope(|s| {
+                let h0 = h;
+                let q0 = &seq0;
+                s.spawn(move || {
+                    for &op in q0 {
+                        h0.submit(0, op).unwrap();
+                    }
+                    h0.close_producer(0);
+                });
+                let q1 = &seq1;
+                s.spawn(move || {
+                    for &op in q1 {
+                        h0.submit(1, op).unwrap();
+                    }
+                    h0.close_producer(1);
+                });
+            });
+            h.quiesce();
+            let snap = h.snapshot();
+            (snap.degree(0, 1), snap.degree(1, 3), snap.horizon())
+        });
+        assert_eq!(rep.submitted, 40);
+        assert_eq!(rep.promoted_txns, 40);
+        assert!(rep.promoted_blocks >= 1);
+        assert!(rep.served_reads >= 2);
+
+        // Oracle: the deterministic round-robin merge, sequentially.
+        let oracle_heap = lay.make_heap();
+        let merged = ingress::round_robin_merge(&[seq0, seq1]);
+        apply_sequential(&oracle_heap, &lay, &merged);
+        for addr in 0..lay.heap_cells() {
+            assert_eq!(
+                heap.load(addr),
+                oracle_heap.load(addr),
+                "heap diverged from oracle at addr {addr}"
+            );
+        }
+        let (d0, d1, horizon) = reads;
+        assert_eq!(d0, oracle_heap.load(lay.degree_addr(0, 1)));
+        assert_eq!(d1, oracle_heap.load(lay.degree_addr(1, 3)));
+        assert!(horizon >= 1);
+    }
+}

@@ -1,0 +1,494 @@
+//! Property suite: the continuous-serving session's guarantees.
+//!
+//! A [`ServeSession`] is one long-lived pipelined batch system fed by
+//! N concurrent producers through the sharded bounded ingress. The
+//! suite proves, across seeds × producers × workers × window depths ×
+//! tenant counts:
+//!
+//! * **Determinism** — the final heap is bitwise-equal to applying
+//!   the round-robin merge of the per-producer sequences through the
+//!   single-stream sequential oracle, no matter how threads race or
+//!   where the admission-block boundaries land.
+//! * **Snapshot consistency** — a handle pinned at promoted-block
+//!   horizon `K` observes exactly blocks `≤ K` forever: its reads are
+//!   bitwise-frozen while younger blocks keep promoting, and fresh
+//!   snapshots advance monotonically.
+//! * **Memory** — an old pin holds its horizon while younger version
+//!   garbage retires and reclaims, and a long session's store
+//!   reclamation keeps the live-cell peak strictly below the retired
+//!   total (the plateau).
+//! * **Abort-free reads** — a conflict-free write stream records zero
+//!   aborts even with a reader hammering snapshots concurrently: the
+//!   read path never touches the scheduler or the abort counters.
+//! * **Exactly-once ingestion** — every submitted ticket is promoted
+//!   exactly once (`submitted == promoted`), including under the
+//!   chaos tier.
+//!
+//! Chaos tier: setting `FAULT_SPEC` (e.g.
+//! `FAULT_SPEC=seed=11,validation_fail=0.05,wakeup_drop=0.05,panic=0.01`)
+//! reruns the whole suite with the fault-injection plane installed —
+//! determinism, exactly-once, and open-snapshot stability must keep
+//! holding under injected validation failures, dropped ingress/drain
+//! wakeups, worker stalls, and transaction-body panics. (Only the
+//! zero-abort assertion is skipped under injection, since injected
+//! validation failures *are* aborts by design.)
+
+use dyadhytm::serve::ingress::round_robin_merge;
+use dyadhytm::serve::{apply_sequential, Op, ServeConfig, ServeSession, TenantLayout};
+use dyadhytm::util::qcheck::qcheck_res;
+use dyadhytm::util::rng::Rng;
+
+/// Install the fault plane from `FAULT_SPEC` (chaos tier), silencing
+/// injected-panic reports; a no-op without the env var.
+fn chaos() {
+    static INSTALL: std::sync::Once = std::sync::Once::new();
+    INSTALL.call_once(|| {
+        let Ok(spec) = std::env::var("FAULT_SPEC") else { return };
+        let spec = dyadhytm::fault::FaultSpec::parse(&spec)
+            .unwrap_or_else(|e| panic!("bad FAULT_SPEC: {e}"));
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains("injected fault"))
+                .unwrap_or(false);
+            if !injected {
+                default_hook(info);
+            }
+        }));
+        dyadhytm::fault::install(spec);
+    });
+}
+
+fn chaos_active() -> bool {
+    std::env::var_os("FAULT_SPEC").is_some()
+}
+
+/// Seeded per-producer operation sequences: tenant-local edges with an
+/// occasional cross-tenant bridge. Pure function of the arguments —
+/// the oracle rebuilds the identical sequences.
+fn gen_seqs(
+    seed: u64,
+    producers: usize,
+    tenants: usize,
+    verts: usize,
+    per: usize,
+) -> Vec<Vec<Op>> {
+    (0..producers)
+        .map(|p| {
+            let mut rng = Rng::new(seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(1 + p as u64)));
+            (0..per)
+                .map(|_| {
+                    let t = rng.below(tenants as u64) as usize;
+                    let u = rng.below(verts as u64) as usize;
+                    let v = rng.below(verts as u64) as usize;
+                    if tenants > 1 && rng.below(5) == 0 {
+                        Op::Bridge { from: t, to: (t + 1) % tenants, u, v }
+                    } else {
+                        Op::Edge { tenant: t, u, v }
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Run one full session (concurrent producer threads, small bounded
+/// queues so backpressure actually engages) and compare the final heap
+/// bitwise against the round-robin-merge sequential oracle.
+fn check_session_case(
+    seed: u64,
+    producers: usize,
+    workers: usize,
+    window: usize,
+    tenants: usize,
+    block: usize,
+    per: usize,
+) -> Result<(), String> {
+    let lay = TenantLayout::new(tenants, 16, 4);
+    let heap = lay.make_heap();
+    let seqs = gen_seqs(seed, producers, tenants, 16, per);
+    let cfg = ServeConfig {
+        producers,
+        workers,
+        window,
+        block,
+        queue_cap: 32,
+        ..ServeConfig::default()
+    };
+    let (rep, ()) = ServeSession::run(&heap, lay, &cfg, |h| {
+        std::thread::scope(|s| {
+            for (p, seq) in seqs.iter().enumerate() {
+                s.spawn(move || {
+                    for &op in seq {
+                        h.submit(p, op).expect("producer closed early");
+                    }
+                    h.close_producer(p);
+                });
+            }
+        });
+    });
+
+    let total = (producers * per) as u64;
+    if rep.submitted != total {
+        return Err(format!("submitted {} of {total}", rep.submitted));
+    }
+    if rep.promoted_txns != total {
+        return Err(format!(
+            "exactly-once violated: {total} submitted vs {} promoted",
+            rep.promoted_txns
+        ));
+    }
+
+    let oracle = lay.make_heap();
+    apply_sequential(&oracle, &lay, &round_robin_merge(&seqs));
+    for addr in 0..lay.heap_cells() {
+        let (a, b) = (heap.load(addr), oracle.load(addr));
+        if a != b {
+            return Err(format!(
+                "divergence at addr {addr}: session {a:#x} vs oracle {b:#x} \
+                 (seed={seed:#x}, producers={producers}, workers={workers}, \
+                 window={window}, tenants={tenants}, block={block}, per={per})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_session_equals_round_robin_oracle() {
+    chaos();
+    // The tentpole property: same seeds, producer count, and read mix
+    // => the final heap is bitwise-equal to the single-stream
+    // sequential oracle, swept over workers × window depths × tenant
+    // counts × block sizes.
+    qcheck_res(
+        "serve session == round-robin sequential oracle (bitwise)",
+        12,
+        |rng| {
+            (
+                rng.next_u64(),
+                1 + rng.below(3) as usize,
+                1 + rng.below(4) as usize,
+                1 + rng.below(3) as usize,
+                1 + rng.below(3) as usize,
+                [2usize, 8, 32][rng.below(3) as usize],
+                16 + rng.below(32) as usize,
+            )
+        },
+        |&(seed, producers, workers, window, tenants, block, per)| {
+            check_session_case(seed, producers, workers, window, tenants, block, per)
+        },
+    );
+}
+
+#[test]
+fn single_producer_single_worker_degenerate_case() {
+    chaos();
+    // The degenerate corner: no concurrency anywhere, still exact.
+    check_session_case(0xD00F, 1, 1, 1, 1, 2, 24).unwrap();
+}
+
+#[test]
+fn snapshot_horizon_is_frozen_forever_under_racing_promotions() {
+    chaos();
+    // A handle pinned at promoted block K observes exactly blocks <= K
+    // *forever*: its whole heap image stays bitwise-frozen while
+    // younger blocks keep promoting around it, fresh snapshots advance
+    // monotonically (degrees never shrink across increasing horizons —
+    // no torn or future state), and the final snapshot equals the full
+    // oracle.
+    let lay = TenantLayout::new(2, 16, 4);
+    let heap = lay.make_heap();
+    let per = 300usize;
+    let seqs = gen_seqs(0xF0CA, 1, 2, 16, per);
+    let cfg = ServeConfig {
+        producers: 1,
+        workers: 2,
+        window: 2,
+        block: 4,
+        queue_cap: 64,
+        ..ServeConfig::default()
+    };
+    let oracle = lay.make_heap();
+    apply_sequential(&oracle, &lay, &round_robin_merge(&seqs));
+
+    let (rep, ()) = ServeSession::run(&heap, lay, &cfg, |h| {
+        std::thread::scope(|s| {
+            let seq = &seqs[0];
+            s.spawn(move || {
+                for &op in seq {
+                    h.submit(0, op).expect("producer closed early");
+                }
+                h.close_producer(0);
+            });
+
+            // Pin an early snapshot once the first block lands.
+            while h.status().promoted_blocks == 0 {
+                std::thread::yield_now();
+            }
+            let early = h.snapshot();
+            let h0 = early.horizon();
+            let image: Vec<u64> = (0..lay.heap_cells()).map(|a| early.read(a)).collect();
+
+            let mut prev_degrees: Vec<u64> = Vec::new();
+            loop {
+                // The early pin must stay bitwise-frozen mid-race.
+                for (a, &v) in image.iter().enumerate() {
+                    assert_eq!(
+                        early.read(a),
+                        v,
+                        "pinned snapshot (horizon {h0}) changed at addr {a}"
+                    );
+                }
+                // Fresh snapshots: monotone horizon, monotone degrees.
+                let snap = h.snapshot();
+                assert!(snap.horizon() >= h0, "horizon went backwards");
+                let degrees: Vec<u64> = (0..lay.tenants)
+                    .flat_map(|t| (0..lay.verts).map(move |v| (t, v)))
+                    .map(|(t, v)| snap.degree(t, v))
+                    .collect();
+                for (i, (&old, &new)) in prev_degrees.iter().zip(&degrees).enumerate() {
+                    assert!(
+                        new >= old,
+                        "degree {i} shrank across snapshots: {old} -> {new} \
+                         (torn or future state)"
+                    );
+                }
+                prev_degrees = degrees;
+                if h.status().promoted_txns >= per as u64 {
+                    break;
+                }
+            }
+
+            h.quiesce();
+            let fin = h.snapshot();
+            for addr in 0..lay.heap_cells() {
+                assert_eq!(
+                    fin.read(addr),
+                    oracle.load(addr),
+                    "final snapshot diverged from oracle at addr {addr}"
+                );
+            }
+            // And the early pin is STILL exactly where it was taken.
+            for (a, &v) in image.iter().enumerate() {
+                assert_eq!(early.read(a), v, "pinned snapshot drifted at addr {a}");
+            }
+        });
+    });
+    assert_eq!(rep.promoted_txns, per as u64);
+    assert!(rep.served_reads > 0, "the reader served snapshot queries");
+}
+
+#[test]
+fn pinned_snapshot_survives_reclamation_and_memory_plateaus() {
+    chaos();
+    // The memory half of the serving contract, on a deliberately tiny
+    // address space (heavy per-address version churn): an old pin
+    // holds its horizon while younger epochs retire + reclaim trimmed
+    // version chains around it, and the long stream's store-side
+    // reclamation keeps the live recorded-set peak strictly below the
+    // retired total (the plateau — 150 blocks vastly exceed the
+    // 3-deep window, so limbo must drain mid-run).
+    let lay = TenantLayout::new(1, 8, 4);
+    let heap = lay.make_heap();
+    let per = 1200usize;
+    let seqs = gen_seqs(0x9ECA, 1, 1, 8, per);
+    let cfg = ServeConfig {
+        producers: 1,
+        workers: 2,
+        window: 3,
+        block: 8,
+        queue_cap: 64,
+        ..ServeConfig::default()
+    };
+    let oracle = lay.make_heap();
+    apply_sequential(&oracle, &lay, &round_robin_merge(&seqs));
+
+    let (rep, ()) = ServeSession::run(&heap, lay, &cfg, |h| {
+        std::thread::scope(|s| {
+            let seq = &seqs[0];
+            s.spawn(move || {
+                for &op in seq {
+                    h.submit(0, op).expect("producer closed early");
+                }
+                h.close_producer(0);
+            });
+
+            // Let plenty of pre-pin churn retire and reclaim, then pin
+            // and hold across the rest of the stream.
+            while h.status().promoted_blocks < 20 {
+                std::thread::yield_now();
+            }
+            let pinned = h.snapshot();
+            let image: Vec<u64> = (0..lay.heap_cells()).map(|a| pinned.read(a)).collect();
+            h.quiesce();
+            for (a, &v) in image.iter().enumerate() {
+                assert_eq!(
+                    pinned.read(a),
+                    v,
+                    "pin (horizon {}) drifted at addr {a} while younger epochs reclaimed",
+                    pinned.horizon()
+                );
+            }
+        });
+    });
+
+    assert_eq!(rep.promoted_txns, per as u64, "exactly-once ingestion");
+    for addr in 0..lay.heap_cells() {
+        assert_eq!(heap.load(addr), oracle.load(addr), "heap != oracle at {addr}");
+    }
+    // Snapshot-log plane: trims before (and below) the pin retired
+    // chains, and the gc freed them while the pin was still open.
+    assert!(rep.log_retired_cells > 0, "absorbs must trim version chains");
+    assert!(
+        rep.log_reclaimed_cells > 0,
+        "younger epochs must reclaim while an old pin holds its horizon"
+    );
+    // Store plane: the PR-9 plateau, now over a serving stream.
+    assert!(rep.batch.mv_retired > 0, "promotions must retire recorded sets");
+    assert!(rep.batch.mv_reclaimed > 0, "epochs must pass mid-session");
+    assert!(
+        rep.batch.mv_live_cells < rep.batch.mv_retired,
+        "live cells must plateau below the retired total: peak {} vs retired {}",
+        rep.batch.mv_live_cells,
+        rep.batch.mv_retired
+    );
+}
+
+#[test]
+fn conflict_free_session_reads_record_zero_aborts() {
+    chaos();
+    // Abort-free reads, by the counters: one producer, one worker,
+    // window 1 — the write stream cannot conflict with itself, so any
+    // abort would have to come from the read path. A reader hammers
+    // degree / neighborhood / reachability queries off pinned
+    // snapshots the whole time; the abort counters must stay zero.
+    // (Skipped under FAULT_SPEC: injected validation failures are
+    // aborts by design.)
+    let lay = TenantLayout::new(2, 16, 4);
+    let heap = lay.make_heap();
+    let per = 200usize;
+    let seqs = gen_seqs(0xABF4EE, 1, 2, 16, per);
+    let cfg = ServeConfig {
+        producers: 1,
+        workers: 1,
+        window: 1,
+        block: 8,
+        queue_cap: 64,
+        ..ServeConfig::default()
+    };
+    let (rep, ()) = ServeSession::run(&heap, lay, &cfg, |h| {
+        std::thread::scope(|s| {
+            let seq = &seqs[0];
+            s.spawn(move || {
+                for &op in seq {
+                    h.submit(0, op).expect("producer closed early");
+                }
+                h.close_producer(0);
+            });
+            let mut rng = Rng::new(0x5EAD);
+            loop {
+                let snap = h.snapshot();
+                for t in 0..lay.tenants {
+                    let v = rng.below(lay.verts as u64) as usize;
+                    let _ = snap.degree(t, v);
+                    let _ = snap.neighbors(t, v);
+                    let dst = rng.below(lay.verts as u64) as usize;
+                    let _ = snap.reachable(t, v, dst, 3);
+                }
+                if h.status().promoted_txns >= per as u64 {
+                    break;
+                }
+            }
+        });
+    });
+
+    assert_eq!(rep.promoted_txns, per as u64);
+    assert!(rep.served_reads > 0, "the reader must have been served");
+    assert!(
+        rep.reads_by_tenant.iter().all(|&r| r > 0),
+        "every tenant saw at least one read: {:?}",
+        rep.reads_by_tenant
+    );
+    if !chaos_active() {
+        let stats = rep.batch.to_stats();
+        assert_eq!(
+            rep.batch.validation_aborts, 0,
+            "a conflict-free stream + snapshot reads must record zero aborts"
+        );
+        assert_eq!(stats.sw_aborts, 0, "read path leaked into the abort counters");
+    }
+    // Oracle equality holds regardless of the fault tier.
+    let oracle = lay.make_heap();
+    apply_sequential(&oracle, &lay, &round_robin_merge(&seqs));
+    for addr in 0..lay.heap_cells() {
+        assert_eq!(heap.load(addr), oracle.load(addr), "heap != oracle at {addr}");
+    }
+}
+
+#[test]
+fn chaos_session_exactly_once_with_open_snapshot() {
+    chaos();
+    // The chaos-tier serving property (meaningful fault-free too, and
+    // rerun by CI with FAULT_SPEC installed): three producers race
+    // through panics, dropped wakeups, and stalls; every ticket must
+    // still be ingested exactly once, an open snapshot must stay
+    // bitwise-frozen across whatever watchdog kicks / degraded-mode
+    // entries the faults provoke, and the heap must equal the oracle.
+    let (producers, per) = (3usize, 100usize);
+    let lay = TenantLayout::new(3, 16, 4);
+    let heap = lay.make_heap();
+    let seqs = gen_seqs(0xC4A05, producers, 3, 16, per);
+    let cfg = ServeConfig {
+        producers,
+        workers: 4,
+        window: 3,
+        block: 4,
+        queue_cap: 16,
+        ..ServeConfig::default()
+    };
+    let (rep, ()) = ServeSession::run(&heap, lay, &cfg, |h| {
+        std::thread::scope(|s| {
+            for (p, seq) in seqs.iter().enumerate() {
+                s.spawn(move || {
+                    for &op in seq {
+                        h.submit(p, op).expect("producer closed early");
+                    }
+                    h.close_producer(p);
+                });
+            }
+            while h.status().promoted_blocks == 0 {
+                std::thread::yield_now();
+            }
+            let open = h.snapshot();
+            let image: Vec<u64> = (0..lay.heap_cells()).map(|a| open.read(a)).collect();
+            h.quiesce();
+            // Whatever kicks or degradations the chaos provoked, the
+            // open snapshot never got corrupted.
+            for (a, &v) in image.iter().enumerate() {
+                assert_eq!(
+                    open.read(a),
+                    v,
+                    "open snapshot (horizon {}) corrupted at addr {a}",
+                    open.horizon()
+                );
+            }
+        });
+    });
+
+    let total = (producers * per) as u64;
+    assert_eq!(rep.submitted, total, "every ticket accepted");
+    assert_eq!(
+        rep.promoted_txns, total,
+        "exactly-once ingestion per producer ticket (kicks={}, quarantines={}, \
+         faults={})",
+        rep.batch.watchdog_kicks, rep.batch.quarantines, rep.batch.faults_injected
+    );
+    let oracle = lay.make_heap();
+    apply_sequential(&oracle, &lay, &round_robin_merge(&seqs));
+    for addr in 0..lay.heap_cells() {
+        assert_eq!(heap.load(addr), oracle.load(addr), "heap != oracle at {addr}");
+    }
+}
